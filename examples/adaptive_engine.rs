@@ -1,0 +1,137 @@
+//! End-to-end adaptive CPS scenario (paper Fig. 4): the adaptive inference
+//! engine serves a continuous classification workload from a battery; the
+//! Profile Manager switches from the accurate profile (A8-W8) to the
+//! low-power one (Mixed) when the battery crosses the threshold. Compares
+//! against the non-adaptive engine that always runs A8-W8.
+//!
+//! This is the end-to-end validation driver recorded in EXPERIMENTS.md: it
+//! exercises coordinator + batcher + profile manager + backend (PJRT by
+//! default; pass `sim` to use the integer dataflow engine).
+//!
+//! Run: `cargo run --release --example adaptive_engine -- [pjrt|sim] [requests]`
+
+use anyhow::Result;
+use onnx2hw::coordinator::{
+    AdaptiveServer, Backend, EnergyMonitor, ManagerConfig, ProfileManager, ProfileSpec,
+    ServerConfig,
+};
+use onnx2hw::flow::{self, FlowConfig};
+use onnx2hw::power::{run_fixed, simulate_battery, AdaptivePolicy, BatteryModel};
+use onnx2hw::runtime::ArtifactStore;
+
+const PAIR: [&str; 2] = ["A8-W8", "Mixed"];
+
+fn main() -> Result<()> {
+    let backend_kind = std::env::args().nth(1).unwrap_or_else(|| "pjrt".into());
+    let n_requests: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(512);
+
+    let store = ArtifactStore::discover()?;
+    let testset = store.testset()?;
+    let cfg = FlowConfig::default();
+
+    // Profile characteristics from the design flow (Table-1 machinery).
+    let rows = flow::table1(&store, &PAIR, &cfg)?;
+    let specs: Vec<ProfileSpec> = rows
+        .iter()
+        .map(|r| ProfileSpec {
+            name: r.profile.clone(),
+            accuracy: r.accuracy_pct / 100.0,
+            power_mw: r.power_mw,
+            latency_us: r.latency_us,
+        })
+        .collect();
+    for s in &specs {
+        println!(
+            "profile {:<8} acc {:.2}% power {:.1} mW latency {:.0} us",
+            s.name,
+            s.accuracy * 100.0,
+            s.power_mw,
+            s.latency_us
+        );
+    }
+
+    // Battery sized so the threshold crossing happens mid-run.
+    let per_classification_j =
+        specs[0].power_mw * 1e-3 * specs[0].latency_us * 1e-6;
+    let battery_j = per_classification_j * n_requests as f64 * 0.9;
+    println!(
+        "\nbattery: {:.3} mJ (~90% of what {} requests need on {})",
+        battery_j * 1e3,
+        n_requests,
+        specs[0].name
+    );
+
+    let manager = ProfileManager::new(ManagerConfig::default(), specs.clone());
+    let energy = EnergyMonitor::new(battery_j);
+    let store2 = store.clone();
+    let kind = backend_kind.clone();
+    let srv = AdaptiveServer::start(
+        ServerConfig::default(),
+        move || match kind.as_str() {
+            "sim" => Backend::sim(&store2, &PAIR),
+            _ => Backend::pjrt(&store2, &PAIR),
+        },
+        manager,
+        energy,
+    )?;
+    println!("adaptive server up ({backend_kind} backend)\n");
+
+    let t0 = std::time::Instant::now();
+    let mut correct = 0usize;
+    let mut served_by = std::collections::BTreeMap::<String, usize>::new();
+    for i in 0..n_requests {
+        let idx = i % testset.len();
+        let resp = srv.classify(testset.image(idx).to_vec())?;
+        if resp.pred == testset.labels[idx] as usize {
+            correct += 1;
+        }
+        *served_by.entry(resp.profile).or_default() += 1;
+    }
+    let wall = t0.elapsed();
+
+    println!("== live run ==");
+    println!(
+        "served {} requests in {:.2}s ({:.0} req/s) | accuracy {:.2}%",
+        n_requests,
+        wall.as_secs_f64(),
+        n_requests as f64 / wall.as_secs_f64(),
+        100.0 * correct as f64 / n_requests as f64
+    );
+    for (p, n) in &served_by {
+        println!("  {p}: {n} requests");
+    }
+    println!(
+        "profile switches: {} | p50 latency {} us | p95 {} us | battery left {:.1}%",
+        srv.stats.switches.get(),
+        srv.stats.latency.quantile_us(0.5),
+        srv.stats.latency.quantile_us(0.95),
+        srv.energy.remaining_fraction() * 100.0
+    );
+    for ev in srv.stats.events.snapshot() {
+        println!("  event: {ev}");
+    }
+
+    // --- the paper's 10 Ah projection (Fig. 4 right) ---
+    let bat = BatteryModel::default();
+    let a = &rows[0];
+    let l = &rows[1];
+    let fixed = run_fixed(&a.profile, &bat, a.power_mw, a.latency_us, a.accuracy_pct / 100.0);
+    let adaptive = simulate_battery(
+        &bat,
+        &AdaptivePolicy::default(),
+        (&a.profile, a.power_mw, a.latency_us, a.accuracy_pct / 100.0),
+        (&l.profile, l.power_mw, l.latency_us, l.accuracy_pct / 100.0),
+    );
+    println!("\n== 10 Ah projection (paper Fig. 4 right) ==");
+    for run in [&fixed, &adaptive] {
+        println!(
+            "  {:<24} {:>7.1} h {:>13} classifications (mean acc {:.2}%)",
+            run.label, run.duration_h, run.classifications, run.mean_accuracy * 100.0
+        );
+    }
+    srv.shutdown();
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! The full design flow for one profile (paper Fig. 2): QONNX -> Reader ->
+//! HLS Writer (C++/TCL emission) -> HLS estimate -> streaming simulation ->
+//! power model. Prints the Vitis-style report and the profile's Table-1 row.
+//!
+//! Run: `cargo run --release --example design_flow -- [profile]`
+
+use anyhow::Result;
+use onnx2hw::dataflow::FoldingConfig;
+use onnx2hw::flow::{self, FlowConfig};
+use onnx2hw::runtime::ArtifactStore;
+use onnx2hw::writer;
+
+fn main() -> Result<()> {
+    let profile = std::env::args().nth(1).unwrap_or_else(|| "A8-W8".to_string());
+    let store = ArtifactStore::discover()?;
+    let cfg = FlowConfig::default();
+
+    // --- Reader: QONNX JSON -> validated IR ---
+    let model = store.qonnx(&profile)?;
+    println!(
+        "parsed QONNX profile {} | {} layers | {} parameters | {} MACs/classification",
+        model.profile,
+        model.layers.len(),
+        model.param_count(),
+        model.total_macs()
+    );
+
+    // --- HLS Writer: C++ actor instantiations + TCL ---
+    let out = writer::write_engine(&model, &FoldingConfig::default());
+    println!("\n--- generated {}_engine.cpp (first 25 lines) ---", profile);
+    for line in out.cpp.lines().take(25) {
+        println!("{line}");
+    }
+    println!("--- (+ engine.h {} bytes, build TCL {} bytes) ---", out.header.len(), out.tcl.len());
+
+    // --- Vitis-style utilization/schedule report ---
+    let rep = flow::utilization_report(&store, &profile, &cfg)?;
+    println!("\n{}", rep.render());
+
+    // --- Table-1 row (accuracy from python eval, latency/power from sim) ---
+    let row = flow::profile_report(&store, &profile, &cfg)?;
+    println!(
+        "Table-1 row: {} | acc {:.1}% | latency {:.0} us | LUT {:.0}% | BRAM {:.0}% | power {:.0} mW",
+        row.profile, row.accuracy_pct, row.latency_us, row.lut_pct, row.bram_pct, row.power_mw
+    );
+
+    // --- cross-check: rust integer engine accuracy == python eval ---
+    let testset = store.testset()?;
+    let acc = flow::measure_accuracy(&model, &testset, 256);
+    println!(
+        "rust dataflow accuracy on 256 images: {:.2}% (python full-set: {:.2}%)",
+        acc * 100.0,
+        store.eval(&profile)?.int_accuracy * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Profile explorer (paper Fig. 3 + Sect. 4.3): sweep all execution
+//! profiles through the design flow, print the accuracy/power trade-off,
+//! and report which pairs are good merge candidates for the adaptive engine
+//! (shared layers under MDC signatures).
+//!
+//! Run: `cargo run --release --example profile_explorer`
+
+use anyhow::Result;
+use onnx2hw::flow::{self, FlowConfig};
+use onnx2hw::hls::Calibration;
+use onnx2hw::mdc;
+use onnx2hw::runtime::ArtifactStore;
+
+fn main() -> Result<()> {
+    let store = ArtifactStore::discover()?;
+    let cfg = FlowConfig::default();
+    let profiles = store.profiles()?;
+    println!("profiles in artifact store: {profiles:?}\n");
+
+    // --- Fig. 3 series ---
+    let refs: Vec<&str> = profiles.iter().map(String::as_str).collect();
+    let rows = flow::table1(&store, &refs, &cfg)?;
+    println!("{:<10} {:>10} {:>10} {:>8} {:>8}", "profile", "power_mW", "acc_%", "LUT_%", "BRAM_%");
+    for r in &rows {
+        println!(
+            "{:<10} {:>10.1} {:>10.2} {:>8.1} {:>8.1}",
+            r.profile, r.power_mw, r.accuracy_pct, r.lut_pct, r.bram_pct
+        );
+    }
+
+    // --- Pareto front (power up, accuracy up) ---
+    let mut pareto: Vec<&flow::ProfileReport> = Vec::new();
+    for r in &rows {
+        if !rows
+            .iter()
+            .any(|o| o.power_mw < r.power_mw && o.accuracy_pct >= r.accuracy_pct)
+        {
+            pareto.push(r);
+        }
+    }
+    println!(
+        "\nPareto-optimal profiles: {:?}",
+        pareto.iter().map(|r| r.profile.as_str()).collect::<Vec<_>>()
+    );
+
+    // --- merge candidates: count shared actor slots per pair ---
+    println!("\nmerge candidates (shared slots / total, sbox LUT overhead):");
+    let nets: Vec<mdc::Network> = profiles
+        .iter()
+        .map(|p| Ok(mdc::build_network(&store.qonnx(p)?, &cfg.fold)))
+        .collect::<Result<_>>()?;
+    let cal = Calibration::default();
+    let mut best: Option<(String, usize, u64)> = None;
+    for i in 0..nets.len() {
+        for j in i + 1..nets.len() {
+            let md = mdc::merge(&[nets[i].clone(), nets[j].clone()])?;
+            let cost = mdc::merged_estimate(&md, &cal);
+            let label = format!("{} + {}", nets[i].profile, nets[j].profile);
+            println!(
+                "  {label:<20} {}/{} shared, sbox {} LUTs",
+                md.n_shared(),
+                md.instances.len(),
+                cost.sbox_luts
+            );
+            let better = best
+                .as_ref()
+                .is_none_or(|(_, s, ov)| md.n_shared() > *s
+                    || (md.n_shared() == *s && cost.sbox_luts < *ov));
+            if better {
+                best = Some((label, md.n_shared(), cost.sbox_luts));
+            }
+        }
+    }
+    if let Some((label, shared, _)) = best {
+        println!("\nbest adaptive-engine candidate: {label} ({shared} shared slots)");
+        println!("(the paper selects A8-W8 + Mixed — Sect. 4.3)");
+    }
+    Ok(())
+}

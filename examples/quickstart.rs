@@ -1,0 +1,56 @@
+//! Quickstart: load one AOT-compiled profile and classify test images on
+//! the PJRT runtime — the minimal end-to-end path through the three layers
+//! (Pallas kernels -> jax graph -> HLO text -> rust PJRT).
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+
+use anyhow::Result;
+use onnx2hw::dataflow::exec;
+use onnx2hw::runtime::{ArtifactStore, PjrtEngine};
+
+fn main() -> Result<()> {
+    let store = ArtifactStore::discover()?;
+    let testset = store.testset()?;
+    let profile = "A8-W8";
+
+    // 1. Load + compile the AOT artifact (HLO text produced by python/compile/aot.py).
+    let mut engine = PjrtEngine::new()?;
+    let dt = engine.load(&store, profile, 1)?;
+    println!("PJRT platform: {} | compiled {profile} in {dt:?}", engine.platform());
+
+    // 2. Classify a few test images.
+    let n = 32.min(testset.len());
+    let mut correct = 0;
+    let t0 = std::time::Instant::now();
+    for i in 0..n {
+        let (_logits, pred) = engine.classify_one(profile, testset.image(i))?;
+        if pred == testset.labels[i] as usize {
+            correct += 1;
+        }
+    }
+    let per_image = t0.elapsed() / n as u32;
+    println!("PJRT runtime:   {correct}/{n} correct | {per_image:?}/image");
+
+    // 3. Cross-check with the integer dataflow engine (what the FPGA fabric
+    //    computes, bit-exact vs python's intref).
+    let model = store.qonnx(profile)?;
+    let mut ex = onnx2hw::dataflow::Executor::new(&model);
+    let mut agree = 0;
+    for i in 0..n {
+        let logits = ex.run(testset.image(i));
+        let (_l, pjrt_pred) = engine.classify_one(profile, testset.image(i))?;
+        if exec::argmax(&logits) == pjrt_pred {
+            agree += 1;
+        }
+    }
+    println!("dataflow agrees with PJRT on {agree}/{n} predictions");
+
+    // 4. Where Table 1 comes from: the python-side full-testset accuracy.
+    let eval = store.eval(profile)?;
+    println!(
+        "full-testset accuracy ({} images): {:.2}%",
+        eval.n_test,
+        eval.int_accuracy * 100.0
+    );
+    Ok(())
+}

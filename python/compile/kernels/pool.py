@@ -1,0 +1,34 @@
+"""Pallas kernel: 2x2 stride-2 max pooling.
+
+The FPGA template streams the pooling actor between conv blocks; on TPU the
+pool is a cheap VPU reshape-max over the VMEM-resident block. Grid iterates
+over the batch, one image per step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pool_kernel(x_ref, o_ref, *, h: int, w: int, c: int):
+    x = x_ref[0]                                     # (H, W, C)
+    x = x.reshape(h // 2, 2, w // 2, 2, c)
+    o_ref[0] = x.max(axis=(1, 3))
+
+
+def maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    """2x2 stride-2 max pool. x: (N,H,W,C), H and W even. Matches ref.maxpool2."""
+    n, h, w, c = x.shape
+    assert h % 2 == 0 and w % 2 == 0, "maxpool2 requires even spatial dims"
+    return pl.pallas_call(
+        functools.partial(_pool_kernel, h=h, w=w, c=c),
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, h // 2, w // 2, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h // 2, w // 2, c), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,35 @@
+"""Pallas kernel: activation fake-quantization (the QONNX Quant node).
+
+Elementwise VPU op: ReLU-clip + round onto the ufixed<bits,int_bits> grid.
+Matches quant.quantize_act's forward semantics (no STE — inference only).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, o_ref, *, step: float, qmax: float):
+    x = x_ref[...]
+    o_ref[...] = jnp.clip(jnp.round(x / step), 0.0, qmax) * step
+
+
+def quantize_act(x: jnp.ndarray, bits: int, int_bits: int = 2) -> jnp.ndarray:
+    """Unsigned fixed-point quantize with ReLU clip; matches quant.quantize_act
+    forward. Works on any shape (treated as flat)."""
+    step = 2.0 ** (int_bits - bits)
+    qmax = 2.0 ** bits - 1.0
+    shape = x.shape
+    flat = x.reshape(-1)
+    out = pl.pallas_call(
+        functools.partial(_quant_kernel, step=step, qmax=qmax),
+        in_specs=[pl.BlockSpec(flat.shape, lambda: (0,))],
+        out_specs=pl.BlockSpec(flat.shape, lambda: (0,)),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, jnp.float32),
+        interpret=True,
+    )(flat)
+    return out.reshape(shape)

@@ -1,0 +1,64 @@
+"""Pure-jnp reference oracle for the Pallas kernels.
+
+Every Pallas kernel in this package has its semantics defined here with
+plain jax.numpy / lax ops. pytest (python/tests/) asserts allclose between
+the two across shapes, bit-widths, and random inputs — this is the L1
+correctness signal.
+
+All ops are NHWC, batch-leading. Convolutions are 3x3, stride 1, SAME
+padding (the paper's tiny CNN uses 3x3 kernels; SAME keeps 28->28->14->14->7).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_3x3(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """3x3 stride-1 SAME conv. x: (N,H,W,Cin), w: (3,3,Cin,Cout), b: (Cout,)."""
+    out = jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + b
+
+
+def maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    """2x2 stride-2 max pool. x: (N,H,W,C) with H,W even."""
+    n, h, w, c = x.shape
+    x = x.reshape(n, h // 2, 2, w // 2, 2, c)
+    return x.max(axis=(2, 4))
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """x: (N,F), w: (F,K), b: (K,)."""
+    return x @ w + b
+
+
+def im2col_3x3(x: jnp.ndarray) -> jnp.ndarray:
+    """(N,H,W,C) -> (N, H*W, 9*C) patch matrix for SAME 3x3 conv.
+
+    Column order matches kernels/conv2d.py and the rust dataflow simulator:
+    (dy, dx, cin) row-major — i.e. patch[:, (dy*3+dx)*C + c].
+    """
+    n, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    cols = []
+    for dy in range(3):
+        for dx in range(3):
+            cols.append(xp[:, dy:dy + h, dx:dx + w, :])
+    patches = jnp.concatenate(cols, axis=-1)          # (N,H,W,9C)
+    return patches.reshape(n, h * w, 9 * c)
+
+
+def conv2d_3x3_im2col(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Same as conv2d_3x3 but via the im2col + matmul schedule the Pallas
+    kernel uses (and the FPGA line-buffer/MAC template computes)."""
+    n, h, ww, c = x.shape
+    cout = w.shape[-1]
+    wm = w.reshape(9 * c, cout)                        # (dy,dx,cin) row-major
+    out = im2col_3x3(x) @ wm + b                       # (N,H*W,Cout)
+    return out.reshape(n, h, ww, cout)

@@ -1,0 +1,159 @@
+"""L2: the paper's tiny CNN (Sect. 4) in JAX, with mixed-precision QAT.
+
+Architecture (Sect. 4 of the paper): two convolutional blocks — conv 3x3,
+64 filters, batch-norm, ReLU (the ReLU is fused into the unsigned activation
+quantizer), 2x2 max-pool — followed by a fully-connected layer with 10
+outputs. Input 28x28x1 in [0,1).
+
+Two forwards:
+  * `qat_forward`    — training-time graph: fake-quant weights (per-channel),
+                       batch-norm with batch stats, fake-quant activations.
+  * `infer_float`    — inference graph with BN folded into the conv weights;
+                       this is what `aot.py` lowers to HLO (optionally through
+                       the Pallas kernels so they land in the same HLO).
+
+The integer-exact twin of `infer_float` lives in `intref.py`; the rust
+dataflow simulator implements the same integer pipeline bit-exactly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quant
+from .profiles import INPUT_BITS, INPUT_INT_BITS, Profile
+from .kernels import conv2d as k_conv, dense as k_dense, pool as k_pool
+from .kernels import quantize as k_quant, ref
+
+BN_EPS = 1e-3
+BN_MOMENTUM = 0.9
+
+CONV_FILTERS = 64
+NUM_CLASSES = 10
+
+
+def init_params(seed: int = 0) -> dict:
+    """He-normal initialised parameters + BN affine."""
+    rngs = jax.random.split(jax.random.PRNGKey(seed), 3)
+    f = CONV_FILTERS
+
+    def he(rng, shape):
+        fan_in = int(np.prod(shape[:-1]))
+        return jax.random.normal(rng, shape, jnp.float32) * np.sqrt(2.0 / fan_in)
+
+    return {
+        "conv1": {"w": he(rngs[0], (3, 3, 1, f)), "b": jnp.zeros((f,))},
+        "bn1": {"gamma": jnp.ones((f,)), "beta": jnp.zeros((f,))},
+        "conv2": {"w": he(rngs[1], (3, 3, f, f)), "b": jnp.zeros((f,))},
+        "bn2": {"gamma": jnp.ones((f,)), "beta": jnp.zeros((f,))},
+        "dense": {"w": he(rngs[2], (f * 7 * 7, NUM_CLASSES)),
+                  "b": jnp.zeros((NUM_CLASSES,))},
+    }
+
+
+def init_bn_state() -> dict:
+    f = CONV_FILTERS
+    return {
+        "bn1": {"mean": jnp.zeros((f,)), "var": jnp.ones((f,))},
+        "bn2": {"mean": jnp.zeros((f,)), "var": jnp.ones((f,))},
+    }
+
+
+def _bn(h, gamma, beta, mean, var):
+    return gamma * (h - mean) * jax.lax.rsqrt(var + BN_EPS) + beta
+
+
+def qat_forward(params: dict, state: dict, x: jnp.ndarray, profile: Profile,
+                train: bool):
+    """Training-time fake-quant forward. Returns (logits, new_state)."""
+    new_state = {}
+    x = quant.quantize_act(x, INPUT_BITS, INPUT_INT_BITS)
+
+    h = x
+    for name, bn_name in (("conv1", "bn1"), ("conv2", "bn2")):
+        prec = profile.layers()[name]
+        wq = quant.quantize_weight(params[name]["w"], prec.weight_bits)
+        h = ref.conv2d_3x3(h, wq, params[name]["b"])
+        if train:
+            mean = h.mean(axis=(0, 1, 2))
+            var = h.var(axis=(0, 1, 2))
+            run = state[bn_name]
+            new_state[bn_name] = {
+                "mean": BN_MOMENTUM * run["mean"] + (1 - BN_MOMENTUM) * mean,
+                "var": BN_MOMENTUM * run["var"] + (1 - BN_MOMENTUM) * var,
+            }
+        else:
+            mean, var = state[bn_name]["mean"], state[bn_name]["var"]
+            new_state[bn_name] = state[bn_name]
+        h = _bn(h, params[bn_name]["gamma"], params[bn_name]["beta"], mean, var)
+        h = quant.quantize_act(h, prec.act_bits, prec.act_int_bits)  # ReLU+quant
+        h = ref.maxpool2(h)
+
+    h = h.reshape(h.shape[0], -1)
+    prec = profile.dense
+    wq = quant.quantize_weight(params["dense"]["w"], prec.weight_bits)
+    logits = ref.dense(h, wq, params["dense"]["b"])
+    return logits, new_state
+
+
+def fold_bn(params: dict, state: dict, profile: Profile) -> dict:
+    """Fold BN (running stats) *around* the quantized conv weights.
+
+    QAT evaluates  BN(conv(x, Wq) + b)  with Wq on the fixed po2 grid, so the
+    inference graph must be  conv(x, g*Wq) + (g*b + t)  — the quantization
+    happens BEFORE the fold (codes are preserved; the per-channel gain g
+    moves into the requantization scale, exactly as intref.py does on the
+    integer side). g = gamma / sqrt(var + eps), t = beta - g * mean.
+    """
+    folded = {}
+    for name, bn_name in (("conv1", "bn1"), ("conv2", "bn2")):
+        prec = profile.layers()[name]
+        gamma = params[bn_name]["gamma"]
+        beta = params[bn_name]["beta"]
+        mean = state[bn_name]["mean"]
+        var = state[bn_name]["var"]
+        g = gamma / jnp.sqrt(var + BN_EPS)
+        wq = quant.quantize_weight(params[name]["w"], prec.weight_bits)
+        folded[name] = {
+            "w": wq * g,                         # broadcast over Cout
+            "b": g * params[name]["b"] + (beta - g * mean),
+        }
+    folded["dense"] = {
+        "w": quant.quantize_weight(params["dense"]["w"], profile.dense.weight_bits),
+        "b": params["dense"]["b"],
+    }
+    return folded
+
+
+def infer_float(folded: dict, x: jnp.ndarray, profile: Profile,
+                use_pallas: bool = True) -> jnp.ndarray:
+    """Inference graph (BN folded, pre-quantized weights + fake-quant acts).
+
+    `folded` comes from `fold_bn` (weights already on the quantization grid,
+    scaled by the BN gain). With use_pallas=True every op goes through the
+    L1 Pallas kernels, so the lowered HLO contains the kernels' schedule.
+    Numerics match intref.py's integer pipeline up to f32 rounding
+    (argmax-identical in practice).
+    """
+    conv = k_conv.conv2d_3x3 if use_pallas else ref.conv2d_3x3
+    pool = k_pool.maxpool2 if use_pallas else ref.maxpool2
+    dens = k_dense.dense if use_pallas else ref.dense
+    if use_pallas:
+        def qact(h, bits, ibits):
+            return k_quant.quantize_act(h, bits, ibits)
+    else:
+        def qact(h, bits, ibits):
+            step = 2.0 ** (ibits - bits)
+            return jnp.clip(jnp.round(h / step), 0.0, 2.0 ** bits - 1.0) * step
+
+    x = qact(x, INPUT_BITS, INPUT_INT_BITS)
+    h = x
+    for name in ("conv1", "conv2"):
+        prec = profile.layers()[name]
+        h = conv(h, folded[name]["w"], folded[name]["b"])
+        h = qact(h, prec.act_bits, prec.act_int_bits)
+        h = pool(h)
+    h = h.reshape(h.shape[0], -1)
+    return dens(h, folded["dense"]["w"], folded["dense"]["b"])

@@ -1,0 +1,60 @@
+"""Execution profiles: the paper's mixed-precision configurations.
+
+A profile is named `Ax-Wy` (x activation bits, y weight bits) following
+Sect. 4.2 of the paper, plus the `Mixed` profile of Sect. 4.3 (same as A8-W8
+except the inner convolutional layer, which runs at A4-W4).
+
+Each profile assigns (act_bits, weight_bits) to the three parametric layers:
+conv1, conv2 (the "inner" conv), dense. Activation int_bits is fixed at 2
+(ufixed<b,2>, range [0,4)) for hidden layers; the input is ufixed<8,0>.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class LayerPrec:
+    act_bits: int      # bits of the layer's *output* activation quantizer
+    weight_bits: int
+    act_int_bits: int = 2
+
+
+@dataclass(frozen=True)
+class Profile:
+    name: str
+    conv1: LayerPrec
+    conv2: LayerPrec
+    dense: LayerPrec
+
+    def layers(self):
+        return {"conv1": self.conv1, "conv2": self.conv2, "dense": self.dense}
+
+
+def uniform(name: str, a: int, w: int) -> Profile:
+    p = LayerPrec(a, w)
+    return Profile(name, p, p, p)
+
+
+# The five Table-1 profiles.
+TABLE1 = [
+    uniform("A16-W8", 16, 8),
+    uniform("A16-W4", 16, 4),
+    uniform("A8-W8", 8, 8),
+    uniform("A8-W4", 8, 4),
+    uniform("A4-W4", 4, 4),
+]
+
+# Sect. 4.3: Mixed = A8-W8 with the inner conv at A4-W4.
+MIXED = Profile("Mixed", LayerPrec(8, 8), LayerPrec(4, 4), LayerPrec(8, 8))
+
+ALL = TABLE1 + [MIXED]
+
+BY_NAME = {p.name: p for p in ALL}
+
+# The two profiles merged into the adaptive engine (Sect. 4.4).
+ADAPTIVE_PAIR = ("A8-W8", "Mixed")
+
+INPUT_BITS = 8       # ufixed<8,0> input pixels
+INPUT_INT_BITS = 0

@@ -1,0 +1,97 @@
+"""Fixed-point fake quantization with straight-through estimators (STE).
+
+Mirrors the paper's data-approximation scheme: Vitis HLS `ap_fixed`-style
+arbitrary-precision fixed point, with per-layer bit-widths for activations
+(Ax) and weights (Wy). Semantics:
+
+* Activations (post-ReLU, unsigned): `ufixed<bits, int_bits>` — values on the
+  grid step = 2^(int_bits - bits), clipped to [0, 2^int_bits - step].
+* Weights (signed, symmetric): per-channel (convs) or per-tensor (dense)
+  scale derived from the running max-abs; values on grid step = s/2^(bits-1).
+
+Both return *float* tensors lying exactly on the quantization grid — QAT runs
+in the scaled-real domain; the rust dataflow simulator runs the same network
+in the integer-code domain (see export.py for the bridging).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _ste(x_q: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Straight-through estimator: value of x_q, gradient of x."""
+    return x + jax.lax.stop_gradient(x_q - x)
+
+
+def quantize_act(x: jnp.ndarray, bits: int, int_bits: int = 2) -> jnp.ndarray:
+    """Unsigned fixed-point activation quantization with built-in ReLU clip.
+
+    ufixed<bits, int_bits>: grid step 2^(int_bits-bits), range [0, 2^int_bits).
+    Gradient passes straight through inside the clip range.
+    """
+    step = 2.0 ** (int_bits - bits)
+    qmax = 2.0 ** bits - 1.0
+    q = jnp.clip(jnp.round(x / step), 0.0, qmax) * step
+    return _ste(q, jnp.clip(x, 0.0, qmax * step))
+
+
+def quantize_weight(w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Symmetric signed weight quantization on a *fixed* power-of-two grid.
+
+    QKeras `quantized_bits(bits, 0, alpha=1)` semantics (the paper trains
+    with QKeras): grid step 2^(1-bits), representable range
+    [-(2^(b-1)-1)*step, +(2^(b-1)-1)*step] ~= (-1, 1). No per-tensor
+    calibration — this fixed grid is what makes 4-bit weights genuinely
+    lossy (the paper's Table 1: W4 ~ 95% vs W8 ~ 99%).
+    """
+    qmax = 2.0 ** (bits - 1) - 1.0
+    step = 2.0 ** (1 - bits)
+    q = jnp.clip(jnp.round(w / step), -qmax, qmax) * step
+    return _ste(q, jnp.clip(w, -1.0, 1.0))
+
+
+def weight_step(bits: int) -> float:
+    """Grid step of `quantize_weight(bits)`."""
+    return 2.0 ** (1 - bits)
+
+
+def weight_codes(w, bits: int):
+    """Integer codes on the fixed po2 grid (numpy, no STE) for export."""
+    import numpy as np
+
+    w = np.asarray(w)
+    qmax = 2.0 ** (bits - 1) - 1.0
+    step = weight_step(bits)
+    return np.clip(np.round(w / step), -qmax, qmax).astype(np.int32)
+
+
+def act_step(bits: int, int_bits: int = 2) -> float:
+    """Grid step of `quantize_act(bits, int_bits)`."""
+    return 2.0 ** (int_bits - bits)
+
+
+def requant_multiplier(real_mult: float, mult_bits: int = 15):
+    """Fixed-point (M, rshift) such that x * real_mult ~= (x * M) >> rshift.
+
+    This is the TFLite-style requantization bridge used by the rust integer
+    pipeline: the float scale ratio (sx * sw_c / sy) becomes an int multiplier
+    M (< 2^mult_bits) plus a right shift with round-half-up.
+    """
+    import math
+
+    if real_mult <= 0.0:
+        return 0, 0
+    # Normalize real_mult = m * 2^e with m in [0.5, 1).
+    m, e = math.frexp(real_mult)
+    M = int(round(m * (1 << mult_bits)))
+    rshift = mult_bits - e
+    if M == (1 << mult_bits):  # rounding overflow
+        M >>= 1
+        rshift -= 1
+    # Clamp pathological shifts (extremely small/large scales).
+    if rshift < 0:
+        M <<= -rshift
+        rshift = 0
+    return M, rshift

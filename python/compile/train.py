@@ -1,0 +1,216 @@
+"""Quantization-aware training (Sect. 4.1): Adam + categorical cross-entropy.
+
+QKeras substitute (DESIGN.md §2): straight-through-estimator fake-quant QAT
+in JAX, per-profile. Adam is implemented in-house (no optax in this
+environment). One model is trained per execution profile; checkpoints land
+in artifacts/ckpt_<profile>.npz together with the profile's QAT test
+accuracy, so `make artifacts` only retrains when inputs change.
+
+Usage:  python -m compile.train [--profiles A8-W8,Mixed] [--epochs 4]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dataset, model
+from .profiles import ALL, BY_NAME
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, opt, lr):
+    t = opt["t"] + 1
+    m = jax.tree.map(lambda m, g: ADAM_B1 * m + (1 - ADAM_B1) * g, opt["m"], grads)
+    v = jax.tree.map(lambda v, g: ADAM_B2 * v + (1 - ADAM_B2) * g * g, opt["v"], grads)
+    mhat_scale = 1.0 / (1 - ADAM_B1 ** t)
+    vhat_scale = 1.0 / (1 - ADAM_B2 ** t)
+    params = jax.tree.map(
+        lambda p, m, v: p - lr * (m * mhat_scale) /
+        (jnp.sqrt(v * vhat_scale) + ADAM_EPS),
+        params, m, v)
+    return params, {"m": m, "v": v, "t": t}
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -logp[jnp.arange(labels.shape[0]), labels].mean()
+
+
+def make_step(profile, lr):
+    def loss_fn(params, state, x, y):
+        logits, new_state = model.qat_forward(params, state, x, profile,
+                                              train=True)
+        return cross_entropy(logits, y), new_state
+
+    @jax.jit
+    def step(params, state, opt, x, y):
+        (loss, new_state), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, state, x, y)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, new_state, opt, loss
+
+    return step
+
+
+def evaluate(params, state, profile, x, y, batch=256):
+    @jax.jit
+    def fwd(xb):
+        logits, _ = model.qat_forward(params, state, xb, profile, train=False)
+        return logits.argmax(axis=1)
+
+    correct = 0
+    for i in range(0, len(y), batch):
+        correct += int((fwd(x[i:i + batch]) == y[i:i + batch]).sum())
+    return correct / len(y)
+
+
+def train_profile(profile, data, epochs=4, batch=64, lr=1e-3, seed=0,
+                  log=print, init=None, trainable=None):
+    """Train one profile.
+
+    init: optional (params, state) to start from (Sect. 4.3: the Mixed
+    profile is derived from the trained A8-W8 engine).
+    trainable: optional set of top-level param keys to update; all other
+    parameters (and their BN running stats) stay frozen at `init` — this is
+    what keeps the shared layers bit-identical so MDC can share their
+    hardware actors AND weight ROMs.
+    """
+    x_train, y_train, x_test, y_test = data
+    if init is not None:
+        params, state = jax.tree.map(jnp.asarray, init[0]), jax.tree.map(
+            jnp.asarray, init[1])
+    else:
+        params = model.init_params(seed)
+        state = model.init_bn_state()
+    frozen_params = None
+    if trainable is not None:
+        frozen_params = {k: v for k, v in params.items() if k not in trainable}
+        frozen_state = {k: v for k, v in state.items()
+                        if k not in {t.replace("conv", "bn") for t in trainable}}
+    opt = adam_init(params)
+    step = make_step(profile, lr)
+
+    n = len(y_train)
+    rng = np.random.default_rng(seed + 1)
+    for epoch in range(epochs):
+        perm = rng.permutation(n)
+        t0 = time.time()
+        losses = []
+        for i in range(0, n - batch + 1, batch):
+            idx = perm[i:i + batch]
+            params, state, opt, loss = step(
+                params, state, opt, x_train[idx], y_train[idx])
+            if frozen_params is not None:
+                params = {**params, **frozen_params}
+                state = {**state, **frozen_state}
+            losses.append(float(loss))
+        acc = evaluate(params, state, profile, x_test, y_test)
+        log(f"  [{profile.name}] epoch {epoch + 1}/{epochs} "
+            f"loss={np.mean(losses):.4f} test_acc={acc:.4f} "
+            f"({time.time() - t0:.1f}s)")
+    return params, state, acc
+
+
+def save_ckpt(path, params, state, acc, profile_name):
+    flat = {}
+
+    def put(prefix, tree):
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                put(f"{prefix}{k}/", v)
+            else:
+                flat[f"{prefix}{k}"] = np.asarray(v)
+
+    put("params/", params)
+    put("state/", state)
+    flat["meta/qat_accuracy"] = np.float64(acc)
+    np.savez(path, **flat)
+
+
+def load_ckpt(path):
+    data = np.load(path)
+    params, state = {}, {}
+
+    def unflatten(root, key, val):
+        parts = key.split("/")
+        d = root
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = jnp.asarray(val)
+
+    acc = None
+    for k in data.files:
+        if k == "meta/qat_accuracy":
+            acc = float(data[k])
+        elif k.startswith("params/"):
+            unflatten(params, k[len("params/"):], data[k])
+        elif k.startswith("state/"):
+            unflatten(state, k[len("state/"):], data[k])
+    return params, state, acc
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--profiles", default=",".join(p.name for p in ALL))
+    ap.add_argument("--epochs", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--n-train", type=int, default=4096)
+    ap.add_argument("--n-test", type=int, default=2048)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    print(f"generating synthetic-MNIST ({args.n_train} train / {args.n_test} test)")
+    data = dataset.make_dataset(args.n_train, args.n_test, args.seed)
+    data = tuple(jnp.asarray(d) for d in data)
+
+    results = {}
+    for name in args.profiles.split(","):
+        profile = BY_NAME[name.strip()]
+        ckpt = os.path.join(args.out, f"ckpt_{profile.name}.npz")
+        if args.skip_existing and os.path.exists(ckpt):
+            _, _, acc = load_ckpt(ckpt)
+            print(f"skipping {profile.name} (exists, acc={acc:.4f})")
+            results[profile.name] = acc
+            continue
+        init, trainable = None, None
+        if profile.name == "Mixed":
+            # Sect. 4.3: Mixed is derived from the trained A8-W8 profile;
+            # only the inner conv block adapts to its reduced precision, so
+            # conv1/dense (and bn1) remain shared with A8-W8 — the layers
+            # MDC merges in the adaptive engine.
+            base = os.path.join(args.out, "ckpt_A8-W8.npz")
+            if os.path.exists(base):
+                p0, s0, _ = load_ckpt(base)
+                init = (p0, s0)
+                trainable = {"conv2", "bn2"}
+                print("  Mixed: fine-tuning conv2/bn2 from A8-W8 checkpoint")
+        print(f"training {profile.name} -> {ckpt}")
+        params, state, acc = train_profile(
+            profile, data, epochs=args.epochs, batch=args.batch,
+            seed=args.seed, init=init, trainable=trainable)
+        save_ckpt(ckpt, params, state, acc, profile.name)
+        results[profile.name] = acc
+
+    with open(os.path.join(args.out, "qat_accuracy.json"), "w") as f:
+        json.dump(results, f, indent=2)
+    print(json.dumps(results, indent=2))
+
+
+if __name__ == "__main__":
+    main()

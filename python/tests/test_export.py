@@ -1,0 +1,108 @@
+"""Artifact-contract tests: the exported QONNX JSON / eval / vectors /
+testset that the rust side consumes. Skipped when `make artifacts` has not
+run (unit correctness does not depend on them)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import intref, quant
+from compile.profiles import ALL, BY_NAME
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "model_A8-W8.qonnx.json")),
+    reason="artifacts not built",
+)
+
+
+def load(name):
+    with open(os.path.join(ART, name)) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("profile", [p.name for p in ALL])
+def test_qonnx_schema_complete(profile):
+    doc = load(f"model_{profile}.qonnx.json")
+    assert doc["qonnx_version"] == 1
+    assert doc["profile"] == profile
+    ops = [n["op"] for n in doc["nodes"]]
+    assert ops == ["QConv2d", "MaxPool2", "QConv2d", "MaxPool2", "Flatten", "QGemm"]
+    spec = BY_NAME[profile]
+    conv1, conv2 = doc["nodes"][0], doc["nodes"][2]
+    assert conv1["attrs"]["weight_bits"] == spec.conv1.weight_bits
+    assert conv1["attrs"]["act_bits"] == spec.conv1.act_bits
+    assert conv2["attrs"]["weight_bits"] == spec.conv2.weight_bits
+    assert conv2["attrs"]["act_bits"] == spec.conv2.act_bits
+    # weight codes within declared range, requant sane
+    for node in (conv1, conv2):
+        bits = node["attrs"]["weight_bits"]
+        qmax = 2 ** (bits - 1) - 1
+        codes = np.array(node["weights"]["w_codes"])
+        assert np.abs(codes).max() <= qmax
+        assert all(0 <= s <= 62 for s in node["weights"]["shift"])
+        assert all(0 <= m < 2**20 for m in node["weights"]["mult"])
+
+
+@pytest.mark.parametrize("profile", [p.name for p in ALL])
+def test_vectors_consistent_with_eval(profile):
+    vec = load(f"vectors_{profile}.json")
+    ev = load(f"eval_{profile}.json")
+    assert vec["profile"] == profile == ev["profile"]
+    logits = np.array(vec["logits"])
+    assert logits.shape == (vec["n"], 10)
+    assert (logits.argmax(axis=1) == np.array(vec["pred"])).all()
+    assert 0.5 < ev["int_accuracy"] <= 1.0
+
+
+def test_testset_binary_matches_meta():
+    meta = load("testset.json")
+    raw = open(os.path.join(ART, "testset.bin"), "rb").read()
+    assert len(raw) == meta["n"] * meta["height"] * meta["width"] * meta["channels"]
+    assert len(meta["labels"]) == meta["n"]
+    assert set(meta["labels"]) <= set(range(10))
+
+
+def test_mixed_shares_outer_layers_with_a8w8():
+    """Sect. 4.3 contract: Mixed's conv1/dense integer weights are identical
+    to A8-W8's (frozen during fine-tuning) — this is what lets MDC share
+    their actors AND weight ROMs in the adaptive engine."""
+    a = load("model_A8-W8.qonnx.json")
+    m = load("model_Mixed.qonnx.json")
+    assert a["nodes"][0]["weights"]["w_codes"] == m["nodes"][0]["weights"]["w_codes"]
+    assert a["nodes"][5]["weights"]["w_codes"] == m["nodes"][5]["weights"]["w_codes"]
+    # and the inner conv genuinely differs (different precision)
+    assert a["nodes"][2]["attrs"]["weight_bits"] == 8
+    assert m["nodes"][2]["attrs"]["weight_bits"] == 4
+
+
+def test_eval_table_has_paper_shape():
+    evals = {p.name: load(f"eval_{p.name}.json")["int_accuracy"] for p in ALL}
+    w8_min = min(evals["A16-W8"], evals["A8-W8"])
+    w4_max = max(evals["A16-W4"], evals["A8-W4"], evals["A4-W4"])
+    assert w8_min > w4_max, f"W8 {w8_min} not above W4 {w4_max}"
+    assert evals["Mixed"] <= evals["A8-W8"]
+    assert evals["Mixed"] > w4_max
+
+
+def test_hlo_artifacts_have_full_constants():
+    """Regression: HLO text must not elide large constants ({...}) — the
+    rust loader would silently compile garbage weights."""
+    for profile in [p.name for p in ALL]:
+        for suffix in ("", "_b8"):
+            path = os.path.join(ART, f"model_{profile}{suffix}.hlo.txt")
+            text = open(path).read()
+            assert "{...}" not in text, f"{path} has elided constants"
+            assert "ENTRY" in text
+
+
+def test_requant_multiplier_edge_cases():
+    assert quant.requant_multiplier(0.0) == (0, 0)
+    m, s = quant.requant_multiplier(1.0)
+    assert (1 << s) == m * 1  # exact power of two representation
+    # tiny scale keeps shift in range after clamping
+    m, s = quant.requant_multiplier(1e-9)
+    assert m >= 0 and s >= 0

@@ -1,0 +1,137 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracle (the CORE signal).
+
+Hypothesis sweeps shapes and value ranges; assert_allclose against ref.py.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import conv2d, dense, pool, quantize, ref
+from compile import quant
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def arr(rng, shape, lo=-2.0, hi=2.0):
+    return jnp.asarray(rng.uniform(lo, hi, size=shape).astype(np.float32))
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 3),
+    h=st.integers(2, 10),
+    w=st.integers(2, 10),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_ref(n, h, w, cin, cout, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, (n, h, w, cin))
+    wgt = arr(rng, (3, 3, cin, cout))
+    b = arr(rng, (cout,))
+    got = conv2d.conv2d_3x3(x, wgt, b)
+    want = ref.conv2d_3x3(x, wgt, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 3),
+    h=st.integers(1, 8),
+    w=st.integers(1, 8),
+    c=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_maxpool_matches_ref(n, h, w, c, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, (n, 2 * h, 2 * w, c))
+    np.testing.assert_allclose(pool.maxpool2(x), ref.maxpool2(x))
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 4),
+    f=st.integers(1, 64),
+    k=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_matches_ref(n, f, k, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, (n, f))
+    wgt = arr(rng, (f, k))
+    b = arr(rng, (k,))
+    np.testing.assert_allclose(
+        dense.dense(x, wgt, b), ref.dense(x, wgt, b), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    bits=st.sampled_from([2, 4, 8, 16]),
+    int_bits=st.sampled_from([0, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_act_matches_quant(bits, int_bits, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, (4, 17), lo=-5.0, hi=5.0)
+    got = quantize.quantize_act(x, bits, int_bits)
+    want = quant.quantize_act(x, bits, int_bits)
+    np.testing.assert_allclose(got, want)
+
+
+def test_conv_schedules_agree():
+    rng = np.random.default_rng(5)
+    x = arr(rng, (2, 6, 6, 4))
+    w = arr(rng, (3, 3, 4, 5))
+    b = arr(rng, (5,))
+    a = conv2d.conv2d_3x3(x, w, b, schedule="acc")
+    i = conv2d.conv2d_3x3(x, w, b, schedule="im2col")
+    r = ref.conv2d_3x3(x, w, b)
+    np.testing.assert_allclose(a, r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(i, r, rtol=1e-5, atol=1e-5)
+    with pytest.raises(ValueError):
+        conv2d.conv2d_3x3(x, w, b, schedule="bogus")
+
+
+def test_conv_im2col_equals_direct():
+    rng = np.random.default_rng(0)
+    x = arr(rng, (2, 6, 5, 3))
+    w = arr(rng, (3, 3, 3, 4))
+    b = arr(rng, (4,))
+    np.testing.assert_allclose(
+        ref.conv2d_3x3_im2col(x, w, b), ref.conv2d_3x3(x, w, b),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_quantize_act_idempotent():
+    rng = np.random.default_rng(1)
+    x = arr(rng, (3, 9))
+    q1 = quant.quantize_act(x, 8, 2)
+    q2 = quant.quantize_act(q1, 8, 2)
+    np.testing.assert_allclose(q1, q2)
+
+
+def test_quantize_weight_on_grid():
+    rng = np.random.default_rng(2)
+    w = arr(rng, (3, 3, 2, 4), lo=-1.5, hi=1.5)
+    for bits in (4, 8):
+        q = np.asarray(quant.quantize_weight(jnp.asarray(w), bits))
+        step = quant.weight_step(bits)
+        codes = q / step
+        np.testing.assert_allclose(codes, np.round(codes), atol=1e-6)
+        assert np.abs(codes).max() <= 2 ** (bits - 1) - 1
+
+
+def test_requant_multiplier_approximates_scale():
+    for scale in (1e-4, 0.037, 0.5, 1.0, 7.3):
+        m, sh = quant.requant_multiplier(scale)
+        for acc in (0, 1, 17, 1000, 123456):
+            want = acc * scale
+            got = (acc * m + (1 << (sh - 1) if sh > 0 else 0)) >> sh
+            assert abs(got - want) <= max(1.0, abs(want) * 1e-3), (
+                scale, acc, got, want)

@@ -1,0 +1,121 @@
+"""L2 correctness: model shapes, BN folding, QAT-vs-inference agreement,
+and the integer pipeline (intref) vs the float inference graph."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import dataset, intref, model, quant
+from compile.profiles import ALL, BY_NAME, Profile, LayerPrec
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    params = model.init_params(0)
+    state = model.init_bn_state()
+    # push BN stats away from init so folding is non-trivial
+    state["bn1"]["mean"] = jnp.linspace(-0.5, 0.5, model.CONV_FILTERS)
+    state["bn1"]["var"] = jnp.linspace(0.5, 2.0, model.CONV_FILTERS)
+    state["bn2"]["mean"] = jnp.linspace(-0.2, 0.8, model.CONV_FILTERS)
+    state["bn2"]["var"] = jnp.linspace(0.3, 1.5, model.CONV_FILTERS)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.uniform(0, 1, size=(4, 28, 28, 1)).astype(np.float32))
+    return params, state, x
+
+
+def test_qat_forward_shapes(tiny_setup):
+    params, state, x = tiny_setup
+    profile = BY_NAME["A8-W8"]
+    logits, new_state = model.qat_forward(params, state, x, profile, train=True)
+    assert logits.shape == (4, 10)
+    assert new_state["bn1"]["mean"].shape == (model.CONV_FILTERS,)
+    # eval mode does not change state
+    _, st2 = model.qat_forward(params, state, x, profile, train=False)
+    np.testing.assert_allclose(st2["bn1"]["mean"], state["bn1"]["mean"])
+
+
+def test_fold_bn_preserves_inference(tiny_setup):
+    """Folded inference graph == QAT eval graph up to quantization-boundary
+    rounding: float re-association (g*(conv+b)+t vs conv(g*W)+(g*b+t)) can
+    flip values sitting exactly on a grid boundary by one step, so we allow
+    a few activation steps of slack and require identical predictions."""
+    params, state, x = tiny_setup
+    for name in ("A8-W8", "A4-W4", "Mixed"):
+        profile = BY_NAME[name]
+        want, _ = model.qat_forward(params, state, x, profile, train=False)
+        folded = model.fold_bn(params, state, profile)
+        got = model.infer_float(folded, x, profile, use_pallas=False)
+        np.testing.assert_allclose(got, want, rtol=0.05, atol=0.08)
+        assert (np.asarray(got).argmax(1) == np.asarray(want).argmax(1)).all()
+
+
+def test_pallas_inference_matches_jnp(tiny_setup):
+    params, state, x = tiny_setup
+    profile = BY_NAME["A8-W4"]
+    folded = model.fold_bn(params, state, profile)
+    a = model.infer_float(folded, x, profile, use_pallas=True)
+    b = model.infer_float(folded, x, profile, use_pallas=False)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_intref_argmax_matches_float(tiny_setup):
+    """Integer pipeline and float inference agree on predictions."""
+    params, state, x = tiny_setup
+    profile = BY_NAME["A8-W8"]
+    im = intref.quantize_model(params, state, profile, bn_eps=model.BN_EPS)
+    codes = dataset.input_codes(np.asarray(x))
+    int_logits = intref.run(im, codes)
+    folded = model.fold_bn(params, state, profile)
+    xq = jnp.asarray(codes.astype(np.float32) / 256.0)
+    float_logits = model.infer_float(folded, xq, profile, use_pallas=False)
+    assert (int_logits.argmax(1) == np.asarray(float_logits).argmax(1)).all()
+
+
+def test_intref_weight_codes_within_range(tiny_setup):
+    params, state, _ = tiny_setup
+    for p in ALL:
+        im = intref.quantize_model(params, state, p, bn_eps=model.BN_EPS)
+        for layer, bits in ((im.conv1, p.conv1.weight_bits),
+                            (im.conv2, p.conv2.weight_bits),
+                            (im.dense, p.dense.weight_bits)):
+            qmax = 2 ** (bits - 1) - 1
+            assert np.abs(layer.w_codes).max() <= qmax
+
+
+def test_intref_requant_range(tiny_setup):
+    params, state, x = tiny_setup
+    profile = BY_NAME["A4-W4"]
+    im = intref.quantize_model(params, state, profile, bn_eps=model.BN_EPS)
+    codes = dataset.input_codes(np.asarray(x))
+    h = intref.conv_layer(codes.astype(np.int64), im.conv1)
+    assert h.min() >= 0
+    assert h.max() <= 2 ** im.conv1.act_bits - 1
+
+
+def test_dataset_deterministic_and_bounded():
+    x1, y1, xt1, yt1 = dataset.make_dataset(64, 16, seed=7)
+    x2, y2, _, _ = dataset.make_dataset(64, 16, seed=7)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    assert x1.shape == (64, 28, 28, 1)
+    assert x1.min() >= 0.0 and x1.max() < 1.0
+    assert set(np.unique(y1)) <= set(range(10))
+
+
+def test_dataset_input_codes_roundtrip():
+    x, _, _, _ = dataset.make_dataset(8, 2, seed=3)
+    codes = dataset.input_codes(x)
+    assert codes.dtype == np.uint8
+    q = dataset.quantize_input(x)
+    np.testing.assert_allclose(q, codes.astype(np.float32) / 256.0)
+
+
+def test_profiles_table():
+    assert [p.name for p in ALL] == [
+        "A16-W8", "A16-W4", "A8-W8", "A8-W4", "A4-W4", "Mixed"]
+    mixed = BY_NAME["Mixed"]
+    assert mixed.conv1 == LayerPrec(8, 8)
+    assert mixed.conv2 == LayerPrec(4, 4)
+    assert mixed.dense == LayerPrec(8, 8)

@@ -1,0 +1,87 @@
+//! Ablation bench: the HLS folding design space (DESIGN.md design choice).
+//!
+//! The paper fixes one folding; this ablation sweeps PE/SIMD to show the
+//! latency/resource trade-off the flow navigates, and verifies the Table-1
+//! invariant (latency set by folding, not precision) across the sweep. Also
+//! retargets the device model (KV260 vs Zynq-7020) to show portability.
+
+use onnx2hw::bench_harness::Table;
+use onnx2hw::dataflow::{simulate_image, FoldingConfig};
+use onnx2hw::flow::FlowConfig;
+use onnx2hw::hls::{estimate_engine, Calibration, DeviceModel};
+use onnx2hw::runtime::ArtifactStore;
+
+fn main() {
+    let store = match ArtifactStore::discover() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("ablation_folding: skipping ({e})");
+            return;
+        }
+    };
+    let cfg = FlowConfig::default();
+    let model = store.qonnx("A8-W8").expect("qonnx");
+    let model_w4 = store.qonnx("A4-W4").expect("qonnx");
+    let testset = store.testset().expect("testset");
+    let img = testset.image(0);
+    let cal = Calibration::default();
+    let dev = DeviceModel::kria_kv260();
+
+    println!("== Ablation: folding (PE/SIMD) sweep on {} ==\n", model.profile);
+    let mut t = Table::new(&[
+        "folding (c1 pe,simd | c2 pe,simd)",
+        "MAC units",
+        "latency [us]",
+        "LUT [%]",
+        "lat x res",
+    ]);
+    let folds = [
+        (1usize, 1usize, 1usize, 9usize),
+        (4, 1, 4, 18),
+        (8, 2, 8, 36),   // default
+        (16, 3, 16, 72),
+        (32, 9, 32, 144),
+    ];
+    for (p1, s1, p2, s2) in folds {
+        let fold = FoldingConfig {
+            conv1_pe: p1,
+            conv1_simd: s1,
+            conv2_pe: p2,
+            conv2_simd: s2,
+            ..FoldingConfig::default()
+        };
+        let est = estimate_engine(&model, &fold, &cal);
+        let sim = simulate_image(&model, &fold, img);
+        let lat_us = sim.cycles as f64 / dev.clock_mhz;
+        let lut_pct = dev.lut_pct(est.luts);
+        t.row(&[
+            format!("{p1},{s1} | {p2},{s2}"),
+            format!("{}", fold.mac_units(&model)),
+            format!("{lat_us:.0}"),
+            format!("{lut_pct:.1}"),
+            format!("{:.0}", lat_us * lut_pct),
+        ]);
+        // Table-1 invariant at every folding: W4 engine has identical cycles.
+        let sim_w4 = simulate_image(&model_w4, &fold, img);
+        assert_eq!(
+            sim.cycles, sim_w4.cycles,
+            "latency must not depend on precision"
+        );
+    }
+    println!("{}", t.render());
+    println!("invariant held: A8-W8 and A4-W4 cycles identical at every folding\n");
+
+    println!("== Ablation: device retarget ==");
+    let fold = FoldingConfig::default();
+    let est = estimate_engine(&model, &fold, &cal);
+    for dev in [DeviceModel::kria_kv260(), DeviceModel::zynq_7020()] {
+        println!(
+            "  {:<22} LUT {:>5.1}% | BRAM {:>5.1}% | fits: {}",
+            dev.name,
+            dev.lut_pct(est.luts),
+            dev.bram_pct(est.bram36),
+            est.luts < dev.luts && (est.bram36 as u64) < dev.bram36
+        );
+    }
+    let _ = cfg;
+}

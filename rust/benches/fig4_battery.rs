@@ -1,0 +1,72 @@
+//! Bench: regenerate Fig. 4 (right) — battery duration and number of
+//! classifications, adaptive engine vs non-adaptive (10 Ah budget), plus a
+//! sweep over the switching threshold (the Profile Manager's knob).
+
+use onnx2hw::bench_harness::Table;
+use onnx2hw::flow::{self, FlowConfig};
+use onnx2hw::power::{run_fixed, simulate_battery, AdaptivePolicy, BatteryModel};
+use onnx2hw::runtime::ArtifactStore;
+
+const PAIR: [&str; 2] = ["A8-W8", "Mixed"];
+
+fn main() {
+    let store = match ArtifactStore::discover() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("fig4_battery: skipping ({e})");
+            return;
+        }
+    };
+    let cfg = FlowConfig::default();
+    let rows = flow::table1(&store, &PAIR, &cfg).expect("rows");
+    let a = &rows[0];
+    let l = &rows[1];
+    let bat = BatteryModel::default(); // 10 Ah @ 5 V, as the paper assumes
+
+    println!("== Fig. 4 (right): battery duration & classifications (10 Ah) ==\n");
+    let fixed = run_fixed(&a.profile, &bat, a.power_mw, a.latency_us, a.accuracy_pct / 100.0);
+    let mut t = Table::new(&["engine", "duration [h]", "classifications", "mean acc [%]"]);
+    t.row(&[
+        format!("non-adaptive ({})", a.profile),
+        format!("{:.1}", fixed.duration_h),
+        format!("{}", fixed.classifications),
+        format!("{:.2}", fixed.mean_accuracy * 100.0),
+    ]);
+    let adaptive = simulate_battery(
+        &bat,
+        &AdaptivePolicy::default(),
+        (&a.profile, a.power_mw, a.latency_us, a.accuracy_pct / 100.0),
+        (&l.profile, l.power_mw, l.latency_us, l.accuracy_pct / 100.0),
+    );
+    t.row(&[
+        adaptive.label.clone(),
+        format!("{:.1}", adaptive.duration_h),
+        format!("{}", adaptive.classifications),
+        format!("{:.2}", adaptive.mean_accuracy * 100.0),
+    ]);
+    println!("{}", t.render());
+    println!(
+        "adaptive: +{:.1}% battery life, +{:.1}% classifications (paper: adaptive extends both)\n",
+        (adaptive.duration_h / fixed.duration_h - 1.0) * 100.0,
+        (adaptive.classifications as f64 / fixed.classifications as f64 - 1.0) * 100.0
+    );
+
+    // --- ablation: switch-threshold sweep ---
+    println!("threshold sweep (fraction of battery at which the manager switches):");
+    let mut sweep = Table::new(&["switch_at", "duration [h]", "classifications", "mean acc [%]"]);
+    for pct in [0.0, 0.25, 0.5, 0.75, 1.0] {
+        let run = simulate_battery(
+            &bat,
+            &AdaptivePolicy { switch_at_fraction: pct },
+            (&a.profile, a.power_mw, a.latency_us, a.accuracy_pct / 100.0),
+            (&l.profile, l.power_mw, l.latency_us, l.accuracy_pct / 100.0),
+        );
+        sweep.row(&[
+            format!("{pct:.2}"),
+            format!("{:.1}", run.duration_h),
+            format!("{}", run.classifications),
+            format!("{:.2}", run.mean_accuracy * 100.0),
+        ]);
+    }
+    println!("{}", sweep.render());
+}

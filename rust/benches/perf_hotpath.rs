@@ -1,0 +1,113 @@
+//! Bench: §Perf hot paths across the stack.
+//!
+//! * PJRT classification (batch 1 and 8) — the production request path
+//! * integer dataflow executor — backs every accuracy sweep
+//! * actor-level streaming simulation — backs every power number
+//! * coordinator round trip (sim backend) — queue + batcher + reply overhead
+
+use onnx2hw::bench_harness::{bench, fmt_dur, Table};
+use onnx2hw::coordinator::{
+    AdaptiveServer, Backend, EnergyMonitor, ManagerConfig, ProfileManager, ProfileSpec,
+    ServerConfig,
+};
+use onnx2hw::dataflow::{simulate_image, Executor, FoldingConfig};
+use onnx2hw::runtime::{ArtifactStore, PjrtEngine};
+
+fn main() {
+    let store = match ArtifactStore::discover() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("perf_hotpath: skipping ({e})");
+            return;
+        }
+    };
+    let profile = "A8-W8";
+    let testset = store.testset().expect("testset");
+    let model = store.qonnx(profile).expect("qonnx");
+    let img = testset.image(0);
+
+    let mut t = Table::new(&["path", "mean", "p50", "p95", "throughput"]);
+
+    // --- L3 hot path: PJRT batch 1 / batch 8 ---
+    let mut engine = PjrtEngine::new().expect("pjrt");
+    engine.load(&store, profile, 1).expect("load b1");
+    let have_b8 = engine.load(&store, profile, 8).is_ok();
+    let s = bench(10, 200, || engine.classify_one(profile, img).unwrap());
+    t.row(&[
+        "PJRT classify (batch 1)".into(),
+        fmt_dur(s.mean),
+        fmt_dur(s.p50),
+        fmt_dur(s.p95),
+        format!("{:.0} img/s", s.throughput_per_s()),
+    ]);
+    if have_b8 {
+        let imgs: Vec<&[u8]> = (0..8).map(|i| testset.image(i)).collect();
+        let s = bench(5, 100, || engine.classify_batch(profile, &imgs).unwrap());
+        t.row(&[
+            "PJRT classify (batch 8)".into(),
+            fmt_dur(s.mean),
+            fmt_dur(s.p50),
+            fmt_dur(s.p95),
+            format!("{:.0} img/s", 8.0 * s.throughput_per_s()),
+        ]);
+    }
+
+    // --- integer dataflow executor ---
+    let mut ex = Executor::new(&model);
+    let s = bench(5, 100, || ex.run(img));
+    t.row(&[
+        "integer exec (1 img)".into(),
+        fmt_dur(s.mean),
+        fmt_dur(s.p50),
+        fmt_dur(s.p95),
+        format!("{:.0} img/s", s.throughput_per_s()),
+    ]);
+
+    // --- actor-level streaming sim ---
+    let fold = FoldingConfig::default();
+    let s = bench(2, 20, || simulate_image(&model, &fold, img));
+    let rep = simulate_image(&model, &fold, img);
+    let firings: u64 = rep.actors.iter().map(|a| a.firings).sum();
+    t.row(&[
+        "streaming sim (1 img)".into(),
+        fmt_dur(s.mean),
+        fmt_dur(s.p50),
+        fmt_dur(s.p95),
+        format!(
+            "{:.2}M firings/s",
+            firings as f64 / s.mean.as_secs_f64() / 1e6
+        ),
+    ]);
+
+    // --- coordinator round trip on the sim backend ---
+    let specs = vec![ProfileSpec {
+        name: profile.to_string(),
+        accuracy: 0.96,
+        power_mw: 142.0,
+        latency_us: 329.0,
+    }];
+    let manager = ProfileManager::new(ManagerConfig::default(), specs);
+    let energy = EnergyMonitor::new(1e9);
+    let store2 = store.clone();
+    let srv = AdaptiveServer::start(
+        ServerConfig::default(),
+        move || Backend::sim(&store2, &["A8-W8"]),
+        manager,
+        energy,
+    )
+    .expect("server");
+    let img_vec = img.to_vec();
+    let s = bench(5, 100, || srv.classify(img_vec.clone()).unwrap());
+    t.row(&[
+        "coordinator RTT (sim)".into(),
+        fmt_dur(s.mean),
+        fmt_dur(s.p50),
+        fmt_dur(s.p95),
+        format!("{:.0} req/s", s.throughput_per_s()),
+    ]);
+
+    println!("== §Perf hot paths ==\n\n{}", t.render());
+    println!("note: FPGA-projected latency is 329us/image — the PJRT path's job is to");
+    println!("stay well under the request interarrival budget, not to match the fabric.");
+    srv.shutdown();
+}

@@ -1,0 +1,64 @@
+//! Bench: regenerate the paper's Table 1.
+//!
+//! For each mixed-precision profile: accuracy (python QAT+integer eval),
+//! latency (cycle-approximate streaming sim @ 100 MHz), LUT/BRAM %
+//! (HLS estimator on the KV260 model), power (activity-based model over
+//! real test images). Paper values printed alongside for comparison.
+
+use onnx2hw::bench_harness::{bench, fmt_dur, Table};
+use onnx2hw::flow::{self, FlowConfig};
+use onnx2hw::runtime::ArtifactStore;
+
+const PROFILES: [&str; 5] = ["A16-W8", "A16-W4", "A8-W8", "A8-W4", "A4-W4"];
+// Paper Table 1 rows: (accuracy %, latency us, LUT %, BRAM %, power mW).
+const PAPER: [(&str, f64, f64, f64, f64, f64); 5] = [
+    ("A16-W8", 98.9, 329.0, 12.0, 18.0, 160.0),
+    ("A16-W4", 95.3, 329.0, 7.0, 18.0, 134.0),
+    ("A8-W8", 98.8, 329.0, 11.0, 17.0, 142.0),
+    ("A8-W4", 95.3, 329.0, 6.0, 17.0, 132.0),
+    ("A4-W4", 95.8, 329.0, 6.0, 17.0, 141.0),
+];
+
+fn main() {
+    let store = match ArtifactStore::discover() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("table1: skipping ({e})");
+            return;
+        }
+    };
+    let cfg = FlowConfig::default();
+    println!("== Table 1: data mixed-precision approximation ==\n");
+    let mut t = Table::new(&[
+        "Datatype",
+        "Accuracy[%] (paper)",
+        "Latency[us] (paper)",
+        "LUT[%] (paper)",
+        "BRAM[%] (paper)",
+        "Power[mW] (paper)",
+    ]);
+    for (i, p) in PROFILES.iter().enumerate() {
+        let r = flow::profile_report(&store, p, &cfg).expect("profile report");
+        let paper = PAPER[i];
+        t.row(&[
+            r.profile.clone(),
+            format!("{:.1} ({:.1})", r.accuracy_pct, paper.1),
+            format!("{:.0} ({:.0})", r.latency_us, paper.2),
+            format!("{:.0} ({:.0})", r.lut_pct, paper.3),
+            format!("{:.0} ({:.0})", r.bram_pct, paper.4),
+            format!("{:.0} ({:.0})", r.power_mw, paper.5),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // timing of the table generation path itself (design-flow speed claim:
+    // "the advantage of having a fast design flow")
+    let stats = bench(1, 5, || {
+        flow::profile_report(&store, "A8-W8", &cfg).unwrap()
+    });
+    println!(
+        "flow speed: one full profile report (parse+estimate+sim+power) in {} (p95 {})",
+        fmt_dur(stats.mean),
+        fmt_dur(stats.p95)
+    );
+}

@@ -1,0 +1,144 @@
+//! Bench harness substrate (criterion is unavailable offline).
+//!
+//! `cargo bench` targets are `harness = false` binaries built on this:
+//! warmup, timed iterations, robust statistics, and aligned text tables so
+//! each bench regenerates its paper table/figure as rows on stdout.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over N iterations.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    pub fn throughput_per_s(&self) -> f64 {
+        if self.mean.as_secs_f64() == 0.0 {
+            0.0
+        } else {
+            1.0 / self.mean.as_secs_f64()
+        }
+    }
+}
+
+/// Time `f` with `warmup` + `iters` runs. The closure's return value is
+/// black-boxed to keep the optimizer honest.
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Stats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort_unstable();
+    let sum: Duration = samples.iter().sum();
+    Stats {
+        iters,
+        mean: sum / iters as u32,
+        p50: samples[iters / 2],
+        p95: samples[((iters as f64 * 0.95) as usize).min(iters - 1)],
+        min: samples[0],
+        max: samples[iters - 1],
+    }
+}
+
+/// `std::hint::black_box` shim (stable since 1.66).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Fixed-width table printer for bench outputs.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            widths: headers.iter().map(|h| h.len().max(10)).collect(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        for (w, c) in self.widths.iter_mut().zip(cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut l = String::new();
+            for (c, w) in cells.iter().zip(widths) {
+                l.push_str(&format!("| {c:<w$} "));
+            }
+            l.push_str("|\n");
+            l
+        };
+        s.push_str(&line(&self.headers, &self.widths));
+        let sep: Vec<String> = self.widths.iter().map(|w| "-".repeat(*w)).collect();
+        s.push_str(&line(&sep, &self.widths));
+        for r in &self.rows {
+            s.push_str(&line(r, &self.widths));
+        }
+        s
+    }
+}
+
+/// Format a Duration human-readably (us/ms/s).
+pub fn fmt_dur(d: Duration) -> String {
+    let us = d.as_secs_f64() * 1e6;
+    if us < 1000.0 {
+        format!("{us:.1}us")
+    } else if us < 1e6 {
+        format!("{:.2}ms", us / 1e3)
+    } else {
+        format!("{:.3}s", us / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_stats() {
+        let s = bench(2, 20, || std::thread::sleep(Duration::from_micros(50)));
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.max);
+        assert!(s.mean >= Duration::from_micros(40));
+        assert!(s.throughput_per_s() > 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer-name".into(), "2".into()]);
+        let out = t.render();
+        assert!(out.contains("longer-name"));
+        assert_eq!(out.lines().count(), 4);
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert!(fmt_dur(Duration::from_micros(5)).ends_with("us"));
+        assert!(fmt_dur(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).ends_with('s'));
+    }
+}

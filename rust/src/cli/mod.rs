@@ -1,0 +1,263 @@
+//! Tiny declarative CLI substrate (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag`, `--opt value` / `--opt=value`, positional
+//! arguments, defaults, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Argument specification for one (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct Spec {
+    pub name: String,
+    pub about: String,
+    opts: Vec<OptSpec>,
+    positionals: Vec<PosSpec>,
+}
+
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+#[derive(Debug, Clone)]
+struct PosSpec {
+    name: String,
+    help: String,
+    required: bool,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Spec {
+    pub fn new(name: &str, about: &str) -> Self {
+        Spec {
+            name: name.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// `--name <value>` option with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// `--name <value>` option with no default (optional).
+    pub fn opt_req(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Positional argument.
+    pub fn pos(mut self, name: &str, required: bool, help: &str) -> Self {
+        self.positionals.push(PosSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            required,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        for p in &self.positionals {
+            if p.required {
+                s.push_str(&format!(" <{}>", p.name));
+            } else {
+                s.push_str(&format!(" [{}]", p.name));
+            }
+        }
+        s.push_str(" [OPTIONS]\n\nOPTIONS:\n");
+        for o in &self.opts {
+            let head = if o.is_flag {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <v>", o.name)
+            };
+            let def = o
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("{head:<28}{}{def}\n", o.help));
+        }
+        for p in &self.positionals {
+            s.push_str(&format!("  <{}>{:<22}{}\n", p.name, "", p.help));
+        }
+        s
+    }
+
+    /// Parse a raw argv slice (not including the program/subcommand name).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                args.values.insert(o.name.clone(), d.clone());
+            }
+            if o.is_flag {
+                args.flags.insert(o.name.clone(), false);
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError(self.usage()));
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| CliError(format!("unknown option --{name}")))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(CliError(format!("--{name} takes no value")));
+                    }
+                    args.flags.insert(name, true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("--{name} needs a value")))?
+                        }
+                    };
+                    args.values.insert(name, val);
+                }
+            } else {
+                if args.positionals.len() >= self.positionals.len() {
+                    return Err(CliError(format!("unexpected argument '{a}'")));
+                }
+                args.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        for (idx, p) in self.positionals.iter().enumerate() {
+            if p.required && args.positionals.len() <= idx {
+                return Err(CliError(format!("missing required argument <{}>", p.name)));
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn parse_num<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError> {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| CliError(format!("missing --{name}")))?;
+        raw.parse()
+            .map_err(|_| CliError(format!("--{name}: cannot parse '{raw}'")))
+    }
+
+    pub fn pos(&self, idx: usize) -> Option<&str> {
+        self.positionals.get(idx).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Spec {
+        Spec::new("t", "test")
+            .opt("batch", "8", "batch size")
+            .opt_req("model", "model path")
+            .flag("verbose", "chatty")
+            .pos("input", false, "input file")
+    }
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = spec().parse(&sv(&[])).unwrap();
+        assert_eq!(a.get("batch"), Some("8"));
+        assert!(!a.flag("verbose"));
+        let a = spec()
+            .parse(&sv(&["--batch", "16", "--verbose", "file.bin"]))
+            .unwrap();
+        assert_eq!(a.parse_num::<usize>("batch").unwrap(), 16);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.pos(0), Some("file.bin"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = spec().parse(&sv(&["--batch=32"])).unwrap();
+        assert_eq!(a.get("batch"), Some("32"));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(spec().parse(&sv(&["--nope"])).is_err());
+        assert!(spec().parse(&sv(&["--batch"])).is_err());
+        assert!(spec().parse(&sv(&["--verbose=1"])).is_err());
+        assert!(spec().parse(&sv(&["a", "b"])).is_err());
+        assert!(spec().parse(&sv(&["--batch", "x"])).unwrap().parse_num::<usize>("batch").is_err());
+    }
+}

@@ -1,0 +1,129 @@
+//! Inference backends of the adaptive engine.
+//!
+//! * `Pjrt` — the production path: AOT HLO artifacts on the PJRT CPU client.
+//! * `Sim`  — the bit-exact integer dataflow engine (no artifacts needed);
+//!   also what the FPGA would compute, so cross-checking the two backends
+//!   per-request is the paper's functional-equivalence argument.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::dataflow::{self, Executor};
+use crate::qonnx::QonnxModel;
+use crate::runtime::{ArtifactStore, PjrtEngine};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Pjrt,
+    Sim,
+}
+
+/// A multi-profile inference backend.
+pub enum Backend {
+    Pjrt {
+        engine: PjrtEngine,
+    },
+    Sim {
+        models: BTreeMap<String, QonnxModel>,
+    },
+}
+
+impl Backend {
+    /// Build a PJRT backend with `profiles` loaded at batch sizes 1 and 8.
+    pub fn pjrt(store: &ArtifactStore, profiles: &[&str]) -> Result<Self> {
+        let mut engine = PjrtEngine::new()?;
+        for p in profiles {
+            engine.load(store, p, 1)?;
+            // batch-8 variant is optional (older artifact sets may lack it)
+            let _ = engine.load(store, p, 8);
+        }
+        Ok(Backend::Pjrt { engine })
+    }
+
+    /// Build the integer dataflow backend from QONNX artifacts.
+    pub fn sim(store: &ArtifactStore, profiles: &[&str]) -> Result<Self> {
+        let mut models = BTreeMap::new();
+        for p in profiles {
+            models.insert(p.to_string(), store.qonnx(p)?);
+        }
+        Ok(Backend::Sim { models })
+    }
+
+    pub fn kind(&self) -> BackendKind {
+        match self {
+            Backend::Pjrt { .. } => BackendKind::Pjrt,
+            Backend::Sim { .. } => BackendKind::Sim,
+        }
+    }
+
+    pub fn profiles(&self) -> Vec<String> {
+        match self {
+            Backend::Pjrt { engine } => {
+                let mut ps: Vec<String> =
+                    engine.loaded().into_iter().map(|(p, _)| p).collect();
+                ps.dedup();
+                ps
+            }
+            Backend::Sim { models } => models.keys().cloned().collect(),
+        }
+    }
+
+    /// Classify a batch on `profile`. Returns (logits_f32, pred) per image.
+    pub fn classify(
+        &self,
+        profile: &str,
+        images: &[&[u8]],
+    ) -> Result<Vec<(Vec<f32>, usize)>> {
+        match self {
+            Backend::Pjrt { engine } => engine.classify_batch(profile, images),
+            Backend::Sim { models } => {
+                let model = models
+                    .get(profile)
+                    .with_context(|| format!("profile '{profile}' not loaded"))?;
+                let mut ex = Executor::new(model);
+                Ok(images
+                    .iter()
+                    .map(|img| {
+                        let logits = ex.run(img);
+                        let pred = dataflow::exec::argmax(&logits);
+                        (logits.iter().map(|&v| v as f32).collect(), pred)
+                    })
+                    .collect())
+            }
+        }
+    }
+
+    /// Verify a profile is available.
+    pub fn ensure_profile(&self, profile: &str) -> Result<()> {
+        if self.profiles().iter().any(|p| p == profile) {
+            Ok(())
+        } else {
+            bail!(
+                "profile '{profile}' unavailable (loaded: {:?})",
+                self.profiles()
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qonnx::{read_str, test_model_json};
+
+    #[test]
+    fn sim_backend_classifies() {
+        let m = read_str(&test_model_json(1, 2)).unwrap();
+        let mut models = BTreeMap::new();
+        models.insert("T".to_string(), m.clone());
+        let b = Backend::Sim { models };
+        let img: Vec<u8> = (0..m.input_shape.elems()).map(|i| i as u8).collect();
+        let out = b.classify("T", &[&img, &img]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].1, out[1].1);
+        assert!(b.classify("missing", &[&img]).is_err());
+        assert!(b.ensure_profile("T").is_ok());
+        assert!(b.ensure_profile("missing").is_err());
+    }
+}

@@ -1,0 +1,129 @@
+//! Dynamic batcher: coalesce queued requests up to (max_batch, max_wait).
+//!
+//! The classic serving trade-off: bigger batches amortize dispatch overhead
+//! (the AOT artifacts include a batch-8 variant), a deadline bounds the
+//! latency a lonely request can pay.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use super::request::ClassifyRequest;
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        // §Perf (EXPERIMENTS.md): max_wait was 2 ms; a synchronous client
+        // pays the full wait on every request, dominating RTT. 500 us keeps
+        // burst coalescing while capping the solo-client tax.
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(500),
+        }
+    }
+}
+
+/// Pulls from the request channel, forming batches.
+pub struct DynamicBatcher {
+    cfg: BatcherConfig,
+    rx: mpsc::Receiver<ClassifyRequest>,
+}
+
+impl DynamicBatcher {
+    pub fn new(cfg: BatcherConfig, rx: mpsc::Receiver<ClassifyRequest>) -> Self {
+        DynamicBatcher { cfg, rx }
+    }
+
+    /// Block for the next batch. Returns `None` when the channel is closed
+    /// and drained (shutdown).
+    pub fn next_batch(&self) -> Option<Vec<ClassifyRequest>> {
+        // Block for the first request.
+        let first = self.rx.recv().ok()?;
+        let deadline = Instant::now() + self.cfg.max_wait;
+        let mut batch = vec![first];
+        // Drain whatever is already queued without waiting (burst pickup).
+        while batch.len() < self.cfg.max_batch {
+            match self.rx.try_recv() {
+                Ok(req) => batch.push(req),
+                Err(_) => break,
+            }
+        }
+        // Then wait out the deadline only if the batch is not full yet.
+        while batch.len() < self.cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(req) => batch.push(req),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn req(id: u64) -> (ClassifyRequest, mpsc::Receiver<super::super::ClassifyResponse>) {
+        let (tx, rx) = mpsc::channel();
+        (ClassifyRequest::new(id, vec![0u8; 4], tx), rx)
+    }
+
+    #[test]
+    fn batches_up_to_max() {
+        let (tx, rx) = mpsc::channel();
+        let b = DynamicBatcher::new(
+            BatcherConfig {
+                max_batch: 3,
+                max_wait: Duration::from_millis(50),
+            },
+            rx,
+        );
+        for i in 0..5 {
+            let (r, _keep) = req(i);
+            std::mem::forget(_keep);
+            tx.send(r).unwrap();
+        }
+        let b1 = b.next_batch().unwrap();
+        assert_eq!(b1.len(), 3);
+        let b2 = b.next_batch().unwrap();
+        assert_eq!(b2.len(), 2);
+        assert_eq!(b2[0].id, 3);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let (tx, rx) = mpsc::channel();
+        let b = DynamicBatcher::new(
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(5),
+            },
+            rx,
+        );
+        let (r, _keep) = req(0);
+        std::mem::forget(_keep);
+        tx.send(r).unwrap();
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn closed_channel_returns_none() {
+        let (tx, rx) = mpsc::channel::<ClassifyRequest>();
+        drop(tx);
+        let b = DynamicBatcher::new(BatcherConfig::default(), rx);
+        assert!(b.next_batch().is_none());
+    }
+}

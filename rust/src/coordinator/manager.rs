@@ -1,0 +1,286 @@
+//! Profile Manager: self-adaptive profile selection (paper Fig. 4 left,
+//! following the CERBERO self-adaptation loop [17]).
+//!
+//! Inputs: the (simulated) energy monitor and the application constraints
+//! (accuracy floor, optional power cap). Output: the profile the adaptive
+//! engine should run. Policy: among profiles meeting the constraints, pick
+//! the most accurate while energy is plentiful; once the remaining battery
+//! fraction drops below `low_energy_threshold`, pick the lowest-power
+//! profile still meeting the accuracy floor (negotiating the floor away if
+//! nothing meets it — the paper's "if they can be negotiated"). Hysteresis
+//! prevents flapping around the threshold.
+
+use std::sync::Mutex;
+
+/// Static description of one execution profile (from Table 1 / the HLS +
+/// power reports).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfileSpec {
+    pub name: String,
+    pub accuracy: f64,
+    pub power_mw: f64,
+    pub latency_us: f64,
+}
+
+/// Simulated battery the manager monitors (energy in joules).
+#[derive(Debug)]
+pub struct EnergyMonitor {
+    capacity_j: f64,
+    remaining_j: Mutex<f64>,
+}
+
+impl EnergyMonitor {
+    pub fn new(capacity_j: f64) -> Self {
+        EnergyMonitor {
+            capacity_j,
+            remaining_j: Mutex::new(capacity_j),
+        }
+    }
+
+    /// Drain energy for one classification: P * t.
+    pub fn drain(&self, power_mw: f64, duration_us: f64) {
+        let j = power_mw * 1e-3 * duration_us * 1e-6;
+        let mut rem = self.remaining_j.lock().unwrap();
+        *rem = (*rem - j).max(0.0);
+    }
+
+    pub fn remaining_fraction(&self) -> f64 {
+        *self.remaining_j.lock().unwrap() / self.capacity_j
+    }
+
+    pub fn remaining_j(&self) -> f64 {
+        *self.remaining_j.lock().unwrap()
+    }
+
+    pub fn depleted(&self) -> bool {
+        self.remaining_j() <= 0.0
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ManagerConfig {
+    /// Battery fraction below which the low-power profile is selected.
+    pub low_energy_threshold: f64,
+    /// Hysteresis band around the threshold (fraction).
+    pub hysteresis: f64,
+    /// Application accuracy floor (fraction, e.g. 0.93).
+    pub accuracy_floor: f64,
+}
+
+impl Default for ManagerConfig {
+    fn default() -> Self {
+        ManagerConfig {
+            low_energy_threshold: 0.5,
+            hysteresis: 0.02,
+            accuracy_floor: 0.0,
+        }
+    }
+}
+
+/// The Profile Manager.
+pub struct ProfileManager {
+    cfg: ManagerConfig,
+    profiles: Vec<ProfileSpec>,
+    /// Currently selected profile index (hysteresis state).
+    current: Mutex<usize>,
+}
+
+impl ProfileManager {
+    /// `profiles` must be non-empty; order does not matter.
+    pub fn new(cfg: ManagerConfig, profiles: Vec<ProfileSpec>) -> Self {
+        assert!(!profiles.is_empty(), "ProfileManager needs >= 1 profile");
+        let start = Self::most_accurate_meeting(&profiles, cfg.accuracy_floor);
+        ProfileManager {
+            cfg,
+            profiles,
+            current: Mutex::new(start),
+        }
+    }
+
+    fn most_accurate_meeting(profiles: &[ProfileSpec], floor: f64) -> usize {
+        // Most accurate among floor-meeting, else most accurate overall.
+        let mut best: Option<usize> = None;
+        for (i, p) in profiles.iter().enumerate() {
+            if p.accuracy >= floor
+                && best.is_none_or(|b| p.accuracy > profiles[b].accuracy)
+            {
+                best = Some(i);
+            }
+        }
+        best.unwrap_or_else(|| {
+            profiles
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.accuracy.total_cmp(&b.1.accuracy))
+                .map(|(i, _)| i)
+                .unwrap()
+        })
+    }
+
+    fn lowest_power_meeting(profiles: &[ProfileSpec], floor: f64) -> usize {
+        let mut best: Option<usize> = None;
+        for (i, p) in profiles.iter().enumerate() {
+            if p.accuracy >= floor
+                && best.is_none_or(|b| p.power_mw < profiles[b].power_mw)
+            {
+                best = Some(i);
+            }
+        }
+        // Negotiate the floor away if nothing meets it: lowest power overall.
+        best.unwrap_or_else(|| {
+            profiles
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.power_mw.total_cmp(&b.1.power_mw))
+                .map(|(i, _)| i)
+                .unwrap()
+        })
+    }
+
+    /// Decide the profile for the current energy state.
+    pub fn select(&self, energy: &EnergyMonitor) -> &ProfileSpec {
+        let frac = energy.remaining_fraction();
+        let mut cur = self.current.lock().unwrap();
+        let hi_idx = Self::most_accurate_meeting(&self.profiles, self.cfg.accuracy_floor);
+        let lo_idx = Self::lowest_power_meeting(&self.profiles, self.cfg.accuracy_floor);
+        let t = self.cfg.low_energy_threshold;
+        let h = self.cfg.hysteresis;
+        let target = if frac < t - h {
+            lo_idx
+        } else if frac > t + h {
+            hi_idx
+        } else {
+            *cur // inside the hysteresis band: hold
+        };
+        *cur = target;
+        &self.profiles[target]
+    }
+
+    pub fn profiles(&self) -> &[ProfileSpec] {
+        &self.profiles
+    }
+
+    pub fn current(&self) -> &ProfileSpec {
+        &self.profiles[*self.current.lock().unwrap()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    fn specs() -> Vec<ProfileSpec> {
+        vec![
+            ProfileSpec {
+                name: "A8-W8".into(),
+                accuracy: 0.96,
+                power_mw: 142.0,
+                latency_us: 329.0,
+            },
+            ProfileSpec {
+                name: "Mixed".into(),
+                accuracy: 0.945,
+                power_mw: 135.0,
+                latency_us: 329.0,
+            },
+        ]
+    }
+
+    #[test]
+    fn selects_accurate_when_full_low_power_when_low() {
+        let mgr = ProfileManager::new(ManagerConfig::default(), specs());
+        let full = EnergyMonitor::new(100.0);
+        assert_eq!(mgr.select(&full).name, "A8-W8");
+        let low = EnergyMonitor::new(100.0);
+        low.drain(1000.0, 60.0 * 1e6); // 60 J drained
+        assert!(low.remaining_fraction() < 0.45);
+        assert_eq!(mgr.select(&low).name, "Mixed");
+    }
+
+    #[test]
+    fn hysteresis_holds_inside_band() {
+        let cfg = ManagerConfig {
+            low_energy_threshold: 0.5,
+            hysteresis: 0.05,
+            accuracy_floor: 0.0,
+        };
+        let mgr = ProfileManager::new(cfg, specs());
+        let e = EnergyMonitor::new(100.0);
+        e.drain(1000.0, 52.0 * 1e6); // 48% remaining: inside [0.45, 0.55]
+        let frac = e.remaining_fraction();
+        assert!(frac > 0.45 && frac < 0.55);
+        // started on the accurate profile -> holds it inside the band
+        assert_eq!(mgr.select(&e).name, "A8-W8");
+        e.drain(1000.0, 10.0 * 1e6); // now 38% -> switches
+        assert_eq!(mgr.select(&e).name, "Mixed");
+        // back inside the band from below -> holds Mixed (no flap)
+        // (cannot recharge; just verify it stays on Mixed)
+        assert_eq!(mgr.select(&e).name, "Mixed");
+    }
+
+    #[test]
+    fn accuracy_floor_respected_while_energy_allows() {
+        let cfg = ManagerConfig {
+            low_energy_threshold: 0.5,
+            hysteresis: 0.0,
+            accuracy_floor: 0.95, // only A8-W8 meets it
+        };
+        let mgr = ProfileManager::new(cfg, specs());
+        let low = EnergyMonitor::new(100.0);
+        low.drain(1000.0, 80.0 * 1e6);
+        // even at low energy, Mixed (0.945) violates the floor -> stays A8-W8
+        assert_eq!(mgr.select(&low).name, "A8-W8");
+    }
+
+    #[test]
+    fn floor_negotiated_when_impossible() {
+        let cfg = ManagerConfig {
+            low_energy_threshold: 0.5,
+            hysteresis: 0.0,
+            accuracy_floor: 0.99, // nothing meets it
+        };
+        let mgr = ProfileManager::new(cfg, specs());
+        let low = EnergyMonitor::new(100.0);
+        low.drain(1000.0, 80.0 * 1e6);
+        // negotiated: lowest power overall
+        assert_eq!(mgr.select(&low).name, "Mixed");
+    }
+
+    #[test]
+    fn never_selects_below_floor_with_energy_property() {
+        testkit::check("floor respected above threshold", |rng| {
+            let floor = rng.f64(0.9, 0.97);
+            let cfg = ManagerConfig {
+                low_energy_threshold: 0.5,
+                hysteresis: 0.0,
+                accuracy_floor: floor,
+            };
+            let mgr = ProfileManager::new(cfg, specs());
+            let e = EnergyMonitor::new(100.0);
+            // any drain leaving > 50%
+            e.drain(1000.0, rng.f64(0.0, 49.0) * 1e6);
+            let sel = mgr.select(&e);
+            let meets = specs().iter().any(|p| p.accuracy >= floor);
+            if meets {
+                crate::prop_assert!(
+                    sel.accuracy >= floor,
+                    "selected {} acc {} < floor {floor}",
+                    sel.name,
+                    sel.accuracy
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn energy_monitor_drains_exactly() {
+        let e = EnergyMonitor::new(10.0);
+        e.drain(1000.0, 1e6); // 1 W for 1 s = 1 J
+        assert!((e.remaining_j() - 9.0).abs() < 1e-9);
+        e.drain(1e9, 1e9); // overdrain clamps at 0
+        assert_eq!(e.remaining_j(), 0.0);
+        assert!(e.depleted());
+    }
+}

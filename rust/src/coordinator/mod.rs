@@ -1,0 +1,30 @@
+//! L3 coordinator: the adaptive inference engine + Profile Manager.
+//!
+//! The paper's runtime architecture (Fig. 4 left): a CPS infrastructure with
+//! two cooperating parts —
+//!
+//! * the **Adaptive Inference Engine** executes classifications on the
+//!   currently selected execution profile; switching profile is a
+//!   configuration-word write on the merged MDC datapath (here: an O(1)
+//!   executable swap — no recompilation, mirroring "no re-synthesis");
+//! * the **Profile Manager** monitors the energy state and the
+//!   user/application constraints and selects the most suitable profile
+//!   (threshold policy with hysteresis on the battery level, never
+//!   violating the accuracy floor while energy allows).
+//!
+//! Requests flow through a dynamic batcher (channel-fed, size/deadline
+//! bounded) into a worker thread that owns the backend — either the PJRT
+//! runtime (AOT artifacts) or the integer dataflow engine (bit-exact
+//! simulator), selected at construction.
+
+mod backend;
+mod batcher;
+mod manager;
+mod request;
+mod server;
+
+pub use backend::{Backend, BackendKind};
+pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use manager::{EnergyMonitor, ManagerConfig, ProfileManager, ProfileSpec};
+pub use request::{ClassifyRequest, ClassifyResponse};
+pub use server::{AdaptiveServer, ServerConfig, ServerStats};

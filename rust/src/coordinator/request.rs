@@ -1,0 +1,40 @@
+//! Request/response types of the classification service.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// A classification request: one image, one reply channel.
+pub struct ClassifyRequest {
+    pub id: u64,
+    /// HWC u8 input codes (28*28*1 for the paper's model).
+    pub image: Vec<u8>,
+    pub submitted: Instant,
+    pub reply: mpsc::Sender<ClassifyResponse>,
+}
+
+/// The classification answer.
+#[derive(Debug, Clone)]
+pub struct ClassifyResponse {
+    pub id: u64,
+    pub pred: usize,
+    pub logits: Vec<f32>,
+    /// Profile that served this request.
+    pub profile: String,
+    /// End-to-end latency (queue + batch + execute).
+    pub latency_us: u64,
+}
+
+impl ClassifyRequest {
+    pub fn new(
+        id: u64,
+        image: Vec<u8>,
+        reply: mpsc::Sender<ClassifyResponse>,
+    ) -> Self {
+        ClassifyRequest {
+            id,
+            image,
+            submitted: Instant::now(),
+            reply,
+        }
+    }
+}

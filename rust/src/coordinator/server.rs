@@ -1,0 +1,291 @@
+//! The adaptive inference server: request loop + profile management.
+//!
+//! One worker thread owns the backend (PJRT executables are not Sync-shared
+//! here; single-device edge deployment matches the paper's board). Clients
+//! submit via an mpsc channel; the dynamic batcher coalesces; before every
+//! batch the Profile Manager re-evaluates the energy state and may switch
+//! the active profile (an O(1) reconfiguration — the MDC config word).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use super::backend::Backend;
+use super::batcher::{BatcherConfig, DynamicBatcher};
+use super::manager::{EnergyMonitor, ProfileManager};
+use super::request::{ClassifyRequest, ClassifyResponse};
+use crate::metrics::{Counter, EventLog, Histogram};
+
+#[derive(Debug, Clone, Default)]
+pub struct ServerConfig {
+    pub batcher: BatcherConfig,
+}
+
+/// Shared observable state.
+#[derive(Default)]
+pub struct ServerStats {
+    pub requests: Counter,
+    pub batches: Counter,
+    pub switches: Counter,
+    pub latency: Histogram,
+    pub events: EventLog,
+}
+
+/// Handle to the running server.
+pub struct AdaptiveServer {
+    tx: mpsc::Sender<ClassifyRequest>,
+    worker: Option<JoinHandle<()>>,
+    pub stats: Arc<ServerStats>,
+    pub energy: Arc<EnergyMonitor>,
+    pub manager: Arc<ProfileManager>,
+    next_id: AtomicU64,
+}
+
+impl AdaptiveServer {
+    /// Spawn the worker thread. PJRT handles are not `Send`, so the backend
+    /// is constructed *inside* the worker via `backend_factory`; startup
+    /// errors (missing profiles, artifact problems) are reported back
+    /// synchronously before `start` returns. The backend must contain every
+    /// profile the manager can select.
+    pub fn start(
+        cfg: ServerConfig,
+        backend_factory: impl FnOnce() -> Result<Backend> + Send + 'static,
+        manager: ProfileManager,
+        energy: EnergyMonitor,
+    ) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<ClassifyRequest>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let stats = Arc::new(ServerStats::default());
+        let energy = Arc::new(energy);
+        let manager = Arc::new(manager);
+
+        let w_stats = stats.clone();
+        let w_energy = energy.clone();
+        let w_manager = manager.clone();
+        let batcher = DynamicBatcher::new(cfg.batcher.clone(), rx);
+        let profile_names: Vec<String> = manager
+            .profiles()
+            .iter()
+            .map(|p| p.name.clone())
+            .collect();
+        let worker = std::thread::Builder::new()
+            .name("adaptive-engine".into())
+            .spawn(move || {
+                let backend = match backend_factory().and_then(|b| {
+                    for name in &profile_names {
+                        b.ensure_profile(name)?;
+                    }
+                    Ok(b)
+                }) {
+                    Ok(b) => {
+                        let _ = ready_tx.send(Ok(()));
+                        b
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let mut active = w_manager.current().name.clone();
+                while let Some(batch) = batcher.next_batch() {
+                    // --- profile management step ---
+                    let spec = w_manager.select(&w_energy).clone();
+                    if spec.name != active {
+                        w_stats.switches.inc();
+                        w_stats.events.push(format!(
+                            "switch {active} -> {} (battery {:.1}%)",
+                            spec.name,
+                            w_energy.remaining_fraction() * 100.0
+                        ));
+                        active = spec.name.clone();
+                    }
+                    // --- execute ---
+                    let images: Vec<&[u8]> =
+                        batch.iter().map(|r| r.image.as_slice()).collect();
+                    let results = match backend.classify(&active, &images) {
+                        Ok(r) => r,
+                        Err(e) => {
+                            w_stats.events.push(format!("batch failed: {e}"));
+                            continue;
+                        }
+                    };
+                    w_stats.batches.inc();
+                    // --- energy accounting + replies ---
+                    for (req, (logits, pred)) in batch.into_iter().zip(results) {
+                        w_energy.drain(spec.power_mw, spec.latency_us);
+                        let latency_us = req.submitted.elapsed().as_micros() as u64;
+                        w_stats.requests.inc();
+                        w_stats.latency.record_us(latency_us);
+                        let _ = req.reply.send(ClassifyResponse {
+                            id: req.id,
+                            pred,
+                            logits,
+                            profile: active.clone(),
+                            latency_us,
+                        });
+                    }
+                }
+            })?;
+
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("worker died during startup"))??;
+        Ok(AdaptiveServer {
+            tx,
+            worker: Some(worker),
+            stats,
+            energy,
+            manager,
+            next_id: AtomicU64::new(0),
+        })
+    }
+
+    /// Submit one image; returns the reply receiver.
+    pub fn submit(&self, image: Vec<u8>) -> mpsc::Receiver<ClassifyResponse> {
+        let (rtx, rrx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        // Send failure only happens at shutdown; the receiver will read Err.
+        let _ = self.tx.send(ClassifyRequest::new(id, image, rtx));
+        rrx
+    }
+
+    /// Submit and wait.
+    pub fn classify(&self, image: Vec<u8>) -> Result<ClassifyResponse> {
+        let rx = self.submit(image);
+        Ok(rx.recv()?)
+    }
+
+    /// Graceful shutdown: close the queue and join the worker.
+    pub fn shutdown(mut self) {
+        drop(self.tx.clone()); // original tx dropped in Drop below
+        if let Some(w) = self.worker.take() {
+            // Dropping self.tx happens after; replace it with a dummy by
+            // taking ownership: easiest is to drop the whole struct fields.
+            drop(std::mem::replace(&mut self.tx, mpsc::channel().0));
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for AdaptiveServer {
+    fn drop(&mut self) {
+        // Closing tx unblocks the batcher with None; join if still running.
+        drop(std::mem::replace(&mut self.tx, mpsc::channel().0));
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::manager::{ManagerConfig, ProfileSpec};
+    use super::*;
+    use crate::qonnx::{read_str, test_model_json};
+    use std::collections::BTreeMap;
+
+    /// Returns (factory, input_elems). The factory is Send (models are plain
+    /// data); the Backend itself is built inside the worker thread.
+    fn sim_backend() -> (impl FnOnce() -> anyhow::Result<Backend> + Send, usize) {
+        let m = read_str(&test_model_json(1, 2)).unwrap();
+        let elems = m.input_shape.elems();
+        let mut a = m.clone();
+        a.profile = "hi".into();
+        let mut b = m;
+        b.profile = "lo".into();
+        let mut models = BTreeMap::new();
+        models.insert("hi".to_string(), a);
+        models.insert("lo".to_string(), b);
+        (move || Ok(Backend::Sim { models }), elems)
+    }
+
+    fn specs() -> Vec<ProfileSpec> {
+        vec![
+            ProfileSpec {
+                name: "hi".into(),
+                accuracy: 0.96,
+                power_mw: 142.0,
+                latency_us: 329.0,
+            },
+            ProfileSpec {
+                name: "lo".into(),
+                accuracy: 0.94,
+                power_mw: 130.0,
+                latency_us: 329.0,
+            },
+        ]
+    }
+
+    #[test]
+    fn serves_requests_and_switches_profile() {
+        let (backend, elems) = sim_backend();
+        // Tiny battery: drains below 50% after a few classifications.
+        // Each classification drains 142mW * 329us ~= 4.7e-5 J.
+        let energy = EnergyMonitor::new(9.0e-4);
+        let mgr = ProfileManager::new(ManagerConfig::default(), specs());
+        let srv = AdaptiveServer::start(ServerConfig::default(), backend, mgr, energy)
+            .unwrap();
+
+        let img = vec![7u8; elems];
+        let mut profiles_seen = Vec::new();
+        for _ in 0..20 {
+            let resp = srv.classify(img.clone()).unwrap();
+            profiles_seen.push(resp.profile.clone());
+        }
+        assert_eq!(srv.stats.requests.get(), 20);
+        assert!(profiles_seen.iter().any(|p| p == "hi"));
+        assert!(
+            profiles_seen.iter().any(|p| p == "lo"),
+            "never switched to low-power: battery {:.3}",
+            srv.energy.remaining_fraction()
+        );
+        assert!(srv.stats.switches.get() >= 1);
+        // switch order: hi first, then lo (battery only drains)
+        let first_lo = profiles_seen.iter().position(|p| p == "lo").unwrap();
+        assert!(profiles_seen[..first_lo].iter().all(|p| p == "hi"));
+        srv.shutdown();
+    }
+
+    #[test]
+    fn rejects_manager_profile_missing_from_backend() {
+        let (backend, _) = sim_backend();
+        let bad_specs = vec![ProfileSpec {
+            name: "nope".into(),
+            accuracy: 1.0,
+            power_mw: 1.0,
+            latency_us: 1.0,
+        }];
+        let mgr = ProfileManager::new(ManagerConfig::default(), bad_specs);
+        let energy = EnergyMonitor::new(1.0);
+        assert!(
+            AdaptiveServer::start(ServerConfig::default(), backend, mgr, energy).is_err()
+        );
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let (backend, elems) = sim_backend();
+        let energy = EnergyMonitor::new(1e9);
+        let mgr = ProfileManager::new(ManagerConfig::default(), specs());
+        let srv = Arc::new(
+            AdaptiveServer::start(ServerConfig::default(), backend, mgr, energy).unwrap(),
+        );
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let srv = srv.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..10 {
+                    let img = vec![(t * 10 + i) as u8; elems];
+                    let resp = srv.classify(img).unwrap();
+                    assert!(resp.pred < 3);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(srv.stats.requests.get(), 40);
+    }
+}

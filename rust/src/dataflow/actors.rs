@@ -1,0 +1,486 @@
+//! Actors of the streaming template (paper Fig. 2, right side).
+//!
+//! Each conv layer maps to the template  LineBuffer -> ConvMac(Weights/Bias)
+//! with the pool, and the head to a Gemm actor. Actors fire under dataflow
+//! rules (inputs available + output FIFO has room); `ConvMac`/`Gemm` model
+//! HLS folding with an initiation interval II derived from (PE, SIMD): one
+//! output needs `ceil(Cout/PE) * ceil(taps/SIMD)` cycles, during which the
+//! actor is busy. Firing one actor round = one clock cycle in `sim`.
+
+use super::fifo::Fifo;
+use crate::qonnx::{ConvLayer, DenseLayer};
+
+/// Outcome of offering an actor one clock cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fired {
+    /// Did useful work this cycle (consumed/produced/progressed).
+    Busy,
+    /// Nothing to do this cycle.
+    Idle,
+    /// Produced the final output token (sink-side completion signal).
+    Done,
+}
+
+pub trait Actor {
+    fn name(&self) -> &str;
+    /// Offer one clock cycle. `fifos` is the global FIFO table; the actor
+    /// addresses its ports by the indices given at construction.
+    fn tick(&mut self, fifos: &mut [Fifo]) -> Fired;
+    /// Total useful firings (for utilization reports).
+    fn firings(&self) -> u64;
+    /// Total MAC operations executed (conv/gemm only).
+    fn macs(&self) -> u64 {
+        0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Source: streams input pixels (one per cycle) into the pipeline.
+// ---------------------------------------------------------------------------
+
+pub struct Source {
+    name: String,
+    out: usize,
+    pixels: Vec<Box<[i64]>>,
+    next: usize,
+    fired: u64,
+}
+
+impl Source {
+    /// `image`: HWC codes; emits H*W tokens of C channels each.
+    pub fn new(name: &str, out: usize, image: &[u8], h: usize, w: usize, c: usize) -> Self {
+        assert_eq!(image.len(), h * w * c);
+        let pixels = (0..h * w)
+            .map(|p| {
+                image[p * c..(p + 1) * c]
+                    .iter()
+                    .map(|&v| v as i64)
+                    .collect::<Vec<_>>()
+                    .into_boxed_slice()
+            })
+            .collect();
+        Source {
+            name: name.to_string(),
+            out,
+            pixels,
+            next: 0,
+            fired: 0,
+        }
+    }
+}
+
+impl Actor for Source {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn tick(&mut self, fifos: &mut [Fifo]) -> Fired {
+        if self.next >= self.pixels.len() || !fifos[self.out].has_room() {
+            return Fired::Idle;
+        }
+        fifos[self.out].push(self.pixels[self.next].clone());
+        self.next += 1;
+        self.fired += 1;
+        Fired::Busy
+    }
+
+    fn firings(&self) -> u64 {
+        self.fired
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LineBuffer: stores incoming rows, emits 3x3 SAME windows in raster order.
+// ---------------------------------------------------------------------------
+
+pub struct LineBuffer {
+    name: String,
+    inp: usize,
+    out: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    /// Rows received so far (each row: w*c codes). Functionally we keep all
+    /// rows; the hardware needs only 2 line BRAMs + window regs (the HLS
+    /// estimator models that, not this).
+    rows: Vec<i64>,
+    pixels_in: usize,
+    next_window: usize, // raster index of next window to emit
+    fired: u64,
+}
+
+impl LineBuffer {
+    pub fn new(name: &str, inp: usize, out: usize, h: usize, w: usize, c: usize) -> Self {
+        LineBuffer {
+            name: name.to_string(),
+            inp,
+            out,
+            h,
+            w,
+            c,
+            rows: Vec::with_capacity(h * w * c),
+            pixels_in: 0,
+            next_window: 0,
+            fired: 0,
+        }
+    }
+
+    fn window_ready(&self) -> bool {
+        if self.next_window >= self.h * self.w {
+            return false;
+        }
+        let y = self.next_window / self.w;
+        // need all rows up to min(y+1, h-1) fully received
+        let need_row = (y + 1).min(self.h - 1);
+        self.pixels_in >= (need_row + 1) * self.w
+    }
+
+    fn emit_window(&self) -> Box<[i64]> {
+        let (y, x) = (self.next_window / self.w, self.next_window % self.w);
+        let mut win = vec![0i64; 9 * self.c];
+        for dy in 0..3isize {
+            let sy = y as isize + dy - 1;
+            if sy < 0 || sy >= self.h as isize {
+                continue;
+            }
+            for dx in 0..3isize {
+                let sx = x as isize + dx - 1;
+                if sx < 0 || sx >= self.w as isize {
+                    continue;
+                }
+                let src = ((sy as usize) * self.w + sx as usize) * self.c;
+                let dst = ((dy as usize * 3) + dx as usize) * self.c;
+                win[dst..dst + self.c]
+                    .copy_from_slice(&self.rows[src..src + self.c]);
+            }
+        }
+        win.into_boxed_slice()
+    }
+}
+
+impl Actor for LineBuffer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn tick(&mut self, fifos: &mut [Fifo]) -> Fired {
+        let mut did = false;
+        // Ingest up to one pixel per cycle.
+        if self.pixels_in < self.h * self.w {
+            if let Some(tok) = fifos[self.inp].pop() {
+                debug_assert_eq!(tok.len(), self.c);
+                self.rows.extend_from_slice(&tok);
+                self.pixels_in += 1;
+                did = true;
+            }
+        }
+        // Emit up to one window per cycle.
+        if self.window_ready() && fifos[self.out].has_room() {
+            let win = self.emit_window();
+            fifos[self.out].push(win);
+            self.next_window += 1;
+            did = true;
+        }
+        if did {
+            self.fired += 1;
+            Fired::Busy
+        } else {
+            Fired::Idle
+        }
+    }
+
+    fn firings(&self) -> u64 {
+        self.fired
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ConvMac: 3x3 window -> Cout pixel, with PE/SIMD folding (II cycles/output).
+// ---------------------------------------------------------------------------
+
+pub struct ConvMac {
+    name: String,
+    inp: usize,
+    out: usize,
+    layer: ConvLayer,
+    /// Initiation interval: cycles needed per output pixel.
+    pub ii: u64,
+    busy: u64,
+    pending: Option<Box<[i64]>>,
+    fired: u64,
+    macs: u64,
+}
+
+impl ConvMac {
+    pub fn new(name: &str, inp: usize, out: usize, layer: ConvLayer, pe: usize, simd: usize) -> Self {
+        let taps = 9 * layer.cin;
+        let ii = (layer.cout.div_ceil(pe) * taps.div_ceil(simd)) as u64;
+        ConvMac {
+            name: name.to_string(),
+            inp,
+            out,
+            layer,
+            ii: ii.max(1),
+            busy: 0,
+            pending: None,
+            fired: 0,
+            macs: 0,
+        }
+    }
+
+    fn compute(&mut self, win: &[i64]) -> Box<[i64]> {
+        let l = &self.layer;
+        let mut acc = l.b_codes.clone();
+        for t in 0..9 * l.cin {
+            let xv = win[t];
+            if xv == 0 {
+                continue;
+            }
+            let wrow = &l.w_codes[t * l.cout..(t + 1) * l.cout];
+            for (a, &wv) in acc.iter_mut().zip(wrow) {
+                *a += xv * wv as i64;
+            }
+        }
+        self.macs += (9 * l.cin * l.cout) as u64;
+        acc.iter()
+            .enumerate()
+            .map(|(c, &a)| super::exec::requant(a, l.mult[c], l.shift[c], l.act_bits))
+            .collect::<Vec<_>>()
+            .into_boxed_slice()
+    }
+}
+
+impl Actor for ConvMac {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn tick(&mut self, fifos: &mut [Fifo]) -> Fired {
+        // Finish an in-flight computation first (II modeling).
+        if self.busy > 0 {
+            self.busy -= 1;
+            if self.busy == 0 {
+                if let Some(tok) = self.pending.take() {
+                    if fifos[self.out].has_room() {
+                        fifos[self.out].push(tok);
+                    } else {
+                        // output stalled: hold the token, stay "busy"
+                        self.pending = Some(tok);
+                        self.busy = 1;
+                    }
+                }
+            }
+            return Fired::Busy;
+        }
+        if let Some(win) = {
+            let f = &mut fifos[self.inp];
+            if !f.is_empty() { f.pop() } else { None }
+        } {
+            let out_tok = self.compute(&win);
+            self.fired += 1;
+            if self.ii <= 1 {
+                if fifos[self.out].has_room() {
+                    fifos[self.out].push(out_tok);
+                } else {
+                    self.pending = Some(out_tok);
+                    self.busy = 1;
+                }
+            } else {
+                self.pending = Some(out_tok);
+                self.busy = self.ii - 1;
+            }
+            Fired::Busy
+        } else {
+            Fired::Idle
+        }
+    }
+
+    fn firings(&self) -> u64 {
+        self.fired
+    }
+
+    fn macs(&self) -> u64 {
+        self.macs
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MaxPool: 2x2 stride-2 over the incoming raster pixel stream.
+// ---------------------------------------------------------------------------
+
+pub struct MaxPool {
+    name: String,
+    inp: usize,
+    out: usize,
+    w: usize,
+    c: usize,
+    /// Partial row of pooled maxima (w/2 tokens of c channels).
+    row: Vec<i64>,
+    x: usize,
+    y: usize,
+    fired: u64,
+}
+
+impl MaxPool {
+    pub fn new(name: &str, inp: usize, out: usize, w: usize, c: usize) -> Self {
+        MaxPool {
+            name: name.to_string(),
+            inp,
+            out,
+            w,
+            c,
+            row: vec![i64::MIN; (w / 2) * c],
+            x: 0,
+            y: 0,
+            fired: 0,
+        }
+    }
+}
+
+impl Actor for MaxPool {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn tick(&mut self, fifos: &mut [Fifo]) -> Fired {
+        // Emitting happens in the same cycle a completing pixel arrives; we
+        // need room when (y odd, x odd). Check before consuming.
+        let completes = self.y % 2 == 1 && self.x % 2 == 1;
+        if completes && !fifos[self.out].has_room() {
+            return Fired::Idle;
+        }
+        let Some(tok) = fifos[self.inp].pop() else {
+            return Fired::Idle;
+        };
+        let slot = (self.x / 2) * self.c;
+        for (i, &v) in tok.iter().enumerate() {
+            let cur = &mut self.row[slot + i];
+            *cur = (*cur).max(v);
+        }
+        if completes {
+            let pooled: Box<[i64]> = self.row[slot..slot + self.c].into();
+            fifos[self.out].push(pooled);
+        }
+        self.x += 1;
+        if self.x == self.w {
+            self.x = 0;
+            self.y += 1;
+            if self.y % 2 == 0 {
+                self.row.fill(i64::MIN);
+            }
+        }
+        self.fired += 1;
+        Fired::Busy
+    }
+
+    fn firings(&self) -> u64 {
+        self.fired
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Gemm: accumulates the flattened pixel stream, emits logits at the end.
+// ---------------------------------------------------------------------------
+
+pub struct Gemm {
+    name: String,
+    inp: usize,
+    out: usize,
+    layer: DenseLayer,
+    /// Cycles per consumed input token (folding).
+    pub ii: u64,
+    busy: u64,
+    acc: Vec<i64>,
+    consumed: usize,
+    n_tokens: usize,
+    c_per_token: usize,
+    emitted: bool,
+    fired: u64,
+    macs: u64,
+}
+
+impl Gemm {
+    pub fn new(
+        name: &str,
+        inp: usize,
+        out: usize,
+        layer: DenseLayer,
+        c_per_token: usize,
+        pe: usize,
+        simd: usize,
+    ) -> Self {
+        assert_eq!(layer.in_features % c_per_token, 0);
+        let n_tokens = layer.in_features / c_per_token;
+        let k = layer.out_features;
+        let ii = (c_per_token.div_ceil(simd) * k.div_ceil(pe)) as u64;
+        let acc = layer.b_codes.clone();
+        Gemm {
+            name: name.to_string(),
+            inp,
+            out,
+            layer,
+            ii: ii.max(1),
+            busy: 0,
+            acc,
+            consumed: 0,
+            n_tokens,
+            c_per_token,
+            emitted: false,
+            fired: 0,
+            macs: 0,
+        }
+    }
+}
+
+impl Actor for Gemm {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn tick(&mut self, fifos: &mut [Fifo]) -> Fired {
+        if self.busy > 0 {
+            self.busy -= 1;
+            return Fired::Busy;
+        }
+        if self.emitted {
+            return Fired::Idle;
+        }
+        if self.consumed == self.n_tokens {
+            if fifos[self.out].has_room() {
+                fifos[self.out].push(self.acc.clone().into_boxed_slice());
+                self.emitted = true;
+                return Fired::Done;
+            }
+            return Fired::Idle;
+        }
+        let Some(tok) = fifos[self.inp].pop() else {
+            return Fired::Idle;
+        };
+        debug_assert_eq!(tok.len(), self.c_per_token);
+        let k = self.layer.out_features;
+        let base = self.consumed * self.c_per_token;
+        for (i, &xv) in tok.iter().enumerate() {
+            if xv == 0 {
+                continue;
+            }
+            let f = base + i;
+            let wrow = &self.layer.w_codes[f * k..(f + 1) * k];
+            for (a, &wv) in self.acc.iter_mut().zip(wrow) {
+                *a += xv * wv as i64;
+            }
+        }
+        self.macs += (self.c_per_token * k) as u64;
+        self.consumed += 1;
+        self.fired += 1;
+        self.busy = self.ii - 1;
+        Fired::Busy
+    }
+
+    fn firings(&self) -> u64 {
+        self.fired
+    }
+
+    fn macs(&self) -> u64 {
+        self.macs
+    }
+}

@@ -1,0 +1,226 @@
+//! Fast functional integer executor (bit-exact vs python intref.py).
+//!
+//! Semantics per conv layer (see intref.py for the derivation):
+//!   acc_c = sum_{dy,dx,ci} qx * qw + qb_c                 (i64)
+//!   qy_c  = clamp((acc_c * M_c + round_half) >> sh_c, 0, 2^act_bits - 1)
+//! Max-pool on codes; dense emits raw i64 accumulators (logits).
+
+use crate::qonnx::{ConvLayer, DenseLayer, Layer, QonnxModel, TensorShape};
+
+/// Reusable execution scratch (avoids re-allocating the im2col buffer per
+/// image on the hot path).
+pub struct Executor<'m> {
+    model: &'m QonnxModel,
+    shapes: Vec<TensorShape>,
+    /// Double-buffered activation planes (codes).
+    buf_a: Vec<i64>,
+    buf_b: Vec<i64>,
+}
+
+impl<'m> Executor<'m> {
+    pub fn new(model: &'m QonnxModel) -> Self {
+        let shapes = crate::qonnx::infer_shapes(model);
+        let max_elems = shapes.iter().map(TensorShape::elems).max().unwrap_or(0);
+        Executor {
+            model,
+            shapes,
+            buf_a: vec![0; max_elems],
+            buf_b: vec![0; max_elems],
+        }
+    }
+
+    /// Run one image (u8 codes, HWC layout, shape = model.input_shape) and
+    /// return the 10 logits (raw dense accumulators).
+    pub fn run(&mut self, input: &[u8]) -> Vec<i64> {
+        let in_shape = self.model.input_shape;
+        assert_eq!(input.len(), in_shape.elems(), "input size mismatch");
+        for (dst, &src) in self.buf_a.iter_mut().zip(input) {
+            *dst = src as i64;
+        }
+        let mut cur_shape = in_shape;
+        let mut in_a = true; // which buffer currently holds the activation
+        let mut logits = Vec::new();
+        for (i, layer) in self.model.layers.iter().enumerate() {
+            let out_shape = self.shapes[i + 1];
+            let (src, dst) = if in_a {
+                (&self.buf_a, &mut self.buf_b)
+            } else {
+                (&self.buf_b, &mut self.buf_a)
+            };
+            match layer {
+                Layer::Conv(c) => {
+                    conv_forward(c, src, cur_shape, dst);
+                    in_a = !in_a;
+                }
+                Layer::Pool(_) => {
+                    pool_forward(src, cur_shape, dst);
+                    in_a = !in_a;
+                }
+                Layer::Flatten { .. } => { /* layout already flat (HWC) */ }
+                Layer::Dense(d) => {
+                    logits = dense_forward(d, &src[..cur_shape.elems()]);
+                    in_a = !in_a;
+                }
+            }
+            cur_shape = out_shape;
+        }
+        logits
+    }
+}
+
+/// One-shot convenience wrapper around [`Executor`].
+pub fn execute(model: &QonnxModel, input: &[u8]) -> Vec<i64> {
+    Executor::new(model).run(input)
+}
+
+/// Classify a batch; returns (logits per image, argmax per image).
+pub fn execute_batch(model: &QonnxModel, inputs: &[&[u8]]) -> (Vec<Vec<i64>>, Vec<usize>) {
+    let mut ex = Executor::new(model);
+    let mut all = Vec::with_capacity(inputs.len());
+    let mut preds = Vec::with_capacity(inputs.len());
+    for &img in inputs {
+        let logits = ex.run(img);
+        preds.push(argmax(&logits));
+        all.push(logits);
+    }
+    (all, preds)
+}
+
+pub fn argmax(xs: &[i64]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by_key(|&(i, &v)| (v, std::cmp::Reverse(i)))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Requantize one accumulator: (acc * M + half) >> sh, clamped to the
+/// unsigned activation range. Shared with the actor-level simulator so the
+/// two paths cannot diverge.
+#[inline]
+pub fn requant(acc: i64, mult: i64, shift: i64, act_bits: u32) -> i64 {
+    let half = if shift > 0 { 1i64 << (shift - 1) } else { 0 };
+    let q = (acc * mult + half) >> shift;
+    let qmax = (1i64 << act_bits) - 1;
+    q.clamp(0, qmax)
+}
+
+fn conv_forward(c: &ConvLayer, src: &[i64], shape: TensorShape, dst: &mut [i64]) {
+    let (h, w, cin, cout) = (shape.h, shape.w, c.cin, c.cout);
+    debug_assert_eq!(shape.c, cin);
+    let mut acc = vec![0i64; cout];
+    for y in 0..h {
+        for x in 0..w {
+            acc.copy_from_slice(&c.b_codes);
+            for dy in 0..3usize {
+                let sy = y as isize + dy as isize - 1;
+                if sy < 0 || sy >= h as isize {
+                    continue;
+                }
+                for dx in 0..3usize {
+                    let sx = x as isize + dx as isize - 1;
+                    if sx < 0 || sx >= w as isize {
+                        continue;
+                    }
+                    let base = (sy as usize * w + sx as usize) * cin;
+                    let wbase = ((dy * 3 + dx) * cin) * cout;
+                    for ci in 0..cin {
+                        let xv = src[base + ci];
+                        if xv == 0 {
+                            continue; // ReLU-sparse activations: skip zero MACs
+                        }
+                        let wrow = &c.w_codes[wbase + ci * cout..wbase + ci * cout + cout];
+                        for (a, &wv) in acc.iter_mut().zip(wrow) {
+                            *a += xv * wv as i64;
+                        }
+                    }
+                }
+            }
+            let obase = (y * w + x) * cout;
+            for co in 0..cout {
+                dst[obase + co] = requant(acc[co], c.mult[co], c.shift[co], c.act_bits);
+            }
+        }
+    }
+}
+
+fn pool_forward(src: &[i64], shape: TensorShape, dst: &mut [i64]) {
+    let (h, w, ch) = (shape.h, shape.w, shape.c);
+    let (oh, ow) = (h / 2, w / 2);
+    for y in 0..oh {
+        for x in 0..ow {
+            let obase = (y * ow + x) * ch;
+            for c in 0..ch {
+                let i00 = ((2 * y) * w + 2 * x) * ch + c;
+                let i01 = ((2 * y) * w + 2 * x + 1) * ch + c;
+                let i10 = ((2 * y + 1) * w + 2 * x) * ch + c;
+                let i11 = ((2 * y + 1) * w + 2 * x + 1) * ch + c;
+                dst[obase + c] = src[i00].max(src[i01]).max(src[i10]).max(src[i11]);
+            }
+        }
+    }
+}
+
+fn dense_forward(d: &DenseLayer, src: &[i64]) -> Vec<i64> {
+    let k = d.out_features;
+    let mut acc = d.b_codes.clone();
+    for (f, &xv) in src.iter().enumerate() {
+        if xv == 0 {
+            continue;
+        }
+        let wrow = &d.w_codes[f * k..f * k + k];
+        for (a, &wv) in acc.iter_mut().zip(wrow) {
+            *a += xv * wv as i64;
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qonnx::read_str;
+
+    fn tiny() -> QonnxModel {
+        read_str(&crate::qonnx::test_model_json(1, 2)).unwrap()
+    }
+
+    #[test]
+    fn requant_rounds_half_up() {
+        // acc=3, M=1, sh=1 -> (3*1+1)>>1 = 2
+        assert_eq!(requant(3, 1, 1, 8), 2);
+        // negative accs clamp to 0 (fused ReLU)
+        assert_eq!(requant(-100, 1 << 10, 10, 8), 0);
+        // saturation at qmax
+        assert_eq!(requant(i32::MAX as i64, 1 << 14, 2, 4), 15);
+        // shift 0 edge case: no rounding bias added
+        assert_eq!(requant(5, 3, 0, 8), 15);
+    }
+
+    #[test]
+    fn executes_tiny_model_deterministically() {
+        let m = tiny();
+        let input: Vec<u8> = (0..m.input_shape.elems()).map(|i| (i * 13 % 256) as u8).collect();
+        let a = execute(&m, &input);
+        let b = execute(&m, &input);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 3);
+    }
+
+    #[test]
+    fn zero_input_gives_bias_logits() {
+        let m = tiny();
+        let input = vec![0u8; m.input_shape.elems()];
+        let logits = execute(&m, &input);
+        // All activations zero except via conv bias -> requant; with zero
+        // input the dense output is a pure function of biases; just assert
+        // it is finite and stable.
+        assert_eq!(logits.len(), 3);
+    }
+
+    #[test]
+    fn argmax_ties_break_low_index() {
+        assert_eq!(argmax(&[3, 5, 5, 1]), 1);
+        assert_eq!(argmax(&[-2]), 0);
+    }
+}

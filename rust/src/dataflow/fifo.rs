@@ -1,0 +1,183 @@
+//! Bounded token FIFOs with occupancy + switching-activity statistics.
+//!
+//! Tokens are channel vectors (`Box<[i64]>`): one token = one pixel (all
+//! channels) or one conv window. The FIFO records the statistics the power
+//! model consumes: pushes, max occupancy, and *toggle bits* — the Hamming
+//! distance between consecutive tokens masked to the port bit-width. This
+//! is what makes the simulated power value-dependent, matching the paper's
+//! observation that power depends on the actual weights/data.
+
+/// Bounded FIFO of fixed-width integer tokens.
+#[derive(Debug)]
+pub struct Fifo {
+    pub name: String,
+    /// Port width in bits (each token element is masked to this width when
+    /// counting toggles).
+    pub bits: u32,
+    capacity: usize,
+    queue: std::collections::VecDeque<Box<[i64]>>,
+    last: Option<Box<[i64]>>,
+    // --- statistics ---
+    pub pushes: u64,
+    pub pops: u64,
+    pub max_occupancy: usize,
+    /// Total Hamming toggle bits observed across consecutive pushed tokens.
+    pub toggle_bits: u64,
+    /// Total element slots pushed (tokens * token_len) — toggle denominator.
+    pub elems_pushed: u64,
+}
+
+impl Fifo {
+    pub fn new(name: impl Into<String>, bits: u32, capacity: usize) -> Self {
+        Fifo {
+            name: name.into(),
+            bits,
+            capacity,
+            queue: std::collections::VecDeque::new(),
+            last: None,
+            pushes: 0,
+            pops: 0,
+            max_occupancy: 0,
+            toggle_bits: 0,
+            elems_pushed: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn has_room(&self) -> bool {
+        self.queue.len() < self.capacity
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Push a token. Panics if full — actors must check `has_room` first
+    /// (firing rules enforce back-pressure; a panic is a scheduler bug).
+    pub fn push(&mut self, token: Box<[i64]>) {
+        assert!(
+            self.has_room(),
+            "FIFO '{}' overflow (capacity {})",
+            self.name,
+            self.capacity
+        );
+        self.record_toggles(&token);
+        self.queue.push_back(token);
+        self.pushes += 1;
+        self.max_occupancy = self.max_occupancy.max(self.queue.len());
+    }
+
+    pub fn pop(&mut self) -> Option<Box<[i64]>> {
+        let t = self.queue.pop_front();
+        if t.is_some() {
+            self.pops += 1;
+        }
+        t
+    }
+
+    pub fn front(&self) -> Option<&[i64]> {
+        self.queue.front().map(|t| &t[..])
+    }
+
+    fn record_toggles(&mut self, token: &[i64]) {
+        let mask: u64 = if self.bits >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << self.bits) - 1
+        };
+        if let Some(prev) = &self.last {
+            let n = prev.len().min(token.len());
+            for i in 0..n {
+                let a = (prev[i] as u64) & mask;
+                let b = (token[i] as u64) & mask;
+                self.toggle_bits += (a ^ b).count_ones() as u64;
+            }
+        } else {
+            // First token: toggles from the all-zero reset state.
+            for &v in token {
+                self.toggle_bits += ((v as u64) & mask).count_ones() as u64;
+            }
+        }
+        self.elems_pushed += token.len() as u64;
+        self.last = Some(token.to_vec().into_boxed_slice());
+    }
+
+    /// Mean fraction of port bits toggling per pushed element (0..=1).
+    pub fn toggle_rate(&self) -> f64 {
+        if self.elems_pushed == 0 || self.bits == 0 {
+            return 0.0;
+        }
+        self.toggle_bits as f64 / (self.elems_pushed as f64 * self.bits as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok(xs: &[i64]) -> Box<[i64]> {
+        xs.to_vec().into_boxed_slice()
+    }
+
+    #[test]
+    fn push_pop_order() {
+        let mut f = Fifo::new("t", 8, 4);
+        f.push(tok(&[1]));
+        f.push(tok(&[2]));
+        assert_eq!(f.pop().unwrap()[0], 1);
+        assert_eq!(f.pop().unwrap()[0], 2);
+        assert!(f.pop().is_none());
+        assert_eq!(f.pushes, 2);
+        assert_eq!(f.pops, 2);
+    }
+
+    #[test]
+    fn backpressure_has_room() {
+        let mut f = Fifo::new("t", 8, 2);
+        f.push(tok(&[0]));
+        f.push(tok(&[0]));
+        assert!(!f.has_room());
+        f.pop();
+        assert!(f.has_room());
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn overflow_panics() {
+        let mut f = Fifo::new("t", 8, 1);
+        f.push(tok(&[0]));
+        f.push(tok(&[0]));
+    }
+
+    #[test]
+    fn toggle_counting_masks_to_port_width() {
+        let mut f = Fifo::new("t", 4, 8);
+        f.push(tok(&[0b0000])); // from reset: 0 toggles
+        f.push(tok(&[0b1111])); // 4 toggles
+        f.push(tok(&[0b1110])); // 1 toggle
+        // value beyond port width: upper bits masked away
+        f.push(tok(&[0b1111_1110])); // vs 0b1110 -> masked to 1110 -> 0 toggles
+        assert_eq!(f.toggle_bits, 5);
+        assert_eq!(f.elems_pushed, 4);
+        assert!((f.toggle_rate() - 5.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn occupancy_tracks_peak() {
+        let mut f = Fifo::new("t", 8, 8);
+        for i in 0..5 {
+            f.push(tok(&[i]));
+        }
+        f.pop();
+        f.pop();
+        assert_eq!(f.max_occupancy, 5);
+        assert_eq!(f.len(), 3);
+    }
+}

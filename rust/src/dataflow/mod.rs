@@ -1,0 +1,29 @@
+//! Streaming dataflow engine: the FPGA inference fabric, simulated.
+//!
+//! The paper's hardware is a *streaming architecture*: one hardware block
+//! per CNN layer (line buffer -> conv MAC array -> pool ... -> dense), all
+//! layers connected by on-chip FIFOs and running concurrently. This module
+//! is the substitution for that fabric (DESIGN.md §2):
+//!
+//! * [`exec`] — the fast functional path: executes the integer pipeline of a
+//!   [`crate::qonnx::QonnxModel`] bit-exactly (i64 accumulators, TFLite-style
+//!   per-channel requantization). Pinned against `python/compile/intref.py`
+//!   via exported test vectors. Used for accuracy sweeps and by the
+//!   coordinator when the PJRT runtime is not in play.
+//! * [`actors`] + [`sim`] — the cycle-approximate actor/FIFO simulation of
+//!   the streaming template (Fig. 2 right in the paper): line-buffer,
+//!   conv-MAC (with PE/SIMD folding), max-pool, and gemm actors exchanging
+//!   pixel tokens through bounded FIFOs. It computes the *same* integers as
+//!   [`exec`] while additionally producing latency (cycles), FIFO occupancy,
+//!   firing counts, and value-dependent toggle statistics — the inputs to
+//!   the power model (`crate::power`), which the paper notes depends on
+//!   "the actual values of weights and the data being processed".
+
+pub mod actors;
+pub mod exec;
+pub mod fifo;
+pub mod sim;
+
+pub use exec::{execute, execute_batch, Executor};
+pub use fifo::Fifo;
+pub use sim::{simulate_image, FoldingConfig, SimReport};

@@ -1,0 +1,389 @@
+//! Cycle-approximate simulation of the streaming pipeline.
+//!
+//! Builds the actor network for a [`QonnxModel`] (Source -> [LineBuffer ->
+//! ConvMac -> MaxPool]* -> Gemm -> sink FIFO), then ticks every actor once
+//! per clock cycle until the logits token lands. Produces the logits (which
+//! must match `exec::execute` bit-for-bit — property-tested) plus the
+//! statistics that feed the HLS report and the power model.
+
+use super::actors::{Actor, ConvMac, Fired, Gemm, LineBuffer, MaxPool, Source};
+use super::fifo::Fifo;
+use crate::qonnx::{Layer, QonnxModel};
+
+/// HLS folding parameters per parametric layer (PE = output-channel
+/// parallelism, SIMD = input-tap parallelism), mirroring FINN's folding.
+/// The defaults are chosen so the simulated latency of the paper's tiny CNN
+/// lands at the paper's 329 us @ 100 MHz (Table 1) — see DESIGN.md §4.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FoldingConfig {
+    pub conv1_pe: usize,
+    pub conv1_simd: usize,
+    pub conv2_pe: usize,
+    pub conv2_simd: usize,
+    pub dense_pe: usize,
+    pub dense_simd: usize,
+    /// FIFO depth between actors.
+    pub fifo_depth: usize,
+}
+
+impl Default for FoldingConfig {
+    fn default() -> Self {
+        FoldingConfig {
+            conv1_pe: 8,
+            conv1_simd: 2,
+            conv2_pe: 8,
+            conv2_simd: 36,
+            dense_pe: 2,
+            dense_simd: 64,
+            fifo_depth: 8,
+        }
+    }
+}
+
+impl FoldingConfig {
+    /// (pe, simd) for the i-th conv layer (0-based).
+    fn conv(&self, idx: usize) -> (usize, usize) {
+        if idx == 0 {
+            (self.conv1_pe, self.conv1_simd)
+        } else {
+            (self.conv2_pe, self.conv2_simd)
+        }
+    }
+
+    /// Total MAC units instantiated for a model (resource model input).
+    pub fn mac_units(&self, model: &QonnxModel) -> usize {
+        let mut units = 0;
+        let mut conv_idx = 0;
+        for layer in &model.layers {
+            match layer {
+                Layer::Conv(_) => {
+                    let (pe, simd) = self.conv(conv_idx);
+                    units += pe * simd;
+                    conv_idx += 1;
+                }
+                Layer::Dense(_) => units += self.dense_pe * self.dense_simd,
+                _ => {}
+            }
+        }
+        units
+    }
+}
+
+/// Per-FIFO statistics snapshot.
+#[derive(Debug, Clone)]
+pub struct FifoStats {
+    pub name: String,
+    pub bits: u32,
+    pub pushes: u64,
+    pub max_occupancy: usize,
+    pub capacity: usize,
+    pub toggle_rate: f64,
+    pub toggle_bits: u64,
+}
+
+/// Per-actor statistics snapshot.
+#[derive(Debug, Clone)]
+pub struct ActorStats {
+    pub name: String,
+    pub firings: u64,
+    pub macs: u64,
+}
+
+/// Result of simulating one image through the streaming engine.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub logits: Vec<i64>,
+    /// Clock cycles until the logits token was produced.
+    pub cycles: u64,
+    pub fifos: Vec<FifoStats>,
+    pub actors: Vec<ActorStats>,
+    /// Total MACs executed (value-dependent: zero activations are skipped in
+    /// hardware terms this is the switching workload, not the static array).
+    pub total_macs: u64,
+}
+
+impl SimReport {
+    /// Latency in microseconds at `clock_mhz`.
+    pub fn latency_us(&self, clock_mhz: f64) -> f64 {
+        self.cycles as f64 / clock_mhz
+    }
+
+    /// Mean toggle rate over all FIFOs weighted by traffic (power input).
+    pub fn mean_toggle_rate(&self) -> f64 {
+        let (mut num, mut den) = (0.0, 0.0);
+        for f in &self.fifos {
+            let w = (f.pushes as f64) * f.bits as f64;
+            num += f.toggle_rate * w;
+            den += w;
+        }
+        if den == 0.0 {
+            0.0
+        } else {
+            num / den
+        }
+    }
+}
+
+/// Simulate one image (u8 HWC codes) through the streaming engine.
+///
+/// Panics if the model violates the template (enforced by the QONNX reader).
+pub fn simulate_image(model: &QonnxModel, cfg: &FoldingConfig, image: &[u8]) -> SimReport {
+    let shapes = crate::qonnx::infer_shapes(model);
+    let in_shape = model.input_shape;
+    assert_eq!(image.len(), in_shape.elems());
+
+    let mut fifos: Vec<Fifo> = Vec::new();
+    let mut actors: Vec<Box<dyn Actor>> = Vec::new();
+
+    // input FIFO
+    fifos.push(Fifo::new("fifo_input", model.input_bits, cfg.fifo_depth));
+    actors.push(Box::new(Source::new(
+        "source", 0, image, in_shape.h, in_shape.w, in_shape.c,
+    )));
+
+    let mut cur_fifo = 0usize;
+    let mut cur_bits = model.input_bits;
+    let mut conv_idx = 0usize;
+    // Channel count of the physical token stream (unchanged by Flatten —
+    // the gemm actor consumes the pooled pixel stream directly).
+    let mut stream_c = in_shape.c;
+    for (i, layer) in model.layers.iter().enumerate() {
+        let in_shape_i = shapes[i];
+        match layer {
+            Layer::Conv(c) => {
+                // line buffer -> window fifo -> convmac -> pixel fifo
+                let win_fifo = fifos.len();
+                fifos.push(Fifo::new(
+                    format!("fifo_{}_win", c.name),
+                    cur_bits,
+                    cfg.fifo_depth,
+                ));
+                actors.push(Box::new(LineBuffer::new(
+                    &format!("{}_linebuf", c.name),
+                    cur_fifo,
+                    win_fifo,
+                    in_shape_i.h,
+                    in_shape_i.w,
+                    in_shape_i.c,
+                )));
+                let out_fifo = fifos.len();
+                fifos.push(Fifo::new(
+                    format!("fifo_{}_out", c.name),
+                    c.act_bits,
+                    cfg.fifo_depth,
+                ));
+                let (pe, simd) = cfg.conv(conv_idx);
+                actors.push(Box::new(ConvMac::new(
+                    &c.name,
+                    win_fifo,
+                    out_fifo,
+                    c.clone(),
+                    pe,
+                    simd,
+                )));
+                cur_fifo = out_fifo;
+                cur_bits = c.act_bits;
+                stream_c = c.cout;
+                conv_idx += 1;
+            }
+            Layer::Pool(p) => {
+                let out_fifo = fifos.len();
+                fifos.push(Fifo::new(
+                    format!("fifo_{}_out", p.name),
+                    cur_bits,
+                    cfg.fifo_depth,
+                ));
+                actors.push(Box::new(MaxPool::new(
+                    &p.name,
+                    cur_fifo,
+                    out_fifo,
+                    in_shape_i.w,
+                    in_shape_i.c,
+                )));
+                cur_fifo = out_fifo;
+            }
+            Layer::Flatten { .. } => { /* stream is already flat */ }
+            Layer::Dense(d) => {
+                let out_fifo = fifos.len();
+                fifos.push(Fifo::new("fifo_logits", 32, 2));
+                actors.push(Box::new(Gemm::new(
+                    &d.name,
+                    cur_fifo,
+                    out_fifo,
+                    d.clone(),
+                    stream_c,
+                    cfg.dense_pe,
+                    cfg.dense_simd,
+                )));
+                cur_fifo = out_fifo;
+            }
+        }
+    }
+    let logits_fifo = cur_fifo;
+
+    // --- clock loop ---
+    let mut cycles: u64 = 0;
+    let max_cycles: u64 = 200_000_000; // runaway guard
+    let logits;
+    loop {
+        cycles += 1;
+        let mut any = false;
+        let mut done = false;
+        for a in actors.iter_mut() {
+            match a.tick(&mut fifos) {
+                Fired::Busy => any = true,
+                Fired::Done => {
+                    any = true;
+                    done = true;
+                }
+                Fired::Idle => {}
+            }
+        }
+        if done || !fifos[logits_fifo].is_empty() {
+            logits = fifos[logits_fifo]
+                .pop()
+                .expect("logits token missing")
+                .to_vec();
+            break;
+        }
+        assert!(any, "deadlock: no actor could fire at cycle {cycles}");
+        assert!(cycles < max_cycles, "simulation runaway");
+    }
+
+    let total_macs = actors.iter().map(|a| a.macs()).sum();
+    SimReport {
+        logits,
+        cycles,
+        fifos: fifos
+            .iter()
+            .map(|f| FifoStats {
+                name: f.name.clone(),
+                bits: f.bits,
+                pushes: f.pushes,
+                max_occupancy: f.max_occupancy,
+                capacity: f.capacity(),
+                toggle_rate: f.toggle_rate(),
+                toggle_bits: f.toggle_bits,
+            })
+            .collect(),
+        actors: actors
+            .iter()
+            .map(|a| ActorStats {
+                name: a.name().to_string(),
+                firings: a.firings(),
+                macs: a.macs(),
+            })
+            .collect(),
+        total_macs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::exec;
+    use crate::qonnx::{read_str, test_model_json};
+    use crate::testkit::{self, Rng};
+
+    fn fast_fold() -> FoldingConfig {
+        FoldingConfig {
+            conv1_pe: 64,
+            conv1_simd: 64,
+            conv2_pe: 64,
+            conv2_simd: 576,
+            dense_pe: 16,
+            dense_simd: 64,
+            fifo_depth: 8,
+        }
+    }
+
+    #[test]
+    fn sim_matches_exec_on_tiny_model() {
+        let m = read_str(&test_model_json(1, 2)).unwrap();
+        let img: Vec<u8> = (0..m.input_shape.elems()).map(|i| (i * 37 % 251) as u8).collect();
+        let want = exec::execute(&m, &img);
+        let rep = simulate_image(&m, &fast_fold(), &img);
+        assert_eq!(rep.logits, want);
+        assert!(rep.cycles > 0);
+    }
+
+    #[test]
+    fn sim_matches_exec_on_random_models() {
+        testkit::check("sim == exec on random models", |rng| {
+            let cfg = crate::qonnx::RandModelCfg::gen(rng);
+            let json = crate::qonnx::random_model_json(&cfg, rng);
+            let m = read_str(&json).map_err(|e| e.to_string())?;
+            let img: Vec<u8> = (0..m.input_shape.elems())
+                .map(|_| rng.u64(0, 255) as u8)
+                .collect();
+            let want = exec::execute(&m, &img);
+            let fold = random_fold(rng);
+            let rep = simulate_image(&m, &fold, &img);
+            crate::prop_assert!(
+                rep.logits == want,
+                "sim {:?} != exec {:?} (fold {fold:?})",
+                rep.logits,
+                want
+            );
+            Ok(())
+        });
+    }
+
+    fn random_fold(rng: &mut Rng) -> FoldingConfig {
+        FoldingConfig {
+            conv1_pe: rng.usize(1, 8),
+            conv1_simd: rng.usize(1, 9),
+            conv2_pe: rng.usize(1, 8),
+            conv2_simd: rng.usize(1, 16),
+            dense_pe: rng.usize(1, 4),
+            dense_simd: rng.usize(1, 8),
+            fifo_depth: rng.usize(2, 16),
+        }
+    }
+
+    #[test]
+    fn latency_independent_of_weight_values() {
+        // Table-1 invariant: cycles depend on shapes/folding, not on data
+        // precision or values. Same model, two different inputs.
+        let m = read_str(&test_model_json(2, 3)).unwrap();
+        let img_a = vec![0u8; m.input_shape.elems()];
+        let img_b: Vec<u8> = (0..m.input_shape.elems()).map(|i| (i % 256) as u8).collect();
+        let cfg = FoldingConfig::default();
+        let ra = simulate_image(&m, &cfg, &img_a);
+        let rb = simulate_image(&m, &cfg, &img_b);
+        assert_eq!(ra.cycles, rb.cycles);
+    }
+
+    #[test]
+    fn fifo_occupancy_within_capacity() {
+        let m = read_str(&test_model_json(1, 4)).unwrap();
+        let img: Vec<u8> = (0..m.input_shape.elems()).map(|i| (i * 7 % 256) as u8).collect();
+        let rep = simulate_image(&m, &FoldingConfig::default(), &img);
+        for f in &rep.fifos {
+            assert!(
+                f.max_occupancy <= f.capacity,
+                "{} exceeded capacity",
+                f.name
+            );
+        }
+    }
+
+    #[test]
+    fn higher_folding_means_fewer_cycles() {
+        let m = read_str(&test_model_json(2, 4)).unwrap();
+        let img: Vec<u8> = (0..m.input_shape.elems()).map(|i| (i * 11 % 256) as u8).collect();
+        let slow = FoldingConfig {
+            conv1_pe: 1,
+            conv1_simd: 1,
+            conv2_pe: 1,
+            conv2_simd: 1,
+            dense_pe: 1,
+            dense_simd: 1,
+            fifo_depth: 8,
+        };
+        let r_slow = simulate_image(&m, &slow, &img);
+        let r_fast = simulate_image(&m, &fast_fold(), &img);
+        assert!(r_slow.cycles > r_fast.cycles);
+        assert_eq!(r_slow.logits, r_fast.logits);
+    }
+}

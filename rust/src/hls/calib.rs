@@ -1,0 +1,98 @@
+//! Calibration constants for the HLS cost model.
+//!
+//! Fitted against the paper's Table 1 (five mixed-precision engines on the
+//! KRIA KV260). The fit procedure (documented in EXPERIMENTS.md):
+//! with the default folding (432 MAC units: conv1 8x2, conv2 8x36, dense
+//! 2x64) the paper's LUT column constrains
+//!
+//! ```text
+//! luts/MAC = K_MUL_W * w_bits + K_MUL_A * a_bits + K_MUL_BASE
+//! ```
+//!
+//! with the W-coefficient dominating (paper: W8->W4 halves LUTs, A16->A8
+//! moves them by ~1%). The defaults (Kw=2.55, Ka=0.26) plus the per-actor
+//! accumulator/requant/control terms and FINN-style per-PE BRAM binding
+//! land the five Table-1 engines at 13/9/11/7/7 %LUT vs the paper's
+//! 12/7/11/6/6 and the A8-W8 power at the paper's 142 mW (see
+//! EXPERIMENTS.md for the full comparison). The weight bit-width dominating
+//! LUT cost is the expected Vitis behaviour for LUT-mapped partial-product
+//! multipliers.
+
+/// Tunable cost coefficients (public so ablation benches can sweep them).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Calibration {
+    /// LUTs per MAC unit per weight bit.
+    pub k_mul_w: f64,
+    /// LUTs per MAC unit per activation bit.
+    pub k_mul_a: f64,
+    /// LUTs per MAC unit, bit-independent part.
+    pub k_mul_base: f64,
+    /// LUTs per accumulator bit (adder tree / accumulation register).
+    pub k_acc_bit: f64,
+    /// Fixed LUT overhead per actor (FSM, stream handshake).
+    pub k_actor_ctrl: f64,
+    /// LUTs per requant unit (mult+shift+clamp) per PE lane.
+    pub k_requant: f64,
+    /// FFs per LUT (pipeline registers track logic roughly 2:1 on UltraScale+).
+    pub k_ff_per_lut: f64,
+    /// Operand width product above which a multiplier binds to a DSP48E2
+    /// instead of LUTs (Vitis threshold heuristic: both operands > 10 bits).
+    pub dsp_threshold_bits: u32,
+    /// BRAM18 capacity in bits.
+    pub bram18_bits: u64,
+    /// Static power of the engine's clock/region (mW).
+    pub p_static_mw: f64,
+    /// Static leakage per % LUT used (mW).
+    pub p_leak_per_lut_pct: f64,
+    /// Dynamic energy per FIFO toggle-bit (pJ) — fitted so the A8-W8 engine
+    /// lands near the paper's 142 mW at 100 MHz.
+    pub e_toggle_pj: f64,
+    /// Dynamic energy per executed MAC, per (a_bits+w_bits) operand bit (pJ).
+    pub e_mac_bit_pj: f64,
+    /// Dynamic energy per BRAM18 access (pJ).
+    pub e_bram_pj: f64,
+}
+
+impl Default for Calibration {
+    fn default() -> Self {
+        Calibration {
+            k_mul_w: 2.55,
+            k_mul_a: 0.26,
+            k_mul_base: 0.1,
+            k_acc_bit: 0.55,
+            k_actor_ctrl: 180.0,
+            k_requant: 40.0,
+            k_ff_per_lut: 1.9,
+            dsp_threshold_bits: 10,
+            bram18_bits: 18 * 1024,
+            p_static_mw: 92.0,
+            p_leak_per_lut_pct: 0.55,
+            e_toggle_pj: 3.3,
+            e_mac_bit_pj: 0.062,
+            e_bram_pj: 6.6,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_lut_fit_reproduces_paper_column() {
+        // The linear fit must reproduce the paper's LUT% ordering and
+        // approximate values for the five profiles under default folding.
+        let c = Calibration::default();
+        let per_mac = |a: f64, w: f64| c.k_mul_w * w + c.k_mul_a * a + c.k_mul_base;
+        let a16w8 = per_mac(16.0, 8.0);
+        let a8w8 = per_mac(8.0, 8.0);
+        let a16w4 = per_mac(16.0, 4.0);
+        let a8w4 = per_mac(8.0, 4.0);
+        let a4w4 = per_mac(4.0, 4.0);
+        assert!(a16w8 > a8w8 && a8w8 > a16w4 && a16w4 > a8w4 && a8w4 > a4w4);
+        // weight bits dominate (paper: LUT roughly halves from W8 to W4 at
+        // fixed A; near-flat in A at fixed W)
+        assert!(a16w8 / a16w4 > 1.5 && a16w8 / a16w4 < 2.2);
+        assert!(a16w8 / a8w8 < 1.15);
+    }
+}

@@ -1,0 +1,70 @@
+//! FPGA device models (resource envelopes).
+
+/// Resource envelope of the target FPGA.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceModel {
+    pub name: String,
+    pub luts: u64,
+    pub ffs: u64,
+    /// BRAM36 blocks (one BRAM36 = two independent BRAM18).
+    pub bram36: u64,
+    pub dsp: u64,
+    /// Default fabric clock for latency conversion.
+    pub clock_mhz: f64,
+}
+
+impl DeviceModel {
+    /// AMD KRIA KV260 (Zynq UltraScale+ XCK26-SFVC784-2LV-C) — the paper's
+    /// evaluation board.
+    pub fn kria_kv260() -> Self {
+        DeviceModel {
+            name: "KRIA KV260 (XCK26)".to_string(),
+            luts: 117_120,
+            ffs: 234_240,
+            bram36: 144,
+            dsp: 1_248,
+            clock_mhz: 100.0,
+        }
+    }
+
+    /// Smaller edge device (Zynq-7020, PYNQ-Z2 class) — used by ablation
+    /// benches to show the flow retargets.
+    pub fn zynq_7020() -> Self {
+        DeviceModel {
+            name: "Zynq-7020".to_string(),
+            luts: 53_200,
+            ffs: 106_400,
+            bram36: 140,
+            dsp: 220,
+            clock_mhz: 100.0,
+        }
+    }
+
+    pub fn lut_pct(&self, luts: u64) -> f64 {
+        100.0 * luts as f64 / self.luts as f64
+    }
+
+    pub fn bram_pct(&self, bram36: f64) -> f64 {
+        100.0 * bram36 / self.bram36 as f64
+    }
+
+    pub fn ff_pct(&self, ffs: u64) -> f64 {
+        100.0 * ffs as f64 / self.ffs as f64
+    }
+
+    pub fn dsp_pct(&self, dsp: u64) -> f64 {
+        100.0 * dsp as f64 / self.dsp as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv260_percentages() {
+        let d = DeviceModel::kria_kv260();
+        assert!((d.lut_pct(14_054) - 12.0).abs() < 0.1);
+        assert!((d.bram_pct(26.0) - 18.05).abs() < 0.1);
+    }
+}

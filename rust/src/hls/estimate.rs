@@ -1,0 +1,300 @@
+//! Per-actor scheduling + binding estimation (the Vitis HLS report).
+
+use super::calib::Calibration;
+use crate::dataflow::FoldingConfig;
+use crate::qonnx::{infer_shapes, ConvLayer, DenseLayer, Layer, QonnxModel, TensorShape};
+
+/// Resource + schedule estimate for one actor of the streaming engine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ActorEstimate {
+    pub name: String,
+    pub luts: u64,
+    pub ffs: u64,
+    /// BRAM18 halves (reports aggregate as BRAM36 = bram18 / 2).
+    pub bram18: u64,
+    pub dsp: u64,
+    /// Initiation interval: cycles between consecutive outputs.
+    pub ii: u64,
+    /// Pipeline depth (fill latency contribution), cycles.
+    pub depth: u64,
+    /// Number of output tokens this actor produces per image.
+    pub tokens: u64,
+}
+
+/// Whole-engine estimate: per-actor breakdown + totals + analytic latency.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineEstimate {
+    pub actors: Vec<ActorEstimate>,
+    pub luts: u64,
+    pub ffs: u64,
+    pub bram36: f64,
+    pub dsp: u64,
+    /// Analytic latency in cycles: bottleneck II * its token count + the
+    /// pipeline fill depth. Cross-checked against the dataflow simulator.
+    pub latency_cycles: u64,
+}
+
+impl EngineEstimate {
+    pub fn latency_us(&self, clock_mhz: f64) -> f64 {
+        self.latency_cycles as f64 / clock_mhz
+    }
+}
+
+fn mul_luts(cal: &Calibration, a_bits: u32, w_bits: u32) -> (f64, u64) {
+    // DSP binding when both operands exceed the threshold: LUT cost drops to
+    // glue logic, one DSP per MAC unit.
+    if a_bits > cal.dsp_threshold_bits && w_bits > cal.dsp_threshold_bits {
+        (6.0, 1)
+    } else {
+        (
+            cal.k_mul_w * w_bits as f64 + cal.k_mul_a * a_bits as f64 + cal.k_mul_base,
+            0,
+        )
+    }
+}
+
+/// Accumulator width for a conv: product bits + log2(taps) guard bits.
+fn acc_bits(a_bits: u32, w_bits: u32, taps: usize) -> u32 {
+    a_bits + w_bits + (64 - (taps as u64).leading_zeros())
+}
+
+fn conv_estimate(
+    cal: &Calibration,
+    c: &ConvLayer,
+    shape_in: TensorShape,
+    pe: usize,
+    simd: usize,
+    in_bits: u32,
+) -> (ActorEstimate, ActorEstimate) {
+    // --- line buffer actor: 2 full rows + 3x3 window regs, in BRAM ---
+    let row_bits = (shape_in.w * shape_in.c) as u64 * in_bits as u64;
+    let lb_bram18 = (2 * row_bits).div_ceil(cal.bram18_bits).max(1);
+    let lb = ActorEstimate {
+        name: format!("{}_linebuf", c.name),
+        luts: (cal.k_actor_ctrl + 9.0 * shape_in.c as f64) as u64,
+        ffs: (9 * shape_in.c) as u64 * in_bits as u64,
+        bram18: lb_bram18,
+        dsp: 0,
+        ii: 1,
+        depth: (shape_in.w + 2) as u64, // one row + margin to form windows
+        tokens: (shape_in.h * shape_in.w) as u64,
+    };
+
+    // --- conv MAC actor: PE x SIMD multipliers + adder trees + requant ---
+    let taps = 9 * c.cin;
+    let (lut_per_mac, dsp_per_mac) = mul_luts(cal, in_bits, c.weight_bits);
+    let units = (pe * simd) as f64;
+    let acc_w = acc_bits(in_bits, c.weight_bits, taps) as f64;
+    let luts = units * lut_per_mac
+        + pe as f64 * acc_w * cal.k_acc_bit
+        + pe as f64 * cal.k_requant
+        + cal.k_actor_ctrl;
+    // weight ROM: taps*cout words of w_bits, partitioned over the PE lanes
+    // (each PE streams its own output channels' weights, as in FINN)
+    let lanes = pe as u64;
+    let total_w_bits = (taps * c.cout) as u64 * c.weight_bits as u64;
+    let per_lane_bits = total_w_bits.div_ceil(lanes);
+    let bram18 = lanes * per_lane_bits.div_ceil(cal.bram18_bits);
+    // With few bits/lane Vitis uses LUTRAM instead: model as min against a
+    // LUTRAM binding (64 bits/LUT).
+    let lutram_cost = total_w_bits as f64 / 64.0;
+    let (bram18, luts) = if (bram18 * cal.bram18_bits) as f64 > 4.0 * total_w_bits as f64 {
+        (0, luts + lutram_cost)
+    } else {
+        (bram18, luts)
+    };
+    // window FIFO between line buffer and MAC array (deep tokens).
+    let win_fifo_bits = 8 * (taps as u64) * in_bits as u64;
+    let bram18 = bram18 + win_fifo_bits.div_ceil(cal.bram18_bits);
+    let ii = (c.cout.div_ceil(pe) * taps.div_ceil(simd)) as u64;
+    let mac = ActorEstimate {
+        name: c.name.clone(),
+        luts: luts as u64,
+        ffs: (luts * cal.k_ff_per_lut) as u64,
+        bram18,
+        dsp: (units * dsp_per_mac as f64) as u64,
+        ii: ii.max(1),
+        depth: (taps.div_ceil(simd) + 4) as u64, // adder tree + requant regs
+        tokens: (shape_in.h * shape_in.w) as u64,
+    };
+    (lb, mac)
+}
+
+fn pool_estimate(cal: &Calibration, name: &str, shape_in: TensorShape, bits: u32) -> ActorEstimate {
+    // one pooled row of partial maxima in flops/LUTRAM
+    let row_bits = (shape_in.w / 2 * shape_in.c) as u64 * bits as u64;
+    ActorEstimate {
+        name: name.to_string(),
+        luts: (cal.k_actor_ctrl + shape_in.c as f64 * bits as f64 * 0.6) as u64,
+        ffs: row_bits,
+        bram18: 0,
+        dsp: 0,
+        ii: 1,
+        depth: (shape_in.w / 2 + 2) as u64,
+        tokens: (shape_in.h * shape_in.w / 4) as u64,
+    }
+}
+
+fn gemm_estimate(
+    cal: &Calibration,
+    d: &DenseLayer,
+    c_per_token: usize,
+    pe: usize,
+    simd: usize,
+    in_bits: u32,
+) -> ActorEstimate {
+    let (lut_per_mac, dsp_per_mac) = mul_luts(cal, in_bits, d.weight_bits);
+    let units = (pe * simd) as f64;
+    let acc_w = acc_bits(in_bits, d.weight_bits, d.in_features) as f64;
+    let luts = units * lut_per_mac
+        + d.out_features as f64 * acc_w * cal.k_acc_bit
+        + cal.k_actor_ctrl;
+    let total_w_bits = (d.in_features * d.out_features) as u64 * d.weight_bits as u64;
+    let lanes = pe as u64;
+    let per_lane_bits = total_w_bits.div_ceil(lanes);
+    let bram18 = lanes * per_lane_bits.div_ceil(cal.bram18_bits);
+    let n_tokens = (d.in_features / c_per_token) as u64;
+    let ii = (c_per_token.div_ceil(simd) * d.out_features.div_ceil(pe)) as u64;
+    ActorEstimate {
+        name: d.name.clone(),
+        luts: luts as u64,
+        ffs: (luts * cal.k_ff_per_lut) as u64,
+        bram18,
+        dsp: (units * dsp_per_mac as f64) as u64,
+        ii: ii.max(1),
+        depth: 8,
+        tokens: n_tokens, // consumes tokens; produces 1 logits token at end
+    }
+}
+
+/// Estimate the full streaming engine for `model` under `fold`.
+pub fn estimate_engine(
+    model: &QonnxModel,
+    fold: &FoldingConfig,
+    cal: &Calibration,
+) -> EngineEstimate {
+    let shapes = infer_shapes(model);
+    let mut actors = Vec::new();
+    let mut conv_idx = 0usize;
+    let mut cur_bits = model.input_bits;
+    let mut stream_c = model.input_shape.c;
+    for (i, layer) in model.layers.iter().enumerate() {
+        let shape_in = shapes[i];
+        match layer {
+            Layer::Conv(c) => {
+                let (pe, simd) = if conv_idx == 0 {
+                    (fold.conv1_pe, fold.conv1_simd)
+                } else {
+                    (fold.conv2_pe, fold.conv2_simd)
+                };
+                let (lb, mac) = conv_estimate(cal, c, shape_in, pe, simd, cur_bits);
+                actors.push(lb);
+                actors.push(mac);
+                cur_bits = c.act_bits;
+                stream_c = c.cout;
+                conv_idx += 1;
+            }
+            Layer::Pool(p) => {
+                actors.push(pool_estimate(cal, &p.name, shape_in, cur_bits));
+            }
+            Layer::Flatten { .. } => {}
+            Layer::Dense(d) => {
+                actors.push(gemm_estimate(
+                    cal,
+                    d,
+                    stream_c,
+                    fold.dense_pe,
+                    fold.dense_simd,
+                    cur_bits,
+                ));
+            }
+        }
+    }
+
+    // Analytic latency: in a streaming pipeline every actor processes its
+    // token stream concurrently; the makespan is the slowest actor's
+    // (tokens * II) plus the total fill depth of the chain.
+    let bottleneck = actors.iter().map(|a| a.tokens * a.ii).max().unwrap_or(0);
+    let fill: u64 = actors.iter().map(|a| a.depth).sum();
+    let latency_cycles = bottleneck + fill;
+
+    EngineEstimate {
+        luts: actors.iter().map(|a| a.luts).sum(),
+        ffs: actors.iter().map(|a| a.ffs).sum(),
+        bram36: actors.iter().map(|a| a.bram18).sum::<u64>() as f64 / 2.0,
+        dsp: actors.iter().map(|a| a.dsp).sum(),
+        latency_cycles,
+        actors,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qonnx::{read_str, test_model_json};
+    use crate::testkit;
+
+    fn tiny() -> QonnxModel {
+        read_str(&test_model_json(2, 4)).unwrap()
+    }
+
+    #[test]
+    fn estimate_is_positive_and_consistent() {
+        let m = tiny();
+        let est = estimate_engine(&m, &FoldingConfig::default(), &Calibration::default());
+        assert!(est.luts > 0);
+        assert!(est.latency_cycles > 0);
+        assert_eq!(
+            est.luts,
+            est.actors.iter().map(|a| a.luts).sum::<u64>()
+        );
+    }
+
+    #[test]
+    fn luts_monotone_in_weight_bits() {
+        // Table-1 invariant: resources monotone non-decreasing in bit-width.
+        let m4 = tiny(); // weight_bits=4 in the generator
+        let json8 = test_model_json(2, 4)
+            .replace("\"weight_bits\":4", "\"weight_bits\":8");
+        let m8 = read_str(&json8).unwrap();
+        let cal = Calibration::default();
+        let f = FoldingConfig::default();
+        let e4 = estimate_engine(&m4, &f, &cal);
+        let e8 = estimate_engine(&m8, &f, &cal);
+        assert!(e8.luts > e4.luts, "w8 {} <= w4 {}", e8.luts, e4.luts);
+    }
+
+    #[test]
+    fn latency_independent_of_bits_property() {
+        testkit::check("latency is bit-independent", |rng| {
+            let cfg = crate::qonnx::RandModelCfg::gen(rng);
+            let json = crate::qonnx::random_model_json(&cfg, rng);
+            let m = read_str(&json).map_err(|e| e.to_string())?;
+            // change all bit-widths, keep shapes/folding
+            let json_wide = json
+                .replace("\"act_bits\":4", "\"act_bits\":16")
+                .replace("\"act_bits\":8", "\"act_bits\":16")
+                .replace("\"weight_bits\":4", "\"weight_bits\":8");
+            let m_wide = read_str(&json_wide).map_err(|e| e.to_string())?;
+            let cal = Calibration::default();
+            let f = FoldingConfig::default();
+            let a = estimate_engine(&m, &f, &cal).latency_cycles;
+            let b = estimate_engine(&m_wide, &f, &cal).latency_cycles;
+            crate::prop_assert!(a == b, "latency changed with bits: {a} vs {b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn analytic_latency_tracks_simulated_latency() {
+        let m = tiny();
+        let f = FoldingConfig::default();
+        let est = estimate_engine(&m, &f, &Calibration::default());
+        let img: Vec<u8> = (0..m.input_shape.elems()).map(|i| (i * 17 % 256) as u8).collect();
+        let sim = crate::dataflow::simulate_image(&m, &f, &img);
+        let a = est.latency_cycles as f64;
+        let s = sim.cycles as f64;
+        let ratio = a.max(s) / a.min(s);
+        assert!(ratio < 1.6, "analytic {a} vs simulated {s} diverge (x{ratio:.2})");
+    }
+}

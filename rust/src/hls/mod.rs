@@ -1,0 +1,28 @@
+//! HLS estimator: the Vitis-HLS substitution (DESIGN.md §2).
+//!
+//! Vitis HLS turns the C++ actor templates into RTL and reports resources
+//! (LUT/FF/BRAM/DSP), initiation intervals and latency. We reproduce the
+//! *behaviour that matters for the paper's evaluation*:
+//!
+//! * operations are scheduled by data dependencies; the streaming II is set
+//!   by folding (PE/SIMD), **not** by operand bit-width — hence Table 1's
+//!   constant latency across precisions;
+//! * wider operators bind to more logic: LUT cost of a MAC grows with the
+//!   weight/activation bit-widths (LUT-mapped multipliers below the DSP
+//!   threshold, DSP48E2 above);
+//! * memories bind to BRAM18/BRAM36 granules, partitioned across PE lanes —
+//!   which is why the paper's BRAM column barely moves with precision.
+//!
+//! Cost coefficients are calibrated against the paper's Table 1 (KRIA
+//! KV260 / XCK26 device, Vitis HLS 2022-era) — see `calib` for every
+//! constant and the fit.
+
+mod calib;
+mod device;
+mod estimate;
+mod report;
+
+pub use calib::Calibration;
+pub use device::DeviceModel;
+pub use estimate::{estimate_engine, ActorEstimate, EngineEstimate};
+pub use report::UtilizationReport;

@@ -1,0 +1,82 @@
+//! Minimal-but-complete JSON substrate (std-only).
+//!
+//! The QONNX interchange (`artifacts/*.qonnx.json`), evaluation records,
+//! test vectors, and all report outputs flow through this module. Offline
+//! builds in this environment cannot pull `serde`/`serde_json`, so the
+//! parser/serializer is in-house (DESIGN.md §3). It supports the full JSON
+//! grammar: nested containers, all escapes, scientific-notation numbers,
+//! unicode escapes (including surrogate pairs).
+
+mod parser;
+mod value;
+mod writer;
+
+pub use parser::{parse, ParseError};
+pub use value::Value;
+pub use writer::{to_string, to_string_pretty};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_basic() {
+        let src = r#"{"a": [1, 2.5, -3e2], "b": {"c": true, "d": null}, "e": "hi\n"}"#;
+        let v = parse(src).unwrap();
+        let v2 = parse(&to_string(&v)).unwrap();
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn numbers() {
+        assert_eq!(parse("42").unwrap().as_i64(), Some(42));
+        assert_eq!(parse("-17").unwrap().as_i64(), Some(-17));
+        assert_eq!(parse("2.5").unwrap().as_f64(), Some(2.5));
+        assert_eq!(parse("1e3").unwrap().as_f64(), Some(1000.0));
+        assert_eq!(parse("-1.5e-2").unwrap().as_f64(), Some(-0.015));
+        // i64 range boundaries stay integral
+        assert_eq!(
+            parse("9223372036854775807").unwrap().as_i64(),
+            Some(i64::MAX)
+        );
+    }
+
+    #[test]
+    fn strings_and_escapes() {
+        let v = parse(r#""A\t\\\"é""#).unwrap();
+        assert_eq!(v.as_str(), Some("A\t\\\"é"));
+        // surrogate pair (U+1F600)
+        let v = parse(r#""😀""#).unwrap();
+        assert_eq!(v.as_str(), Some("😀"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("tru").is_err());
+        assert!(parse(r#"{"a" 1}"#).is_err());
+        assert!(parse("1 2").is_err());
+        assert!(parse("").is_err());
+        assert!(parse("nan").is_err());
+    }
+
+    #[test]
+    fn deep_nesting_ok() {
+        let mut s = String::new();
+        for _ in 0..200 {
+            s.push('[');
+        }
+        for _ in 0..200 {
+            s.push(']');
+        }
+        assert!(parse(&s).is_ok());
+    }
+
+    #[test]
+    fn pretty_round_trip() {
+        let v = parse(r#"{"rows": [[1,2],[3,4]], "name": "t"}"#).unwrap();
+        let v2 = parse(&to_string_pretty(&v)).unwrap();
+        assert_eq!(v, v2);
+    }
+}

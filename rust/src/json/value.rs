@@ -1,0 +1,149 @@
+//! JSON value tree with typed accessors.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed JSON value. Numbers keep integer identity when possible
+/// (weight codes must survive the round trip exactly).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    /// Integral number that fits i64 (no decimal point / exponent loss).
+    Int(i64),
+    /// Any other finite number.
+    Float(f64),
+    Str(String),
+    Array(Vec<Value>),
+    /// BTreeMap keeps key order deterministic for byte-stable outputs.
+    Object(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            Value::Float(f) if f.fract() == 0.0 && f.abs() < 2f64.powi(53) => {
+                Some(*f as i64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_object(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Object(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    /// Object field access: `v.get("nodes")`.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.as_object().and_then(|o| o.get(key))
+    }
+
+    /// Array index access.
+    pub fn idx(&self, i: usize) -> Option<&Value> {
+        self.as_array().and_then(|a| a.get(i))
+    }
+
+    /// Collect an array of integers (errors if any element is not integral).
+    pub fn to_i64_vec(&self) -> Option<Vec<i64>> {
+        self.as_array()?.iter().map(|v| v.as_i64()).collect()
+    }
+
+    /// Collect an array of floats.
+    pub fn to_f64_vec(&self) -> Option<Vec<f64>> {
+        self.as_array()?.iter().map(|v| v.as_f64()).collect()
+    }
+
+    pub fn from_i64_slice(xs: &[i64]) -> Value {
+        Value::Array(xs.iter().map(|&x| Value::Int(x)).collect())
+    }
+
+    pub fn from_f64_slice(xs: &[f64]) -> Value {
+        Value::Array(xs.iter().map(|&x| Value::Float(x)).collect())
+    }
+
+    /// Build an object from (key, value) pairs — the ergonomic constructor
+    /// used by report writers.
+    pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
+        Value::Object(
+            pairs
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+        )
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", super::to_string(self))
+    }
+}
+
+impl From<&str> for Value {
+    fn from(s: &str) -> Self {
+        Value::Str(s.to_string())
+    }
+}
+
+impl From<String> for Value {
+    fn from(s: String) -> Self {
+        Value::Str(s)
+    }
+}
+
+impl From<i64> for Value {
+    fn from(i: i64) -> Self {
+        Value::Int(i)
+    }
+}
+
+impl From<usize> for Value {
+    fn from(i: usize) -> Self {
+        Value::Int(i as i64)
+    }
+}
+
+impl From<f64> for Value {
+    fn from(f: f64) -> Self {
+        Value::Float(f)
+    }
+}
+
+impl From<bool> for Value {
+    fn from(b: bool) -> Self {
+        Value::Bool(b)
+    }
+}

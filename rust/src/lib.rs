@@ -1,0 +1,18 @@
+//! onnx2hw: ONNX-to-Hardware design flow for adaptive NN inference —
+//! reproduction of Manca/Ratto/Palumbo (SAMOS 2024) as a three-layer
+//! Rust + JAX + Pallas stack. See DESIGN.md for the system inventory.
+
+pub mod bench_harness;
+pub mod cli;
+pub mod coordinator;
+pub mod dataflow;
+pub mod flow;
+pub mod hls;
+pub mod mdc;
+pub mod power;
+pub mod writer;
+pub mod json;
+pub mod metrics;
+pub mod qonnx;
+pub mod runtime;
+pub mod testkit;

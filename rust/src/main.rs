@@ -1,0 +1,396 @@
+//! onnx2hw — leader binary of the ONNX-to-Hardware design flow.
+//!
+//! Subcommands mirror the paper's flow and evaluation:
+//!   table1     regenerate Table 1 (per-profile accuracy/latency/LUT/BRAM/power)
+//!   fig3       regenerate Fig. 3 (accuracy-vs-power series incl. Mixed)
+//!   fig4       regenerate Fig. 4 (adaptive engine merge + battery sim)
+//!   flow       run the design flow for one profile (writer + HLS report)
+//!   classify   classify test images on the PJRT runtime
+//!   serve      run the adaptive inference server on a synthetic workload
+//!   verify     cross-check rust dataflow vs python vectors vs PJRT runtime
+
+use anyhow::{bail, Result};
+
+use onnx2hw::cli::Spec;
+use onnx2hw::coordinator::{
+    AdaptiveServer, Backend, EnergyMonitor, ManagerConfig, ProfileManager, ProfileSpec,
+    ServerConfig,
+};
+use onnx2hw::flow::{self, FlowConfig};
+use onnx2hw::json::{self, Value};
+use onnx2hw::mdc;
+use onnx2hw::power::{run_fixed, simulate_battery, AdaptivePolicy, BatteryModel};
+use onnx2hw::runtime::{ArtifactStore, PjrtEngine};
+use onnx2hw::writer;
+
+const TABLE1_PROFILES: [&str; 5] = ["A16-W8", "A16-W4", "A8-W8", "A8-W4", "A4-W4"];
+const ALL_PROFILES: [&str; 6] = ["A16-W8", "A16-W4", "A8-W8", "A8-W4", "A4-W4", "Mixed"];
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let sub = args.first().map(String::as_str).unwrap_or("help");
+    let rest = if args.is_empty() { &[][..] } else { &args[1..] };
+    let code = match run(sub, rest) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(sub: &str, argv: &[String]) -> Result<()> {
+    match sub {
+        "table1" => cmd_table1(argv),
+        "fig3" => cmd_fig3(argv),
+        "fig4" => cmd_fig4(argv),
+        "flow" => cmd_flow(argv),
+        "classify" => cmd_classify(argv),
+        "serve" => cmd_serve(argv),
+        "verify" => cmd_verify(argv),
+        "help" | "--help" | "-h" => {
+            println!(
+                "onnx2hw — ONNX-to-Hardware design flow (SAMOS 2024 reproduction)\n\n\
+                 USAGE: onnx2hw <table1|fig3|fig4|flow|classify|serve|verify> [options]\n\
+                 Run a subcommand with --help for its options."
+            );
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (see `onnx2hw help`)"),
+    }
+}
+
+fn parse_or_usage(spec: Spec, argv: &[String]) -> Result<onnx2hw::cli::Args> {
+    spec.parse(argv).map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+fn cmd_table1(argv: &[String]) -> Result<()> {
+    let spec = Spec::new("onnx2hw table1", "regenerate Table 1")
+        .opt("profiles", &TABLE1_PROFILES.join(","), "comma-separated profiles")
+        .opt("power-images", "4", "images simulated for the power estimate")
+        .flag("json", "emit JSON instead of the text table");
+    let a = parse_or_usage(spec, argv)?;
+    let store = ArtifactStore::discover()?;
+    let cfg = FlowConfig {
+        power_images: a.parse_num("power-images")?,
+        ..FlowConfig::default()
+    };
+    let profiles: Vec<&str> = a.get("profiles").unwrap().split(',').collect();
+    let rows = flow::table1(&store, &profiles, &cfg)?;
+    if a.flag("json") {
+        let arr = Value::Array(
+            rows.iter()
+                .map(|r| {
+                    Value::obj(vec![
+                        ("profile", r.profile.as_str().into()),
+                        ("accuracy_pct", r.accuracy_pct.into()),
+                        ("latency_us", r.latency_us.into()),
+                        ("lut_pct", r.lut_pct.into()),
+                        ("bram_pct", r.bram_pct.into()),
+                        ("power_mw", r.power_mw.into()),
+                    ])
+                })
+                .collect(),
+        );
+        println!("{}", json::to_string_pretty(&arr));
+    } else {
+        let mut t = onnx2hw::bench_harness::Table::new(&[
+            "Datatype", "Accuracy [%]", "Latency [us]", "LUT [%]", "BRAM [%]", "Power [mW]",
+        ]);
+        for r in &rows {
+            t.row(&[
+                r.profile.clone(),
+                format!("{:.1}", r.accuracy_pct),
+                format!("{:.0}", r.latency_us),
+                format!("{:.0}", r.lut_pct),
+                format!("{:.0}", r.bram_pct),
+                format!("{:.0}", r.power_mw),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    Ok(())
+}
+
+fn cmd_fig3(argv: &[String]) -> Result<()> {
+    let spec = Spec::new("onnx2hw fig3", "accuracy-vs-power profile chart (Fig. 3)")
+        .opt("profiles", &ALL_PROFILES.join(","), "profiles to plot");
+    let a = parse_or_usage(spec, argv)?;
+    let store = ArtifactStore::discover()?;
+    let cfg = FlowConfig::default();
+    let profiles: Vec<&str> = a.get("profiles").unwrap().split(',').collect();
+    let rows = flow::table1(&store, &profiles, &cfg)?;
+    println!("# Fig. 3: accuracy vs power (one point per profile)");
+    println!("{:<10} {:>12} {:>12}", "profile", "power_mW", "accuracy_%");
+    for r in &rows {
+        println!("{:<10} {:>12.1} {:>12.2}", r.profile, r.power_mw, r.accuracy_pct);
+    }
+    println!("\n{}", ascii_scatter(&rows));
+    Ok(())
+}
+
+fn ascii_scatter(rows: &[flow::ProfileReport]) -> String {
+    let (w, h) = (60usize, 16usize);
+    let xmin = rows.iter().map(|r| r.power_mw).fold(f64::MAX, f64::min) - 1.0;
+    let xmax = rows.iter().map(|r| r.power_mw).fold(f64::MIN, f64::max) + 1.0;
+    let ymin = rows.iter().map(|r| r.accuracy_pct).fold(f64::MAX, f64::min) - 0.2;
+    let ymax = rows.iter().map(|r| r.accuracy_pct).fold(f64::MIN, f64::max) + 0.2;
+    let mut grid = vec![vec![' '; w + 1]; h + 1];
+    for (i, r) in rows.iter().enumerate() {
+        let x = ((r.power_mw - xmin) / (xmax - xmin) * w as f64) as usize;
+        let y = h - (((r.accuracy_pct - ymin) / (ymax - ymin) * h as f64) as usize).min(h);
+        grid[y][x.min(w)] = char::from(b'A' + (i as u8 % 26));
+    }
+    let mut s = String::new();
+    for row in &grid {
+        s.push_str(&row.iter().collect::<String>());
+        s.push('\n');
+    }
+    s.push_str(&format!("x: {xmin:.0}..{xmax:.0} mW | y: {ymin:.1}..{ymax:.1} % | "));
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!("{}={} ", char::from(b'A' + (i as u8 % 26)), r.profile));
+    }
+    s
+}
+
+fn cmd_fig4(argv: &[String]) -> Result<()> {
+    let spec = Spec::new("onnx2hw fig4", "adaptive engine merge + battery (Fig. 4)")
+        .opt("pair", "A8-W8,Mixed", "profiles merged into the adaptive engine")
+        .opt("battery-ah", "10", "battery capacity in Ah")
+        .opt("switch-at", "0.5", "battery fraction at which to switch profile");
+    let a = parse_or_usage(spec, argv)?;
+    let store = ArtifactStore::discover()?;
+    let cfg = FlowConfig::default();
+    let pair: Vec<&str> = a.get("pair").unwrap().split(',').collect();
+    if pair.len() != 2 {
+        bail!("--pair needs exactly two profiles");
+    }
+
+    // --- top of Fig. 4: MDC merge + resources of the adaptive engine ---
+    let nets: Vec<mdc::Network> = pair
+        .iter()
+        .map(|p| Ok(mdc::build_network(&store.qonnx(p)?, &cfg.fold)))
+        .collect::<Result<_>>()?;
+    let md = mdc::merge(&nets)?;
+    let merged = mdc::merged_estimate(&md, &cfg.cal);
+    let rows = flow::table1(&store, &pair, &cfg)?;
+    println!("== Adaptive inference engine: {} (+) {} ==", pair[0], pair[1]);
+    println!(
+        "shared actors: {}/{} slots | sbox overhead: {} LUTs",
+        md.n_shared(),
+        md.instances.len(),
+        merged.sbox_luts
+    );
+    println!(
+        "merged resources: {} LUTs ({:.1}%), {:.1} BRAM36 ({:.1}%)",
+        merged.luts,
+        cfg.device.lut_pct(merged.luts),
+        merged.bram36,
+        cfg.device.bram_pct(merged.bram36)
+    );
+    for r in &rows {
+        println!(
+            "  profile {:<8} accuracy {:>6.2}% power {:>6.1} mW latency {:>5.0} us",
+            r.profile, r.accuracy_pct, r.power_mw, r.latency_us
+        );
+    }
+    let lut_overhead =
+        merged.luts as f64 / rows.iter().map(|r| r.luts).max().unwrap_or(1) as f64;
+    println!("overhead vs largest non-adaptive engine: x{lut_overhead:.2} LUTs");
+
+    // --- right of Fig. 4: battery duration + classifications ---
+    let bat = BatteryModel {
+        capacity_ah: a.parse_num("battery-ah")?,
+        voltage_v: 5.0,
+    };
+    let policy = AdaptivePolicy {
+        switch_at_fraction: a.parse_num("switch-at")?,
+    };
+    let acc = &rows[0];
+    let low = &rows[1];
+    let fixed = run_fixed(&acc.profile, &bat, acc.power_mw, acc.latency_us,
+                          acc.accuracy_pct / 100.0);
+    let adaptive = simulate_battery(
+        &bat,
+        &policy,
+        (&acc.profile, acc.power_mw, acc.latency_us, acc.accuracy_pct / 100.0),
+        (&low.profile, low.power_mw, low.latency_us, low.accuracy_pct / 100.0),
+    );
+    println!("\n== Battery simulation ({} Ah @ 5 V) ==", bat.capacity_ah);
+    for run in [&fixed, &adaptive] {
+        println!(
+            "  {:<24} {:>8.1} h {:>14} classifications (mean acc {:.2}%)",
+            run.label, run.duration_h, run.classifications, run.mean_accuracy * 100.0
+        );
+    }
+    println!(
+        "adaptive extends battery by {:.1}% and classifications by {:.1}%",
+        (adaptive.duration_h / fixed.duration_h - 1.0) * 100.0,
+        (adaptive.classifications as f64 / fixed.classifications as f64 - 1.0) * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_flow(argv: &[String]) -> Result<()> {
+    let spec = Spec::new("onnx2hw flow", "run the design flow for one profile")
+        .opt("profile", "A8-W8", "profile to run")
+        .opt("emit", "", "directory to write generated C++/TCL into");
+    let a = parse_or_usage(spec, argv)?;
+    let store = ArtifactStore::discover()?;
+    let cfg = FlowConfig::default();
+    let profile = a.get("profile").unwrap();
+    let model = store.qonnx(profile)?;
+    let out = writer::write_engine(&model, &cfg.fold);
+    if let Some(dir) = a.get("emit").filter(|d| !d.is_empty()) {
+        std::fs::create_dir_all(dir)?;
+        let base = std::path::Path::new(dir);
+        std::fs::write(base.join(format!("{profile}_engine.cpp")), &out.cpp)?;
+        std::fs::write(base.join("engine.h"), &out.header)?;
+        std::fs::write(base.join(format!("build_{profile}.tcl")), &out.tcl)?;
+        println!("wrote HLS project files to {dir}");
+    }
+    let rep = flow::utilization_report(&store, profile, &cfg)?;
+    println!("{}", rep.render());
+    Ok(())
+}
+
+fn cmd_classify(argv: &[String]) -> Result<()> {
+    let spec = Spec::new("onnx2hw classify", "classify test images on the PJRT runtime")
+        .opt("profile", "A8-W8", "profile to run")
+        .opt("n", "16", "number of test images");
+    let a = parse_or_usage(spec, argv)?;
+    let store = ArtifactStore::discover()?;
+    let testset = store.testset()?;
+    let n: usize = a.parse_num("n")?;
+    let profile = a.get("profile").unwrap();
+    let mut engine = PjrtEngine::new()?;
+    let dt = engine.load(&store, profile, 1)?;
+    println!("platform {} | compiled {} in {:?}", engine.platform(), profile, dt);
+    let mut correct = 0;
+    for i in 0..n.min(testset.len()) {
+        let (_logits, pred) = engine.classify_one(profile, testset.image(i))?;
+        let label = testset.labels[i] as usize;
+        if pred == label {
+            correct += 1;
+        }
+        println!("image {i}: pred {pred} label {label}");
+    }
+    println!("accuracy {}/{}", correct, n.min(testset.len()));
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let spec = Spec::new("onnx2hw serve", "adaptive server on a synthetic workload")
+        .opt("requests", "256", "number of requests to push")
+        .opt("backend", "sim", "sim | pjrt")
+        .opt("battery-j", "0.05", "battery energy in joules (small = fast demo)")
+        .opt("pair", "A8-W8,Mixed", "accurate,low-power profiles");
+    let a = parse_or_usage(spec, argv)?;
+    let store = ArtifactStore::discover()?;
+    let testset = store.testset()?;
+    let pair: Vec<String> = a.get("pair").unwrap().split(',').map(String::from).collect();
+    let cfg = FlowConfig::default();
+    let rows = flow::table1(
+        &store,
+        &pair.iter().map(String::as_str).collect::<Vec<_>>(),
+        &cfg,
+    )?;
+    let specs: Vec<ProfileSpec> = rows
+        .iter()
+        .map(|r| ProfileSpec {
+            name: r.profile.clone(),
+            accuracy: r.accuracy_pct / 100.0,
+            power_mw: r.power_mw,
+            latency_us: r.latency_us,
+        })
+        .collect();
+    let manager = ProfileManager::new(ManagerConfig::default(), specs);
+    let energy = EnergyMonitor::new(a.parse_num("battery-j")?);
+    let backend_kind = a.get("backend").unwrap().to_string();
+    let store2 = store.clone();
+    let pair2 = pair.clone();
+    let srv = AdaptiveServer::start(
+        ServerConfig::default(),
+        move || {
+            let names: Vec<&str> = pair2.iter().map(String::as_str).collect();
+            match backend_kind.as_str() {
+                "pjrt" => Backend::pjrt(&store2, &names),
+                _ => Backend::sim(&store2, &names),
+            }
+        },
+        manager,
+        energy,
+    )?;
+    let n: usize = a.parse_num("requests")?;
+    let mut correct = 0usize;
+    for i in 0..n {
+        let idx = i % testset.len();
+        let resp = srv.classify(testset.image(idx).to_vec())?;
+        if resp.pred == testset.labels[idx] as usize {
+            correct += 1;
+        }
+    }
+    println!(
+        "served {} requests | accuracy {:.1}% | batches {} | switches {} | \
+         p50 {}us p95 {}us | battery left {:.1}%",
+        srv.stats.requests.get(),
+        100.0 * correct as f64 / n as f64,
+        srv.stats.batches.get(),
+        srv.stats.switches.get(),
+        srv.stats.latency.quantile_us(0.5),
+        srv.stats.latency.quantile_us(0.95),
+        srv.energy.remaining_fraction() * 100.0
+    );
+    for ev in srv.stats.events.snapshot() {
+        println!("  event: {ev}");
+    }
+    srv.shutdown();
+    Ok(())
+}
+
+fn cmd_verify(argv: &[String]) -> Result<()> {
+    let spec = Spec::new(
+        "onnx2hw verify",
+        "cross-check dataflow sim vs python vectors vs PJRT",
+    )
+    .opt("profiles", &ALL_PROFILES.join(","), "profiles to verify")
+    .opt("n", "16", "PJRT images to cross-check");
+    let a = parse_or_usage(spec, argv)?;
+    let store = ArtifactStore::discover()?;
+    let testset = store.testset()?;
+    let n: usize = a.parse_num("n")?;
+    let mut engine = PjrtEngine::new()?;
+    for profile in a.get("profiles").unwrap().split(',') {
+        let model = store.qonnx(profile)?;
+        let vectors = store.vectors(profile)?;
+        let mut ex = onnx2hw::dataflow::Executor::new(&model);
+        let mut exact = 0usize;
+        for (i, want) in vectors.logits.iter().enumerate() {
+            let got = ex.run(testset.image(i));
+            if &got == want {
+                exact += 1;
+            }
+        }
+        engine.load(&store, profile, 1)?;
+        let mut agree = 0usize;
+        for i in 0..n.min(testset.len()) {
+            let logits = ex.run(testset.image(i));
+            let sim_pred = onnx2hw::dataflow::exec::argmax(&logits);
+            let (_l, pjrt_pred) = engine.classify_one(profile, testset.image(i))?;
+            if sim_pred == pjrt_pred {
+                agree += 1;
+            }
+        }
+        println!(
+            "{profile}: rust-vs-python bit-exact {exact}/{} | rust-vs-PJRT argmax {agree}/{}",
+            vectors.logits.len(),
+            n.min(testset.len())
+        );
+        if exact != vectors.logits.len() {
+            bail!("{profile}: dataflow engine diverges from python intref");
+        }
+    }
+    println!("verify OK");
+    Ok(())
+}

@@ -1,0 +1,188 @@
+//! Resource accounting of the merged engine (paper Fig. 4 top).
+//!
+//! merged = sum of *distinct* actor instances + SBox mux overhead.
+//! Invariants (property-tested): max(inputs) <= merged <= sum(inputs) +
+//! sbox overhead, and merging a profile with itself adds nothing.
+
+use super::merge::MultiDataflow;
+use super::sig::{ActorKind, ActorSig};
+use crate::hls::Calibration;
+
+/// Resource totals of a merged multi-dataflow engine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MergedCost {
+    pub luts: u64,
+    pub ffs: u64,
+    pub bram36: f64,
+    pub dsp: u64,
+    /// LUTs spent on SBoxes only (the adaptivity overhead).
+    pub sbox_luts: u64,
+    pub n_instances: usize,
+    pub n_shared: usize,
+}
+
+/// Estimate one actor instance from its signature (mirrors hls::estimate but
+/// driven by the signature, since the merged engine has no single
+/// QonnxModel).
+fn actor_cost(sig: &ActorSig, cal: &Calibration) -> (u64, u64, u64, u64) {
+    match sig.kind {
+        ActorKind::LineBuffer => {
+            let (_h, w, c) = (sig.params[0], sig.params[1], sig.params[2]);
+            let row_bits = (w * c) as u64 * sig.act_bits as u64;
+            let bram18 = (2 * row_bits).div_ceil(cal.bram18_bits).max(1);
+            let luts = (cal.k_actor_ctrl + 9.0 * c as f64) as u64;
+            (luts, (9 * c) as u64 * sig.act_bits as u64, bram18, 0)
+        }
+        ActorKind::ConvMac => {
+            let [_h, _w, cin, cout, pe, simd, in_bits] = sig.params[..] else {
+                panic!("conv sig params");
+            };
+            let taps = 9 * cin as usize;
+            let units = (pe * simd) as f64;
+            let (lut_per_mac, dsp_per_mac) =
+                if in_bits > cal.dsp_threshold_bits && sig.weight_bits > cal.dsp_threshold_bits {
+                    (6.0, 1u64)
+                } else {
+                    (
+                        cal.k_mul_w * sig.weight_bits as f64
+                            + cal.k_mul_a * in_bits as f64
+                            + cal.k_mul_base,
+                        0,
+                    )
+                };
+            let acc_w = (in_bits + sig.weight_bits + 10) as f64;
+            let luts = units * lut_per_mac
+                + pe as f64 * acc_w * cal.k_acc_bit
+                + pe as f64 * cal.k_requant
+                + cal.k_actor_ctrl;
+            let total_w_bits = (taps * cout as usize) as u64 * sig.weight_bits as u64;
+            let lanes = pe as u64;
+            let bram18 = lanes * (total_w_bits.div_ceil(lanes)).div_ceil(cal.bram18_bits)
+                + (8 * taps as u64 * in_bits as u64).div_ceil(cal.bram18_bits);
+            (
+                luts as u64,
+                (luts * cal.k_ff_per_lut) as u64,
+                bram18,
+                (units as u64) * dsp_per_mac,
+            )
+        }
+        ActorKind::MaxPool => {
+            let (_h, w, c) = (sig.params[0], sig.params[1], sig.params[2]);
+            let luts = (cal.k_actor_ctrl + c as f64 * sig.act_bits as f64 * 0.6) as u64;
+            ((luts), (w / 2 * c) as u64 * sig.act_bits as u64, 0, 0)
+        }
+        ActorKind::Gemm => {
+            let [fin, fout, _c, pe, simd, in_bits] = sig.params[..] else {
+                panic!("gemm sig params");
+            };
+            let units = (pe * simd) as f64;
+            let lut_per_mac = cal.k_mul_w * sig.weight_bits as f64
+                + cal.k_mul_a * in_bits as f64
+                + cal.k_mul_base;
+            let acc_w = (in_bits + sig.weight_bits + 12) as f64;
+            let luts =
+                units * lut_per_mac + fout as f64 * acc_w * cal.k_acc_bit + cal.k_actor_ctrl;
+            let total_w_bits = (fin * fout) as u64 * sig.weight_bits as u64;
+            let lanes = pe as u64;
+            let bram18 = lanes * (total_w_bits.div_ceil(lanes)).div_ceil(cal.bram18_bits);
+            (luts as u64, (luts * cal.k_ff_per_lut) as u64, bram18, 0)
+        }
+    }
+}
+
+/// SBox mux cost: an n-way mux of `port_bits`-wide streams plus handshake.
+fn sbox_cost(n_ways: usize, port_bits: u32) -> u64 {
+    // ~1 LUT6 per 2:1 mux bit; (n-1) stages; + 24 LUTs of stream handshake.
+    ((n_ways - 1) as u64) * port_bits as u64 + 24
+}
+
+/// Resource totals for a merged engine.
+pub fn merged_estimate(md: &MultiDataflow, cal: &Calibration) -> MergedCost {
+    let (mut luts, mut ffs, mut bram18, mut dsp) = (0u64, 0u64, 0u64, 0u64);
+    for slot in &md.instances {
+        for sig in slot {
+            let (l, f, b, d) = actor_cost(sig, cal);
+            luts += l;
+            ffs += f;
+            bram18 += b;
+            dsp += d;
+        }
+    }
+    let sbox_luts: u64 = md
+        .sboxes
+        .iter()
+        .map(|s| 2 * sbox_cost(s.n_ways, s.port_bits)) // demux + mux pair
+        .sum();
+    MergedCost {
+        luts: luts + sbox_luts,
+        ffs,
+        bram36: bram18 as f64 / 2.0,
+        dsp,
+        sbox_luts,
+        n_instances: md.n_instances(),
+        n_shared: md.n_shared(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::merge::merge;
+    use super::super::sig::build_network;
+    use super::*;
+    use crate::dataflow::FoldingConfig;
+    use crate::qonnx::{read_str, test_model_json};
+    use crate::testkit;
+
+    fn cost_of(nets: &[super::super::sig::Network]) -> MergedCost {
+        merged_estimate(&merge(nets).unwrap(), &Calibration::default())
+    }
+
+    #[test]
+    fn self_merge_adds_nothing() {
+        let m = read_str(&test_model_json(1, 2)).unwrap();
+        let mut m2 = m.clone();
+        m2.profile = "B".into();
+        let f = FoldingConfig::default();
+        let solo = cost_of(&[build_network(&m, &f)]);
+        let dup = cost_of(&[build_network(&m, &f), build_network(&m2, &f)]);
+        assert_eq!(solo.luts, dup.luts);
+        assert_eq!(solo.bram36, dup.bram36);
+    }
+
+    #[test]
+    fn merged_bounded_by_sum_and_max() {
+        testkit::check("max <= merged <= sum + sbox", |rng| {
+            let f = FoldingConfig::default();
+            let json_a = test_model_json(1, 2);
+            // random perturbation of one weight to force partial divergence
+            let json_b = if rng.bool(0.5) {
+                json_a.replacen("-2,", "0,", 1)
+            } else {
+                json_a.replace("\"act_bits\":8", "\"act_bits\":4")
+            };
+            let ma = read_str(&json_a).map_err(|e| e.to_string())?;
+            let mut mb = read_str(&json_b).map_err(|e| e.to_string())?;
+            mb.profile = "B".into();
+            let na = build_network(&ma, &f);
+            let nb = build_network(&mb, &f);
+            let ca = cost_of(std::slice::from_ref(&na));
+            let cb = cost_of(std::slice::from_ref(&nb));
+            let m = cost_of(&[na, nb]);
+            crate::prop_assert!(
+                m.luts >= ca.luts.max(cb.luts),
+                "merged {} < max({}, {})",
+                m.luts,
+                ca.luts,
+                cb.luts
+            );
+            crate::prop_assert!(
+                m.luts <= ca.luts + cb.luts + m.sbox_luts,
+                "merged {} > sum {} + sbox {}",
+                m.luts,
+                ca.luts + cb.luts,
+                m.sbox_luts
+            );
+            Ok(())
+        });
+    }
+}

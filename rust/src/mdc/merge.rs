@@ -1,0 +1,280 @@
+//! The merging algorithm: N profile networks -> one multi-dataflow.
+//!
+//! Walks the input networks slot-by-slot (the streaming template gives every
+//! profile the same topology skeleton; a mismatch is a hard error — the
+//! paper merges profiles of the *same* CNN). At each slot, actors with equal
+//! signatures collapse into one shared instance; differing actors are
+//! instantiated per profile and an SBox pair (demux upstream, mux
+//! downstream) is recorded. Each profile gets a configuration word:
+//! which instance to use at every slot — the runtime "profile switch" is
+//! just selecting a configuration (Sect. 4.4).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use super::sig::{ActorKind, ActorSig, Network};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MergeError(pub String);
+
+impl fmt::Display for MergeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "mdc merge: {}", self.0)
+    }
+}
+
+impl std::error::Error for MergeError {}
+
+/// A switch box steering slot `slot` among `n_ways` actor instances.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SBox {
+    pub slot: usize,
+    pub n_ways: usize,
+    /// Token port width (bits) — mux cost input.
+    pub port_bits: u32,
+}
+
+/// One profile's configuration of the merged datapath.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProfileConfig {
+    pub profile: String,
+    /// For each slot, the index into `MultiDataflow::instances[slot]`.
+    pub selection: Vec<usize>,
+}
+
+/// The merged multi-dataflow engine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MultiDataflow {
+    /// Per slot: the distinct actor instances bound there (1 = fully shared).
+    pub instances: Vec<Vec<ActorSig>>,
+    pub sboxes: Vec<SBox>,
+    pub configs: Vec<ProfileConfig>,
+}
+
+impl MultiDataflow {
+    /// Total distinct actor instances.
+    pub fn n_instances(&self) -> usize {
+        self.instances.iter().map(Vec::len).sum()
+    }
+
+    /// Instances shared by every profile.
+    pub fn n_shared(&self) -> usize {
+        self.instances.iter().filter(|v| v.len() == 1).count()
+    }
+
+    /// Reconstruct the pipeline of one profile (for the semantics-preservation
+    /// property: must equal the original standalone network).
+    pub fn pipeline_of(&self, profile: &str) -> Option<Vec<&ActorSig>> {
+        let cfg = self.configs.iter().find(|c| c.profile == profile)?;
+        Some(
+            cfg.selection
+                .iter()
+                .enumerate()
+                .map(|(slot, &idx)| &self.instances[slot][idx])
+                .collect(),
+        )
+    }
+
+    pub fn profile_names(&self) -> Vec<&str> {
+        self.configs.iter().map(|c| c.profile.as_str()).collect()
+    }
+}
+
+/// Width-subsuming sharing (paper Sect. 4.4): ROM-less stream actors
+/// (line buffers, pools) and the gemm head are shareable across profiles
+/// whose streams differ only in *port width* — the wider datapath carries
+/// the narrower codes unchanged (and the gemm emits raw accumulators, whose
+/// argmax is invariant to the positive per-profile input scale). Conv MAC
+/// actors requantize, so they share only on exact signature equality.
+fn compatible(a: &ActorSig, b: &ActorSig) -> bool {
+    if a == b {
+        return true;
+    }
+    match a.kind {
+        ActorKind::LineBuffer | ActorKind::MaxPool => {
+            a.kind == b.kind && a.name == b.name && a.params == b.params
+        }
+        ActorKind::Gemm => {
+            // params = [fin, fout, c, pe, simd, in_bits]: all but in_bits
+            // must match, plus identical *weight* ROM contents. The bias ROM
+            // (fout entries, scale-dependent) stays per-profile behind the
+            // shared MAC array, so bias_fp is deliberately ignored.
+            a.kind == b.kind
+                && a.name == b.name
+                && a.weight_bits == b.weight_bits
+                && a.weight_fp == b.weight_fp
+                && a.params.len() == b.params.len()
+                && a.params[..a.params.len() - 1] == b.params[..b.params.len() - 1]
+        }
+        ActorKind::ConvMac => false, // only exact equality (handled above)
+    }
+}
+
+/// Widen the retained instance to the max port width of the sharers.
+fn widen(existing: &mut ActorSig, other: &ActorSig) {
+    existing.act_bits = existing.act_bits.max(other.act_bits);
+    match existing.kind {
+        ActorKind::Gemm => {
+            let last = existing.params.len() - 1;
+            existing.params[last] = existing.params[last].max(other.params[last]);
+        }
+        ActorKind::LineBuffer | ActorKind::MaxPool | ActorKind::ConvMac => {}
+    }
+}
+
+/// Merge N networks into a multi-dataflow.
+pub fn merge(networks: &[Network]) -> Result<MultiDataflow, MergeError> {
+    if networks.is_empty() {
+        return Err(MergeError("no input networks".into()));
+    }
+    let n_slots = networks[0].nodes.len();
+    for net in networks {
+        if net.nodes.len() != n_slots {
+            return Err(MergeError(format!(
+                "profile '{}' has {} template slots, expected {} — profiles must \
+                 instantiate the same streaming template",
+                net.profile,
+                net.nodes.len(),
+                n_slots
+            )));
+        }
+    }
+    {
+        let mut seen = std::collections::BTreeSet::new();
+        for net in networks {
+            if !seen.insert(&net.profile) {
+                return Err(MergeError(format!("duplicate profile '{}'", net.profile)));
+            }
+        }
+    }
+    for slot in 0..n_slots {
+        let kind = networks[0].nodes[slot].kind;
+        for net in networks {
+            if net.nodes[slot].kind != kind {
+                return Err(MergeError(format!(
+                    "slot {slot}: kind mismatch between profiles ({:?} vs {:?})",
+                    kind, net.nodes[slot].kind
+                )));
+            }
+        }
+    }
+
+    let mut instances: Vec<Vec<ActorSig>> = vec![Vec::new(); n_slots];
+    let mut selections: BTreeMap<String, Vec<usize>> = networks
+        .iter()
+        .map(|n| (n.profile.clone(), Vec::with_capacity(n_slots)))
+        .collect();
+
+    for slot in 0..n_slots {
+        for net in networks {
+            let sig = &net.nodes[slot];
+            let idx = match instances[slot]
+                .iter()
+                .position(|s| compatible(s, sig))
+            {
+                Some(i) => {
+                    widen(&mut instances[slot][i], sig);
+                    i
+                }
+                None => {
+                    instances[slot].push(sig.clone());
+                    instances[slot].len() - 1
+                }
+            };
+            selections.get_mut(&net.profile).unwrap().push(idx);
+        }
+    }
+
+    let sboxes = instances
+        .iter()
+        .enumerate()
+        .filter(|(_, inst)| inst.len() > 1)
+        .map(|(slot, inst)| SBox {
+            slot,
+            n_ways: inst.len(),
+            // the SBox switches the actor's *input* stream width
+            port_bits: inst[0].params.last().copied().unwrap_or(8).min(32),
+        })
+        .collect();
+
+    let configs = networks
+        .iter()
+        .map(|n| ProfileConfig {
+            profile: n.profile.clone(),
+            selection: selections[&n.profile].clone(),
+        })
+        .collect();
+
+    Ok(MultiDataflow {
+        instances,
+        sboxes,
+        configs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::sig::build_network;
+    use super::*;
+    use crate::dataflow::FoldingConfig;
+    use crate::qonnx::{read_str, test_model_json};
+
+    fn net(json: &str, profile: &str) -> Network {
+        let mut m = read_str(json).unwrap();
+        m.profile = profile.to_string();
+        build_network(&m, &FoldingConfig::default())
+    }
+
+    #[test]
+    fn identical_profiles_fully_share() {
+        let a = net(&test_model_json(1, 2), "A");
+        let b = net(&test_model_json(1, 2), "B");
+        let md = merge(&[a.clone(), b]).unwrap();
+        assert_eq!(md.n_instances(), a.nodes.len());
+        assert!(md.sboxes.is_empty());
+        assert_eq!(md.pipeline_of("A").unwrap().len(), a.nodes.len());
+    }
+
+    #[test]
+    fn differing_inner_layer_gets_sbox() {
+        let a = net(&test_model_json(1, 2), "A");
+        // B differs only in conv weights -> conv actor duplicated, SBox there
+        let json_b = test_model_json(1, 2).replacen("-2,", "-1,", 1);
+        let b = net(&json_b, "B");
+        let md = merge(&[a.clone(), b]).unwrap();
+        assert_eq!(md.n_instances(), a.nodes.len() + 1);
+        assert_eq!(md.sboxes.len(), 1);
+        assert_eq!(md.sboxes[0].n_ways, 2);
+        // per-profile pipelines reconstruct the originals
+        let pa = md.pipeline_of("A").unwrap();
+        assert_eq!(pa.into_iter().cloned().collect::<Vec<_>>(), a.nodes);
+    }
+
+    #[test]
+    fn topology_mismatch_rejected() {
+        let a = net(&test_model_json(1, 2), "A");
+        let mut b = net(&test_model_json(1, 2), "B");
+        b.nodes.pop();
+        assert!(merge(&[a, b]).is_err());
+    }
+
+    #[test]
+    fn duplicate_profile_rejected() {
+        let a = net(&test_model_json(1, 2), "A");
+        let b = net(&test_model_json(1, 2), "A");
+        assert!(merge(&[a, b]).is_err());
+    }
+
+    #[test]
+    fn empty_input_rejected() {
+        assert!(merge(&[]).is_err());
+    }
+
+    #[test]
+    fn merge_is_idempotent_for_single_network() {
+        let a = net(&test_model_json(2, 3), "solo");
+        let md = merge(std::slice::from_ref(&a)).unwrap();
+        assert_eq!(md.n_instances(), a.nodes.len());
+        assert_eq!(md.n_shared(), a.nodes.len());
+    }
+}

@@ -1,0 +1,24 @@
+//! MDC — Multi-Dataflow Composer (rust port of the paper's merging tool).
+//!
+//! The paper uses MDC to obtain *computation approximation*: several
+//! data-approximated profiles of the same CNN are merged into one
+//! coarse-grained-reconfigurable datapath. Actors that are identical across
+//! profiles (same template, same hyper-parameters, same precision — and for
+//! ROMs, same weights) are instantiated once and shared; where profiles
+//! diverge, profile-specific actors are instantiated side by side and
+//! switch boxes (SBoxes) steer the token stream according to the selected
+//! configuration. Switching profile at runtime is a configuration-register
+//! write — no re-synthesis, no reconfiguration latency (paper Sect. 4.4).
+//!
+//! * [`sig`]   — actor signatures: what "identical" means for sharing.
+//! * [`merge`] — the merging algorithm + per-profile configurations.
+//! * [`cost`]  — resource overhead of the merged engine (SBox muxes) and
+//!   the `resource(merged) <= sum(resource(inputs))` accounting.
+
+mod cost;
+mod merge;
+mod sig;
+
+pub use cost::{merged_estimate, MergedCost};
+pub use merge::{merge, MergeError, MultiDataflow, ProfileConfig, SBox};
+pub use sig::{build_network, ActorKind, ActorSig, Network};

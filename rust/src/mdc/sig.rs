@@ -1,0 +1,200 @@
+//! Actor signatures: the sharing equivalence used by the composer.
+//!
+//! Two actors can share one hardware instance iff their signatures are
+//! equal: same template kind, same hyper-parameters (shapes, folding), same
+//! data precision, and — for actors embedding ROMs — the same weight
+//! contents (fingerprinted). This matches the paper's "sharing layers of
+//! different profiles that use the same data precision", refined with the
+//! weight fingerprint so that merely-same-shaped layers with different
+//! trained parameters are NOT collapsed.
+
+use crate::dataflow::FoldingConfig;
+use crate::qonnx::{infer_shapes, Layer, QonnxModel};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ActorKind {
+    LineBuffer,
+    ConvMac,
+    MaxPool,
+    Gemm,
+}
+
+/// Sharing signature of one actor instance.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ActorSig {
+    pub kind: ActorKind,
+    /// Template position name (conv1_linebuf, conv1, pool1, ...).
+    pub name: String,
+    /// Flattened shape/folding parameters (h, w, cin, cout, pe, simd ...).
+    pub params: Vec<u32>,
+    pub act_bits: u32,
+    pub weight_bits: u32,
+    /// FNV-1a fingerprint of embedded ROM contents (0 for ROM-less actors).
+    pub weight_fp: u64,
+    /// Fingerprint of the (small) bias/requant ROM. For the gemm head this
+    /// is allowed to differ across sharers: each profile keeps its own
+    /// 10-entry bias ROM behind the shared MAC array + weight ROM.
+    pub bias_fp: u64,
+}
+
+/// One profile's dataflow network (linear streaming pipeline).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Network {
+    pub profile: String,
+    pub nodes: Vec<ActorSig>,
+}
+
+pub fn fnv1a(data: impl IntoIterator<Item = i64>) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in data {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+    h
+}
+
+/// Derive the actor network of a model under a folding config — the MDC
+/// *front end* (paper Fig. 2: "network related path").
+pub fn build_network(model: &QonnxModel, fold: &FoldingConfig) -> Network {
+    let shapes = infer_shapes(model);
+    let mut nodes = Vec::new();
+    let mut conv_idx = 0usize;
+    let mut cur_bits = model.input_bits;
+    let mut stream_c = model.input_shape.c;
+    for (i, layer) in model.layers.iter().enumerate() {
+        let s = shapes[i];
+        match layer {
+            Layer::Conv(c) => {
+                let (pe, simd) = if conv_idx == 0 {
+                    (fold.conv1_pe, fold.conv1_simd)
+                } else {
+                    (fold.conv2_pe, fold.conv2_simd)
+                };
+                nodes.push(ActorSig {
+                    kind: ActorKind::LineBuffer,
+                    name: format!("{}_linebuf", c.name),
+                    params: vec![s.h as u32, s.w as u32, s.c as u32],
+                    act_bits: cur_bits,
+                    weight_bits: 0,
+                    weight_fp: 0,
+                    bias_fp: 0,
+                });
+                let wfp = fnv1a(c.w_codes.iter().map(|&x| x as i64));
+                let bfp = fnv1a(
+                    c.b_codes
+                        .iter()
+                        .copied()
+                        .chain(c.mult.iter().copied())
+                        .chain(c.shift.iter().copied()),
+                );
+                nodes.push(ActorSig {
+                    kind: ActorKind::ConvMac,
+                    name: c.name.clone(),
+                    params: vec![
+                        s.h as u32,
+                        s.w as u32,
+                        c.cin as u32,
+                        c.cout as u32,
+                        pe as u32,
+                        simd as u32,
+                        cur_bits,
+                    ],
+                    act_bits: c.act_bits,
+                    weight_bits: c.weight_bits,
+                    weight_fp: wfp,
+                    bias_fp: bfp,
+                });
+                cur_bits = c.act_bits;
+                stream_c = c.cout;
+                conv_idx += 1;
+            }
+            Layer::Pool(p) => {
+                nodes.push(ActorSig {
+                    kind: ActorKind::MaxPool,
+                    name: p.name.clone(),
+                    params: vec![s.h as u32, s.w as u32, s.c as u32],
+                    act_bits: cur_bits,
+                    weight_bits: 0,
+                    weight_fp: 0,
+                    bias_fp: 0,
+                });
+            }
+            Layer::Flatten { .. } => {}
+            Layer::Dense(d) => {
+                let wfp = fnv1a(d.w_codes.iter().map(|&x| x as i64));
+                let bfp = fnv1a(d.b_codes.iter().copied());
+                nodes.push(ActorSig {
+                    kind: ActorKind::Gemm,
+                    name: d.name.clone(),
+                    params: vec![
+                        d.in_features as u32,
+                        d.out_features as u32,
+                        stream_c as u32,
+                        fold.dense_pe as u32,
+                        fold.dense_simd as u32,
+                        cur_bits,
+                    ],
+                    act_bits: 32,
+                    weight_bits: d.weight_bits,
+                    weight_fp: wfp,
+                    bias_fp: bfp,
+                });
+            }
+        }
+    }
+    Network {
+        profile: model.profile.clone(),
+        nodes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qonnx::{read_str, test_model_json};
+
+    #[test]
+    fn network_has_expected_slots() {
+        let m = read_str(&test_model_json(1, 2)).unwrap();
+        let net = build_network(&m, &FoldingConfig::default());
+        let kinds: Vec<ActorKind> = net.nodes.iter().map(|n| n.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                ActorKind::LineBuffer,
+                ActorKind::ConvMac,
+                ActorKind::MaxPool,
+                ActorKind::Gemm
+            ]
+        );
+    }
+
+    #[test]
+    fn identical_models_have_identical_sigs() {
+        let a = read_str(&test_model_json(1, 2)).unwrap();
+        let b = read_str(&test_model_json(1, 2)).unwrap();
+        let f = FoldingConfig::default();
+        assert_eq!(build_network(&a, &f).nodes, build_network(&b, &f).nodes);
+    }
+
+    #[test]
+    fn weight_change_breaks_sharing() {
+        let a = read_str(&test_model_json(1, 2)).unwrap();
+        let json_b = test_model_json(1, 2).replacen("-2,", "-1,", 1);
+        let b = read_str(&json_b).unwrap();
+        let f = FoldingConfig::default();
+        let na = build_network(&a, &f);
+        let nb = build_network(&b, &f);
+        assert_ne!(na.nodes[1].weight_fp, nb.nodes[1].weight_fp);
+        // but the ROM-less line buffer still shares
+        assert_eq!(na.nodes[0], nb.nodes[0]);
+    }
+
+    #[test]
+    fn fnv_is_order_sensitive() {
+        assert_ne!(fnv1a([1, 2, 3]), fnv1a([3, 2, 1]));
+        assert_eq!(fnv1a([]), fnv1a(std::iter::empty::<i64>()));
+    }
+}

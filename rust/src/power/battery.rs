@@ -1,0 +1,189 @@
+//! Battery simulation (paper Fig. 4, right): adaptive vs non-adaptive
+//! engines under a fixed energy budget.
+//!
+//! The paper assumes a 10 Ah battery; the non-adaptive engine always runs
+//! the most accurate profile, while the adaptive engine's Profile Manager
+//! switches to the low-power profile once the remaining charge falls below
+//! a threshold. The outputs are battery duration and the total number of
+//! classifications executed — the adaptive engine extends both.
+
+/// Battery parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatteryModel {
+    /// Capacity in ampere-hours.
+    pub capacity_ah: f64,
+    /// Supply voltage (energy = Ah * V * 3600 joules).
+    pub voltage_v: f64,
+}
+
+impl Default for BatteryModel {
+    fn default() -> Self {
+        // Paper: "supposing a 10Ah energy budget"; KRIA rails are 5 V.
+        BatteryModel {
+            capacity_ah: 10.0,
+            voltage_v: 5.0,
+        }
+    }
+}
+
+impl BatteryModel {
+    pub fn energy_j(&self) -> f64 {
+        self.capacity_ah * self.voltage_v * 3600.0
+    }
+}
+
+/// Threshold policy of the Profile Manager (paper Fig. 4 left): run the
+/// accurate profile while charge >= `switch_at_fraction`, then drop to the
+/// low-power profile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdaptivePolicy {
+    /// Remaining-energy fraction at which to switch (e.g. 0.5).
+    pub switch_at_fraction: f64,
+}
+
+impl Default for AdaptivePolicy {
+    fn default() -> Self {
+        AdaptivePolicy {
+            switch_at_fraction: 0.5,
+        }
+    }
+}
+
+/// Result of draining the battery with one engine configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatteryRun {
+    pub label: String,
+    pub duration_h: f64,
+    pub classifications: u64,
+    /// (profile, hours spent, classifications) per phase.
+    pub phases: Vec<(String, f64, u64)>,
+    /// Classification-weighted mean accuracy over the whole run.
+    pub mean_accuracy: f64,
+}
+
+/// Drain the battery running one fixed profile continuously.
+///
+/// `power_mw` is the average engine power, `latency_us` the per-image
+/// latency (images are classified back-to-back, as in the paper's
+/// "running at full performance").
+pub fn run_fixed(
+    label: &str,
+    battery: &BatteryModel,
+    power_mw: f64,
+    latency_us: f64,
+    accuracy: f64,
+) -> BatteryRun {
+    let seconds = battery.energy_j() / (power_mw * 1e-3);
+    let classifications = (seconds / (latency_us * 1e-6)) as u64;
+    BatteryRun {
+        label: label.to_string(),
+        duration_h: seconds / 3600.0,
+        classifications,
+        phases: vec![(label.to_string(), seconds / 3600.0, classifications)],
+        mean_accuracy: accuracy,
+    }
+}
+
+/// Drain the battery with the adaptive engine: phase 1 on the accurate
+/// profile until the threshold, phase 2 on the low-power profile.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_battery(
+    battery: &BatteryModel,
+    policy: &AdaptivePolicy,
+    accurate: (&str, f64, f64, f64),  // (name, power_mw, latency_us, accuracy)
+    low_power: (&str, f64, f64, f64),
+) -> BatteryRun {
+    let total_j = battery.energy_j();
+    let phase1_j = total_j * (1.0 - policy.switch_at_fraction);
+    let phase2_j = total_j - phase1_j;
+
+    let (a_name, a_mw, a_lat, a_acc) = accurate;
+    let (l_name, l_mw, l_lat, l_acc) = low_power;
+
+    let s1 = phase1_j / (a_mw * 1e-3);
+    let c1 = (s1 / (a_lat * 1e-6)) as u64;
+    let s2 = phase2_j / (l_mw * 1e-3);
+    let c2 = (s2 / (l_lat * 1e-6)) as u64;
+
+    let total_c = c1 + c2;
+    BatteryRun {
+        label: format!("adaptive({a_name}->{l_name})"),
+        duration_h: (s1 + s2) / 3600.0,
+        classifications: total_c,
+        phases: vec![
+            (a_name.to_string(), s1 / 3600.0, c1),
+            (l_name.to_string(), s2 / 3600.0, c2),
+        ],
+        mean_accuracy: if total_c == 0 {
+            0.0
+        } else {
+            (a_acc * c1 as f64 + l_acc * c2 as f64) / total_c as f64
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    const A: (&str, f64, f64, f64) = ("A8-W8", 142.0, 329.0, 0.96);
+    const L: (&str, f64, f64, f64) = ("Mixed", 135.0, 329.0, 0.945);
+
+    #[test]
+    fn adaptive_outlasts_nonadaptive() {
+        let bat = BatteryModel::default();
+        let fixed = run_fixed(A.0, &bat, A.1, A.2, A.3);
+        let adaptive = simulate_battery(&bat, &AdaptivePolicy::default(), A, L);
+        assert!(adaptive.duration_h > fixed.duration_h);
+        assert!(adaptive.classifications > fixed.classifications);
+        assert!(adaptive.mean_accuracy < fixed.mean_accuracy);
+        assert!(adaptive.mean_accuracy > L.3);
+    }
+
+    #[test]
+    fn energy_accounting_is_exact() {
+        let bat = BatteryModel {
+            capacity_ah: 1.0,
+            voltage_v: 5.0,
+        };
+        // 18000 J at 1000 mW -> 18000 s -> 5 h
+        let run = run_fixed("x", &bat, 1000.0, 1e6, 1.0); // 1 s per image
+        assert!((run.duration_h - 5.0).abs() < 1e-9);
+        assert_eq!(run.classifications, 18000);
+    }
+
+    #[test]
+    fn threshold_zero_equals_low_power_only() {
+        let bat = BatteryModel::default();
+        let adaptive = simulate_battery(
+            &bat,
+            &AdaptivePolicy {
+                switch_at_fraction: 1.0,
+            },
+            A,
+            L,
+        );
+        let fixed_low = run_fixed(L.0, &bat, L.1, L.2, L.3);
+        assert!((adaptive.duration_h - fixed_low.duration_h).abs() < 1e-6);
+    }
+
+    #[test]
+    fn duration_monotone_in_switch_threshold() {
+        testkit::check("earlier switch -> longer life", |rng| {
+            let bat = BatteryModel::default();
+            let t1 = rng.f64(0.0, 1.0);
+            let t2 = rng.f64(0.0, 1.0);
+            let (lo, hi) = if t1 < t2 { (t1, t2) } else { (t2, t1) };
+            let r_lo = simulate_battery(&bat, &AdaptivePolicy { switch_at_fraction: lo }, A, L);
+            let r_hi = simulate_battery(&bat, &AdaptivePolicy { switch_at_fraction: hi }, A, L);
+            crate::prop_assert!(
+                r_hi.duration_h >= r_lo.duration_h - 1e-9,
+                "threshold {hi} gave {} < {} at {lo}",
+                r_hi.duration_h,
+                r_lo.duration_h
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,19 @@
+//! Power model + battery simulation (Table 1 power column, Fig. 4 right).
+//!
+//! The board-power substitution (DESIGN.md §2): activity-based estimation
+//!
+//!   P = P_static(leakage ~ LUTs used) + P_dynamic
+//!   P_dynamic = f_clk * [ sum_fifo toggle_bits/image * E_toggle
+//!                       + sum_mac  executed_macs/image * (a+w bits) * E_mac
+//!                       + bram accesses * E_bram ] / cycles_per_image
+//!
+//! where the toggle counts come from the *dataflow simulation of real
+//! images*, so the estimate is value-dependent — reproducing the paper's
+//! observation that power does not track precision proportionally (switching
+//! activity depends on the trained weights and the data being processed).
+
+mod battery;
+mod model;
+
+pub use battery::{run_fixed, simulate_battery, AdaptivePolicy, BatteryModel, BatteryRun};
+pub use model::{estimate_power, PowerBreakdown};

@@ -1,0 +1,167 @@
+//! Intermediate representation: typed layer objects (the ONNXParser
+//! "list of objects describing the layers' hyperparameters and connections").
+
+/// NHWC tensor shape (batch dim excluded — the streaming engine is
+/// per-sample; batching happens in the coordinator).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TensorShape {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl TensorShape {
+    pub fn elems(&self) -> usize {
+        self.h * self.w * self.c
+    }
+}
+
+/// A quantized 3x3 SAME conv layer, BN folded, with fused ReLU+requant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConvLayer {
+    pub name: String,
+    /// (3,3,Cin,Cout) integer weight codes, flattened row-major (dy,dx,ci,co).
+    pub w_codes: Vec<i32>,
+    pub cin: usize,
+    pub cout: usize,
+    /// Bias codes at accumulator scale (per out-channel).
+    pub b_codes: Vec<i64>,
+    /// Per-channel requant multiplier / right shift (TFLite-style).
+    pub mult: Vec<i64>,
+    pub shift: Vec<i64>,
+    /// Output activation precision (ufixed<act_bits, act_int_bits>).
+    pub act_bits: u32,
+    pub act_int_bits: u32,
+    pub weight_bits: u32,
+    /// Float scales (power model + reports).
+    pub in_step: f64,
+    pub out_step: f64,
+}
+
+impl ConvLayer {
+    /// Weight code at (dy, dx, ci, co).
+    #[inline]
+    pub fn w(&self, dy: usize, dx: usize, ci: usize, co: usize) -> i32 {
+        self.w_codes[((dy * 3 + dx) * self.cin + ci) * self.cout + co]
+    }
+
+    /// Number of MAC operations per output pixel.
+    pub fn macs_per_pixel(&self) -> usize {
+        9 * self.cin * self.cout
+    }
+}
+
+/// 2x2 stride-2 max-pool layer (operates on integer codes).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolLayer {
+    pub name: String,
+}
+
+/// Quantized fully-connected head; emits raw i64 accumulators (logits).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseLayer {
+    pub name: String,
+    /// (F, K) weight codes, row-major.
+    pub w_codes: Vec<i32>,
+    pub in_features: usize,
+    pub out_features: usize,
+    pub b_codes: Vec<i64>,
+    pub weight_bits: u32,
+    pub in_step: f64,
+    pub w_step: f64,
+}
+
+/// One layer of the streaming pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Layer {
+    Conv(ConvLayer),
+    Pool(PoolLayer),
+    Flatten { name: String },
+    Dense(DenseLayer),
+}
+
+/// Discriminant used for actor-sharing decisions in MDC.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    Conv,
+    Pool,
+    Flatten,
+    Dense,
+}
+
+impl Layer {
+    pub fn name(&self) -> &str {
+        match self {
+            Layer::Conv(l) => &l.name,
+            Layer::Pool(l) => &l.name,
+            Layer::Flatten { name } => name,
+            Layer::Dense(l) => &l.name,
+        }
+    }
+
+    pub fn kind(&self) -> LayerKind {
+        match self {
+            Layer::Conv(_) => LayerKind::Conv,
+            Layer::Pool(_) => LayerKind::Pool,
+            Layer::Flatten { .. } => LayerKind::Flatten,
+            Layer::Dense(_) => LayerKind::Dense,
+        }
+    }
+}
+
+/// A parsed, validated QONNX model: a linear streaming pipeline (the paper's
+/// CNNs are single-path dataflows; see reader.rs for the DAG validation that
+/// enforces this).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QonnxModel {
+    pub profile: String,
+    pub input_shape: TensorShape,
+    pub input_bits: u32,
+    pub input_int_bits: u32,
+    pub layers: Vec<Layer>,
+}
+
+impl QonnxModel {
+    pub fn conv_layers(&self) -> impl Iterator<Item = &ConvLayer> {
+        self.layers.iter().filter_map(|l| match l {
+            Layer::Conv(c) => Some(c),
+            _ => None,
+        })
+    }
+
+    pub fn dense(&self) -> Option<&DenseLayer> {
+        self.layers.iter().find_map(|l| match l {
+            Layer::Dense(d) => Some(d),
+            _ => None,
+        })
+    }
+
+    /// Total number of weight parameters.
+    pub fn param_count(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                Layer::Conv(c) => c.w_codes.len() + c.b_codes.len(),
+                Layer::Dense(d) => d.w_codes.len() + d.b_codes.len(),
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Total MACs for one classification (28x28 input assumed by caller's
+    /// shapes; computed from inferred shapes).
+    pub fn total_macs(&self) -> usize {
+        let shapes = super::infer_shapes(self);
+        let mut total = 0;
+        for (i, l) in self.layers.iter().enumerate() {
+            if let Layer::Conv(c) = l {
+                let out = shapes[i + 1];
+                total += out.h * out.w * c.macs_per_pixel();
+            }
+            if let Layer::Dense(d) = l {
+                total += d.in_features * d.out_features;
+            }
+        }
+        total
+    }
+}

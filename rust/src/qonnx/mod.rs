@@ -1,0 +1,23 @@
+//! QONNX front end: the rust port of the paper's extended ONNXParser.
+//!
+//! The paper's flow starts from a QONNX model (ONNX + arbitrary-precision
+//! quantization). Our interchange is QONNX-as-JSON (schema documented in
+//! `python/compile/export.py` and DESIGN.md §2); this module is the
+//! *Reader*: it parses the JSON, validates the graph (DAG, single-consumer
+//! streaming edges, shape inference) and produces the intermediate
+//! representation — a list of typed layer objects with hyper-parameters —
+//! that the HLS Writer (`crate::writer`) and the MDC front end
+//! (`crate::mdc`) consume.
+
+mod ir;
+mod reader;
+mod shapes;
+#[doc(hidden)]
+pub mod testgen;
+
+pub use ir::{ConvLayer, DenseLayer, Layer, LayerKind, PoolLayer, QonnxModel, TensorShape};
+pub use reader::{read_file, read_str, ReadError};
+pub use shapes::infer_shapes;
+
+#[doc(hidden)]
+pub use testgen::{random_model_json, tiny_model_json as test_model_json, RandModelCfg};

@@ -1,0 +1,431 @@
+//! QONNX-JSON Reader: JSON -> validated IR.
+//!
+//! Validation performed here (DESIGN.md §7):
+//!   * schema version check;
+//!   * every node's inputs are produced earlier (topological order, DAG);
+//!   * streaming single-consumer edges (each tensor feeds exactly one node);
+//!   * weight array lengths match the declared shapes;
+//!   * requant metadata present for every conv output channel;
+//!   * bit-widths within the supported arbitrary-precision range (1..=32).
+
+use std::fmt;
+use std::path::Path;
+
+use crate::json::{self, Value};
+
+use super::ir::*;
+
+#[derive(Debug)]
+pub enum ReadError {
+    Io(std::io::Error),
+    Json(json::ParseError),
+    Schema(String),
+}
+
+impl fmt::Display for ReadError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ReadError::Io(e) => write!(f, "qonnx read: io: {e}"),
+            ReadError::Json(e) => write!(f, "qonnx read: {e}"),
+            ReadError::Schema(m) => write!(f, "qonnx schema: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ReadError {}
+
+impl From<std::io::Error> for ReadError {
+    fn from(e: std::io::Error) -> Self {
+        ReadError::Io(e)
+    }
+}
+
+impl From<json::ParseError> for ReadError {
+    fn from(e: json::ParseError) -> Self {
+        ReadError::Json(e)
+    }
+}
+
+fn schema(msg: impl Into<String>) -> ReadError {
+    ReadError::Schema(msg.into())
+}
+
+pub fn read_file(path: impl AsRef<Path>) -> Result<QonnxModel, ReadError> {
+    let text = std::fs::read_to_string(path)?;
+    read_str(&text)
+}
+
+pub fn read_str(text: &str) -> Result<QonnxModel, ReadError> {
+    let root = json::parse(text)?;
+    let version = root
+        .get("qonnx_version")
+        .and_then(Value::as_i64)
+        .ok_or_else(|| schema("missing qonnx_version"))?;
+    if version != 1 {
+        return Err(schema(format!("unsupported qonnx_version {version}")));
+    }
+    let profile = root
+        .get("profile")
+        .and_then(Value::as_str)
+        .ok_or_else(|| schema("missing profile"))?
+        .to_string();
+
+    let input = root.get("input").ok_or_else(|| schema("missing input"))?;
+    let ishape = input
+        .get("shape")
+        .and_then(Value::to_i64_vec)
+        .ok_or_else(|| schema("input.shape"))?;
+    if ishape.len() != 4 {
+        return Err(schema("input.shape must be [N,H,W,C]"));
+    }
+    let input_shape = TensorShape {
+        h: ishape[1] as usize,
+        w: ishape[2] as usize,
+        c: ishape[3] as usize,
+    };
+    let input_bits = get_u32(input, "bits")?;
+    let input_int_bits = get_u32(input, "int_bits")?;
+
+    let nodes = root
+        .get("nodes")
+        .and_then(Value::as_array)
+        .ok_or_else(|| schema("missing nodes"))?;
+    let output_name = root
+        .get("output")
+        .and_then(Value::as_str)
+        .ok_or_else(|| schema("missing output"))?;
+
+    // Topology validation: tensors produced so far; streaming = each consumed
+    // at most once.
+    let mut produced: Vec<String> = vec!["input".to_string()];
+    let mut consumed: Vec<String> = Vec::new();
+
+    let mut layers = Vec::new();
+    for node in nodes {
+        let name = req_str(node, "name")?;
+        let op = req_str(node, "op")?;
+        let inputs = node
+            .get("inputs")
+            .and_then(Value::as_array)
+            .ok_or_else(|| schema(format!("{name}: inputs")))?;
+        for inp in inputs {
+            let t = inp
+                .as_str()
+                .ok_or_else(|| schema(format!("{name}: input not a string")))?;
+            if !produced.iter().any(|p| p == t) {
+                return Err(schema(format!(
+                    "{name}: input tensor '{t}' not produced by an earlier node (not a DAG in topo order)"
+                )));
+            }
+            if consumed.iter().any(|c| c == t) {
+                return Err(schema(format!(
+                    "{name}: tensor '{t}' consumed twice (streaming edges are single-consumer)"
+                )));
+            }
+            consumed.push(t.to_string());
+        }
+        let outputs = node
+            .get("outputs")
+            .and_then(Value::as_array)
+            .ok_or_else(|| schema(format!("{name}: outputs")))?;
+        for out in outputs {
+            let t = out
+                .as_str()
+                .ok_or_else(|| schema(format!("{name}: output not a string")))?;
+            if produced.iter().any(|p| p == t) {
+                return Err(schema(format!("{name}: tensor '{t}' produced twice")));
+            }
+            produced.push(t.to_string());
+        }
+
+        let layer = match op.as_str() {
+            "QConv2d" => Layer::Conv(parse_conv(node, &name)?),
+            "MaxPool2" => Layer::Pool(PoolLayer { name: name.clone() }),
+            "Flatten" => Layer::Flatten { name: name.clone() },
+            "QGemm" => Layer::Dense(parse_dense(node, &name)?),
+            other => return Err(schema(format!("{name}: unknown op '{other}'"))),
+        };
+        layers.push(layer);
+    }
+
+    if !produced.iter().any(|p| p == output_name) {
+        return Err(schema(format!("graph output '{output_name}' never produced")));
+    }
+
+    let model = QonnxModel {
+        profile,
+        input_shape,
+        input_bits,
+        input_int_bits,
+        layers,
+    };
+    // Shape inference doubles as structural validation (dims must divide,
+    // dense in_features must match the flattened conv output, ...).
+    super::shapes::check(&model).map_err(schema)?;
+    Ok(model)
+}
+
+fn req_str(node: &Value, key: &str) -> Result<String, ReadError> {
+    node.get(key)
+        .and_then(Value::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| schema(format!("missing string field '{key}'")))
+}
+
+fn get_u32(v: &Value, key: &str) -> Result<u32, ReadError> {
+    v.get(key)
+        .and_then(Value::as_i64)
+        .filter(|&x| (0..=64).contains(&x))
+        .map(|x| x as u32)
+        .ok_or_else(|| schema(format!("missing/invalid '{key}'")))
+}
+
+fn attr_u32(node: &Value, key: &str, name: &str) -> Result<u32, ReadError> {
+    node.get("attrs")
+        .and_then(|a| a.get(key))
+        .and_then(Value::as_i64)
+        .filter(|&x| (0..=1 << 20).contains(&x))
+        .map(|x| x as u32)
+        .ok_or_else(|| schema(format!("{name}: missing attr '{key}'")))
+}
+
+fn bits_in_range(bits: u32, what: &str, name: &str) -> Result<(), ReadError> {
+    if !(1..=32).contains(&bits) {
+        return Err(schema(format!(
+            "{name}: {what} bits {bits} outside supported arbitrary-precision range 1..=32"
+        )));
+    }
+    Ok(())
+}
+
+fn weights<'a>(node: &'a Value, name: &str) -> Result<&'a Value, ReadError> {
+    node.get("weights")
+        .ok_or_else(|| schema(format!("{name}: missing weights")))
+}
+
+fn parse_conv(node: &Value, name: &str) -> Result<ConvLayer, ReadError> {
+    let act_bits = attr_u32(node, "act_bits", name)?;
+    let act_int_bits = attr_u32(node, "act_int_bits", name)?;
+    let weight_bits = attr_u32(node, "weight_bits", name)?;
+    bits_in_range(act_bits, "activation", name)?;
+    bits_in_range(weight_bits, "weight", name)?;
+    let w = weights(node, name)?;
+
+    let w_shape = w
+        .get("w_shape")
+        .and_then(Value::to_i64_vec)
+        .ok_or_else(|| schema(format!("{name}: w_shape")))?;
+    if w_shape.len() != 4 || w_shape[0] != 3 || w_shape[1] != 3 {
+        return Err(schema(format!("{name}: conv w_shape must be [3,3,Cin,Cout]")));
+    }
+    let cin = w_shape[2] as usize;
+    let cout = w_shape[3] as usize;
+
+    let w_codes_i64 = w
+        .get("w_codes")
+        .and_then(Value::to_i64_vec)
+        .ok_or_else(|| schema(format!("{name}: w_codes")))?;
+    if w_codes_i64.len() != 9 * cin * cout {
+        return Err(schema(format!(
+            "{name}: w_codes length {} != 9*{cin}*{cout}",
+            w_codes_i64.len()
+        )));
+    }
+    let qmax = (1i64 << (weight_bits - 1)) - 1;
+    if let Some(bad) = w_codes_i64.iter().find(|&&c| c.abs() > qmax) {
+        return Err(schema(format!(
+            "{name}: weight code {bad} exceeds {weight_bits}-bit symmetric range ±{qmax}"
+        )));
+    }
+    let w_codes: Vec<i32> = w_codes_i64.iter().map(|&c| c as i32).collect();
+
+    let b_codes = w
+        .get("b_codes")
+        .and_then(Value::to_i64_vec)
+        .ok_or_else(|| schema(format!("{name}: b_codes")))?;
+    let mult = w
+        .get("mult")
+        .and_then(Value::to_i64_vec)
+        .ok_or_else(|| schema(format!("{name}: mult")))?;
+    let shift = w
+        .get("shift")
+        .and_then(Value::to_i64_vec)
+        .ok_or_else(|| schema(format!("{name}: shift")))?;
+    for (field, len) in [("b_codes", b_codes.len()), ("mult", mult.len()), ("shift", shift.len())] {
+        if len != cout {
+            return Err(schema(format!("{name}: {field} length {len} != Cout {cout}")));
+        }
+    }
+    if let Some(s) = shift.iter().find(|&&s| !(0..=62).contains(&s)) {
+        return Err(schema(format!("{name}: requant shift {s} out of range 0..=62")));
+    }
+    if let Some(m) = mult.iter().find(|&&m| !(0..=1 << 20).contains(&m)) {
+        return Err(schema(format!("{name}: requant multiplier {m} out of range")));
+    }
+
+    let in_step = w.get("in_step").and_then(Value::as_f64).unwrap_or(0.0);
+    let out_step = w.get("out_step").and_then(Value::as_f64).unwrap_or(0.0);
+
+    Ok(ConvLayer {
+        name: name.to_string(),
+        w_codes,
+        cin,
+        cout,
+        b_codes,
+        mult,
+        shift,
+        act_bits,
+        act_int_bits,
+        weight_bits,
+        in_step,
+        out_step,
+    })
+}
+
+fn parse_dense(node: &Value, name: &str) -> Result<DenseLayer, ReadError> {
+    let weight_bits = attr_u32(node, "weight_bits", name)?;
+    bits_in_range(weight_bits, "weight", name)?;
+    let w = weights(node, name)?;
+    let w_shape = w
+        .get("w_shape")
+        .and_then(Value::to_i64_vec)
+        .ok_or_else(|| schema(format!("{name}: w_shape")))?;
+    if w_shape.len() != 2 {
+        return Err(schema(format!("{name}: gemm w_shape must be [F,K]")));
+    }
+    let in_features = w_shape[0] as usize;
+    let out_features = w_shape[1] as usize;
+    let w_codes_i64 = w
+        .get("w_codes")
+        .and_then(Value::to_i64_vec)
+        .ok_or_else(|| schema(format!("{name}: w_codes")))?;
+    if w_codes_i64.len() != in_features * out_features {
+        return Err(schema(format!("{name}: w_codes length mismatch")));
+    }
+    let qmax = (1i64 << (weight_bits - 1)) - 1;
+    if w_codes_i64.iter().any(|&c| c.abs() > qmax) {
+        return Err(schema(format!("{name}: weight code exceeds {weight_bits}-bit range")));
+    }
+    let b_codes = w
+        .get("b_codes")
+        .and_then(Value::to_i64_vec)
+        .ok_or_else(|| schema(format!("{name}: b_codes")))?;
+    if b_codes.len() != out_features {
+        return Err(schema(format!("{name}: b_codes length mismatch")));
+    }
+    Ok(DenseLayer {
+        name: name.to_string(),
+        w_codes: w_codes_i64.iter().map(|&c| c as i32).collect(),
+        in_features,
+        out_features,
+        b_codes,
+        weight_bits,
+        in_step: w.get("in_step").and_then(Value::as_f64).unwrap_or(0.0),
+        w_step: w.get("w_step").and_then(Value::as_f64).unwrap_or(0.0),
+    })
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    pub(crate) fn tiny_model_json(cin: usize, cout: usize) -> String {
+        super::super::testgen::tiny_model_json(cin, cout)
+    }
+
+    #[allow(dead_code)]
+    fn unused_generator(cin: usize, cout: usize) -> String {
+        let w_codes: Vec<i64> = (0..9 * cin * cout).map(|i| (i as i64 % 5) - 2).collect();
+        let dense_in = (4 / 2) * (4 / 2) * cout;
+        let dw: Vec<i64> = (0..dense_in * 3).map(|i| (i as i64 % 3) - 1).collect();
+        format!(
+            r#"{{
+  "qonnx_version": 1,
+  "profile": "T",
+  "input": {{"shape": [1,4,4,{cin}], "bits": 8, "int_bits": 0}},
+  "nodes": [
+    {{"name":"conv1","op":"QConv2d","inputs":["input"],"outputs":["c1"],
+      "attrs":{{"kernel":[3,3],"stride":[1,1],"pad":"SAME","filters":{cout},
+               "in_channels":{cin},"act_bits":8,"act_int_bits":2,"weight_bits":4}},
+      "weights":{{"w_shape":[3,3,{cin},{cout}],"w_codes":{w},
+                 "b_codes":{b},"mult":{m},"shift":{s},
+                 "in_step":0.00390625,"out_step":0.015625}}}},
+    {{"name":"pool1","op":"MaxPool2","inputs":["c1"],"outputs":["p1"],
+      "attrs":{{"kernel":[2,2],"stride":[2,2]}}}},
+    {{"name":"flatten","op":"Flatten","inputs":["p1"],"outputs":["f"],"attrs":{{}}}},
+    {{"name":"dense","op":"QGemm","inputs":["f"],"outputs":["logits"],
+      "attrs":{{"in_features":{din},"out_features":3,"weight_bits":4,
+               "act_bits":0,"act_int_bits":0}},
+      "weights":{{"w_shape":[{din},3],"w_codes":{dw},
+                 "b_codes":[0,1,-1],"w_step":0.1,"in_step":0.015625}}}}
+  ],
+  "output": "logits"
+}}"#,
+            w = fmt_vec(&w_codes),
+            b = fmt_vec(&vec![1i64; cout]),
+            m = fmt_vec(&vec![16384i64; cout]),
+            s = fmt_vec(&vec![15i64; cout]),
+            din = dense_in,
+            dw = fmt_vec(&dw),
+        )
+    }
+
+    fn fmt_vec(xs: &[i64]) -> String {
+        let inner: Vec<String> = xs.iter().map(|x| x.to_string()).collect();
+        format!("[{}]", inner.join(","))
+    }
+
+    #[test]
+    fn parses_tiny_model() {
+        let m = read_str(&tiny_model_json(1, 2)).unwrap();
+        assert_eq!(m.profile, "T");
+        assert_eq!(m.layers.len(), 4);
+        let conv = m.conv_layers().next().unwrap();
+        assert_eq!(conv.cin, 1);
+        assert_eq!(conv.cout, 2);
+        assert_eq!(conv.w(0, 0, 0, 0), -2);
+        assert_eq!(m.dense().unwrap().out_features, 3);
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = tiny_model_json(1, 2).replace("\"qonnx_version\": 1", "\"qonnx_version\": 9");
+        assert!(matches!(read_str(&bad), Err(ReadError::Schema(_))));
+    }
+
+    #[test]
+    fn rejects_unknown_tensor_ref() {
+        let bad = tiny_model_json(1, 2).replace(r#""inputs":["c1"]"#, r#""inputs":["nope"]"#);
+        let err = read_str(&bad).unwrap_err();
+        assert!(err.to_string().contains("not produced"), "{err}");
+    }
+
+    #[test]
+    fn rejects_weight_code_overflow() {
+        // weight_bits=4 -> |code| <= 7; inject an 8.
+        let good = tiny_model_json(1, 2);
+        let bad = good.replacen("-2,", "8,", 1);
+        let err = read_str(&bad).unwrap_err();
+        assert!(err.to_string().contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn rejects_double_consumption() {
+        let bad = tiny_model_json(1, 2).replace(
+            r#""name":"flatten","op":"Flatten","inputs":["p1"]"#,
+            r#""name":"flatten","op":"Flatten","inputs":["c1"]"#,
+        );
+        let err = read_str(&bad).unwrap_err();
+        // 'c1' already consumed by pool1.
+        assert!(err.to_string().contains("consumed twice"), "{err}");
+    }
+
+    #[test]
+    fn rejects_wrong_weight_len() {
+        let bad = tiny_model_json(1, 2).replace(
+            r#""w_shape":[3,3,1,2]"#,
+            r#""w_shape":[3,3,1,3]"#,
+        );
+        assert!(read_str(&bad).is_err());
+    }
+}

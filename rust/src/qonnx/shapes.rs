@@ -1,0 +1,104 @@
+//! Shape inference / structural validation over the streaming pipeline.
+
+use super::ir::{Layer, QonnxModel, TensorShape};
+
+/// Shapes at each pipeline stage: `shapes[0]` is the input, `shapes[i+1]` is
+/// the output of `layers[i]`. Flatten/Dense stages use (1, 1, features).
+pub fn infer_shapes(model: &QonnxModel) -> Vec<TensorShape> {
+    let mut shapes = vec![model.input_shape];
+    let mut cur = model.input_shape;
+    for layer in &model.layers {
+        cur = match layer {
+            Layer::Conv(c) => TensorShape {
+                h: cur.h,
+                w: cur.w,
+                c: c.cout,
+            },
+            Layer::Pool(_) => TensorShape {
+                h: cur.h / 2,
+                w: cur.w / 2,
+                c: cur.c,
+            },
+            Layer::Flatten { .. } => TensorShape {
+                h: 1,
+                w: 1,
+                c: cur.elems(),
+            },
+            Layer::Dense(d) => TensorShape {
+                h: 1,
+                w: 1,
+                c: d.out_features,
+            },
+        };
+        shapes.push(cur);
+    }
+    shapes
+}
+
+/// Structural checks that need shapes (called by the reader).
+pub fn check(model: &QonnxModel) -> Result<(), String> {
+    let mut cur = model.input_shape;
+    for layer in &model.layers {
+        match layer {
+            Layer::Conv(c) => {
+                if c.cin != cur.c {
+                    return Err(format!(
+                        "{}: declared Cin {} != incoming channels {}",
+                        c.name, c.cin, cur.c
+                    ));
+                }
+                cur = TensorShape { h: cur.h, w: cur.w, c: c.cout };
+            }
+            Layer::Pool(p) => {
+                if cur.h % 2 != 0 || cur.w % 2 != 0 {
+                    return Err(format!(
+                        "{}: 2x2 pool needs even spatial dims, got {}x{}",
+                        p.name, cur.h, cur.w
+                    ));
+                }
+                cur = TensorShape { h: cur.h / 2, w: cur.w / 2, c: cur.c };
+            }
+            Layer::Flatten { .. } => {
+                cur = TensorShape { h: 1, w: 1, c: cur.elems() };
+            }
+            Layer::Dense(d) => {
+                if d.in_features != cur.c || cur.h != 1 || cur.w != 1 {
+                    return Err(format!(
+                        "{}: in_features {} != flattened input {} (shape {}x{}x{})",
+                        d.name, d.in_features, cur.elems(), cur.h, cur.w, cur.c
+                    ));
+                }
+                cur = TensorShape { h: 1, w: 1, c: d.out_features };
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reader::read_str;
+    use super::*;
+
+    #[test]
+    fn shapes_follow_pipeline() {
+        let json = super::super::reader::tests::tiny_model_json(1, 2);
+        let m = read_str(&json).unwrap();
+        let shapes = infer_shapes(&m);
+        assert_eq!(shapes[0], TensorShape { h: 4, w: 4, c: 1 });
+        assert_eq!(shapes[1], TensorShape { h: 4, w: 4, c: 2 }); // conv
+        assert_eq!(shapes[2], TensorShape { h: 2, w: 2, c: 2 }); // pool
+        assert_eq!(shapes[3], TensorShape { h: 1, w: 1, c: 8 }); // flatten
+        assert_eq!(shapes[4], TensorShape { h: 1, w: 1, c: 3 }); // dense
+    }
+
+    #[test]
+    fn dense_mismatch_rejected() {
+        let json = super::super::reader::tests::tiny_model_json(1, 2)
+            .replace(r#""in_features":8"#, r#""in_features":9"#)
+            .replace(r#""w_shape":[8,3]"#, r#""w_shape":[9,3]"#);
+        // w_codes length now wrong too; fix length error first by keeping
+        // original codes -> expect *some* schema error either way.
+        assert!(read_str(&json).is_err());
+    }
+}

@@ -1,0 +1,165 @@
+//! Synthetic QONNX-JSON generators for tests, property tests, and benches.
+//!
+//! Kept out of `#[cfg(test)]` so integration tests and bench binaries (which
+//! compile as separate crates) can use them; hidden from docs.
+
+use crate::testkit::Rng;
+
+fn fmt_vec(xs: &[i64]) -> String {
+    let inner: Vec<String> = xs.iter().map(|x| x.to_string()).collect();
+    format!("[{}]", inner.join(","))
+}
+
+/// A minimal valid model: 4x4xCin input, one conv(Cout), pool, dense(3).
+pub fn tiny_model_json(cin: usize, cout: usize) -> String {
+    let w_codes: Vec<i64> = (0..9 * cin * cout).map(|i| (i as i64 % 5) - 2).collect();
+    let dense_in = (4 / 2) * (4 / 2) * cout;
+    let dw: Vec<i64> = (0..dense_in * 3).map(|i| (i as i64 % 3) - 1).collect();
+    format!(
+        r#"{{
+  "qonnx_version": 1,
+  "profile": "T",
+  "input": {{"shape": [1,4,4,{cin}], "bits": 8, "int_bits": 0}},
+  "nodes": [
+    {{"name":"conv1","op":"QConv2d","inputs":["input"],"outputs":["c1"],
+      "attrs":{{"kernel":[3,3],"stride":[1,1],"pad":"SAME","filters":{cout},
+               "in_channels":{cin},"act_bits":8,"act_int_bits":2,"weight_bits":4}},
+      "weights":{{"w_shape":[3,3,{cin},{cout}],"w_codes":{w},
+                 "b_codes":{b},"mult":{m},"shift":{s},
+                 "in_step":0.00390625,"out_step":0.015625}}}},
+    {{"name":"pool1","op":"MaxPool2","inputs":["c1"],"outputs":["p1"],
+      "attrs":{{"kernel":[2,2],"stride":[2,2]}}}},
+    {{"name":"flatten","op":"Flatten","inputs":["p1"],"outputs":["f"],"attrs":{{}}}},
+    {{"name":"dense","op":"QGemm","inputs":["f"],"outputs":["logits"],
+      "attrs":{{"in_features":{din},"out_features":3,"weight_bits":4,
+               "act_bits":0,"act_int_bits":0}},
+      "weights":{{"w_shape":[{din},3],"w_codes":{dw},
+                 "b_codes":[0,1,-1],"w_step":0.1,"in_step":0.015625}}}}
+  ],
+  "output": "logits"
+}}"#,
+        w = fmt_vec(&w_codes),
+        b = fmt_vec(&vec![1i64; cout]),
+        m = fmt_vec(&vec![16384i64; cout]),
+        s = fmt_vec(&vec![15i64; cout]),
+        din = dense_in,
+        dw = fmt_vec(&dw),
+    )
+}
+
+/// Parameters of a randomly generated conv-pool pipeline.
+#[derive(Debug, Clone)]
+pub struct RandModelCfg {
+    /// Input spatial side (must be divisible by 2^blocks).
+    pub side: usize,
+    pub cin: usize,
+    /// (filters, act_bits, weight_bits) per conv block.
+    pub blocks: Vec<(usize, u32, u32)>,
+    pub classes: usize,
+}
+
+impl RandModelCfg {
+    /// Random small-but-varied pipeline (1..=2 blocks, sides 4/8/12).
+    pub fn gen(rng: &mut Rng) -> Self {
+        let n_blocks = rng.usize(1, 2);
+        let side = *rng.pick(&[4usize, 8, 12]);
+        let blocks = (0..n_blocks)
+            .map(|_| {
+                (
+                    rng.usize(1, 6),
+                    *rng.pick(&[4u32, 8, 16]),
+                    *rng.pick(&[4u32, 8]),
+                )
+            })
+            .collect();
+        RandModelCfg {
+            side,
+            cin: rng.usize(1, 3),
+            blocks,
+            classes: rng.usize(2, 10),
+        }
+    }
+}
+
+/// Generate a random valid QONNX-JSON model with integer weights.
+pub fn random_model_json(cfg: &RandModelCfg, rng: &mut Rng) -> String {
+    let mut nodes = Vec::new();
+    let mut cin = cfg.cin;
+    let mut side = cfg.side;
+    let mut prev = "input".to_string();
+    let mut in_step = 1.0 / 256.0;
+    for (i, &(cout, act_bits, weight_bits)) in cfg.blocks.iter().enumerate() {
+        let qmax = (1i64 << (weight_bits - 1)) - 1;
+        let w: Vec<i64> = rng.i64_vec(9 * cin * cout, -qmax, qmax);
+        let b: Vec<i64> = rng.i64_vec(cout, -1000, 1000);
+        let mult: Vec<i64> = rng.i64_vec(cout, 1, 1 << 15);
+        let shift: Vec<i64> = rng.i64_vec(cout, 8, 24);
+        let out_step = 2f64.powi(2 - act_bits as i32);
+        nodes.push(format!(
+            r#"{{"name":"conv{i}","op":"QConv2d","inputs":["{prev}"],"outputs":["c{i}"],
+  "attrs":{{"kernel":[3,3],"stride":[1,1],"pad":"SAME","filters":{cout},
+           "in_channels":{cin},"act_bits":{act_bits},"act_int_bits":2,"weight_bits":{weight_bits}}},
+  "weights":{{"w_shape":[3,3,{cin},{cout}],"w_codes":{w},"b_codes":{b},
+             "mult":{m},"shift":{s},"in_step":{in_step},"out_step":{out_step}}}}}"#,
+            w = fmt_vec(&w),
+            b = fmt_vec(&b),
+            m = fmt_vec(&mult),
+            s = fmt_vec(&shift),
+        ));
+        nodes.push(format!(
+            r#"{{"name":"pool{i}","op":"MaxPool2","inputs":["c{i}"],"outputs":["p{i}"],
+  "attrs":{{"kernel":[2,2],"stride":[2,2]}}}}"#
+        ));
+        prev = format!("p{i}");
+        cin = cout;
+        side /= 2;
+        in_step = out_step;
+    }
+    let din = side * side * cin;
+    let k = cfg.classes;
+    let dw: Vec<i64> = rng.i64_vec(din * k, -7, 7);
+    let db: Vec<i64> = rng.i64_vec(k, -50, 50);
+    nodes.push(format!(
+        r#"{{"name":"flatten","op":"Flatten","inputs":["{prev}"],"outputs":["f"],"attrs":{{}}}}"#
+    ));
+    nodes.push(format!(
+        r#"{{"name":"dense","op":"QGemm","inputs":["f"],"outputs":["logits"],
+  "attrs":{{"in_features":{din},"out_features":{k},"weight_bits":4,"act_bits":0,"act_int_bits":0}},
+  "weights":{{"w_shape":[{din},{k}],"w_codes":{dw},"b_codes":{db},"w_step":0.125,"in_step":{in_step}}}}}"#,
+        dw = fmt_vec(&dw),
+        db = fmt_vec(&db),
+    ));
+    format!(
+        r#"{{"qonnx_version": 1, "profile": "rand",
+  "input": {{"shape": [1,{side0},{side0},{cin0}], "bits": 8, "int_bits": 0}},
+  "nodes": [{nodes}],
+  "output": "logits"}}"#,
+        side0 = cfg.side,
+        cin0 = cfg.cin,
+        nodes = nodes.join(",\n")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qonnx::read_str;
+    use crate::testkit;
+
+    #[test]
+    fn tiny_model_parses() {
+        assert!(read_str(&tiny_model_json(1, 2)).is_ok());
+    }
+
+    #[test]
+    fn random_models_parse() {
+        testkit::check("random qonnx models parse", |rng| {
+            let cfg = RandModelCfg::gen(rng);
+            let json = random_model_json(&cfg, rng);
+            match read_str(&json) {
+                Ok(_) => Ok(()),
+                Err(e) => Err(format!("cfg {cfg:?}: {e}")),
+            }
+        });
+    }
+}

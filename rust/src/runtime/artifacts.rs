@@ -1,0 +1,224 @@
+//! Artifact discovery + loading (QONNX JSON, test set, eval records,
+//! bit-exact vectors).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::{self, Value};
+use crate::qonnx::QonnxModel;
+
+/// The shared test set exported by python (u8 input codes + labels).
+#[derive(Debug, Clone)]
+pub struct TestSet {
+    pub height: usize,
+    pub width: usize,
+    pub channels: usize,
+    /// n images, HWC u8 codes, contiguous.
+    pub images: Vec<u8>,
+    pub labels: Vec<u8>,
+}
+
+impl TestSet {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn image(&self, i: usize) -> &[u8] {
+        let sz = self.height * self.width * self.channels;
+        &self.images[i * sz..(i + 1) * sz]
+    }
+}
+
+/// eval_<profile>.json: the python-side integer-pipeline accuracy.
+#[derive(Debug, Clone)]
+pub struct EvalRecord {
+    pub profile: String,
+    pub int_accuracy: f64,
+    pub qat_accuracy: f64,
+    pub n_test: usize,
+}
+
+/// vectors_<profile>.json: bit-exact logits for the first K test images.
+#[derive(Debug, Clone)]
+pub struct VectorSet {
+    pub profile: String,
+    pub logits: Vec<Vec<i64>>,
+    pub pred: Vec<usize>,
+}
+
+/// Root handle over the artifacts directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactStore {
+    pub root: PathBuf,
+}
+
+impl ArtifactStore {
+    /// Locate artifacts: `$ONNX2HW_ARTIFACTS`, else `./artifacts`, walking up
+    /// from the current dir (so examples work from any workspace subdir).
+    pub fn discover() -> Result<Self> {
+        if let Ok(p) = std::env::var("ONNX2HW_ARTIFACTS") {
+            let root = PathBuf::from(p);
+            if root.is_dir() {
+                return Ok(ArtifactStore { root });
+            }
+            bail!("ONNX2HW_ARTIFACTS={root:?} is not a directory");
+        }
+        let mut dir = std::env::current_dir()?;
+        loop {
+            let cand = dir.join("artifacts");
+            if cand.is_dir() {
+                return Ok(ArtifactStore { root: cand });
+            }
+            if !dir.pop() {
+                bail!(
+                    "no artifacts/ directory found — run `make artifacts` first \
+                     (or set ONNX2HW_ARTIFACTS)"
+                );
+            }
+        }
+    }
+
+    pub fn at(root: impl Into<PathBuf>) -> Self {
+        ArtifactStore { root: root.into() }
+    }
+
+    fn read_json(&self, name: &str) -> Result<Value> {
+        let path = self.root.join(name);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        json::parse(&text).with_context(|| format!("parsing {path:?}"))
+    }
+
+    /// Profiles with a QONNX model present, sorted.
+    pub fn profiles(&self) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.root)? {
+            let name = entry?.file_name().to_string_lossy().into_owned();
+            if let Some(rest) = name
+                .strip_prefix("model_")
+                .and_then(|r| r.strip_suffix(".qonnx.json"))
+            {
+                out.push(rest.to_string());
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    pub fn qonnx(&self, profile: &str) -> Result<QonnxModel> {
+        let path = self.root.join(format!("model_{profile}.qonnx.json"));
+        crate::qonnx::read_file(&path)
+            .map_err(|e| anyhow::anyhow!("loading {path:?}: {e}"))
+    }
+
+    pub fn hlo_path(&self, profile: &str, batch: usize) -> PathBuf {
+        if batch == 1 {
+            self.root.join(format!("model_{profile}.hlo.txt"))
+        } else {
+            self.root.join(format!("model_{profile}_b{batch}.hlo.txt"))
+        }
+    }
+
+    pub fn testset(&self) -> Result<TestSet> {
+        let meta = self.read_json("testset.json")?;
+        let n = meta.get("n").and_then(Value::as_i64).context("testset n")? as usize;
+        let height = meta.get("height").and_then(Value::as_i64).context("h")? as usize;
+        let width = meta.get("width").and_then(Value::as_i64).context("w")? as usize;
+        let channels = meta.get("channels").and_then(Value::as_i64).context("c")? as usize;
+        let labels: Vec<u8> = meta
+            .get("labels")
+            .and_then(Value::to_i64_vec)
+            .context("labels")?
+            .into_iter()
+            .map(|l| l as u8)
+            .collect();
+        let images = std::fs::read(self.root.join("testset.bin"))?;
+        if images.len() != n * height * width * channels || labels.len() != n {
+            bail!("testset.bin size mismatch");
+        }
+        Ok(TestSet {
+            height,
+            width,
+            channels,
+            images,
+            labels,
+        })
+    }
+
+    pub fn eval(&self, profile: &str) -> Result<EvalRecord> {
+        let v = self.read_json(&format!("eval_{profile}.json"))?;
+        Ok(EvalRecord {
+            profile: profile.to_string(),
+            int_accuracy: v
+                .get("int_accuracy")
+                .and_then(Value::as_f64)
+                .context("int_accuracy")?,
+            qat_accuracy: v
+                .get("qat_accuracy")
+                .and_then(Value::as_f64)
+                .unwrap_or(0.0),
+            n_test: v.get("n_test").and_then(Value::as_i64).unwrap_or(0) as usize,
+        })
+    }
+
+    pub fn evals(&self) -> Result<BTreeMap<String, EvalRecord>> {
+        let mut out = BTreeMap::new();
+        for p in self.profiles()? {
+            out.insert(p.clone(), self.eval(&p)?);
+        }
+        Ok(out)
+    }
+
+    pub fn vectors(&self, profile: &str) -> Result<VectorSet> {
+        let v = self.read_json(&format!("vectors_{profile}.json"))?;
+        let logits = v
+            .get("logits")
+            .and_then(Value::as_array)
+            .context("logits")?
+            .iter()
+            .map(|row| row.to_i64_vec().context("logit row"))
+            .collect::<Result<Vec<_>>>()?;
+        let pred = v
+            .get("pred")
+            .and_then(Value::to_i64_vec)
+            .context("pred")?
+            .into_iter()
+            .map(|p| p as usize)
+            .collect();
+        Ok(VectorSet {
+            profile: profile.to_string(),
+            logits,
+            pred,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn discover_fails_cleanly_without_artifacts() {
+        // In a scratch dir with no artifacts anywhere up the tree, discover
+        // must error with the actionable message.
+        let store = ArtifactStore::at("/definitely/not/a/real/path");
+        assert!(store.qonnx("A8-W8").is_err());
+    }
+
+    #[test]
+    fn hlo_path_naming() {
+        let store = ArtifactStore::at("/tmp/x");
+        assert!(store
+            .hlo_path("A8-W8", 1)
+            .ends_with("model_A8-W8.hlo.txt"));
+        assert!(store
+            .hlo_path("A8-W8", 8)
+            .ends_with("model_A8-W8_b8.hlo.txt"));
+    }
+}

@@ -1,0 +1,184 @@
+//! PJRT execution engine: one compiled executable per (profile, batch).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifacts::ArtifactStore;
+
+/// One compiled (profile, batch) variant.
+pub struct ProfileExecutable {
+    pub profile: String,
+    pub batch: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl ProfileExecutable {
+    /// Classify `batch` images (u8 HWC codes, concatenated). Returns the
+    /// (batch, 10) logits row-major. Input codes are dequantized to the
+    /// q/256 grid the lowered graph expects.
+    pub fn run(&self, images: &[u8], pixels_per_image: usize) -> Result<Vec<f32>> {
+        if images.len() != self.batch * pixels_per_image {
+            bail!(
+                "batch size mismatch: got {} pixels, expected {} x {}",
+                images.len(),
+                self.batch,
+                pixels_per_image
+            );
+        }
+        let floats: Vec<f32> = images.iter().map(|&q| q as f32 / 256.0).collect();
+        let lit = xla::Literal::vec1(&floats).reshape(&[
+            self.batch as i64,
+            28,
+            28,
+            1,
+        ])?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?;
+        let out = result[0][0]
+            .to_literal_sync()?
+            .to_tuple1()
+            .context("unwrapping 1-tuple output")?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// Runtime engine holding the PJRT client and all compiled variants.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    exes: BTreeMap<(String, usize), ProfileExecutable>,
+    pub pixels_per_image: usize,
+}
+
+impl PjrtEngine {
+    pub fn new() -> Result<Self> {
+        Ok(PjrtEngine {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+            exes: BTreeMap::new(),
+            pixels_per_image: 28 * 28,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one (profile, batch) artifact. Idempotent.
+    /// Returns compile wall time.
+    pub fn load(
+        &mut self,
+        store: &ArtifactStore,
+        profile: &str,
+        batch: usize,
+    ) -> Result<std::time::Duration> {
+        let key = (profile.to_string(), batch);
+        if self.exes.contains_key(&key) {
+            return Ok(std::time::Duration::ZERO);
+        }
+        let path = store.hlo_path(profile, batch);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("loading HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        self.exes.insert(
+            key,
+            ProfileExecutable {
+                profile: profile.to_string(),
+                batch,
+                exe,
+            },
+        );
+        Ok(t0.elapsed())
+    }
+
+    pub fn get(&self, profile: &str, batch: usize) -> Option<&ProfileExecutable> {
+        self.exes.get(&(profile.to_string(), batch))
+    }
+
+    pub fn loaded(&self) -> Vec<(String, usize)> {
+        self.exes.keys().cloned().collect()
+    }
+
+    /// Classify one image; returns (logits[10], argmax).
+    pub fn classify_one(&self, profile: &str, image: &[u8]) -> Result<(Vec<f32>, usize)> {
+        let exe = self
+            .get(profile, 1)
+            .with_context(|| format!("profile '{profile}' (batch 1) not loaded"))?;
+        let logits = exe.run(image, self.pixels_per_image)?;
+        let pred = argmax_f32(&logits);
+        Ok((logits, pred))
+    }
+
+    /// Classify a batch with the best-fitting variant (pads the tail).
+    pub fn classify_batch(
+        &self,
+        profile: &str,
+        images: &[&[u8]],
+    ) -> Result<Vec<(Vec<f32>, usize)>> {
+        let mut out = Vec::with_capacity(images.len());
+        let mut i = 0;
+        // Use the largest loaded batch variant that fits; fall back to 1.
+        let mut batches: Vec<usize> = self
+            .exes
+            .keys()
+            .filter(|(p, _)| p == profile)
+            .map(|&(_, b)| b)
+            .collect();
+        batches.sort_unstable_by(|a, b| b.cmp(a));
+        if batches.is_empty() {
+            bail!("profile '{profile}' not loaded");
+        }
+        while i < images.len() {
+            let remaining = images.len() - i;
+            let b = *batches
+                .iter()
+                .find(|&&b| b <= remaining)
+                .unwrap_or(batches.last().unwrap());
+            let exe = self.get(profile, b).unwrap();
+            // Pad with the last image if the variant is larger than remaining.
+            let mut flat = Vec::with_capacity(b * self.pixels_per_image);
+            for j in 0..b {
+                let img = images[(i + j).min(images.len() - 1)];
+                flat.extend_from_slice(img);
+            }
+            let logits = exe.run(&flat, self.pixels_per_image)?;
+            for j in 0..b.min(remaining) {
+                let row = logits[j * 10..(j + 1) * 10].to_vec();
+                let pred = argmax_f32(&row);
+                out.push((row, pred));
+            }
+            i += b.min(remaining);
+        }
+        Ok(out)
+    }
+}
+
+pub fn argmax_f32(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax_f32(&[0.0, 3.0, -1.0]), 1);
+        assert_eq!(argmax_f32(&[5.0]), 0);
+        // ties break to the first index
+        assert_eq!(argmax_f32(&[2.0, 2.0]), 0);
+    }
+
+    // PJRT-backed tests live in rust/tests/runtime_integration.rs (they need
+    // built artifacts).
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: load and execute the AOT-compiled model artifacts.
+//!
+//! The three-layer contract (DESIGN.md §3): python/jax lowers each profile's
+//! inference graph (through the Pallas kernels) to HLO *text* once at build
+//! time (`make artifacts`); this module loads `artifacts/model_<p>.hlo.txt`,
+//! compiles it on the PJRT CPU client and executes classifications from the
+//! rust hot path. Python never runs at request time.
+
+mod artifacts;
+mod engine;
+
+pub use artifacts::{ArtifactStore, EvalRecord, TestSet, VectorSet};
+pub use engine::{PjrtEngine, ProfileExecutable};

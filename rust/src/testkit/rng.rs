@@ -1,0 +1,117 @@
+//! xorshift64* PRNG + convenience generators (no `rand` offline).
+
+/// Deterministic 64-bit PRNG (xorshift64*). Not cryptographic; used only for
+/// test-case and workload generation.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // Avoid the all-zero fixed point.
+        Rng {
+            state: seed ^ 0x9E37_79B9_7F4A_7C15 | 1,
+        }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in [lo, hi] (inclusive).
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        let span = hi - lo + 1;
+        if span == 0 {
+            return self.next_u64(); // full range
+        }
+        lo + self.next_u64() % span
+    }
+
+    pub fn i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let span = (hi as i128 - lo as i128 + 1) as u64;
+        (lo as i128 + (self.next_u64() % span) as i128) as i64
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64(lo as u64, hi as u64) as usize
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64_unit(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64_unit() * (hi - lo)
+    }
+
+    pub fn bool(&mut self, p_true: f64) -> bool {
+        self.f64_unit() < p_true
+    }
+
+    /// Pick a random element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize(0, xs.len() - 1)]
+    }
+
+    /// Vector of integer codes in [lo, hi].
+    pub fn i64_vec(&mut self, len: usize, lo: i64, hi: i64) -> Vec<i64> {
+        (0..len).map(|_| self.i64(lo, hi)).collect()
+    }
+
+    /// Random ASCII-ish string (printable, plus some escapes-needing chars).
+    pub fn string(&mut self, max_len: usize) -> String {
+        let len = self.usize(0, max_len);
+        (0..len)
+            .map(|_| {
+                let c = self.u64(0, 99);
+                match c {
+                    0..=89 => (self.u64(0x20, 0x7E) as u8) as char,
+                    90..=93 => '"',
+                    94..=96 => '\\',
+                    97 => '\n',
+                    98 => '\t',
+                    _ => 'é',
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_respected() {
+        let mut rng = Rng::new(7);
+        for _ in 0..1000 {
+            let v = rng.i64(-5, 5);
+            assert!((-5..=5).contains(&v));
+            let u = rng.u64(10, 20);
+            assert!((10..=20).contains(&u));
+            let f = rng.f64(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn rough_uniformity() {
+        let mut rng = Rng::new(123);
+        let mut counts = [0usize; 10];
+        for _ in 0..10_000 {
+            counts[rng.usize(0, 9)] += 1;
+        }
+        for &c in &counts {
+            assert!(c > 700 && c < 1300, "bucket count {c} far from uniform");
+        }
+    }
+}

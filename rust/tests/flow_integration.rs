@@ -1,0 +1,193 @@
+//! Integration tests over real artifacts (skip gracefully when
+//! `make artifacts` has not been run — CI correctness still comes from the
+//! unit/property tests; these pin the cross-layer contracts).
+
+use onnx2hw::dataflow::{simulate_image, Executor, FoldingConfig};
+use onnx2hw::flow::{self, FlowConfig};
+use onnx2hw::mdc;
+use onnx2hw::qonnx::Layer;
+use onnx2hw::runtime::ArtifactStore;
+
+fn store_or_skip() -> Option<ArtifactStore> {
+    match ArtifactStore::discover() {
+        Ok(s) => {
+            // require at least the A8-W8 artifacts
+            if s.qonnx("A8-W8").is_ok() && s.testset().is_ok() {
+                Some(s)
+            } else {
+                eprintln!("skipping: artifacts incomplete");
+                None
+            }
+        }
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            None
+        }
+    }
+}
+
+const ALL: [&str; 6] = ["A16-W8", "A16-W4", "A8-W8", "A8-W4", "A4-W4", "Mixed"];
+
+#[test]
+fn rust_dataflow_is_bit_exact_vs_python_vectors() {
+    let Some(store) = store_or_skip() else { return };
+    let testset = store.testset().unwrap();
+    for profile in ALL {
+        let (Ok(model), Ok(vectors)) = (store.qonnx(profile), store.vectors(profile)) else {
+            eprintln!("skipping {profile}: artifacts missing");
+            continue;
+        };
+        let mut ex = Executor::new(&model);
+        for (i, want) in vectors.logits.iter().enumerate() {
+            let got = ex.run(testset.image(i));
+            assert_eq!(
+                &got, want,
+                "{profile}: image {i} logits diverge from python intref"
+            );
+        }
+    }
+}
+
+#[test]
+fn streaming_sim_matches_fast_executor_on_real_model() {
+    let Some(store) = store_or_skip() else { return };
+    let model = store.qonnx("A8-W8").unwrap();
+    let testset = store.testset().unwrap();
+    let fold = FoldingConfig::default();
+    let mut ex = Executor::new(&model);
+    for i in 0..3 {
+        let img = testset.image(i);
+        let rep = simulate_image(&model, &fold, img);
+        assert_eq!(rep.logits, ex.run(img), "image {i}");
+    }
+}
+
+#[test]
+fn real_latency_is_precision_independent_table1_invariant() {
+    let Some(store) = store_or_skip() else { return };
+    let fold = FoldingConfig::default();
+    let testset = store.testset().unwrap();
+    let img = testset.image(0);
+    let mut cycles = std::collections::BTreeSet::new();
+    for profile in ["A16-W8", "A8-W8", "A4-W4"] {
+        let Ok(model) = store.qonnx(profile) else { continue };
+        cycles.insert(simulate_image(&model, &fold, img).cycles);
+    }
+    assert!(
+        cycles.len() <= 1,
+        "latency differs across precisions: {cycles:?}"
+    );
+}
+
+#[test]
+fn rust_accuracy_matches_python_eval() {
+    let Some(store) = store_or_skip() else { return };
+    let testset = store.testset().unwrap();
+    for profile in ["A8-W8", "A4-W4"] {
+        let (Ok(model), Ok(eval)) = (store.qonnx(profile), store.eval(profile)) else {
+            continue;
+        };
+        // python eval is over the whole set; measure a 512-image prefix and
+        // allow sampling noise.
+        let acc = flow::measure_accuracy(&model, &testset, 512);
+        assert!(
+            (acc - eval.int_accuracy).abs() < 0.05,
+            "{profile}: rust {acc} vs python {}",
+            eval.int_accuracy
+        );
+    }
+}
+
+#[test]
+fn mdc_merge_of_real_pair_shares_everything_but_inner_conv() {
+    let Some(store) = store_or_skip() else { return };
+    let (Ok(a), Ok(b)) = (store.qonnx("A8-W8"), store.qonnx("Mixed")) else {
+        eprintln!("skipping: pair missing");
+        return;
+    };
+    let fold = FoldingConfig::default();
+    let na = mdc::build_network(&a, &fold);
+    let nb = mdc::build_network(&b, &fold);
+    let md = mdc::merge(&[na.clone(), nb]).unwrap();
+    // Mixed = A8-W8 except conv2 (A4-W4): conv2's ConvMac must be duplicated.
+    // conv1/pool/dense share. (The conv2 *line buffer* port width changes
+    // with the upstream act bits only if conv1 output bits differ — they
+    // don't — so it shares too.)
+    let dup_slots: Vec<usize> = md
+        .instances
+        .iter()
+        .enumerate()
+        .filter(|(_, v)| v.len() > 1)
+        .map(|(i, _)| i)
+        .collect();
+    assert_eq!(dup_slots.len(), 1, "expected only conv2 duplicated: {dup_slots:?}");
+    let dup_sig = &md.instances[dup_slots[0]][0];
+    assert_eq!(dup_sig.name, "conv2");
+    // reconstruction preserves per-profile pipelines
+    let pa = md.pipeline_of("A8-W8").unwrap();
+    assert_eq!(pa.into_iter().cloned().collect::<Vec<_>>(), na.nodes);
+}
+
+#[test]
+fn table1_shape_holds() {
+    let Some(store) = store_or_skip() else { return };
+    let cfg = FlowConfig::default();
+    let rows = match flow::table1(
+        &store,
+        &["A16-W8", "A16-W4", "A8-W8", "A8-W4", "A4-W4"],
+        &cfg,
+    ) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            return;
+        }
+    };
+    let get = |n: &str| rows.iter().find(|r| r.profile == n).unwrap();
+    // latency constant
+    let lat: std::collections::BTreeSet<u64> =
+        rows.iter().map(|r| r.latency_us as u64).collect();
+    assert_eq!(lat.len(), 1, "latency not constant: {lat:?}");
+    // LUTs: W8 engines > W4 engines; A16 >= A8 at same W
+    assert!(get("A16-W8").lut_pct > get("A16-W4").lut_pct);
+    assert!(get("A8-W8").lut_pct > get("A8-W4").lut_pct);
+    assert!(get("A16-W8").lut_pct >= get("A8-W8").lut_pct);
+    assert!(get("A8-W4").lut_pct >= get("A4-W4").lut_pct);
+    // accuracy: W8 engines above W4 engines
+    let w8_min = get("A16-W8").accuracy_pct.min(get("A8-W8").accuracy_pct);
+    let w4_max = get("A16-W4")
+        .accuracy_pct
+        .max(get("A8-W4").accuracy_pct)
+        .max(get("A4-W4").accuracy_pct);
+    assert!(
+        w8_min > w4_max,
+        "W8 accuracy ({w8_min}) not above W4 ({w4_max})"
+    );
+    // power: every engine in a plausible edge envelope and the W8 flagship
+    // costs more than its W4 sibling
+    for r in &rows {
+        assert!(r.power_mw > 50.0 && r.power_mw < 500.0, "{}: {} mW", r.profile, r.power_mw);
+    }
+    assert!(get("A16-W8").power_mw > get("A16-W4").power_mw);
+}
+
+#[test]
+fn qonnx_models_expose_expected_topology() {
+    let Some(store) = store_or_skip() else { return };
+    let model = store.qonnx("A8-W8").unwrap();
+    let kinds: Vec<&str> = model
+        .layers
+        .iter()
+        .map(|l| match l {
+            Layer::Conv(_) => "conv",
+            Layer::Pool(_) => "pool",
+            Layer::Flatten { .. } => "flatten",
+            Layer::Dense(_) => "dense",
+        })
+        .collect();
+    assert_eq!(kinds, ["conv", "pool", "conv", "pool", "flatten", "dense"]);
+    let convs: Vec<_> = model.conv_layers().collect();
+    assert_eq!(convs[0].cout, 64);
+    assert_eq!(convs[1].cin, 64);
+    assert_eq!(model.dense().unwrap().out_features, 10);
+}

@@ -1,0 +1,190 @@
+//! Cross-module property suite (DESIGN.md §7) — invariants that span
+//! substrate boundaries, driven by the in-house testkit.
+
+use onnx2hw::dataflow::{exec, simulate_image, FoldingConfig};
+use onnx2hw::hls::{estimate_engine, Calibration};
+use onnx2hw::json::{self, Value};
+use onnx2hw::mdc;
+use onnx2hw::qonnx::{self, read_str, RandModelCfg};
+use onnx2hw::testkit::{self, Rng};
+
+/// Random JSON value generator (bounded depth/size).
+fn gen_value(rng: &mut Rng, depth: usize) -> Value {
+    let pick = if depth == 0 { rng.u64(0, 4) } else { rng.u64(0, 6) };
+    match pick {
+        0 => Value::Null,
+        1 => Value::Bool(rng.bool(0.5)),
+        2 => Value::Int(rng.i64(i64::MIN / 2, i64::MAX / 2)),
+        3 => {
+            // finite doubles incl. subnormal-ish magnitudes
+            let m = rng.f64(-1.0, 1.0);
+            let e = rng.i64(-200, 200) as i32;
+            Value::Float(m * 10f64.powi(e))
+        }
+        4 => Value::Str(rng.string(24)),
+        5 => Value::Array(
+            (0..rng.usize(0, 6))
+                .map(|_| gen_value(rng, depth - 1))
+                .collect(),
+        ),
+        _ => Value::Object(
+            (0..rng.usize(0, 6))
+                .map(|_| (rng.string(8), gen_value(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn json_round_trip_on_random_values() {
+    testkit::check("parse(serialize(v)) == v", |rng| {
+        let v = gen_value(rng, 4);
+        let text = json::to_string(&v);
+        let back = json::parse(&text).map_err(|e| format!("{e}: {text}"))?;
+        onnx2hw::prop_assert!(back == v, "round trip changed value: {text}");
+        // pretty printer agrees too
+        let back2 = json::parse(&json::to_string_pretty(&v))
+            .map_err(|e| e.to_string())?;
+        onnx2hw::prop_assert!(back2 == v, "pretty round trip changed value");
+        Ok(())
+    });
+}
+
+#[test]
+fn executor_is_deterministic_and_input_sensitive() {
+    testkit::check("exec deterministic", |rng| {
+        let cfg = RandModelCfg::gen(rng);
+        let m = read_str(&qonnx::random_model_json(&cfg, rng))
+            .map_err(|e| e.to_string())?;
+        let img: Vec<u8> = (0..m.input_shape.elems())
+            .map(|_| rng.u64(0, 255) as u8)
+            .collect();
+        let a = exec::execute(&m, &img);
+        let b = exec::execute(&m, &img);
+        onnx2hw::prop_assert!(a == b, "nondeterministic executor");
+        Ok(())
+    });
+}
+
+#[test]
+fn merged_engine_preserves_profile_semantics() {
+    // Simulating a profile's reconstructed pipeline == simulating the
+    // standalone model (here: the reconstructed pipeline must select the
+    // exact actor set whose sigs match the standalone network, modulo
+    // width-widening on shareable stream actors).
+    testkit::check("merge preserves semantics", |rng| {
+        let fold = FoldingConfig::default();
+        let base_json = qonnx::test_model_json(2, 3);
+        let variant_json = if rng.bool(0.5) {
+            base_json.replacen("-2,", "2,", 1) // different conv weights
+        } else {
+            base_json.replace("\"act_bits\":8", "\"act_bits\":4")
+        };
+        let mut a = read_str(&base_json).map_err(|e| e.to_string())?;
+        a.profile = "A".into();
+        let mut b = read_str(&variant_json).map_err(|e| e.to_string())?;
+        b.profile = "B".into();
+        let na = mdc::build_network(&a, &fold);
+        let nb = mdc::build_network(&b, &fold);
+        let md = mdc::merge(&[na.clone(), nb.clone()]).map_err(|e| e.to_string())?;
+        for (net, name) in [(&na, "A"), (&nb, "B")] {
+            let pipe = md.pipeline_of(name).ok_or("missing config")?;
+            onnx2hw::prop_assert!(pipe.len() == net.nodes.len());
+            for (got, want) in pipe.iter().zip(&net.nodes) {
+                onnx2hw::prop_assert!(
+                    got.kind == want.kind
+                        && got.name == want.name
+                        && got.weight_fp == want.weight_fp
+                        && got.act_bits >= want.act_bits,
+                    "profile {name}: slot {} diverged",
+                    want.name
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn merge_scales_to_many_profiles() {
+    // N identical + one divergent profile: instances = slots + 1, and every
+    // profile reconstructs.
+    let fold = FoldingConfig::default();
+    let base = qonnx::test_model_json(1, 2);
+    let variant = base.replacen("-2,", "1,", 1);
+    let mut nets = Vec::new();
+    for i in 0..5 {
+        let mut m = read_str(&base).unwrap();
+        m.profile = format!("p{i}");
+        nets.push(mdc::build_network(&m, &fold));
+    }
+    let mut v = read_str(&variant).unwrap();
+    v.profile = "variant".into();
+    nets.push(mdc::build_network(&v, &fold));
+    let md = mdc::merge(&nets).unwrap();
+    assert_eq!(md.n_instances(), nets[0].nodes.len() + 1);
+    assert_eq!(md.configs.len(), 6);
+    for net in &nets {
+        assert!(md.pipeline_of(&net.profile).is_some());
+    }
+}
+
+#[test]
+fn resources_monotone_in_weight_bits_property() {
+    testkit::check("luts monotone in w-bits", |rng| {
+        // Force 4-bit weights at generation time (codes within ±7), so the
+        // same codes remain valid when the declaration widens to 8 bits.
+        let mut cfg = RandModelCfg::gen(rng);
+        cfg.blocks = cfg
+            .blocks
+            .iter()
+            .map(|&(f, a, _)| (f, a, 4))
+            .collect();
+        let json4 = qonnx::random_model_json(&cfg, rng);
+        let json8 = json4.replace("\"weight_bits\":4", "\"weight_bits\":8");
+        let m4 = read_str(&json4).map_err(|e| e.to_string())?;
+        let m8 = read_str(&json8).map_err(|e| e.to_string())?;
+        let cal = Calibration::default();
+        let f = FoldingConfig::default();
+        let l4 = estimate_engine(&m4, &f, &cal).luts;
+        let l8 = estimate_engine(&m8, &f, &cal).luts;
+        onnx2hw::prop_assert!(l8 >= l4, "w8 {l8} < w4 {l4}");
+        Ok(())
+    });
+}
+
+#[test]
+fn sim_cycles_depend_only_on_structure() {
+    testkit::check("cycles invariant to data + weights", |rng| {
+        let cfg = RandModelCfg::gen(rng);
+        let json_a = qonnx::random_model_json(&cfg, rng);
+        let m = read_str(&json_a).map_err(|e| e.to_string())?;
+        let fold = FoldingConfig::default();
+        let img_a: Vec<u8> = (0..m.input_shape.elems())
+            .map(|_| rng.u64(0, 255) as u8)
+            .collect();
+        let img_b: Vec<u8> = (0..m.input_shape.elems())
+            .map(|_| rng.u64(0, 255) as u8)
+            .collect();
+        let ca = simulate_image(&m, &fold, &img_a).cycles;
+        let cb = simulate_image(&m, &fold, &img_b).cycles;
+        onnx2hw::prop_assert!(ca == cb, "cycles vary with data: {ca} vs {cb}");
+        Ok(())
+    });
+}
+
+#[test]
+fn requant_saturates_never_wraps() {
+    testkit::check("requant output in range", |rng| {
+        let acc = rng.i64(-(1 << 40), 1 << 40);
+        let mult = rng.i64(0, 1 << 20);
+        let shift = rng.i64(0, 40);
+        let bits = *rng.pick(&[1u32, 4, 8, 16]);
+        let q = exec::requant(acc, mult, shift, bits);
+        onnx2hw::prop_assert!(
+            (0..(1i64 << bits)).contains(&q),
+            "requant({acc},{mult},{shift},{bits}) = {q} out of range"
+        );
+        Ok(())
+    });
+}

@@ -1,0 +1,118 @@
+//! PJRT runtime integration: AOT artifacts load, compile, execute, and agree
+//! with the integer engine. Requires `make artifacts`; skips otherwise.
+
+use onnx2hw::coordinator::{
+    AdaptiveServer, Backend, EnergyMonitor, ManagerConfig, ProfileManager, ProfileSpec,
+    ServerConfig,
+};
+use onnx2hw::dataflow::{exec, Executor};
+use onnx2hw::runtime::{ArtifactStore, PjrtEngine};
+
+fn store_or_skip() -> Option<ArtifactStore> {
+    let s = ArtifactStore::discover().ok()?;
+    if s.hlo_path("A8-W8", 1).exists() && s.testset().is_ok() {
+        Some(s)
+    } else {
+        eprintln!("skipping: HLO artifacts missing");
+        None
+    }
+}
+
+#[test]
+fn pjrt_loads_and_classifies() {
+    let Some(store) = store_or_skip() else { return };
+    let testset = store.testset().unwrap();
+    let mut engine = PjrtEngine::new().unwrap();
+    engine.load(&store, "A8-W8", 1).unwrap();
+    let (logits, pred) = engine.classify_one("A8-W8", testset.image(0)).unwrap();
+    assert_eq!(logits.len(), 10);
+    assert!(pred < 10);
+    // deterministic across calls
+    let (logits2, pred2) = engine.classify_one("A8-W8", testset.image(0)).unwrap();
+    assert_eq!(pred, pred2);
+    assert_eq!(logits, logits2);
+}
+
+#[test]
+fn pjrt_agrees_with_integer_engine() {
+    let Some(store) = store_or_skip() else { return };
+    let testset = store.testset().unwrap();
+    let model = store.qonnx("A8-W8").unwrap();
+    let mut engine = PjrtEngine::new().unwrap();
+    engine.load(&store, "A8-W8", 1).unwrap();
+    let mut ex = Executor::new(&model);
+    let mut agree = 0;
+    let n = 32.min(testset.len());
+    for i in 0..n {
+        let (_l, pjrt_pred) = engine.classify_one("A8-W8", testset.image(i)).unwrap();
+        let int_pred = exec::argmax(&ex.run(testset.image(i)));
+        if pjrt_pred == int_pred {
+            agree += 1;
+        }
+    }
+    // f32 vs integer rounding can flip near-ties on rare images; demand
+    // near-perfect agreement.
+    assert!(agree * 100 >= n * 95, "only {agree}/{n} agree");
+}
+
+#[test]
+fn pjrt_batch8_matches_batch1() {
+    let Some(store) = store_or_skip() else { return };
+    if !store.hlo_path("A8-W8", 8).exists() {
+        eprintln!("skipping: batch-8 artifact missing");
+        return;
+    }
+    let testset = store.testset().unwrap();
+    let mut engine = PjrtEngine::new().unwrap();
+    engine.load(&store, "A8-W8", 1).unwrap();
+    engine.load(&store, "A8-W8", 8).unwrap();
+    let imgs: Vec<&[u8]> = (0..8).map(|i| testset.image(i)).collect();
+    let batched = engine.classify_batch("A8-W8", &imgs).unwrap();
+    for (i, img) in imgs.iter().enumerate() {
+        let (_l, p1) = engine.classify_one("A8-W8", img).unwrap();
+        assert_eq!(batched[i].1, p1, "image {i} batch-vs-single mismatch");
+    }
+}
+
+#[test]
+fn adaptive_server_on_pjrt_backend() {
+    let Some(store) = store_or_skip() else { return };
+    if !store.hlo_path("Mixed", 1).exists() {
+        eprintln!("skipping: Mixed artifact missing");
+        return;
+    }
+    let testset = store.testset().unwrap();
+    let specs = vec![
+        ProfileSpec {
+            name: "A8-W8".into(),
+            accuracy: 0.97,
+            power_mw: 142.0,
+            latency_us: 329.0,
+        },
+        ProfileSpec {
+            name: "Mixed".into(),
+            accuracy: 0.95,
+            power_mw: 135.0,
+            latency_us: 329.0,
+        },
+    ];
+    let manager = ProfileManager::new(ManagerConfig::default(), specs);
+    // battery crosses 50% after ~8 requests
+    let energy = EnergyMonitor::new(142.0e-3 * 329.0e-6 * 16.0);
+    let store2 = store.clone();
+    let srv = AdaptiveServer::start(
+        ServerConfig::default(),
+        move || Backend::pjrt(&store2, &["A8-W8", "Mixed"]),
+        manager,
+        energy,
+    )
+    .unwrap();
+    let mut profiles = Vec::new();
+    for i in 0..24 {
+        let resp = srv.classify(testset.image(i % testset.len()).to_vec()).unwrap();
+        profiles.push(resp.profile);
+    }
+    assert!(profiles.iter().any(|p| p == "A8-W8"));
+    assert!(profiles.iter().any(|p| p == "Mixed"), "never switched");
+    srv.shutdown();
+}
