@@ -1,14 +1,16 @@
-//! End-to-end adaptive CPS scenario (paper Fig. 4): the adaptive inference
-//! engine serves a continuous classification workload from a battery; the
-//! Profile Manager switches from the accurate profile (A8-W8) to the
-//! low-power one (Mixed) when the battery crosses the threshold. Compares
-//! against the non-adaptive engine that always runs A8-W8.
+//! End-to-end adaptive CPS scenario (paper Fig. 4): the sharded adaptive
+//! inference engine serves a continuous classification workload from a
+//! battery; the Profile Manager switches from the accurate profile (A8-W8)
+//! to the low-power one (Mixed) when the battery crosses the threshold.
+//! Compares against the non-adaptive engine that always runs A8-W8.
 //!
 //! This is the end-to-end validation driver recorded in EXPERIMENTS.md: it
-//! exercises coordinator + batcher + profile manager + backend (PJRT by
-//! default; pass `sim` to use the integer dataflow engine).
+//! exercises coordinator + batcher + profile manager + worker shards +
+//! backend (PJRT by default; pass `sim` to use the integer dataflow engine).
 //!
-//! Run: `cargo run --release --example adaptive_engine -- [pjrt|sim] [requests]`
+//! Run: `cargo run --release --example adaptive_engine -- [pjrt|sim] [requests] [workers] [clients]`
+
+use std::sync::Arc;
 
 use anyhow::Result;
 use onnx2hw::coordinator::{
@@ -22,14 +24,32 @@ use onnx2hw::runtime::ArtifactStore;
 const PAIR: [&str; 2] = ["A8-W8", "Mixed"];
 
 fn main() -> Result<()> {
-    let backend_kind = std::env::args().nth(1).unwrap_or_else(|| "pjrt".into());
+    let mut backend_kind = std::env::args().nth(1).unwrap_or_else(|| "pjrt".into());
+    // The PJRT runtime is optional (e.g. offline builds vendor an xla
+    // stub); fall back to the bit-exact Sim backend rather than failing
+    // the default invocation at startup.
+    if backend_kind == "pjrt" {
+        if let Err(e) = onnx2hw::runtime::PjrtEngine::new() {
+            eprintln!("note: PJRT unavailable ({e}); falling back to sim backend");
+            backend_kind = "sim".into();
+        }
+    }
     let n_requests: usize = std::env::args()
         .nth(2)
         .and_then(|s| s.parse().ok())
         .unwrap_or(512);
+    let workers: usize = std::env::args()
+        .nth(3)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2);
+    let clients: usize = std::env::args()
+        .nth(4)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4)
+        .max(1);
 
     let store = ArtifactStore::discover()?;
-    let testset = store.testset()?;
+    let testset = Arc::new(store.testset()?);
     let cfg = FlowConfig::default();
 
     // Profile characteristics from the design flow (Table-1 machinery).
@@ -68,27 +88,54 @@ fn main() -> Result<()> {
     let energy = EnergyMonitor::new(battery_j);
     let store2 = store.clone();
     let kind = backend_kind.clone();
-    let srv = AdaptiveServer::start(
-        ServerConfig::default(),
+    let srv = Arc::new(AdaptiveServer::start(
+        ServerConfig {
+            workers,
+            ..Default::default()
+        },
         move || match kind.as_str() {
             "sim" => Backend::sim(&store2, &PAIR),
             _ => Backend::pjrt(&store2, &PAIR),
         },
         manager,
         energy,
-    )?;
-    println!("adaptive server up ({backend_kind} backend)\n");
+    )?);
+    println!(
+        "adaptive server up ({backend_kind} backend, {} worker shards, {clients} clients)\n",
+        srv.workers()
+    );
 
     let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let srv = srv.clone();
+        let testset = testset.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut correct = 0usize;
+            let mut served_by = std::collections::BTreeMap::<String, usize>::new();
+            let mut i = c;
+            while i < n_requests {
+                let idx = i % testset.len();
+                let resp = srv
+                    .classify(testset.image(idx).to_vec())
+                    .expect("reply lost");
+                if resp.pred == testset.labels[idx] as usize {
+                    correct += 1;
+                }
+                *served_by.entry(resp.profile).or_default() += 1;
+                i += clients;
+            }
+            (correct, served_by)
+        }));
+    }
     let mut correct = 0usize;
     let mut served_by = std::collections::BTreeMap::<String, usize>::new();
-    for i in 0..n_requests {
-        let idx = i % testset.len();
-        let resp = srv.classify(testset.image(idx).to_vec())?;
-        if resp.pred == testset.labels[idx] as usize {
-            correct += 1;
+    for h in handles {
+        let (c, by) = h.join().expect("client thread panicked");
+        correct += c;
+        for (p, n) in by {
+            *served_by.entry(p).or_default() += n;
         }
-        *served_by.entry(resp.profile).or_default() += 1;
     }
     let wall = t0.elapsed();
 
@@ -110,6 +157,9 @@ fn main() -> Result<()> {
         srv.stats.latency.quantile_us(0.95),
         srv.energy.remaining_fraction() * 100.0
     );
+    for (i, c) in srv.stats.worker_batches.iter().enumerate() {
+        println!("  worker {i}: {} batches", c.get());
+    }
     for ev in srv.stats.events.snapshot() {
         println!("  event: {ev}");
     }
@@ -132,6 +182,8 @@ fn main() -> Result<()> {
             run.label, run.duration_h, run.classifications, run.mean_accuracy * 100.0
         );
     }
-    srv.shutdown();
+    if let Ok(srv) = Arc::try_unwrap(srv) {
+        srv.shutdown();
+    }
     Ok(())
 }

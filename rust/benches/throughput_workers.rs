@@ -1,0 +1,197 @@
+//! Bench: sharded-engine throughput scaling on the Sim backend.
+//!
+//! Needs no artifacts — two synthetic QONNX profiles ("hi" heavier, "lo"
+//! lighter) are generated with the in-tree testgen. For each shard count
+//! the server is hammered from 8 client threads, and before any number is
+//! reported the run must pass:
+//!
+//! * request conservation — every submit gets exactly one reply;
+//! * counter consistency — per-worker batch counters sum to `batches`,
+//!   and the queue-depth gauge drains back to 0;
+//! * bit-exactness — every reply's logits equal `exec::execute` on the
+//!   same (profile, image), i.e. sharding + executor caching never change
+//!   the integers the FPGA fabric would produce.
+//!
+//! Run: `cargo bench --bench throughput_workers [-- <requests>]`
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use onnx2hw::bench_harness::Table;
+use onnx2hw::coordinator::{
+    AdaptiveServer, Backend, EnergyMonitor, ManagerConfig, ProfileManager, ProfileSpec,
+    ServerConfig,
+};
+use onnx2hw::dataflow::exec;
+use onnx2hw::qonnx::{self, read_str, QonnxModel, RandModelCfg};
+use onnx2hw::testkit::Rng;
+
+const CLIENTS: usize = 8;
+const N_IMAGES: usize = 32;
+
+fn synthetic_pair() -> (QonnxModel, QonnxModel) {
+    let mut rng = Rng::new(7);
+    // "hi": 16x16x3 -> conv16 -> pool -> conv32 -> pool -> dense10
+    let hi_cfg = RandModelCfg {
+        side: 16,
+        cin: 3,
+        blocks: vec![(16, 8, 8), (32, 8, 8)],
+        classes: 10,
+    };
+    // "lo": same input shape, half the filters at 4-bit weights
+    let lo_cfg = RandModelCfg {
+        blocks: vec![(8, 8, 4), (16, 8, 4)],
+        ..hi_cfg.clone()
+    };
+    let hi = read_str(&qonnx::random_model_json(&hi_cfg, &mut rng)).expect("hi model");
+    let lo = read_str(&qonnx::random_model_json(&lo_cfg, &mut rng)).expect("lo model");
+    (hi, lo)
+}
+
+fn main() {
+    let requests: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(512);
+
+    let (hi, lo) = synthetic_pair();
+    let elems = hi.input_shape.elems();
+    assert_eq!(elems, lo.input_shape.elems());
+
+    // Deterministic image set + per-(profile, image) reference logits from
+    // the one-shot executor path.
+    let images: Arc<Vec<Vec<u8>>> = Arc::new(
+        (0..N_IMAGES)
+            .map(|k| (0..elems).map(|i| ((i * 31 + k * 17) % 256) as u8).collect())
+            .collect(),
+    );
+    let expect: Arc<BTreeMap<String, Vec<Vec<f32>>>> = Arc::new(
+        [("hi", &hi), ("lo", &lo)]
+            .into_iter()
+            .map(|(name, model)| {
+                let per_image = images
+                    .iter()
+                    .map(|img| {
+                        exec::execute(model, img)
+                            .iter()
+                            .map(|&v| v as f32)
+                            .collect::<Vec<f32>>()
+                    })
+                    .collect();
+                (name.to_string(), per_image)
+            })
+            .collect(),
+    );
+
+    let specs = vec![
+        ProfileSpec {
+            name: "hi".into(),
+            accuracy: 0.96,
+            power_mw: 142.0,
+            latency_us: 329.0,
+        },
+        ProfileSpec {
+            name: "lo".into(),
+            accuracy: 0.94,
+            power_mw: 120.0,
+            latency_us: 329.0,
+        },
+    ];
+
+    let mut table = Table::new(&["workers", "wall", "req/s", "speedup", "batches", "per-worker"]);
+    let mut base_rps: Option<f64> = None;
+    for &workers in &[1usize, 2, 4] {
+        let models: BTreeMap<String, QonnxModel> = [
+            ("hi".to_string(), hi.clone()),
+            ("lo".to_string(), lo.clone()),
+        ]
+        .into_iter()
+        .collect();
+        let factory = move || Ok(Backend::sim_from_models(models.clone()));
+        let manager = ProfileManager::new(ManagerConfig::default(), specs.clone());
+        // Effectively infinite battery: this bench isolates throughput; the
+        // adaptation path is exercised by fig4_adaptive and the test suite.
+        let energy = EnergyMonitor::new(1e9);
+        let srv = Arc::new(
+            AdaptiveServer::start(
+                ServerConfig {
+                    workers,
+                    ..Default::default()
+                },
+                factory,
+                manager,
+                energy,
+            )
+            .expect("server"),
+        );
+
+        let t0 = std::time::Instant::now();
+        let mut handles = Vec::new();
+        for c in 0..CLIENTS {
+            let srv = srv.clone();
+            let images = images.clone();
+            let expect = expect.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut served = 0usize;
+                let mut i = c;
+                while i < requests {
+                    let k = i % images.len();
+                    let resp = srv.classify(images[k].clone()).expect("reply lost");
+                    let want = &expect[&resp.profile][k];
+                    assert_eq!(
+                        &resp.logits, want,
+                        "reply for image {k} on '{}' not bit-exact",
+                        resp.profile
+                    );
+                    served += 1;
+                    i += CLIENTS;
+                }
+                served
+            }));
+        }
+        let served: usize = handles
+            .into_iter()
+            .map(|h| h.join().expect("client thread panicked"))
+            .sum();
+        let wall = t0.elapsed();
+
+        // conservation + counter consistency
+        assert_eq!(served, requests, "dropped or duplicated replies");
+        assert_eq!(srv.stats.requests.get(), requests as u64);
+        let per_worker: Vec<u64> =
+            srv.stats.worker_batches.iter().map(|c| c.get()).collect();
+        assert_eq!(
+            per_worker.iter().sum::<u64>(),
+            srv.stats.batches.get(),
+            "per-worker batches {per_worker:?} do not sum to total"
+        );
+        assert_eq!(srv.stats.queue_depth.get(), 0, "work queue not drained");
+
+        let rps = requests as f64 / wall.as_secs_f64();
+        let speedup = match base_rps {
+            None => {
+                base_rps = Some(rps);
+                1.0
+            }
+            Some(b) => rps / b,
+        };
+        table.row(&[
+            workers.to_string(),
+            format!("{:.3}s", wall.as_secs_f64()),
+            format!("{rps:.0}"),
+            format!("x{speedup:.2}"),
+            srv.stats.batches.get().to_string(),
+            format!("{per_worker:?}"),
+        ]);
+
+        let srv = Arc::try_unwrap(srv).ok().expect("clients joined");
+        srv.shutdown();
+    }
+
+    println!(
+        "== sharded engine throughput (Sim backend, {CLIENTS} clients, {requests} requests) ==\n"
+    );
+    println!("{}", table.render());
+    println!("conservation, counter consistency, and bit-exactness vs exec::execute");
+    println!("asserted on every reply before any row above was reported.");
+}

@@ -4,8 +4,15 @@
 //! * `Sim`  — the bit-exact integer dataflow engine (no artifacts needed);
 //!   also what the FPGA would compute, so cross-checking the two backends
 //!   per-request is the paper's functional-equivalence argument.
+//!
+//! Each worker shard of the sharded server owns one `Backend` replica. The
+//! Sim variant keeps a per-profile [`Executor`] cache so the hot path pays
+//! shape inference and scratch-buffer allocation once per profile, not once
+//! per batch; switching profiles stays O(1) — a cache lookup, mirroring the
+//! MDC configuration-word write.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -25,8 +32,19 @@ pub enum Backend {
         engine: PjrtEngine,
     },
     Sim {
-        models: BTreeMap<String, QonnxModel>,
+        models: BTreeMap<String, Arc<QonnxModel>>,
+        /// Per-profile cached executors (populated lazily on first use).
+        executors: BTreeMap<String, Executor>,
     },
+}
+
+/// `Vec::dedup` only removes *adjacent* duplicates; (profile, batch) pairs
+/// from interleaved batch-1/batch-8 artifact loads are not guaranteed to
+/// arrive grouped by profile, so sort before deduplicating.
+fn dedup_profiles(mut ps: Vec<String>) -> Vec<String> {
+    ps.sort();
+    ps.dedup();
+    ps
 }
 
 impl Backend {
@@ -45,9 +63,24 @@ impl Backend {
     pub fn sim(store: &ArtifactStore, profiles: &[&str]) -> Result<Self> {
         let mut models = BTreeMap::new();
         for p in profiles {
-            models.insert(p.to_string(), store.qonnx(p)?);
+            models.insert(p.to_string(), Arc::new(store.qonnx(p)?));
         }
-        Ok(Backend::Sim { models })
+        Ok(Backend::Sim {
+            models,
+            executors: BTreeMap::new(),
+        })
+    }
+
+    /// Build the Sim backend from in-memory models (tests, benches,
+    /// synthetic workloads).
+    pub fn sim_from_models(models: BTreeMap<String, QonnxModel>) -> Self {
+        Backend::Sim {
+            models: models
+                .into_iter()
+                .map(|(name, m)| (name, Arc::new(m)))
+                .collect(),
+            executors: BTreeMap::new(),
+        }
     }
 
     pub fn kind(&self) -> BackendKind {
@@ -60,28 +93,32 @@ impl Backend {
     pub fn profiles(&self) -> Vec<String> {
         match self {
             Backend::Pjrt { engine } => {
-                let mut ps: Vec<String> =
-                    engine.loaded().into_iter().map(|(p, _)| p).collect();
-                ps.dedup();
-                ps
+                dedup_profiles(engine.loaded().into_iter().map(|(p, _)| p).collect())
             }
-            Backend::Sim { models } => models.keys().cloned().collect(),
+            Backend::Sim { models, .. } => models.keys().cloned().collect(),
         }
     }
 
     /// Classify a batch on `profile`. Returns (logits_f32, pred) per image.
+    ///
+    /// Takes `&mut self`: the Sim arm reuses (and lazily populates) its
+    /// per-profile executor cache. Each server worker owns its replica, so
+    /// no locking is involved.
     pub fn classify(
-        &self,
+        &mut self,
         profile: &str,
         images: &[&[u8]],
     ) -> Result<Vec<(Vec<f32>, usize)>> {
         match self {
             Backend::Pjrt { engine } => engine.classify_batch(profile, images),
-            Backend::Sim { models } => {
-                let model = models
-                    .get(profile)
-                    .with_context(|| format!("profile '{profile}' not loaded"))?;
-                let mut ex = Executor::new(model);
+            Backend::Sim { models, executors } => {
+                if !executors.contains_key(profile) {
+                    let model = models
+                        .get(profile)
+                        .with_context(|| format!("profile '{profile}' not loaded"))?;
+                    executors.insert(profile.to_string(), Executor::from_arc(model.clone()));
+                }
+                let ex = executors.get_mut(profile).unwrap();
                 Ok(images
                     .iter()
                     .map(|img| {
@@ -117,7 +154,7 @@ mod tests {
         let m = read_str(&test_model_json(1, 2)).unwrap();
         let mut models = BTreeMap::new();
         models.insert("T".to_string(), m.clone());
-        let b = Backend::Sim { models };
+        let mut b = Backend::sim_from_models(models);
         let img: Vec<u8> = (0..m.input_shape.elems()).map(|i| i as u8).collect();
         let out = b.classify("T", &[&img, &img]).unwrap();
         assert_eq!(out.len(), 2);
@@ -125,5 +162,47 @@ mod tests {
         assert!(b.classify("missing", &[&img]).is_err());
         assert!(b.ensure_profile("T").is_ok());
         assert!(b.ensure_profile("missing").is_err());
+    }
+
+    #[test]
+    fn cached_executor_stays_bit_exact() {
+        let m = read_str(&test_model_json(2, 3)).unwrap();
+        let elems = m.input_shape.elems();
+        let img_a: Vec<u8> = (0..elems).map(|i| (i * 7 % 256) as u8).collect();
+        let img_b: Vec<u8> = (0..elems).map(|i| (i * 13 % 256) as u8).collect();
+        let want_a: Vec<f32> = dataflow::exec::execute(&m, &img_a)
+            .iter()
+            .map(|&v| v as f32)
+            .collect();
+        let want_b: Vec<f32> = dataflow::exec::execute(&m, &img_b)
+            .iter()
+            .map(|&v| v as f32)
+            .collect();
+        let mut models = BTreeMap::new();
+        models.insert("T".to_string(), m);
+        let mut b = Backend::sim_from_models(models);
+        // Repeated batches hit the cached executor; logits must stay equal
+        // to the one-shot `exec::execute` reference on every call.
+        for _ in 0..3 {
+            let out = b.classify("T", &[&img_a, &img_b]).unwrap();
+            assert_eq!(out[0].0, want_a);
+            assert_eq!(out[1].0, want_b);
+        }
+        if let Backend::Sim { executors, .. } = &b {
+            assert_eq!(executors.len(), 1, "one cached executor per profile");
+        }
+    }
+
+    #[test]
+    fn profiles_dedup_handles_non_adjacent_duplicates() {
+        // Regression: the Pjrt arm used to call dedup() without sorting, so
+        // interleaved (profile, batch) loads left duplicates behind.
+        let got = dedup_profiles(vec![
+            "B".to_string(),
+            "A".to_string(),
+            "B".to_string(),
+            "A".to_string(),
+        ]);
+        assert_eq!(got, vec!["A".to_string(), "B".to_string()]);
     }
 }

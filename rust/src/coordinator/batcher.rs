@@ -88,9 +88,12 @@ mod tests {
             },
             rx,
         );
+        // Retain reply receivers for the test's lifetime (the old
+        // `std::mem::forget` leaked them, hiding reply-channel bugs).
+        let mut replies = Vec::new();
         for i in 0..5 {
-            let (r, _keep) = req(i);
-            std::mem::forget(_keep);
+            let (r, keep) = req(i);
+            replies.push(keep);
             tx.send(r).unwrap();
         }
         let b1 = b.next_batch().unwrap();
@@ -98,6 +101,7 @@ mod tests {
         let b2 = b.next_batch().unwrap();
         assert_eq!(b2.len(), 2);
         assert_eq!(b2[0].id, 3);
+        assert_eq!(replies.len(), 5);
     }
 
     #[test]
@@ -110,8 +114,7 @@ mod tests {
             },
             rx,
         );
-        let (r, _keep) = req(0);
-        std::mem::forget(_keep);
+        let (r, _keep) = req(0); // receiver retained in scope, not leaked
         tx.send(r).unwrap();
         let t0 = Instant::now();
         let batch = b.next_batch().unwrap();

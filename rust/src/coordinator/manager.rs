@@ -45,6 +45,13 @@ impl EnergyMonitor {
     }
 
     pub fn remaining_fraction(&self) -> f64 {
+        if self.capacity_j <= 0.0 {
+            // A zero-capacity battery is depleted from birth. Without this
+            // guard 0/0 returns NaN, every threshold comparison in
+            // `ProfileManager::select` is false, and profile switching is
+            // silently disabled.
+            return 0.0;
+        }
         *self.remaining_j.lock().unwrap() / self.capacity_j
     }
 
@@ -272,6 +279,22 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn zero_capacity_battery_selects_low_power_not_nan() {
+        // Regression: capacity 0 used to make remaining_fraction() NaN,
+        // freezing select() on the startup profile forever.
+        let e = EnergyMonitor::new(0.0);
+        assert_eq!(e.remaining_fraction(), 0.0);
+        assert!(e.remaining_fraction().is_finite());
+        assert!(e.depleted());
+        let mgr = ProfileManager::new(ManagerConfig::default(), specs());
+        // depleted-from-birth: must immediately pick the low-power profile
+        assert_eq!(mgr.select(&e).name, "Mixed");
+        // draining a dead battery stays well-defined
+        e.drain(1000.0, 1e6);
+        assert_eq!(e.remaining_fraction(), 0.0);
     }
 
     #[test]

@@ -13,9 +13,13 @@
 //!   violating the accuracy floor while energy allows).
 //!
 //! Requests flow through a dynamic batcher (channel-fed, size/deadline
-//! bounded) into a worker thread that owns the backend — either the PJRT
-//! runtime (AOT artifacts) or the integer dataflow engine (bit-exact
-//! simulator), selected at construction.
+//! bounded) into a dispatcher thread that runs the adaptation step once per
+//! batch and fans batches out to a configurable pool of worker shards. Each
+//! shard owns its own backend replica — either the PJRT runtime (AOT
+//! artifacts) or the integer dataflow engine (bit-exact simulator, with a
+//! per-profile cached executor), selected at construction — while the
+//! Profile Manager and Energy Monitor remain the single shared adaptation
+//! state. See `server.rs` for the pipeline diagram.
 
 mod backend;
 mod batcher;

@@ -1,42 +1,113 @@
-//! The adaptive inference server: request loop + profile management.
+//! The adaptive inference server: sharded request loop + profile management.
 //!
-//! One worker thread owns the backend (PJRT executables are not Sync-shared
-//! here; single-device edge deployment matches the paper's board). Clients
-//! submit via an mpsc channel; the dynamic batcher coalesces; before every
-//! batch the Profile Manager re-evaluates the energy state and may switch
-//! the active profile (an O(1) reconfiguration — the MDC config word).
+//! Architecture (one dispatcher, N worker shards):
+//!
+//! ```text
+//! clients --mpsc--> DynamicBatcher --(dispatcher thread)--> work queue
+//!                        |  select() on shared ProfileManager/EnergyMonitor
+//!                        v
+//!              WorkItem { batch, profile spec }
+//!                        |
+//!          +-------------+-------------+
+//!          v             v             v
+//!      worker 0      worker 1  ...  worker N-1   (each owns a Backend replica)
+//! ```
+//!
+//! The dispatcher owns the batcher and performs the adaptation step once per
+//! batch — the Profile Manager re-evaluates the energy state and may switch
+//! the active profile (an O(1) reconfiguration — the MDC config word). The
+//! chosen [`ProfileSpec`] rides along in the [`WorkItem`], so workers never
+//! touch the shared manager. Workers pull from a shared queue (idle shards
+//! pick up the next batch first), execute on their own backend replica, and
+//! reply per request. Backends are constructed *inside* each worker thread
+//! via the factory — PJRT handles are not `Send`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::Result;
 
 use super::backend::Backend;
 use super::batcher::{BatcherConfig, DynamicBatcher};
-use super::manager::{EnergyMonitor, ProfileManager};
+use super::manager::{EnergyMonitor, ProfileManager, ProfileSpec};
 use super::request::{ClassifyRequest, ClassifyResponse};
-use crate::metrics::{Counter, EventLog, Histogram};
+use crate::metrics::{Counter, EventLog, Gauge, Histogram};
 
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct ServerConfig {
     pub batcher: BatcherConfig,
+    /// Number of worker shards, each owning one backend replica (clamped to
+    /// at least 1).
+    pub workers: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            batcher: BatcherConfig::default(),
+            workers: 1,
+        }
+    }
+}
+
+impl ServerConfig {
+    pub fn with_workers(workers: usize) -> Self {
+        ServerConfig {
+            workers,
+            ..Default::default()
+        }
+    }
 }
 
 /// Shared observable state.
-#[derive(Default)]
 pub struct ServerStats {
     pub requests: Counter,
     pub batches: Counter,
     pub switches: Counter,
     pub latency: Histogram,
     pub events: EventLog,
+    /// Batches handed to the work queue but not yet picked up by a shard.
+    pub queue_depth: Gauge,
+    /// Batches executed per worker shard; the entries sum to `batches`.
+    pub worker_batches: Vec<Counter>,
+}
+
+impl ServerStats {
+    fn for_workers(n: usize) -> Self {
+        ServerStats {
+            requests: Counter::default(),
+            batches: Counter::default(),
+            switches: Counter::default(),
+            latency: Histogram::default(),
+            events: EventLog::default(),
+            queue_depth: Gauge::default(),
+            worker_batches: (0..n).map(|_| Counter::default()).collect(),
+        }
+    }
+}
+
+impl Default for ServerStats {
+    fn default() -> Self {
+        Self::for_workers(1)
+    }
+}
+
+/// One unit of work: a coalesced batch plus the profile the dispatcher's
+/// adaptation step chose for it.
+struct WorkItem {
+    batch: Vec<ClassifyRequest>,
+    spec: ProfileSpec,
 }
 
 /// Handle to the running server.
 pub struct AdaptiveServer {
-    tx: mpsc::Sender<ClassifyRequest>,
-    worker: Option<JoinHandle<()>>,
+    /// Client-facing queue; `None` once closed. Taking it is the single,
+    /// deterministic close of the request channel (the old code dropped a
+    /// fresh clone — a no-op — and relied on a `mem::replace` dance).
+    tx: Option<mpsc::Sender<ClassifyRequest>>,
+    dispatcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
     pub stats: Arc<ServerStats>,
     pub energy: Arc<EnergyMonitor>,
     pub manager: Arc<ProfileManager>,
@@ -44,110 +115,185 @@ pub struct AdaptiveServer {
 }
 
 impl AdaptiveServer {
-    /// Spawn the worker thread. PJRT handles are not `Send`, so the backend
-    /// is constructed *inside* the worker via `backend_factory`; startup
-    /// errors (missing profiles, artifact problems) are reported back
-    /// synchronously before `start` returns. The backend must contain every
-    /// profile the manager can select.
+    /// Spawn the dispatcher and `cfg.workers` worker shards. PJRT handles
+    /// are not `Send`, so each worker constructs its own backend replica via
+    /// `backend_factory` inside its thread; startup errors (missing
+    /// profiles, artifact problems) from any shard are reported back
+    /// synchronously before `start` returns. Every backend must contain
+    /// every profile the manager can select.
     pub fn start(
         cfg: ServerConfig,
-        backend_factory: impl FnOnce() -> Result<Backend> + Send + 'static,
+        backend_factory: impl Fn() -> Result<Backend> + Send + Sync + 'static,
         manager: ProfileManager,
         energy: EnergyMonitor,
     ) -> Result<Self> {
+        let n_workers = cfg.workers.max(1);
         let (tx, rx) = mpsc::channel::<ClassifyRequest>();
+        let (work_tx, work_rx) = mpsc::channel::<WorkItem>();
+        // Multi-consumer work queue: shards contend on the mutex only while
+        // *waiting*, never while executing a batch.
+        let work_rx = Arc::new(Mutex::new(work_rx));
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let stats = Arc::new(ServerStats::default());
+        let stats = Arc::new(ServerStats::for_workers(n_workers));
         let energy = Arc::new(energy);
         let manager = Arc::new(manager);
+        let factory = Arc::new(backend_factory);
+        let profile_names: Vec<String> =
+            manager.profiles().iter().map(|p| p.name.clone()).collect();
 
-        let w_stats = stats.clone();
-        let w_energy = energy.clone();
-        let w_manager = manager.clone();
+        let mut workers = Vec::with_capacity(n_workers);
+        for wid in 0..n_workers {
+            let factory = factory.clone();
+            let work_rx = work_rx.clone();
+            let ready_tx = ready_tx.clone();
+            let w_stats = stats.clone();
+            let w_energy = energy.clone();
+            let names = profile_names.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("adaptive-worker-{wid}"))
+                .spawn(move || {
+                    let mut backend = match (*factory)().and_then(|b| {
+                        for name in &names {
+                            b.ensure_profile(name)?;
+                        }
+                        Ok(b)
+                    }) {
+                        Ok(b) => {
+                            let _ = ready_tx.send(Ok(()));
+                            b
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    // Close our readiness sender now so start() never waits
+                    // on a long-lived worker.
+                    drop(ready_tx);
+                    loop {
+                        let item = {
+                            let queue = work_rx.lock().unwrap();
+                            queue.recv()
+                        };
+                        let Ok(WorkItem { batch, spec }) = item else {
+                            break; // dispatcher gone: shutdown
+                        };
+                        w_stats.queue_depth.dec();
+                        let images: Vec<&[u8]> =
+                            batch.iter().map(|r| r.image.as_slice()).collect();
+                        let results = match backend.classify(&spec.name, &images) {
+                            Ok(r) => r,
+                            Err(e) => {
+                                w_stats
+                                    .events
+                                    .push(format!("worker {wid}: batch failed: {e}"));
+                                continue;
+                            }
+                        };
+                        w_stats.batches.inc();
+                        w_stats.worker_batches[wid].inc();
+                        for (req, (logits, pred)) in batch.into_iter().zip(results) {
+                            w_energy.drain(spec.power_mw, spec.latency_us);
+                            let latency_us = req.submitted.elapsed().as_micros() as u64;
+                            w_stats.requests.inc();
+                            w_stats.latency.record_us(latency_us);
+                            let _ = req.reply.send(ClassifyResponse {
+                                id: req.id,
+                                pred,
+                                logits,
+                                profile: spec.name.clone(),
+                                latency_us,
+                            });
+                        }
+                    }
+                })?;
+            workers.push(handle);
+        }
+        drop(ready_tx); // only worker threads hold readiness senders now
+
+        // Dispatcher: batcher + shared adaptation step, fanning out to the
+        // shards. Owning `work_tx` exclusively gives shutdown its cascade:
+        // client queue closes -> batcher drains to None -> dispatcher exits
+        // and drops `work_tx` -> workers drain the work queue and exit.
+        let d_stats = stats.clone();
+        let d_energy = energy.clone();
+        let d_manager = manager.clone();
         let batcher = DynamicBatcher::new(cfg.batcher.clone(), rx);
-        let profile_names: Vec<String> = manager
-            .profiles()
-            .iter()
-            .map(|p| p.name.clone())
-            .collect();
-        let worker = std::thread::Builder::new()
-            .name("adaptive-engine".into())
+        let dispatcher = std::thread::Builder::new()
+            .name("adaptive-dispatch".into())
             .spawn(move || {
-                let backend = match backend_factory().and_then(|b| {
-                    for name in &profile_names {
-                        b.ensure_profile(name)?;
-                    }
-                    Ok(b)
-                }) {
-                    Ok(b) => {
-                        let _ = ready_tx.send(Ok(()));
-                        b
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                let mut active = w_manager.current().name.clone();
+                let mut active = d_manager.current().name.clone();
                 while let Some(batch) = batcher.next_batch() {
-                    // --- profile management step ---
-                    let spec = w_manager.select(&w_energy).clone();
+                    // --- profile management step (shared adaptation state) ---
+                    let spec = d_manager.select(&d_energy).clone();
                     if spec.name != active {
-                        w_stats.switches.inc();
-                        w_stats.events.push(format!(
+                        d_stats.switches.inc();
+                        d_stats.events.push(format!(
                             "switch {active} -> {} (battery {:.1}%)",
                             spec.name,
-                            w_energy.remaining_fraction() * 100.0
+                            d_energy.remaining_fraction() * 100.0
                         ));
                         active = spec.name.clone();
                     }
-                    // --- execute ---
-                    let images: Vec<&[u8]> =
-                        batch.iter().map(|r| r.image.as_slice()).collect();
-                    let results = match backend.classify(&active, &images) {
-                        Ok(r) => r,
-                        Err(e) => {
-                            w_stats.events.push(format!("batch failed: {e}"));
-                            continue;
-                        }
-                    };
-                    w_stats.batches.inc();
-                    // --- energy accounting + replies ---
-                    for (req, (logits, pred)) in batch.into_iter().zip(results) {
-                        w_energy.drain(spec.power_mw, spec.latency_us);
-                        let latency_us = req.submitted.elapsed().as_micros() as u64;
-                        w_stats.requests.inc();
-                        w_stats.latency.record_us(latency_us);
-                        let _ = req.reply.send(ClassifyResponse {
-                            id: req.id,
-                            pred,
-                            logits,
-                            profile: active.clone(),
-                            latency_us,
-                        });
+                    d_stats.queue_depth.inc();
+                    if work_tx.send(WorkItem { batch, spec }).is_err() {
+                        // Every worker exited; nothing can serve. Undo the
+                        // gauge and leave a trace before giving up.
+                        d_stats.queue_depth.dec();
+                        d_stats
+                            .events
+                            .push("dispatch failed: all workers exited".to_string());
+                        break;
                     }
                 }
             })?;
 
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("worker died during startup"))??;
-        Ok(AdaptiveServer {
-            tx,
-            worker: Some(worker),
+        // Wait for every shard's backend to come up.
+        let mut startup_err: Option<anyhow::Error> = None;
+        for _ in 0..n_workers {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    startup_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    startup_err
+                        .get_or_insert(anyhow::anyhow!("worker died during startup"));
+                }
+            }
+        }
+        let server = AdaptiveServer {
+            tx: Some(tx),
+            dispatcher: Some(dispatcher),
+            workers,
             stats,
             energy,
             manager,
             next_id: AtomicU64::new(0),
-        })
+        };
+        if let Some(e) = startup_err {
+            // Tear the pipeline down (drop joins every thread) before
+            // reporting the failure.
+            drop(server);
+            return Err(e);
+        }
+        Ok(server)
+    }
+
+    /// Number of worker shards.
+    pub fn workers(&self) -> usize {
+        self.stats.worker_batches.len()
     }
 
     /// Submit one image; returns the reply receiver.
     pub fn submit(&self, image: Vec<u8>) -> mpsc::Receiver<ClassifyResponse> {
         let (rtx, rrx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        // Send failure only happens at shutdown; the receiver will read Err.
-        let _ = self.tx.send(ClassifyRequest::new(id, image, rtx));
+        // After shutdown (or on send failure) the reply sender is dropped,
+        // so the receiver reads a clean Err instead of hanging.
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(ClassifyRequest::new(id, image, rtx));
+        }
         rrx
     }
 
@@ -157,13 +303,20 @@ impl AdaptiveServer {
         Ok(rx.recv()?)
     }
 
-    /// Graceful shutdown: close the queue and join the worker.
+    /// Graceful shutdown: close the queue once and join every thread.
     pub fn shutdown(mut self) {
-        drop(self.tx.clone()); // original tx dropped in Drop below
-        if let Some(w) = self.worker.take() {
-            // Dropping self.tx happens after; replace it with a dummy by
-            // taking ownership: easiest is to drop the whole struct fields.
-            drop(std::mem::replace(&mut self.tx, mpsc::channel().0));
+        self.close();
+    }
+
+    /// Idempotent close: dropping the only client `Sender` closes the
+    /// request queue deterministically; the dispatcher drains it and closes
+    /// the work queue, which drains the worker shards.
+    fn close(&mut self) {
+        self.tx.take();
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -171,11 +324,7 @@ impl AdaptiveServer {
 
 impl Drop for AdaptiveServer {
     fn drop(&mut self) {
-        // Closing tx unblocks the batcher with None; join if still running.
-        drop(std::mem::replace(&mut self.tx, mpsc::channel().0));
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        self.close();
     }
 }
 
@@ -186,19 +335,16 @@ mod tests {
     use crate::qonnx::{read_str, test_model_json};
     use std::collections::BTreeMap;
 
-    /// Returns (factory, input_elems). The factory is Send (models are plain
-    /// data); the Backend itself is built inside the worker thread.
-    fn sim_backend() -> (impl FnOnce() -> anyhow::Result<Backend> + Send, usize) {
+    /// Returns (factory, input_elems). The factory is Fn + Send + Sync
+    /// (models are plain data, cloned per shard); each Backend replica is
+    /// built inside its worker thread.
+    fn sim_backend() -> (impl Fn() -> anyhow::Result<Backend> + Send + Sync, usize) {
         let m = read_str(&test_model_json(1, 2)).unwrap();
         let elems = m.input_shape.elems();
-        let mut a = m.clone();
-        a.profile = "hi".into();
-        let mut b = m;
-        b.profile = "lo".into();
         let mut models = BTreeMap::new();
-        models.insert("hi".to_string(), a);
-        models.insert("lo".to_string(), b);
-        (move || Ok(Backend::Sim { models }), elems)
+        models.insert("hi".to_string(), m.clone());
+        models.insert("lo".to_string(), m);
+        (move || Ok(Backend::sim_from_models(models.clone())), elems)
     }
 
     fn specs() -> Vec<ProfileSpec> {
@@ -265,13 +411,41 @@ mod tests {
     }
 
     #[test]
+    fn rejects_missing_profile_on_every_shard_count() {
+        // The startup error must surface no matter how many shards race to
+        // report it.
+        for workers in [1, 3] {
+            let (backend, _) = sim_backend();
+            let mgr = ProfileManager::new(
+                ManagerConfig::default(),
+                vec![ProfileSpec {
+                    name: "nope".into(),
+                    accuracy: 1.0,
+                    power_mw: 1.0,
+                    latency_us: 1.0,
+                }],
+            );
+            let energy = EnergyMonitor::new(1.0);
+            assert!(AdaptiveServer::start(
+                ServerConfig::with_workers(workers),
+                backend,
+                mgr,
+                energy
+            )
+            .is_err());
+        }
+    }
+
+    #[test]
     fn concurrent_clients() {
         let (backend, elems) = sim_backend();
         let energy = EnergyMonitor::new(1e9);
         let mgr = ProfileManager::new(ManagerConfig::default(), specs());
         let srv = Arc::new(
-            AdaptiveServer::start(ServerConfig::default(), backend, mgr, energy).unwrap(),
+            AdaptiveServer::start(ServerConfig::with_workers(2), backend, mgr, energy)
+                .unwrap(),
         );
+        assert_eq!(srv.workers(), 2);
         let mut handles = Vec::new();
         for t in 0..4 {
             let srv = srv.clone();
@@ -287,5 +461,114 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(srv.stats.requests.get(), 40);
+    }
+
+    #[test]
+    fn sharded_server_conserves_requests_under_load() {
+        // 8 client threads hammer a 4-shard server across 2 profiles. Every
+        // submit must get exactly one reply (all classify calls return Ok,
+        // response ids are unique), per-worker batch counters must sum to
+        // the global batch counter, and the queue gauge must drain to 0.
+        const THREADS: usize = 8;
+        const PER_THREAD: usize = 25;
+        const TOTAL: usize = THREADS * PER_THREAD;
+
+        let (backend, elems) = sim_backend();
+        // Sized so the 50% threshold crossing lands mid-run (~100 requests
+        // at ~4.7e-5 J each), exercising both profiles under load.
+        let energy = EnergyMonitor::new(9.3e-3);
+        let mgr = ProfileManager::new(ManagerConfig::default(), specs());
+        let srv = Arc::new(
+            AdaptiveServer::start(ServerConfig::with_workers(4), backend, mgr, energy)
+                .unwrap(),
+        );
+        assert_eq!(srv.workers(), 4);
+
+        let ids = Arc::new(Mutex::new(Vec::<u64>::new()));
+        let profiles = Arc::new(Mutex::new(Vec::<String>::new()));
+        let mut handles = Vec::new();
+        for t in 0..THREADS {
+            let srv = srv.clone();
+            let ids = ids.clone();
+            let profiles = profiles.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..PER_THREAD {
+                    let img = vec![(t * PER_THREAD + i) as u8; elems];
+                    let resp = srv.classify(img).expect("reply lost");
+                    assert!(resp.pred < 3);
+                    ids.lock().unwrap().push(resp.id);
+                    profiles.lock().unwrap().push(resp.profile);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+
+        // conservation: one reply per submit, no duplicates
+        let mut ids = Arc::try_unwrap(ids).unwrap().into_inner().unwrap();
+        assert_eq!(ids.len(), TOTAL);
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), TOTAL, "duplicate reply ids");
+        assert_eq!(srv.stats.requests.get(), TOTAL as u64);
+
+        // both profiles actually served traffic
+        let profiles = profiles.lock().unwrap();
+        assert!(profiles.iter().any(|p| p == "hi"), "hi never served");
+        assert!(
+            profiles.iter().any(|p| p == "lo"),
+            "lo never served: battery {:.3}",
+            srv.energy.remaining_fraction()
+        );
+
+        // per-worker counters are consistent with the global counter
+        let per_worker: Vec<u64> =
+            srv.stats.worker_batches.iter().map(|c| c.get()).collect();
+        assert_eq!(
+            per_worker.iter().sum::<u64>(),
+            srv.stats.batches.get(),
+            "per-worker batches {per_worker:?} do not sum to total"
+        );
+        assert_eq!(srv.stats.queue_depth.get(), 0, "work queue not drained");
+
+        let srv = Arc::try_unwrap(srv).ok().expect("sole owner after join");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn zero_workers_clamps_to_one() {
+        let (backend, elems) = sim_backend();
+        let energy = EnergyMonitor::new(1e9);
+        let mgr = ProfileManager::new(ManagerConfig::default(), specs());
+        let srv = AdaptiveServer::start(
+            ServerConfig::with_workers(0),
+            backend,
+            mgr,
+            energy,
+        )
+        .unwrap();
+        assert_eq!(srv.workers(), 1);
+        assert!(srv.classify(vec![0u8; elems]).is_ok());
+        srv.shutdown();
+    }
+
+    #[test]
+    fn drop_without_shutdown_joins_cleanly() {
+        let (backend, elems) = sim_backend();
+        let energy = EnergyMonitor::new(1e9);
+        let mgr = ProfileManager::new(ManagerConfig::default(), specs());
+        {
+            let srv = AdaptiveServer::start(
+                ServerConfig::with_workers(2),
+                backend,
+                mgr,
+                energy,
+            )
+            .unwrap();
+            let _ = srv.classify(vec![1u8; elems]).unwrap();
+            // falls out of scope here: Drop must close the queue once and
+            // join the dispatcher + both shards without hanging
+        }
     }
 }

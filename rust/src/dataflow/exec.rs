@@ -5,81 +5,126 @@
 //!   qy_c  = clamp((acc_c * M_c + round_half) >> sh_c, 0, 2^act_bits - 1)
 //! Max-pool on codes; dense emits raw i64 accumulators (logits).
 
+use std::sync::Arc;
+
 use crate::qonnx::{ConvLayer, DenseLayer, Layer, QonnxModel, TensorShape};
 
-/// Reusable execution scratch (avoids re-allocating the im2col buffer per
-/// image on the hot path).
-pub struct Executor<'m> {
-    model: &'m QonnxModel,
+/// Reusable execution state: inferred shapes + activation scratch (avoids
+/// re-running shape inference and re-allocating buffers per image on the
+/// hot path). Self-contained — the model is held by `Arc`, so executors can
+/// be cached (e.g. per profile inside a backend) and moved across threads
+/// without tying them to a borrowed model's lifetime.
+pub struct Executor {
+    model: Arc<QonnxModel>,
     shapes: Vec<TensorShape>,
     /// Double-buffered activation planes (codes).
     buf_a: Vec<i64>,
     buf_b: Vec<i64>,
 }
 
-impl<'m> Executor<'m> {
-    pub fn new(model: &'m QonnxModel) -> Self {
-        let shapes = crate::qonnx::infer_shapes(model);
-        let max_elems = shapes.iter().map(TensorShape::elems).max().unwrap_or(0);
+impl Executor {
+    /// Clones the model into shared ownership — fine for long-lived
+    /// executors. One-shot callers should use [`execute`]/[`execute_batch`]
+    /// (borrow-only, no weight copy); callers already holding an
+    /// `Arc<QonnxModel>` should use [`Executor::from_arc`].
+    pub fn new(model: &QonnxModel) -> Self {
+        Self::from_arc(Arc::new(model.clone()))
+    }
+
+    /// Construct without cloning the model weights (the cheap path for
+    /// executor caches that already hold the model in an `Arc`).
+    pub fn from_arc(model: Arc<QonnxModel>) -> Self {
+        let (shapes, buf_a, buf_b) = scratch_for(&model);
         Executor {
             model,
             shapes,
-            buf_a: vec![0; max_elems],
-            buf_b: vec![0; max_elems],
+            buf_a,
+            buf_b,
         }
+    }
+
+    pub fn model(&self) -> &QonnxModel {
+        &self.model
     }
 
     /// Run one image (u8 codes, HWC layout, shape = model.input_shape) and
     /// return the 10 logits (raw dense accumulators).
     pub fn run(&mut self, input: &[u8]) -> Vec<i64> {
-        let in_shape = self.model.input_shape;
-        assert_eq!(input.len(), in_shape.elems(), "input size mismatch");
-        for (dst, &src) in self.buf_a.iter_mut().zip(input) {
-            *dst = src as i64;
-        }
-        let mut cur_shape = in_shape;
-        let mut in_a = true; // which buffer currently holds the activation
-        let mut logits = Vec::new();
-        for (i, layer) in self.model.layers.iter().enumerate() {
-            let out_shape = self.shapes[i + 1];
-            let (src, dst) = if in_a {
-                (&self.buf_a, &mut self.buf_b)
-            } else {
-                (&self.buf_b, &mut self.buf_a)
-            };
-            match layer {
-                Layer::Conv(c) => {
-                    conv_forward(c, src, cur_shape, dst);
-                    in_a = !in_a;
-                }
-                Layer::Pool(_) => {
-                    pool_forward(src, cur_shape, dst);
-                    in_a = !in_a;
-                }
-                Layer::Flatten { .. } => { /* layout already flat (HWC) */ }
-                Layer::Dense(d) => {
-                    logits = dense_forward(d, &src[..cur_shape.elems()]);
-                    in_a = !in_a;
-                }
-            }
-            cur_shape = out_shape;
-        }
-        logits
+        run_layers(
+            &self.model,
+            &self.shapes,
+            &mut self.buf_a,
+            &mut self.buf_b,
+            input,
+        )
     }
 }
 
-/// One-shot convenience wrapper around [`Executor`].
+/// The layer pipeline over pre-allocated double buffers. Shared by the
+/// owned [`Executor`] and the borrow-only one-shot paths below, so neither
+/// has to clone the model weights.
+fn run_layers(
+    model: &QonnxModel,
+    shapes: &[TensorShape],
+    buf_a: &mut [i64],
+    buf_b: &mut [i64],
+    input: &[u8],
+) -> Vec<i64> {
+    let in_shape = model.input_shape;
+    assert_eq!(input.len(), in_shape.elems(), "input size mismatch");
+    for (dst, &src) in buf_a.iter_mut().zip(input) {
+        *dst = src as i64;
+    }
+    let mut cur_shape = in_shape;
+    let mut in_a = true; // which buffer currently holds the activation
+    let mut logits = Vec::new();
+    for (i, layer) in model.layers.iter().enumerate() {
+        let out_shape = shapes[i + 1];
+        let (src, dst): (&[i64], &mut [i64]) = if in_a {
+            (&*buf_a, &mut *buf_b)
+        } else {
+            (&*buf_b, &mut *buf_a)
+        };
+        match layer {
+            Layer::Conv(c) => {
+                conv_forward(c, src, cur_shape, dst);
+                in_a = !in_a;
+            }
+            Layer::Pool(_) => {
+                pool_forward(src, cur_shape, dst);
+                in_a = !in_a;
+            }
+            Layer::Flatten { .. } => { /* layout already flat (HWC) */ }
+            Layer::Dense(d) => {
+                logits = dense_forward(d, &src[..cur_shape.elems()]);
+                in_a = !in_a;
+            }
+        }
+        cur_shape = out_shape;
+    }
+    logits
+}
+
+fn scratch_for(model: &QonnxModel) -> (Vec<TensorShape>, Vec<i64>, Vec<i64>) {
+    let shapes = crate::qonnx::infer_shapes(model);
+    let max_elems = shapes.iter().map(TensorShape::elems).max().unwrap_or(0);
+    (shapes, vec![0; max_elems], vec![0; max_elems])
+}
+
+/// One-shot execution. Borrows the model — no weight cloning.
 pub fn execute(model: &QonnxModel, input: &[u8]) -> Vec<i64> {
-    Executor::new(model).run(input)
+    let (shapes, mut buf_a, mut buf_b) = scratch_for(model);
+    run_layers(model, &shapes, &mut buf_a, &mut buf_b, input)
 }
 
 /// Classify a batch; returns (logits per image, argmax per image).
+/// Borrows the model and reuses one scratch allocation across the batch.
 pub fn execute_batch(model: &QonnxModel, inputs: &[&[u8]]) -> (Vec<Vec<i64>>, Vec<usize>) {
-    let mut ex = Executor::new(model);
+    let (shapes, mut buf_a, mut buf_b) = scratch_for(model);
     let mut all = Vec::with_capacity(inputs.len());
     let mut preds = Vec::with_capacity(inputs.len());
     for &img in inputs {
-        let logits = ex.run(img);
+        let logits = run_layers(model, &shapes, &mut buf_a, &mut buf_b, img);
         preds.push(argmax(&logits));
         all.push(logits);
     }
@@ -216,6 +261,29 @@ mod tests {
         // input the dense output is a pure function of biases; just assert
         // it is finite and stable.
         assert_eq!(logits.len(), 3);
+    }
+
+    #[test]
+    fn reused_executor_matches_fresh_executor() {
+        // The coordinator caches one Executor per profile; reuse across
+        // images must stay bit-exact vs a cold run (stale scratch must
+        // never leak into a later image).
+        let m = tiny();
+        let imgs: Vec<Vec<u8>> = (0..4)
+            .map(|k| {
+                (0..m.input_shape.elems())
+                    .map(|i| ((i * 31 + k * 7) % 256) as u8)
+                    .collect()
+            })
+            .collect();
+        let mut cached = Executor::new(&m);
+        for img in &imgs {
+            assert_eq!(cached.run(img), execute(&m, img));
+        }
+        // and again in reverse order, same instance
+        for img in imgs.iter().rev() {
+            assert_eq!(cached.run(img), execute(&m, img));
+        }
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Metrics substrate: counters + latency histograms for the coordinator.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// Monotonic counter (lock-free).
@@ -19,6 +19,34 @@ impl Counter {
     }
 
     pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Up/down gauge (lock-free), e.g. the dispatch queue depth.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn dec(&self) {
+        self.v.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.v.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, v: i64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
         self.v.load(Ordering::Relaxed)
     }
 }
@@ -140,6 +168,19 @@ mod tests {
         let h = Histogram::default();
         assert_eq!(h.quantile_us(0.99), 0);
         assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn gauge_tracks_up_and_down() {
+        let g = Gauge::default();
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 1);
+        g.add(-3);
+        assert_eq!(g.get(), -2);
+        g.set(0);
+        assert_eq!(g.get(), 0);
     }
 
     #[test]

@@ -131,7 +131,7 @@ fn server_survives_backend_batch_failure() {
     let empty: BTreeMap<String, onnx2hw::qonnx::QonnxModel> = BTreeMap::new();
     let result = AdaptiveServer::start(
         ServerConfig::default(),
-        move || Ok(Backend::Sim { models: empty }),
+        move || Ok(Backend::sim_from_models(empty.clone())),
         manager,
         energy,
     );

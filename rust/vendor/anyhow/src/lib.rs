@@ -1,0 +1,274 @@
+//! Minimal vendored stand-in for the `anyhow` crate (the build environment
+//! is offline, so crates.io is unavailable).
+//!
+//! Implements the subset this workspace uses, with anyhow's semantics:
+//!
+//! * [`Error`] — an error value carrying a chain of context messages.
+//!   `Display` prints the outermost message; `{:#}` prints the whole chain
+//!   separated by `": "`; `Debug` prints a `Caused by:` list.
+//! * [`Result<T>`] — alias with `Error` as the default error type.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on any
+//!   `Result<T, E: std::error::Error>`, on `Result<T, Error>`, and on
+//!   `Option<T>`.
+//! * [`anyhow!`] / [`bail!`] — message-formatting constructors.
+//! * A blanket `From<E: std::error::Error + Send + Sync + 'static>` so `?`
+//!   converts concrete errors into [`Error`] (like real anyhow, `Error`
+//!   itself deliberately does not implement `std::error::Error`).
+
+use std::fmt;
+
+/// Error value: an outermost message plus an optional chain of causes.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Construct from a displayable message.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error {
+            msg: m.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context(self, ctx: impl fmt::Display) -> Self {
+        Error {
+            msg: ctx.to_string(),
+            source: Some(Box::new(self)),
+        }
+    }
+
+    /// The messages in the chain, outermost first.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut msgs = vec![self.msg.as_str()];
+        let mut cur = self.source.as_deref();
+        while let Some(e) = cur {
+            msgs.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        msgs
+    }
+
+    /// The innermost message.
+    pub fn root_cause(&self) -> &str {
+        self.chain().pop().unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if self.source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, "\n    {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        // Flatten the std source chain into our context chain so `{:#}`
+        // and Debug keep showing the full cause list.
+        let mut msgs: Vec<String> = Vec::new();
+        let mut cur: Option<&(dyn std::error::Error + 'static)> = Some(&e);
+        while let Some(c) = cur {
+            msgs.push(c.to_string());
+            cur = c.source();
+        }
+        let mut err = Error::msg(msgs.pop().expect("error has a message"));
+        while let Some(m) = msgs.pop() {
+            err = err.context(m);
+        }
+        err
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod ext {
+    // Sealed helper so `Context` works both on `Result<T, E: std::error::Error>`
+    // and on `Result<T, anyhow::Error>` without overlapping impls (the same
+    // architecture real anyhow uses).
+    use super::Error;
+    use std::fmt::Display;
+
+    pub trait StdError {
+        fn ext_context<C: Display>(self, ctx: C) -> Error;
+    }
+
+    impl StdError for Error {
+        fn ext_context<C: Display>(self, ctx: C) -> Error {
+            self.context(ctx)
+        }
+    }
+
+    impl<E> StdError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn ext_context<C: Display>(self, ctx: C) -> Error {
+            Error::from(self).context(ctx)
+        }
+    }
+}
+
+/// Attach context to errors (`Result`) or turn `None` into an error.
+pub trait Context<T> {
+    fn context<C>(self, ctx: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T> for Result<T, E>
+where
+    E: ext::StdError,
+{
+    fn context<C>(self, ctx: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.ext_context(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.ext_context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C>(self, ctx: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_prints_outermost_alternate_prints_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading config")
+            .unwrap_err();
+        assert_eq!(e.to_string(), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: file missing");
+        assert_eq!(e.root_cause(), "file missing");
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = Error::msg("inner").context("middle").context("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("outer"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("inner"));
+        assert_eq!(e.chain(), vec!["outer", "middle", "inner"]);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(f().unwrap_err().to_string(), "file missing");
+    }
+
+    #[test]
+    fn option_context_and_with_context() {
+        let n: Option<u8> = None;
+        assert_eq!(n.context("missing n").unwrap_err().to_string(), "missing n");
+        let n: Option<u8> = Some(3);
+        assert_eq!(n.with_context(|| "unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn context_on_anyhow_result_nests() {
+        let r: Result<()> = Err(anyhow!("inner {}", 7));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner 7");
+    }
+
+    #[test]
+    fn bail_and_anyhow_macros() {
+        fn f(fail: bool) -> Result<u8> {
+            if fail {
+                bail!("failed with code {}", 2);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "failed with code 2");
+    }
+}
