@@ -18,7 +18,9 @@ use onnx2hw::coordinator::{
     ServerConfig,
 };
 use onnx2hw::flow::{self, FlowConfig};
-use onnx2hw::power::{run_fixed, simulate_battery, AdaptivePolicy, BatteryModel};
+use onnx2hw::power::{
+    run_fixed, simulate_battery, AdaptivePolicy, BatteryModel, BatteryPack,
+};
 use onnx2hw::runtime::ArtifactStore;
 
 const PAIR: [&str; 2] = ["A8-W8", "Mixed"];
@@ -73,22 +75,27 @@ fn main() -> Result<()> {
         );
     }
 
-    // Battery sized so the threshold crossing happens mid-run.
+    // Battery sized so the threshold crossing happens mid-run; the server
+    // splits it into one cell per shard (per-accelerator batteries).
     let per_classification_j =
         specs[0].power_mw * 1e-3 * specs[0].latency_us * 1e-6;
     let battery_j = per_classification_j * n_requests as f64 * 0.9;
     println!(
-        "\nbattery: {:.3} mJ (~90% of what {} requests need on {})",
+        "\nbattery: {:.3} mJ (~90% of what {} requests need on {}), \
+         {:.3} mJ per shard",
         battery_j * 1e3,
         n_requests,
-        specs[0].name
+        specs[0].name,
+        battery_j * 1e3 / workers.max(1) as f64
     );
 
     let manager = ProfileManager::new(ManagerConfig::default(), specs.clone());
     let energy = EnergyMonitor::new(battery_j);
     let store2 = store.clone();
     let kind = backend_kind.clone();
-    let srv = Arc::new(AdaptiveServer::start(
+    // No Arc needed: client threads hold detached ClientHandles, not the
+    // server value.
+    let srv = AdaptiveServer::start(
         ServerConfig {
             workers,
             ..Default::default()
@@ -99,7 +106,7 @@ fn main() -> Result<()> {
         },
         manager,
         energy,
-    )?);
+    )?;
     println!(
         "adaptive server up ({backend_kind} backend, {} worker shards, {clients} clients)\n",
         srv.workers()
@@ -108,22 +115,26 @@ fn main() -> Result<()> {
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
     for c in 0..clients {
-        let srv = srv.clone();
+        // Async client API: pipelined submission keeps a window of
+        // requests in flight so they overlap instead of paying one RTT
+        // each.
+        let client = srv.client();
         let testset = testset.clone();
         handles.push(std::thread::spawn(move || {
+            let idxs: Vec<usize> = (c..n_requests)
+                .step_by(clients)
+                .map(|i| i % testset.len())
+                .collect();
+            let replies = client
+                .classify_pipelined(idxs.iter().map(|&i| testset.image(i).to_vec()), 16);
             let mut correct = 0usize;
             let mut served_by = std::collections::BTreeMap::<String, usize>::new();
-            let mut i = c;
-            while i < n_requests {
-                let idx = i % testset.len();
-                let resp = srv
-                    .classify(testset.image(idx).to_vec())
-                    .expect("reply lost");
+            for (&idx, reply) in idxs.iter().zip(replies) {
+                let resp = reply.expect("reply lost");
                 if resp.pred == testset.labels[idx] as usize {
                     correct += 1;
                 }
                 *served_by.entry(resp.profile).or_default() += 1;
-                i += clients;
             }
             (correct, served_by)
         }));
@@ -151,14 +162,19 @@ fn main() -> Result<()> {
         println!("  {p}: {n} requests");
     }
     println!(
-        "profile switches: {} | p50 latency {} us | p95 {} us | battery left {:.1}%",
+        "profile switches: {} | p50 latency {} us | p95 {} us | mean battery left {:.1}%",
         srv.stats.switches.get(),
         srv.stats.latency.quantile_us(0.5),
         srv.stats.latency.quantile_us(0.95),
-        srv.energy.remaining_fraction() * 100.0
+        srv.battery_fraction() * 100.0
     );
-    for (i, c) in srv.stats.worker_batches.iter().enumerate() {
-        println!("  worker {i}: {} batches", c.get());
+    for (i, e) in srv.shard_energy.iter().enumerate() {
+        println!(
+            "  shard {i}: {} batches ({} stolen) | battery {:.1}%",
+            srv.stats.worker_batches[i].get(),
+            srv.stats.worker_steals[i].get(),
+            e.remaining_fraction() * 100.0
+        );
     }
     for ev in srv.stats.events.snapshot() {
         println!("  event: {ev}");
@@ -182,8 +198,17 @@ fn main() -> Result<()> {
             run.label, run.duration_h, run.classifications, run.mean_accuracy * 100.0
         );
     }
-    if let Ok(srv) = Arc::try_unwrap(srv) {
-        srv.shutdown();
-    }
+    // Same projection battery, deployed as the sharded server would see
+    // it: one cell per accelerator replica (not the mJ-scale demo battery
+    // the live run above used).
+    let pack = BatteryPack::split(&bat, workers.max(1));
+    println!(
+        "  the 10 Ah budget as a per-shard pack: {} cells of {:.0} J each \
+         ({:.0} J total)",
+        pack.cells.len(),
+        pack.cell_energy_j()[0],
+        pack.total_energy_j()
+    );
+    srv.shutdown();
     Ok(())
 }

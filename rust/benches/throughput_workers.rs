@@ -1,21 +1,32 @@
 //! Bench: sharded-engine throughput scaling on the Sim backend.
 //!
 //! Needs no artifacts — two synthetic QONNX profiles ("hi" heavier, "lo"
-//! lighter) are generated with the in-tree testgen. For each shard count
-//! the server is hammered from 8 client threads, and before any number is
-//! reported the run must pass:
+//! lighter) are generated with the in-tree testgen. Three load shapes are
+//! measured at 1/2/4 shards:
 //!
-//! * request conservation — every submit gets exactly one reply;
-//! * counter consistency — per-worker batch counters sum to `batches`,
-//!   and the queue-depth gauge drains back to 0;
+//! * `uniform`        — dispatcher routes to the least-loaded shard;
+//! * `skewed`         — every batch is pinned to shard 0; idle shards must
+//!   steal from its deque to scale at all (the work-stealing hot path);
+//! * `skewed-nosteal` — same pinning with stealing disabled: the control
+//!   showing the skew really serializes on one shard without stealing.
+//!
+//! Before any number is reported each run must pass:
+//!
+//! * request conservation — every submit gets exactly one reply (ids
+//!   unique, counters consistent, queues drained);
 //! * bit-exactness — every reply's logits equal `exec::execute` on the
-//!   same (profile, image), i.e. sharding + executor caching never change
-//!   the integers the FPGA fabric would produce.
+//!   same (profile, image), i.e. sharding + stealing + executor caching
+//!   never change the integers the FPGA fabric would produce.
 //!
-//! Run: `cargo bench --bench throughput_workers [-- <requests>]`
+//! Run: `cargo bench --bench throughput_workers [-- <requests>
+//!       [--json <path>] [--assert-scaling <factor>]]`
+//!
+//! `--json` writes the rows as a JSON array (the CI bench-smoke job
+//! uploads it as an artifact); `--assert-scaling F` additionally requires
+//! skewed-mode 4-shard throughput >= F x 1-shard throughput.
 
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use onnx2hw::bench_harness::Table;
 use onnx2hw::coordinator::{
@@ -23,11 +34,16 @@ use onnx2hw::coordinator::{
     ServerConfig,
 };
 use onnx2hw::dataflow::exec;
+use onnx2hw::json::{self, Value};
 use onnx2hw::qonnx::{self, read_str, QonnxModel, RandModelCfg};
 use onnx2hw::testkit::Rng;
 
 const CLIENTS: usize = 8;
 const N_IMAGES: usize = 32;
+const WINDOW: usize = 32;
+
+/// Reference logits per profile name, per image index.
+type ExpectMap = BTreeMap<String, Vec<Vec<f32>>>;
 
 fn synthetic_pair() -> (QonnxModel, QonnxModel) {
     let mut rng = Rng::new(7);
@@ -48,11 +64,145 @@ fn synthetic_pair() -> (QonnxModel, QonnxModel) {
     (hi, lo)
 }
 
+struct RunResult {
+    mode: &'static str,
+    workers: usize,
+    wall_s: f64,
+    rps: f64,
+    speedup: f64,
+    batches: u64,
+    steals: u64,
+    per_worker: Vec<u64>,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_one(
+    mode: &'static str,
+    workers: usize,
+    requests: usize,
+    hi: &QonnxModel,
+    lo: &QonnxModel,
+    images: &Arc<Vec<Vec<u8>>>,
+    expect: &Arc<ExpectMap>,
+    specs: &[ProfileSpec],
+    base_rps: Option<f64>,
+) -> RunResult {
+    let models: BTreeMap<String, QonnxModel> = [
+        ("hi".to_string(), hi.clone()),
+        ("lo".to_string(), lo.clone()),
+    ]
+    .into_iter()
+    .collect();
+    let factory = move || Ok(Backend::sim_from_models(models.clone()));
+    let manager = ProfileManager::new(ManagerConfig::default(), specs.to_vec());
+    // Effectively infinite battery: this bench isolates throughput; the
+    // adaptation path is exercised by fig4_adaptive and the test suite.
+    let energy = EnergyMonitor::new(1e9);
+    let cfg = ServerConfig {
+        workers,
+        steal: mode != "skewed-nosteal",
+        pin_dispatch_to: if mode == "uniform" { None } else { Some(0) },
+        ..Default::default()
+    };
+    let srv = AdaptiveServer::start(cfg, factory, manager, energy).expect("server");
+
+    let all_ids = Arc::new(Mutex::new(Vec::<u64>::new()));
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..CLIENTS {
+        let client = srv.client();
+        let images = images.clone();
+        let expect = expect.clone();
+        let all_ids = all_ids.clone();
+        handles.push(std::thread::spawn(move || {
+            let ks: Vec<usize> = (c..requests)
+                .step_by(CLIENTS)
+                .map(|i| i % images.len())
+                .collect();
+            let replies =
+                client.classify_pipelined(ks.iter().map(|&k| images[k].clone()), WINDOW);
+            let mut ids = Vec::new();
+            for (&k, reply) in ks.iter().zip(replies) {
+                let resp = reply.expect("reply lost");
+                let want = &expect[&resp.profile][k];
+                assert_eq!(
+                    &resp.logits, want,
+                    "reply for image {k} on '{}' not bit-exact",
+                    resp.profile
+                );
+                ids.push(resp.id);
+            }
+            all_ids.lock().unwrap().extend(ids);
+        }));
+    }
+    for h in handles {
+        h.join().expect("client thread panicked");
+    }
+    let wall = t0.elapsed();
+
+    // conservation + counter consistency
+    let mut ids = all_ids.lock().unwrap().clone();
+    assert_eq!(ids.len(), requests, "dropped or duplicated replies");
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), requests, "duplicate reply ids");
+    assert_eq!(srv.stats.requests.get(), requests as u64);
+    let per_worker: Vec<u64> =
+        srv.stats.worker_batches.iter().map(|c| c.get()).collect();
+    assert_eq!(
+        per_worker.iter().sum::<u64>(),
+        srv.stats.batches.get(),
+        "per-worker batches {per_worker:?} do not sum to total"
+    );
+    assert_eq!(srv.stats.queue_depth.get(), 0, "work queue not drained");
+    for (i, g) in srv.stats.shard_depth.iter().enumerate() {
+        assert_eq!(g.get(), 0, "shard {i} deque not drained");
+    }
+
+    let rps = requests as f64 / wall.as_secs_f64();
+    let result = RunResult {
+        mode,
+        workers,
+        wall_s: wall.as_secs_f64(),
+        rps,
+        speedup: base_rps.map_or(1.0, |b| rps / b),
+        batches: srv.stats.batches.get(),
+        steals: srv.stats.worker_steals.iter().map(|c| c.get()).sum(),
+        per_worker,
+    };
+    srv.shutdown();
+    result
+}
+
 fn main() {
-    let requests: usize = std::env::args()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(512);
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut requests: usize = 512;
+    let mut json_path: Option<String> = None;
+    let mut assert_scaling: Option<f64> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--json" => {
+                i += 1;
+                json_path = Some(args.get(i).expect("--json needs a path").clone());
+            }
+            "--assert-scaling" => {
+                i += 1;
+                assert_scaling = Some(
+                    args.get(i)
+                        .expect("--assert-scaling needs a factor")
+                        .parse()
+                        .expect("--assert-scaling: not a number"),
+                );
+            }
+            other => {
+                requests = other.parse().unwrap_or_else(|_| {
+                    panic!("unexpected argument '{other}' (want a request count)")
+                });
+            }
+        }
+        i += 1;
+    }
 
     let (hi, lo) = synthetic_pair();
     let elems = hi.input_shape.elems();
@@ -65,7 +215,7 @@ fn main() {
             .map(|k| (0..elems).map(|i| ((i * 31 + k * 17) % 256) as u8).collect())
             .collect(),
     );
-    let expect: Arc<BTreeMap<String, Vec<Vec<f32>>>> = Arc::new(
+    let expect: Arc<ExpectMap> = Arc::new(
         [("hi", &hi), ("lo", &lo)]
             .into_iter()
             .map(|(name, model)| {
@@ -98,100 +248,88 @@ fn main() {
         },
     ];
 
-    let mut table = Table::new(&["workers", "wall", "req/s", "speedup", "batches", "per-worker"]);
-    let mut base_rps: Option<f64> = None;
-    for &workers in &[1usize, 2, 4] {
-        let models: BTreeMap<String, QonnxModel> = [
-            ("hi".to_string(), hi.clone()),
-            ("lo".to_string(), lo.clone()),
-        ]
-        .into_iter()
-        .collect();
-        let factory = move || Ok(Backend::sim_from_models(models.clone()));
-        let manager = ProfileManager::new(ManagerConfig::default(), specs.clone());
-        // Effectively infinite battery: this bench isolates throughput; the
-        // adaptation path is exercised by fig4_adaptive and the test suite.
-        let energy = EnergyMonitor::new(1e9);
-        let srv = Arc::new(
-            AdaptiveServer::start(
-                ServerConfig {
-                    workers,
-                    ..Default::default()
-                },
-                factory,
-                manager,
-                energy,
-            )
-            .expect("server"),
-        );
-
-        let t0 = std::time::Instant::now();
-        let mut handles = Vec::new();
-        for c in 0..CLIENTS {
-            let srv = srv.clone();
-            let images = images.clone();
-            let expect = expect.clone();
-            handles.push(std::thread::spawn(move || {
-                let mut served = 0usize;
-                let mut i = c;
-                while i < requests {
-                    let k = i % images.len();
-                    let resp = srv.classify(images[k].clone()).expect("reply lost");
-                    let want = &expect[&resp.profile][k];
-                    assert_eq!(
-                        &resp.logits, want,
-                        "reply for image {k} on '{}' not bit-exact",
-                        resp.profile
-                    );
-                    served += 1;
-                    i += CLIENTS;
-                }
-                served
-            }));
-        }
-        let served: usize = handles
-            .into_iter()
-            .map(|h| h.join().expect("client thread panicked"))
-            .sum();
-        let wall = t0.elapsed();
-
-        // conservation + counter consistency
-        assert_eq!(served, requests, "dropped or duplicated replies");
-        assert_eq!(srv.stats.requests.get(), requests as u64);
-        let per_worker: Vec<u64> =
-            srv.stats.worker_batches.iter().map(|c| c.get()).collect();
-        assert_eq!(
-            per_worker.iter().sum::<u64>(),
-            srv.stats.batches.get(),
-            "per-worker batches {per_worker:?} do not sum to total"
-        );
-        assert_eq!(srv.stats.queue_depth.get(), 0, "work queue not drained");
-
-        let rps = requests as f64 / wall.as_secs_f64();
-        let speedup = match base_rps {
-            None => {
-                base_rps = Some(rps);
-                1.0
+    let mut table = Table::new(&[
+        "mode", "workers", "wall", "req/s", "speedup", "batches", "steals", "per-worker",
+    ]);
+    let mut results: Vec<RunResult> = Vec::new();
+    for &mode in &["uniform", "skewed", "skewed-nosteal"] {
+        let mut base_rps: Option<f64> = None;
+        for &workers in &[1usize, 2, 4] {
+            let r = run_one(
+                mode, workers, requests, &hi, &lo, &images, &expect, &specs, base_rps,
+            );
+            if base_rps.is_none() {
+                base_rps = Some(r.rps);
             }
-            Some(b) => rps / b,
-        };
-        table.row(&[
-            workers.to_string(),
-            format!("{:.3}s", wall.as_secs_f64()),
-            format!("{rps:.0}"),
-            format!("x{speedup:.2}"),
-            srv.stats.batches.get().to_string(),
-            format!("{per_worker:?}"),
-        ]);
-
-        let srv = Arc::try_unwrap(srv).ok().expect("clients joined");
-        srv.shutdown();
+            table.row(&[
+                r.mode.to_string(),
+                r.workers.to_string(),
+                format!("{:.3}s", r.wall_s),
+                format!("{:.0}", r.rps),
+                format!("x{:.2}", r.speedup),
+                r.batches.to_string(),
+                r.steals.to_string(),
+                format!("{:?}", r.per_worker),
+            ]);
+            results.push(r);
+        }
     }
 
     println!(
-        "== sharded engine throughput (Sim backend, {CLIENTS} clients, {requests} requests) ==\n"
+        "== sharded engine throughput (Sim backend, {CLIENTS} async clients x \
+         window {WINDOW}, {requests} requests) ==\n"
     );
     println!("{}", table.render());
-    println!("conservation, counter consistency, and bit-exactness vs exec::execute");
-    println!("asserted on every reply before any row above was reported.");
+    println!("conservation and bit-exactness vs exec::execute asserted on every");
+    println!("reply before any row above was reported.");
+
+    if let Some(path) = &json_path {
+        let rows = Value::Array(
+            results
+                .iter()
+                .map(|r| {
+                    Value::obj(vec![
+                        ("mode", r.mode.into()),
+                        ("workers", r.workers.into()),
+                        ("requests", requests.into()),
+                        ("clients", CLIENTS.into()),
+                        ("wall_s", r.wall_s.into()),
+                        ("req_per_s", r.rps.into()),
+                        ("speedup_vs_1_shard", r.speedup.into()),
+                        ("batches", (r.batches as i64).into()),
+                        ("steals", (r.steals as i64).into()),
+                        (
+                            "per_worker_batches",
+                            Value::Array(
+                                r.per_worker.iter().map(|&b| (b as i64).into()).collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        std::fs::write(path, json::to_string_pretty(&rows)).expect("write json");
+        println!("wrote {} rows to {path}", results.len());
+    }
+
+    if let Some(factor) = assert_scaling {
+        let rps_of = |mode: &str, workers: usize| {
+            results
+                .iter()
+                .find(|r| r.mode == mode && r.workers == workers)
+                .map(|r| r.rps)
+                .expect("mode/worker row present")
+        };
+        let one = rps_of("skewed", 1);
+        let four = rps_of("skewed", 4);
+        assert!(
+            four >= factor * one,
+            "skewed 4-shard throughput {four:.0} req/s < {factor} x \
+             1-shard {one:.0} req/s: work stealing failed to rebalance"
+        );
+        println!(
+            "scaling gate passed: skewed 4-shard = x{:.2} of 1-shard (>= {factor})",
+            four / one
+        );
+    }
 }

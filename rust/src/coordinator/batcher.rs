@@ -3,11 +3,17 @@
 //! The classic serving trade-off: bigger batches amortize dispatch overhead
 //! (the AOT artifacts include a batch-8 variant), a deadline bounds the
 //! latency a lonely request can pay.
+//!
+//! The intake channel carries [`Submission`]s rather than bare requests:
+//! the `Shutdown` sentinel ends batching deterministically even while
+//! detached client handles still hold `Sender` clones. Requests sent before
+//! the sentinel are drained first (channel order); the batch being formed
+//! when the sentinel arrives is still delivered.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use super::request::ClassifyRequest;
+use super::request::{ClassifyRequest, Submission};
 
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
@@ -27,41 +33,56 @@ impl Default for BatcherConfig {
     }
 }
 
-/// Pulls from the request channel, forming batches.
+/// Pulls from the submission channel, forming batches.
 pub struct DynamicBatcher {
     cfg: BatcherConfig,
-    rx: mpsc::Receiver<ClassifyRequest>,
+    rx: mpsc::Receiver<Submission>,
+    done: bool,
 }
 
 impl DynamicBatcher {
-    pub fn new(cfg: BatcherConfig, rx: mpsc::Receiver<ClassifyRequest>) -> Self {
-        DynamicBatcher { cfg, rx }
+    pub fn new(cfg: BatcherConfig, rx: mpsc::Receiver<Submission>) -> Self {
+        DynamicBatcher {
+            cfg,
+            rx,
+            done: false,
+        }
     }
 
-    /// Block for the next batch. Returns `None` when the channel is closed
-    /// and drained (shutdown).
-    pub fn next_batch(&self) -> Option<Vec<ClassifyRequest>> {
+    /// Block for the next batch. Returns `None` once the channel is closed
+    /// and drained or the shutdown sentinel has been consumed.
+    pub fn next_batch(&mut self) -> Option<Vec<ClassifyRequest>> {
+        if self.done {
+            return None;
+        }
         // Block for the first request.
-        let first = self.rx.recv().ok()?;
+        let first = match self.rx.recv() {
+            Ok(Submission::Request(r)) => r,
+            Ok(Submission::Shutdown) | Err(_) => {
+                self.done = true;
+                return None;
+            }
+        };
         let deadline = Instant::now() + self.cfg.max_wait;
         let mut batch = vec![first];
         // Drain whatever is already queued without waiting (burst pickup).
-        while batch.len() < self.cfg.max_batch {
+        while batch.len() < self.cfg.max_batch && !self.done {
             match self.rx.try_recv() {
-                Ok(req) => batch.push(req),
+                Ok(Submission::Request(r)) => batch.push(r),
+                Ok(Submission::Shutdown) => self.done = true,
                 Err(_) => break,
             }
         }
         // Then wait out the deadline only if the batch is not full yet.
-        while batch.len() < self.cfg.max_batch {
+        while batch.len() < self.cfg.max_batch && !self.done {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
             match self.rx.recv_timeout(deadline - now) {
-                Ok(req) => batch.push(req),
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                Ok(Submission::Request(r)) => batch.push(r),
+                Ok(Submission::Shutdown) => self.done = true,
+                Err(_) => break,
             }
         }
         Some(batch)
@@ -73,15 +94,18 @@ mod tests {
     use super::*;
     use std::sync::mpsc;
 
-    fn req(id: u64) -> (ClassifyRequest, mpsc::Receiver<super::super::ClassifyResponse>) {
+    fn req(id: u64) -> (Submission, mpsc::Receiver<super::super::ClassifyResponse>) {
         let (tx, rx) = mpsc::channel();
-        (ClassifyRequest::new(id, vec![0u8; 4], tx), rx)
+        (
+            Submission::Request(ClassifyRequest::new(id, vec![0u8; 4], tx)),
+            rx,
+        )
     }
 
     #[test]
     fn batches_up_to_max() {
         let (tx, rx) = mpsc::channel();
-        let b = DynamicBatcher::new(
+        let mut b = DynamicBatcher::new(
             BatcherConfig {
                 max_batch: 3,
                 max_wait: Duration::from_millis(50),
@@ -107,7 +131,7 @@ mod tests {
     #[test]
     fn deadline_flushes_partial_batch() {
         let (tx, rx) = mpsc::channel();
-        let b = DynamicBatcher::new(
+        let mut b = DynamicBatcher::new(
             BatcherConfig {
                 max_batch: 8,
                 max_wait: Duration::from_millis(5),
@@ -124,9 +148,36 @@ mod tests {
 
     #[test]
     fn closed_channel_returns_none() {
-        let (tx, rx) = mpsc::channel::<ClassifyRequest>();
+        let (tx, rx) = mpsc::channel::<Submission>();
         drop(tx);
-        let b = DynamicBatcher::new(BatcherConfig::default(), rx);
+        let mut b = DynamicBatcher::new(BatcherConfig::default(), rx);
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn shutdown_sentinel_flushes_queued_then_ends() {
+        // Requests queued before the sentinel are still batched; the
+        // sentinel ends batching even though `tx` stays alive (the detached
+        // client-handle case).
+        let (tx, rx) = mpsc::channel();
+        let mut b = DynamicBatcher::new(
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(50),
+            },
+            rx,
+        );
+        let mut replies = Vec::new();
+        for i in 0..3 {
+            let (r, keep) = req(i);
+            replies.push(keep);
+            tx.send(r).unwrap();
+        }
+        tx.send(Submission::Shutdown).unwrap();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 3);
+        assert!(b.next_batch().is_none(), "sentinel must end batching");
+        assert!(b.next_batch().is_none(), "done state must be sticky");
+        drop(tx);
     }
 }

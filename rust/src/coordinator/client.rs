@@ -1,0 +1,129 @@
+//! Async submit/await client API in front of the mpsc spine.
+//!
+//! [`ClientHandle`] is a cheap, cloneable, `Send` handle detached from the
+//! server value: callers keep a pipeline of in-flight [`Ticket`]s instead
+//! of blocking a thread per request.
+//!
+//! ```no_run
+//! # use onnx2hw::coordinator::*;
+//! # fn demo(srv: &AdaptiveServer, images: Vec<Vec<u8>>) -> anyhow::Result<()> {
+//! let client = srv.client();
+//! let tickets = client.submit_many(images); // returns immediately
+//! for t in tickets {
+//!     let reply = t.await_reply()?; // overlap: later requests already execute
+//!     println!("#{} -> class {} via {}", reply.id, reply.pred, reply.profile);
+//! }
+//! # Ok(()) }
+//! ```
+//!
+//! Shutdown safety: the server closes via an explicit sentinel, so
+//! outstanding handles never block shutdown; submissions after shutdown
+//! produce tickets whose `await_reply` returns a clean `Err`.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::request::{ClassifyRequest, ClassifyResponse, Submission};
+
+/// A pending reply. Dropping the ticket drops the reply channel; the
+/// serving shard's send just fails silently (the request is still counted).
+pub struct Ticket {
+    id: u64,
+    rx: mpsc::Receiver<ClassifyResponse>,
+}
+
+impl Ticket {
+    pub(crate) fn new(id: u64, rx: mpsc::Receiver<ClassifyResponse>) -> Self {
+        Ticket { id, rx }
+    }
+
+    /// Request id this ticket resolves (matches the reply's `id`).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the reply arrives. Errs if the server dropped the
+    /// request (shutdown before execution).
+    pub fn await_reply(self) -> Result<ClassifyResponse> {
+        Ok(self.rx.recv()?)
+    }
+
+    /// Like [`await_reply`](Self::await_reply) with a deadline.
+    pub fn await_reply_timeout(self, timeout: Duration) -> Result<ClassifyResponse> {
+        Ok(self.rx.recv_timeout(timeout)?)
+    }
+
+    /// Non-blocking poll: `Some` once the reply is in.
+    pub fn try_reply(&self) -> Option<ClassifyResponse> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// The one submission path shared by [`ClientHandle`] and the server's own
+/// `submit`: allocate an id, send the request, hand back the ticket. A
+/// failed send (server gone) drops the reply sender, so awaiting the ticket
+/// reads a clean Err instead of hanging.
+pub(crate) fn submit_via(
+    tx: &mpsc::Sender<Submission>,
+    next_id: &AtomicU64,
+    image: Vec<u8>,
+) -> Ticket {
+    let (rtx, rrx) = mpsc::channel();
+    let id = next_id.fetch_add(1, Ordering::Relaxed);
+    let _ = tx.send(Submission::Request(ClassifyRequest::new(id, image, rtx)));
+    Ticket::new(id, rrx)
+}
+
+/// Cloneable submit handle onto the adaptive server.
+#[derive(Clone)]
+pub struct ClientHandle {
+    pub(crate) tx: mpsc::Sender<Submission>,
+    pub(crate) next_id: Arc<AtomicU64>,
+}
+
+impl ClientHandle {
+    /// Enqueue one image without blocking; the returned [`Ticket`] resolves
+    /// to the reply.
+    pub fn submit(&self, image: Vec<u8>) -> Ticket {
+        submit_via(&self.tx, &self.next_id, image)
+    }
+
+    /// Enqueue a burst; tickets come back in submission order.
+    pub fn submit_many(&self, images: impl IntoIterator<Item = Vec<u8>>) -> Vec<Ticket> {
+        images.into_iter().map(|img| self.submit(img)).collect()
+    }
+
+    /// Synchronous convenience: submit and wait.
+    pub fn classify(&self, image: Vec<u8>) -> Result<ClassifyResponse> {
+        self.submit(image).await_reply()
+    }
+
+    /// Pipelined classify: keep up to `window` requests in flight, awaiting
+    /// the oldest as new ones are submitted. Results come back in
+    /// submission order (one per input — zip them against whatever tags the
+    /// caller kept), so a caller gets request overlap without hand-rolling
+    /// the ticket window.
+    pub fn classify_pipelined(
+        &self,
+        images: impl IntoIterator<Item = Vec<u8>>,
+        window: usize,
+    ) -> Vec<Result<ClassifyResponse>> {
+        let window = window.max(1);
+        let mut out = Vec::new();
+        let mut inflight = VecDeque::new();
+        for img in images {
+            inflight.push_back(self.submit(img));
+            if inflight.len() >= window {
+                out.push(inflight.pop_front().unwrap().await_reply());
+            }
+        }
+        for t in inflight {
+            out.push(t.await_reply());
+        }
+        out
+    }
+}

@@ -22,11 +22,14 @@ pub struct ProfileSpec {
     pub latency_us: f64,
 }
 
-/// Simulated battery the manager monitors (energy in joules).
+/// Simulated battery the manager monitors (energy in joules), optionally
+/// carrying a power cap — the per-accelerator constraint of a sharded
+/// deployment where each replica has its own supply rail.
 #[derive(Debug)]
 pub struct EnergyMonitor {
     capacity_j: f64,
     remaining_j: Mutex<f64>,
+    power_cap_mw: Option<f64>,
 }
 
 impl EnergyMonitor {
@@ -34,7 +37,25 @@ impl EnergyMonitor {
         EnergyMonitor {
             capacity_j,
             remaining_j: Mutex::new(capacity_j),
+            power_cap_mw: None,
         }
+    }
+
+    /// Battery plus a hard power cap (mW): profiles drawing more are never
+    /// selected while any capped profile exists.
+    pub fn with_power_cap(capacity_j: f64, cap_mw: f64) -> Self {
+        EnergyMonitor {
+            power_cap_mw: Some(cap_mw),
+            ..Self::new(capacity_j)
+        }
+    }
+
+    pub fn capacity_j(&self) -> f64 {
+        self.capacity_j
+    }
+
+    pub fn power_cap_mw(&self) -> Option<f64> {
+        self.power_cap_mw
     }
 
     /// Drain energy for one classification: P * t.
@@ -96,7 +117,8 @@ impl ProfileManager {
     /// `profiles` must be non-empty; order does not matter.
     pub fn new(cfg: ManagerConfig, profiles: Vec<ProfileSpec>) -> Self {
         assert!(!profiles.is_empty(), "ProfileManager needs >= 1 profile");
-        let start = Self::most_accurate_meeting(&profiles, cfg.accuracy_floor);
+        let all: Vec<usize> = (0..profiles.len()).collect();
+        let start = Self::most_accurate_meeting(&profiles, &all, cfg.accuracy_floor);
         ProfileManager {
             cfg,
             profiles,
@@ -104,60 +126,96 @@ impl ProfileManager {
         }
     }
 
-    fn most_accurate_meeting(profiles: &[ProfileSpec], floor: f64) -> usize {
+    /// Clone policy + profile table with *fresh, independent* hysteresis
+    /// state. Each worker shard forks the shared manager so its adaptation
+    /// step tracks its own battery, not a global one.
+    pub fn fork(&self) -> ProfileManager {
+        ProfileManager {
+            cfg: self.cfg.clone(),
+            profiles: self.profiles.clone(),
+            current: Mutex::new(*self.current.lock().unwrap()),
+        }
+    }
+
+    fn most_accurate_meeting(
+        profiles: &[ProfileSpec],
+        allowed: &[usize],
+        floor: f64,
+    ) -> usize {
         // Most accurate among floor-meeting, else most accurate overall.
         let mut best: Option<usize> = None;
-        for (i, p) in profiles.iter().enumerate() {
+        for &i in allowed {
+            let p = &profiles[i];
             if p.accuracy >= floor
-                && best.is_none_or(|b| p.accuracy > profiles[b].accuracy)
+                && best.is_none_or(|b: usize| p.accuracy > profiles[b].accuracy)
             {
                 best = Some(i);
             }
         }
         best.unwrap_or_else(|| {
-            profiles
+            allowed
                 .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.accuracy.total_cmp(&b.1.accuracy))
-                .map(|(i, _)| i)
+                .copied()
+                .max_by(|&a, &b| profiles[a].accuracy.total_cmp(&profiles[b].accuracy))
                 .unwrap()
         })
     }
 
-    fn lowest_power_meeting(profiles: &[ProfileSpec], floor: f64) -> usize {
+    fn lowest_power_meeting(
+        profiles: &[ProfileSpec],
+        allowed: &[usize],
+        floor: f64,
+    ) -> usize {
         let mut best: Option<usize> = None;
-        for (i, p) in profiles.iter().enumerate() {
+        for &i in allowed {
+            let p = &profiles[i];
             if p.accuracy >= floor
-                && best.is_none_or(|b| p.power_mw < profiles[b].power_mw)
+                && best.is_none_or(|b: usize| p.power_mw < profiles[b].power_mw)
             {
                 best = Some(i);
             }
         }
         // Negotiate the floor away if nothing meets it: lowest power overall.
         best.unwrap_or_else(|| {
-            profiles
+            allowed
                 .iter()
-                .enumerate()
-                .min_by(|a, b| a.1.power_mw.total_cmp(&b.1.power_mw))
-                .map(|(i, _)| i)
+                .copied()
+                .min_by(|&a, &b| profiles[a].power_mw.total_cmp(&profiles[b].power_mw))
                 .unwrap()
         })
     }
 
-    /// Decide the profile for the current energy state.
+    /// Decide the profile for the current energy state. A power cap on the
+    /// monitor restricts the candidate set to profiles within the cap,
+    /// unless none qualifies (the cap, like the accuracy floor, can be
+    /// negotiated away rather than leaving nothing to run).
     pub fn select(&self, energy: &EnergyMonitor) -> &ProfileSpec {
         let frac = energy.remaining_fraction();
         let mut cur = self.current.lock().unwrap();
-        let hi_idx = Self::most_accurate_meeting(&self.profiles, self.cfg.accuracy_floor);
-        let lo_idx = Self::lowest_power_meeting(&self.profiles, self.cfg.accuracy_floor);
+        let allowed: Vec<usize> = match energy.power_cap_mw() {
+            Some(cap) if self.profiles.iter().any(|p| p.power_mw <= cap) => self
+                .profiles
+                .iter()
+                .enumerate()
+                .filter(|(_, p)| p.power_mw <= cap)
+                .map(|(i, _)| i)
+                .collect(),
+            _ => (0..self.profiles.len()).collect(),
+        };
+        let hi_idx =
+            Self::most_accurate_meeting(&self.profiles, &allowed, self.cfg.accuracy_floor);
+        let lo_idx =
+            Self::lowest_power_meeting(&self.profiles, &allowed, self.cfg.accuracy_floor);
         let t = self.cfg.low_energy_threshold;
         let h = self.cfg.hysteresis;
         let target = if frac < t - h {
             lo_idx
         } else if frac > t + h {
             hi_idx
-        } else {
+        } else if allowed.contains(&*cur) {
             *cur // inside the hysteresis band: hold
+        } else {
+            lo_idx // held profile no longer within the cap
         };
         *cur = target;
         &self.profiles[target]
@@ -295,6 +353,43 @@ mod tests {
         // draining a dead battery stays well-defined
         e.drain(1000.0, 1e6);
         assert_eq!(e.remaining_fraction(), 0.0);
+    }
+
+    #[test]
+    fn power_cap_excludes_hot_profiles() {
+        let mgr = ProfileManager::new(ManagerConfig::default(), specs());
+        // Cap below A8-W8 (142 mW) but above Mixed (135 mW): even on a full
+        // battery, only Mixed qualifies.
+        let capped = EnergyMonitor::with_power_cap(100.0, 140.0);
+        assert_eq!(capped.power_cap_mw(), Some(140.0));
+        assert_eq!(mgr.select(&capped).name, "Mixed");
+        // Cap below every profile: negotiated away (something must run).
+        let mgr2 = ProfileManager::new(ManagerConfig::default(), specs());
+        let tiny_cap = EnergyMonitor::with_power_cap(100.0, 1.0);
+        assert_eq!(mgr2.select(&tiny_cap).name, "A8-W8");
+    }
+
+    #[test]
+    fn fork_gives_independent_hysteresis_state() {
+        let mgr = ProfileManager::new(ManagerConfig::default(), specs());
+        let fork = mgr.fork();
+        assert_eq!(fork.current().name, mgr.current().name);
+        assert_eq!(fork.profiles(), mgr.profiles());
+        // Drain only the fork's battery: the fork switches, the original
+        // (selecting against a full battery) does not.
+        let low = EnergyMonitor::new(100.0);
+        low.drain(1000.0, 60.0 * 1e6);
+        let full = EnergyMonitor::new(100.0);
+        assert_eq!(fork.select(&low).name, "Mixed");
+        assert_eq!(mgr.select(&full).name, "A8-W8");
+        assert_eq!(mgr.current().name, "A8-W8");
+        assert_eq!(fork.current().name, "Mixed");
+    }
+
+    #[test]
+    fn capacity_getter_reports_construction_value() {
+        assert_eq!(EnergyMonitor::new(2.5).capacity_j(), 2.5);
+        assert_eq!(EnergyMonitor::new(2.5).power_cap_mw(), None);
     }
 
     #[test]

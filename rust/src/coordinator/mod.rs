@@ -12,23 +12,28 @@
 //!   (threshold policy with hysteresis on the battery level, never
 //!   violating the accuracy floor while energy allows).
 //!
-//! Requests flow through a dynamic batcher (channel-fed, size/deadline
-//! bounded) into a dispatcher thread that runs the adaptation step once per
-//! batch and fans batches out to a configurable pool of worker shards. Each
-//! shard owns its own backend replica — either the PJRT runtime (AOT
-//! artifacts) or the integer dataflow engine (bit-exact simulator, with a
-//! per-profile cached executor), selected at construction — while the
-//! Profile Manager and Energy Monitor remain the single shared adaptation
-//! state. See `server.rs` for the pipeline diagram.
+//! Requests flow through the async client API ([`ClientHandle`] /
+//! [`Ticket`]) into a dynamic batcher, then a dispatcher thread routes each
+//! batch to the least-loaded worker shard's local deque; idle shards steal
+//! from the busiest. Each shard owns its own backend replica — either the
+//! PJRT runtime (AOT artifacts) or the integer dataflow engine (bit-exact
+//! simulator, with a per-profile cached executor) — *and its own energy
+//! monitor*: the adaptation step runs per shard, so a replica running hot
+//! degrades to a cheaper profile while the others stay exact. See
+//! `server.rs` for the pipeline diagram and `steal.rs` for the deque
+//! discipline.
 
 mod backend;
 mod batcher;
+mod client;
 mod manager;
 mod request;
 mod server;
+mod steal;
 
 pub use backend::{Backend, BackendKind};
 pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use client::{ClientHandle, Ticket};
 pub use manager::{EnergyMonitor, ManagerConfig, ProfileManager, ProfileSpec};
-pub use request::{ClassifyRequest, ClassifyResponse};
+pub use request::{ClassifyRequest, ClassifyResponse, Submission};
 pub use server::{AdaptiveServer, ServerConfig, ServerStats};

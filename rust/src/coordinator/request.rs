@@ -12,14 +12,26 @@ pub struct ClassifyRequest {
     pub reply: mpsc::Sender<ClassifyResponse>,
 }
 
+/// What clients push into the server's intake channel. The explicit
+/// `Shutdown` sentinel lets the server close deterministically even while
+/// detached [`super::ClientHandle`]s still hold `Sender` clones — without
+/// it, shutdown would block until every handle was dropped.
+pub enum Submission {
+    Request(ClassifyRequest),
+    Shutdown,
+}
+
 /// The classification answer.
 #[derive(Debug, Clone)]
 pub struct ClassifyResponse {
     pub id: u64,
     pub pred: usize,
     pub logits: Vec<f32>,
-    /// Profile that served this request.
+    /// Profile that served this request (chosen by the serving shard's own
+    /// adaptation step).
     pub profile: String,
+    /// Worker shard that executed the batch (its battery paid for this).
+    pub shard: usize,
     /// End-to-end latency (queue + batch + execute).
     pub latency_us: u64,
 }

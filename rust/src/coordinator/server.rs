@@ -1,38 +1,42 @@
 //! The adaptive inference server: sharded request loop + profile management.
 //!
-//! Architecture (one dispatcher, N worker shards):
+//! Architecture (one dispatcher, N worker shards, work stealing):
 //!
 //! ```text
-//! clients --mpsc--> DynamicBatcher --(dispatcher thread)--> work queue
-//!                        |  select() on shared ProfileManager/EnergyMonitor
-//!                        v
-//!              WorkItem { batch, profile spec }
-//!                        |
-//!          +-------------+-------------+
-//!          v             v             v
-//!      worker 0      worker 1  ...  worker N-1   (each owns a Backend replica)
+//! clients --ClientHandle/Ticket--> mpsc --> DynamicBatcher
+//!                                               | (dispatcher thread)
+//!                                               v  push to least-loaded
+//!                  +---------------+---------------+
+//!                  v               v               v
+//!              deque 0         deque 1    ...  deque N-1
+//!                  |               |               |
+//!              worker 0 <----- steal ------->  worker N-1
+//!              battery 0       battery 1       battery N-1
 //! ```
 //!
-//! The dispatcher owns the batcher and performs the adaptation step once per
-//! batch — the Profile Manager re-evaluates the energy state and may switch
-//! the active profile (an O(1) reconfiguration — the MDC config word). The
-//! chosen [`ProfileSpec`] rides along in the [`WorkItem`], so workers never
-//! touch the shared manager. Workers pull from a shared queue (idle shards
-//! pick up the next batch first), execute on their own backend replica, and
-//! reply per request. Backends are constructed *inside* each worker thread
-//! via the factory — PJRT handles are not `Send`.
+//! Each worker shard owns a Backend replica, a local work deque, *and its
+//! own energy monitor* (per-accelerator battery / power cap). The
+//! adaptation step runs per shard, per batch: a shard running hot degrades
+//! to a cheaper approximate profile while the others stay exact — the
+//! profile rides on the reply so clients observe which fidelity served
+//! them. Idle shards steal from the back of the busiest deque, so a skewed
+//! arrival pattern still saturates the pool without a shared global queue.
+//! Backends are constructed *inside* each worker thread via the factory —
+//! PJRT handles are not `Send`.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::backend::Backend;
 use super::batcher::{BatcherConfig, DynamicBatcher};
-use super::manager::{EnergyMonitor, ProfileManager, ProfileSpec};
-use super::request::{ClassifyRequest, ClassifyResponse};
-use crate::metrics::{Counter, EventLog, Gauge, Histogram};
+use super::client::{ClientHandle, Ticket};
+use super::manager::{EnergyMonitor, ProfileManager};
+use super::request::{ClassifyRequest, ClassifyResponse, Submission};
+use super::steal::ShardDeques;
+use crate::metrics::{Counter, EventLog, FloatGauge, Gauge, Histogram};
 
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
@@ -40,6 +44,17 @@ pub struct ServerConfig {
     /// Number of worker shards, each owning one backend replica (clamped to
     /// at least 1).
     pub workers: usize,
+    /// Per-shard battery capacities in joules. `None` splits the global
+    /// monitor's capacity evenly across shards; one entry broadcasts to
+    /// every shard; `workers` entries set each shard explicitly.
+    pub shard_capacity_j: Option<Vec<f64>>,
+    /// Per-shard power cap in mW (falls back to the global monitor's cap).
+    pub shard_power_cap_mw: Option<f64>,
+    /// Work stealing: idle shards pull from the back of the busiest deque.
+    pub steal: bool,
+    /// Route every batch to one shard instead of the least-loaded one
+    /// (tests/benches: manufactures a skewed arrival pattern).
+    pub pin_dispatch_to: Option<usize>,
 }
 
 impl Default for ServerConfig {
@@ -47,6 +62,10 @@ impl Default for ServerConfig {
         ServerConfig {
             batcher: BatcherConfig::default(),
             workers: 1,
+            shard_capacity_j: None,
+            shard_power_cap_mw: None,
+            steal: true,
+            pin_dispatch_to: None,
         }
     }
 }
@@ -64,13 +83,20 @@ impl ServerConfig {
 pub struct ServerStats {
     pub requests: Counter,
     pub batches: Counter,
+    /// Profile switches summed over every shard's adaptation step.
     pub switches: Counter,
     pub latency: Histogram,
     pub events: EventLog,
-    /// Batches handed to the work queue but not yet picked up by a shard.
+    /// Batches enqueued but not yet picked up, summed over all shards.
     pub queue_depth: Gauge,
     /// Batches executed per worker shard; the entries sum to `batches`.
     pub worker_batches: Vec<Counter>,
+    /// Batches each shard stole from another shard's deque.
+    pub worker_steals: Vec<Counter>,
+    /// Backlog currently sitting in each shard's deque.
+    pub shard_depth: Vec<Gauge>,
+    /// Remaining battery fraction per shard (updated after each batch).
+    pub shard_battery: Vec<FloatGauge>,
 }
 
 impl ServerStats {
@@ -83,6 +109,9 @@ impl ServerStats {
             events: EventLog::default(),
             queue_depth: Gauge::default(),
             worker_batches: (0..n).map(|_| Counter::default()).collect(),
+            worker_steals: (0..n).map(|_| Counter::default()).collect(),
+            shard_depth: (0..n).map(|_| Gauge::default()).collect(),
+            shard_battery: (0..n).map(|_| FloatGauge::new(1.0)).collect(),
         }
     }
 }
@@ -93,25 +122,65 @@ impl Default for ServerStats {
     }
 }
 
-/// One unit of work: a coalesced batch plus the profile the dispatcher's
-/// adaptation step chose for it.
-struct WorkItem {
-    batch: Vec<ClassifyRequest>,
-    spec: ProfileSpec,
+/// Decrements the live-worker count when a worker thread exits — including
+/// by panic (e.g. a malformed image tripping an executor assert). The last
+/// worker out fails the pool: after a graceful shutdown the deques are
+/// already empty, but after a panic cascade this drops any stranded
+/// batches so their reply channels release and clients read Err instead of
+/// hanging forever.
+struct LiveGuard {
+    live: Arc<AtomicUsize>,
+    pool: Arc<ShardDeques<Vec<ClassifyRequest>>>,
+    stats: Arc<ServerStats>,
+}
+
+impl Drop for LiveGuard {
+    fn drop(&mut self) {
+        if self.live.fetch_sub(1, Ordering::SeqCst) == 1 {
+            for (i, dropped) in self.pool.fail().into_iter().enumerate() {
+                self.stats.queue_depth.add(-(dropped as i64));
+                self.stats.shard_depth[i].add(-(dropped as i64));
+            }
+        }
+    }
+}
+
+/// Flags its shard dead if the worker leaves abnormally (panic). Disarmed
+/// on the clean-shutdown exit path; armed drops mark the shard so routing
+/// avoids it and — with stealing off — its stranded backlog is released.
+struct ShardGuard {
+    pool: Arc<ShardDeques<Vec<ClassifyRequest>>>,
+    stats: Arc<ServerStats>,
+    wid: usize,
+    armed: bool,
+}
+
+impl Drop for ShardGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            let dropped = self.pool.mark_dead(self.wid);
+            self.stats.queue_depth.add(-(dropped as i64));
+            self.stats.shard_depth[self.wid].add(-(dropped as i64));
+            self.stats
+                .events
+                .push(format!("worker {} died; shard marked dead", self.wid));
+        }
+    }
 }
 
 /// Handle to the running server.
 pub struct AdaptiveServer {
-    /// Client-facing queue; `None` once closed. Taking it is the single,
-    /// deterministic close of the request channel (the old code dropped a
-    /// fresh clone — a no-op — and relied on a `mem::replace` dance).
-    tx: Option<mpsc::Sender<ClassifyRequest>>,
+    /// Client-facing queue; `None` once closed. Closing sends the explicit
+    /// `Shutdown` sentinel, so shutdown stays deterministic even while
+    /// detached [`ClientHandle`]s hold `Sender` clones.
+    tx: Option<mpsc::Sender<Submission>>,
     dispatcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     pub stats: Arc<ServerStats>,
-    pub energy: Arc<EnergyMonitor>,
+    /// One energy monitor per shard (per-accelerator battery / power cap).
+    pub shard_energy: Vec<Arc<EnergyMonitor>>,
     pub manager: Arc<ProfileManager>,
-    next_id: AtomicU64,
+    next_id: Arc<AtomicU64>,
 }
 
 impl AdaptiveServer {
@@ -121,6 +190,11 @@ impl AdaptiveServer {
     /// profiles, artifact problems) from any shard are reported back
     /// synchronously before `start` returns. Every backend must contain
     /// every profile the manager can select.
+    ///
+    /// `energy` describes the *global* budget: its capacity is split evenly
+    /// into per-shard monitors unless `cfg.shard_capacity_j` overrides the
+    /// split, and its power cap (if any) carries over to every shard unless
+    /// `cfg.shard_power_cap_mw` overrides it.
     pub fn start(
         cfg: ServerConfig,
         backend_factory: impl Fn() -> Result<Backend> + Send + Sync + 'static,
@@ -128,30 +202,60 @@ impl AdaptiveServer {
         energy: EnergyMonitor,
     ) -> Result<Self> {
         let n_workers = cfg.workers.max(1);
-        let (tx, rx) = mpsc::channel::<ClassifyRequest>();
-        let (work_tx, work_rx) = mpsc::channel::<WorkItem>();
-        // Multi-consumer work queue: shards contend on the mutex only while
-        // *waiting*, never while executing a batch.
-        let work_rx = Arc::new(Mutex::new(work_rx));
+        let caps: Vec<f64> = match &cfg.shard_capacity_j {
+            None => vec![energy.capacity_j() / n_workers as f64; n_workers],
+            Some(v) if v.len() == 1 => vec![v[0]; n_workers],
+            Some(v) if v.len() == n_workers => v.clone(),
+            Some(v) => bail!(
+                "shard_capacity_j needs 1 or {n_workers} entries, got {}",
+                v.len()
+            ),
+        };
+        let cap_mw = cfg.shard_power_cap_mw.or(energy.power_cap_mw());
+        let shard_energy: Vec<Arc<EnergyMonitor>> = caps
+            .iter()
+            .map(|&c| {
+                Arc::new(match cap_mw {
+                    Some(cap) => EnergyMonitor::with_power_cap(c, cap),
+                    None => EnergyMonitor::new(c),
+                })
+            })
+            .collect();
+
+        let (tx, rx) = mpsc::channel::<Submission>();
+        let pool: Arc<ShardDeques<Vec<ClassifyRequest>>> =
+            Arc::new(ShardDeques::new(n_workers, cfg.steal));
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let stats = Arc::new(ServerStats::for_workers(n_workers));
-        let energy = Arc::new(energy);
         let manager = Arc::new(manager);
         let factory = Arc::new(backend_factory);
         let profile_names: Vec<String> =
             manager.profiles().iter().map(|p| p.name.clone()).collect();
+        for (gauge, monitor) in stats.shard_battery.iter().zip(&shard_energy) {
+            gauge.set(monitor.remaining_fraction());
+        }
 
+        let live = Arc::new(AtomicUsize::new(n_workers));
         let mut workers = Vec::with_capacity(n_workers);
-        for wid in 0..n_workers {
+        for (wid, monitor) in shard_energy.iter().enumerate() {
             let factory = factory.clone();
-            let work_rx = work_rx.clone();
+            let pool = pool.clone();
             let ready_tx = ready_tx.clone();
             let w_stats = stats.clone();
-            let w_energy = energy.clone();
+            let w_energy = monitor.clone();
+            let w_live = live.clone();
+            // Fork the shared manager: same policy + profile table, but
+            // independent hysteresis state driven by this shard's battery.
+            let selector = manager.fork();
             let names = profile_names.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("adaptive-worker-{wid}"))
                 .spawn(move || {
+                    let _live = LiveGuard {
+                        live: w_live,
+                        pool: pool.clone(),
+                        stats: w_stats.clone(),
+                    };
                     let mut backend = match (*factory)().and_then(|b| {
                         for name in &names {
                             b.ensure_profile(name)?;
@@ -170,15 +274,30 @@ impl AdaptiveServer {
                     // Close our readiness sender now so start() never waits
                     // on a long-lived worker.
                     drop(ready_tx);
-                    loop {
-                        let item = {
-                            let queue = work_rx.lock().unwrap();
-                            queue.recv()
-                        };
-                        let Ok(WorkItem { batch, spec }) = item else {
-                            break; // dispatcher gone: shutdown
-                        };
+                    let mut shard_guard = ShardGuard {
+                        pool: pool.clone(),
+                        stats: w_stats.clone(),
+                        wid,
+                        armed: true,
+                    };
+                    let mut active = selector.current().name.clone();
+                    while let Some((batch, from)) = pool.pop(wid) {
                         w_stats.queue_depth.dec();
+                        w_stats.shard_depth[from].dec();
+                        if from != wid {
+                            w_stats.worker_steals[wid].inc();
+                        }
+                        // --- adaptation step on THIS shard's battery ---
+                        let spec = selector.select(&w_energy).clone();
+                        if spec.name != active {
+                            w_stats.switches.inc();
+                            w_stats.events.push(format!(
+                                "shard {wid}: switch {active} -> {} (battery {:.1}%)",
+                                spec.name,
+                                w_energy.remaining_fraction() * 100.0
+                            ));
+                            active = spec.name.clone();
+                        }
                         let images: Vec<&[u8]> =
                             batch.iter().map(|r| r.image.as_slice()).collect();
                         let results = match backend.classify(&spec.name, &images) {
@@ -202,50 +321,59 @@ impl AdaptiveServer {
                                 pred,
                                 logits,
                                 profile: spec.name.clone(),
+                                shard: wid,
                                 latency_us,
                             });
                         }
+                        w_stats.shard_battery[wid].set(w_energy.remaining_fraction());
                     }
+                    // Reached only on the clean pop() == None exit: the
+                    // shard is not dead, just shut down.
+                    shard_guard.armed = false;
                 })?;
             workers.push(handle);
         }
         drop(ready_tx); // only worker threads hold readiness senders now
 
-        // Dispatcher: batcher + shared adaptation step, fanning out to the
-        // shards. Owning `work_tx` exclusively gives shutdown its cascade:
-        // client queue closes -> batcher drains to None -> dispatcher exits
-        // and drops `work_tx` -> workers drain the work queue and exit.
+        // Dispatcher: batcher + routing. Shutdown cascade: the Shutdown
+        // sentinel (or all senders dropping) ends the batcher -> dispatcher
+        // exits and closes the deque pool -> shards drain and exit.
         let d_stats = stats.clone();
-        let d_energy = energy.clone();
-        let d_manager = manager.clone();
-        let batcher = DynamicBatcher::new(cfg.batcher.clone(), rx);
+        let d_pool = pool.clone();
+        let d_live = live.clone();
+        let pin = cfg.pin_dispatch_to;
+        let mut batcher = DynamicBatcher::new(cfg.batcher.clone(), rx);
         let dispatcher = std::thread::Builder::new()
             .name("adaptive-dispatch".into())
             .spawn(move || {
-                let mut active = d_manager.current().name.clone();
                 while let Some(batch) = batcher.next_batch() {
-                    // --- profile management step (shared adaptation state) ---
-                    let spec = d_manager.select(&d_energy).clone();
-                    if spec.name != active {
-                        d_stats.switches.inc();
-                        d_stats.events.push(format!(
-                            "switch {active} -> {} (battery {:.1}%)",
-                            spec.name,
-                            d_energy.remaining_fraction() * 100.0
-                        ));
-                        active = spec.name.clone();
-                    }
-                    d_stats.queue_depth.inc();
-                    if work_tx.send(WorkItem { batch, spec }).is_err() {
-                        // Every worker exited; nothing can serve. Undo the
-                        // gauge and leave a trace before giving up.
-                        d_stats.queue_depth.dec();
+                    if d_live.load(Ordering::SeqCst) == 0 {
+                        // Every shard died (panics, not clean shutdown):
+                        // dropping the batch drops its reply senders, so
+                        // waiting clients get Err instead of hanging.
+                        // (Batches that were already queued are dropped by
+                        // the last LiveGuard's pool.fail(), and a push that
+                        // races past this check lands on the failed pool,
+                        // which also drops it.)
                         d_stats
                             .events
                             .push("dispatch failed: all workers exited".to_string());
                         break;
                     }
+                    let target = pin
+                        .unwrap_or_else(|| d_pool.least_loaded())
+                        .min(n_workers - 1);
+                    d_stats.queue_depth.inc();
+                    d_stats.shard_depth[target].inc();
+                    if !d_pool.push(target, batch) {
+                        // Rejected (pool failed, or target dead with
+                        // stealing off): the batch was dropped, so its
+                        // clients read Err; undo the gauges.
+                        d_stats.queue_depth.dec();
+                        d_stats.shard_depth[target].dec();
+                    }
                 }
+                d_pool.close();
             })?;
 
         // Wait for every shard's backend to come up.
@@ -267,9 +395,9 @@ impl AdaptiveServer {
             dispatcher: Some(dispatcher),
             workers,
             stats,
-            energy,
+            shard_energy,
             manager,
-            next_id: AtomicU64::new(0),
+            next_id: Arc::new(AtomicU64::new(0)),
         };
         if let Some(e) = startup_err {
             // Tear the pipeline down (drop joins every thread) before
@@ -285,34 +413,54 @@ impl AdaptiveServer {
         self.stats.worker_batches.len()
     }
 
-    /// Submit one image; returns the reply receiver.
-    pub fn submit(&self, image: Vec<u8>) -> mpsc::Receiver<ClassifyResponse> {
-        let (rtx, rrx) = mpsc::channel();
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        // After shutdown (or on send failure) the reply sender is dropped,
-        // so the receiver reads a clean Err instead of hanging.
-        if let Some(tx) = &self.tx {
-            let _ = tx.send(ClassifyRequest::new(id, image, rtx));
+    /// Mean remaining battery fraction over all shards.
+    pub fn battery_fraction(&self) -> f64 {
+        let n = self.shard_energy.len().max(1);
+        self.shard_energy
+            .iter()
+            .map(|e| e.remaining_fraction())
+            .sum::<f64>()
+            / n as f64
+    }
+
+    /// `tx` is `Some` for the whole `&self` lifetime: `close()` runs only
+    /// from `shutdown(self)` (consumes the server) or `Drop`.
+    fn tx(&self) -> &mpsc::Sender<Submission> {
+        self.tx.as_ref().expect("server closed")
+    }
+
+    /// A detached, cloneable submit handle (see [`ClientHandle`]). Handles
+    /// outliving the server fail cleanly: their tickets resolve to `Err`.
+    pub fn client(&self) -> ClientHandle {
+        ClientHandle {
+            tx: self.tx().clone(),
+            next_id: self.next_id.clone(),
         }
-        rrx
+    }
+
+    /// Submit one image without blocking; the [`Ticket`] resolves to the
+    /// reply (or `Err` if the server shuts down before execution).
+    pub fn submit(&self, image: Vec<u8>) -> Ticket {
+        super::client::submit_via(self.tx(), &self.next_id, image)
     }
 
     /// Submit and wait.
     pub fn classify(&self, image: Vec<u8>) -> Result<ClassifyResponse> {
-        let rx = self.submit(image);
-        Ok(rx.recv()?)
+        self.submit(image).await_reply()
     }
 
-    /// Graceful shutdown: close the queue once and join every thread.
+    /// Graceful shutdown: send the sentinel once and join every thread.
     pub fn shutdown(mut self) {
         self.close();
     }
 
-    /// Idempotent close: dropping the only client `Sender` closes the
-    /// request queue deterministically; the dispatcher drains it and closes
-    /// the work queue, which drains the worker shards.
+    /// Idempotent close: the `Shutdown` sentinel ends the batcher (even if
+    /// detached client handles still hold senders); the dispatcher closes
+    /// the deque pool, which drains the worker shards.
     fn close(&mut self) {
-        self.tx.take();
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(Submission::Shutdown);
+        }
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
         }
@@ -332,14 +480,35 @@ impl Drop for AdaptiveServer {
 mod tests {
     use super::super::manager::{ManagerConfig, ProfileSpec};
     use super::*;
-    use crate::qonnx::{read_str, test_model_json};
+    use crate::qonnx::{random_model_json, read_str, test_model_json, RandModelCfg};
+    use crate::testkit::Rng;
     use std::collections::BTreeMap;
+    use std::sync::Mutex;
 
     /// Returns (factory, input_elems). The factory is Fn + Send + Sync
     /// (models are plain data, cloned per shard); each Backend replica is
     /// built inside its worker thread.
     fn sim_backend() -> (impl Fn() -> anyhow::Result<Backend> + Send + Sync, usize) {
         let m = read_str(&test_model_json(1, 2)).unwrap();
+        let elems = m.input_shape.elems();
+        let mut models = BTreeMap::new();
+        models.insert("hi".to_string(), m.clone());
+        models.insert("lo".to_string(), m);
+        (move || Ok(Backend::sim_from_models(models.clone())), elems)
+    }
+
+    /// Heavier synthetic model (same shape under both profile names) so a
+    /// batch takes long enough for backlogs to form: the steal and
+    /// per-shard-energy tests need the dispatcher to outrun the workers.
+    fn heavy_backend() -> (impl Fn() -> anyhow::Result<Backend> + Send + Sync, usize) {
+        let mut rng = Rng::new(11);
+        let cfg = RandModelCfg {
+            side: 16,
+            cin: 3,
+            blocks: vec![(16, 8, 8), (32, 8, 8)],
+            classes: 10,
+        };
+        let m = read_str(&random_model_json(&cfg, &mut rng)).unwrap();
         let elems = m.input_shape.elems();
         let mut models = BTreeMap::new();
         models.insert("hi".to_string(), m.clone());
@@ -385,7 +554,7 @@ mod tests {
         assert!(
             profiles_seen.iter().any(|p| p == "lo"),
             "never switched to low-power: battery {:.3}",
-            srv.energy.remaining_fraction()
+            srv.battery_fraction()
         );
         assert!(srv.stats.switches.get() >= 1);
         // switch order: hi first, then lo (battery only drains)
@@ -437,6 +606,20 @@ mod tests {
     }
 
     #[test]
+    fn rejects_mismatched_shard_capacity_list() {
+        let (backend, _) = sim_backend();
+        let mgr = ProfileManager::new(ManagerConfig::default(), specs());
+        let cfg = ServerConfig {
+            workers: 2,
+            shard_capacity_j: Some(vec![1.0, 1.0, 1.0]),
+            ..Default::default()
+        };
+        assert!(
+            AdaptiveServer::start(cfg, backend, mgr, EnergyMonitor::new(1.0)).is_err()
+        );
+    }
+
+    #[test]
     fn concurrent_clients() {
         let (backend, elems) = sim_backend();
         let energy = EnergyMonitor::new(1e9);
@@ -468,14 +651,15 @@ mod tests {
         // 8 client threads hammer a 4-shard server across 2 profiles. Every
         // submit must get exactly one reply (all classify calls return Ok,
         // response ids are unique), per-worker batch counters must sum to
-        // the global batch counter, and the queue gauge must drain to 0.
+        // the global batch counter, and the queue gauges must drain to 0.
         const THREADS: usize = 8;
         const PER_THREAD: usize = 25;
         const TOTAL: usize = THREADS * PER_THREAD;
 
         let (backend, elems) = sim_backend();
-        // Sized so the 50% threshold crossing lands mid-run (~100 requests
-        // at ~4.7e-5 J each), exercising both profiles under load.
+        // Sized so each shard's quarter of the budget crosses the 50%
+        // threshold mid-run (~25 of its ~50 requests at ~4.7e-5 J each),
+        // exercising both profiles under load.
         let energy = EnergyMonitor::new(9.3e-3);
         let mgr = ProfileManager::new(ManagerConfig::default(), specs());
         let srv = Arc::new(
@@ -496,6 +680,7 @@ mod tests {
                     let img = vec![(t * PER_THREAD + i) as u8; elems];
                     let resp = srv.classify(img).expect("reply lost");
                     assert!(resp.pred < 3);
+                    assert!(resp.shard < 4);
                     ids.lock().unwrap().push(resp.id);
                     profiles.lock().unwrap().push(resp.profile);
                 }
@@ -519,7 +704,7 @@ mod tests {
         assert!(
             profiles.iter().any(|p| p == "lo"),
             "lo never served: battery {:.3}",
-            srv.energy.remaining_fraction()
+            srv.battery_fraction()
         );
 
         // per-worker counters are consistent with the global counter
@@ -531,9 +716,184 @@ mod tests {
             "per-worker batches {per_worker:?} do not sum to total"
         );
         assert_eq!(srv.stats.queue_depth.get(), 0, "work queue not drained");
+        for (i, g) in srv.stats.shard_depth.iter().enumerate() {
+            assert_eq!(g.get(), 0, "shard {i} deque not drained");
+        }
 
-        let srv = Arc::try_unwrap(srv).ok().expect("sole owner after join");
+        let Ok(srv) = Arc::try_unwrap(srv) else {
+            panic!("sole owner after join");
+        };
         srv.shutdown();
+    }
+
+    #[test]
+    fn steal_path_rebalances_skewed_arrivals() {
+        // Every batch is routed to shard 0 (pinned dispatch). With work
+        // stealing on, the other shards must steal and complete a nonzero
+        // share, and every stolen batch must show up in their steal
+        // counters.
+        const N: usize = 128;
+        let (backend, elems) = heavy_backend();
+        let mgr = ProfileManager::new(ManagerConfig::default(), specs());
+        let cfg = ServerConfig {
+            workers: 4,
+            pin_dispatch_to: Some(0),
+            ..Default::default()
+        };
+        let srv =
+            AdaptiveServer::start(cfg, backend, mgr, EnergyMonitor::new(1e9)).unwrap();
+        let client = srv.client();
+        let images: Vec<Vec<u8>> =
+            (0..N).map(|i| vec![(i % 251) as u8; elems]).collect();
+        let tickets = client.submit_many(images);
+        assert_eq!(tickets.len(), N);
+        let mut ids: Vec<u64> = tickets
+            .into_iter()
+            .map(|t| t.await_reply().expect("reply lost").id)
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), N, "conservation: one reply per submit");
+
+        let per_worker: Vec<u64> =
+            srv.stats.worker_batches.iter().map(|c| c.get()).collect();
+        let steals: Vec<u64> =
+            srv.stats.worker_steals.iter().map(|c| c.get()).collect();
+        assert_eq!(
+            per_worker.iter().sum::<u64>(),
+            srv.stats.batches.get(),
+            "per-worker batches {per_worker:?} do not sum to total"
+        );
+        // Dispatch was pinned to shard 0, so shards 1..3 can only have
+        // executed batches they stole.
+        let stolen_share: u64 = per_worker[1..].iter().sum();
+        assert!(
+            stolen_share > 0,
+            "no shard stole from the skewed backlog: \
+             per-worker {per_worker:?}, steals {steals:?}"
+        );
+        assert_eq!(
+            stolen_share,
+            steals[1..].iter().sum::<u64>(),
+            "pinned dispatch: every batch on shards 1..3 must be a steal"
+        );
+        assert_eq!(steals[0], 0, "shard 0 had nothing to steal");
+        drop(client);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn depleted_shard_degrades_alone() {
+        // Shard 0 is born with an empty battery; shards 1 and 2 are full.
+        // Only shard 0's replies may use the degraded profile. Stealing is
+        // off so least-loaded routing alone spreads the burst: every shard
+        // keeps (and must execute) what it was dealt, making the
+        // every-shard-serves assertion deterministic instead of a race
+        // against faster thieves.
+        const N: usize = 96;
+        let (backend, elems) = heavy_backend();
+        let mgr = ProfileManager::new(ManagerConfig::default(), specs());
+        let cfg = ServerConfig {
+            workers: 3,
+            shard_capacity_j: Some(vec![0.0, 1e9, 1e9]),
+            steal: false,
+            ..Default::default()
+        };
+        let srv =
+            AdaptiveServer::start(cfg, backend, mgr, EnergyMonitor::new(1e9)).unwrap();
+        assert_eq!(srv.shard_energy.len(), 3);
+        assert!(srv.shard_energy[0].depleted());
+        let client = srv.client();
+        let tickets =
+            client.submit_many((0..N).map(|i| vec![(i % 97) as u8; elems]));
+        let mut by_shard = [0usize; 3];
+        for t in tickets {
+            let resp = t.await_reply().expect("reply lost");
+            by_shard[resp.shard] += 1;
+            if resp.shard == 0 {
+                assert_eq!(
+                    resp.profile, "lo",
+                    "depleted shard must serve the degraded profile"
+                );
+            } else {
+                assert_eq!(
+                    resp.profile, "hi",
+                    "healthy shard {} must stay on the exact profile",
+                    resp.shard
+                );
+            }
+        }
+        assert!(
+            by_shard.iter().all(|&n| n > 0),
+            "every shard must serve a share: {by_shard:?}"
+        );
+        assert_eq!(srv.stats.shard_battery[0].get(), 0.0);
+        assert!(srv.stats.shard_battery[1].get() > 0.99);
+        drop(client);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn async_client_pipeline_and_ticket_semantics() {
+        let (backend, elems) = sim_backend();
+        let mgr = ProfileManager::new(ManagerConfig::default(), specs());
+        let srv = AdaptiveServer::start(
+            ServerConfig::with_workers(2),
+            backend,
+            mgr,
+            EnergyMonitor::new(1e9),
+        )
+        .unwrap();
+        let client = srv.client();
+        let tickets = client.submit_many((0..40).map(|i| vec![i as u8; elems]));
+        assert_eq!(tickets.len(), 40);
+        let ids: Vec<u64> = tickets.iter().map(|t| t.id()).collect();
+        // ids come from one shared counter, in submission order
+        assert_eq!(ids, (0..40).collect::<Vec<u64>>());
+        let mut got = Vec::new();
+        for t in tickets {
+            let resp = t.await_reply().unwrap();
+            assert!(resp.pred < 3);
+            assert!(resp.shard < 2);
+            got.push(resp.id);
+        }
+        assert_eq!(got, ids, "each ticket resolves to its own request");
+        // handles are cloneable across threads and share the id counter
+        let c2 = client.clone();
+        let h = std::thread::spawn(move || c2.classify(vec![1u8; elems]).unwrap().id);
+        assert_eq!(h.join().unwrap(), 40);
+        // pipelined convenience: replies in submission order, one per input
+        let replies =
+            client.classify_pipelined((0..10).map(|i| vec![i as u8; elems]), 4);
+        assert_eq!(replies.len(), 10);
+        let pipeline_ids: Vec<u64> =
+            replies.into_iter().map(|r| r.unwrap().id).collect();
+        assert_eq!(pipeline_ids, (41..51).collect::<Vec<u64>>());
+        drop(client);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn shutdown_ignores_detached_handles_and_fails_late_submits() {
+        let (backend, elems) = sim_backend();
+        let mgr = ProfileManager::new(ManagerConfig::default(), specs());
+        let srv = AdaptiveServer::start(
+            ServerConfig::default(),
+            backend,
+            mgr,
+            EnergyMonitor::new(1e9),
+        )
+        .unwrap();
+        let client = srv.client();
+        let resp = client.submit(vec![3u8; elems]).await_reply().unwrap();
+        assert_eq!(resp.id, 0);
+        // `client` still holds a live Sender: shutdown must not block on it
+        srv.shutdown();
+        let dead = client.submit(vec![4u8; elems]);
+        assert!(
+            dead.await_reply().is_err(),
+            "post-shutdown submit must resolve to Err, not hang"
+        );
     }
 
     #[test]

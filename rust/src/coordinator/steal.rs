@@ -1,0 +1,396 @@
+//! Per-shard work deques with work stealing.
+//!
+//! Replaces the single mutex-guarded work queue the sharded server used to
+//! fan batches out: every shard owns its own deque + condvar, the
+//! dispatcher pushes to the least-loaded shard, and an idle shard steals
+//! from the back of the busiest one. Shards therefore contend only when
+//! (a) the dispatcher targets them or (b) they are out of local work —
+//! never on a global lock while the pool is busy.
+//!
+//! Locking discipline: no thread ever holds two deque locks at once.
+//! Routing and victim selection read lock-free per-shard length mirrors
+//! (updated under the deque lock), then lock only the chosen shard; losing
+//! the race to the victim's owner just means coming away empty-handed and
+//! retrying.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Fallback poll for idle thieves. Pushes that create stealable backlog
+/// (or target a busy/dead owner) nudge the other shards' condvars
+/// directly, so this only bounds the rare lost-nudge race — a thief
+/// between its scan and its wait when the nudge fires. Long enough not to
+/// burn idle CPU, short enough to cap worst-case steal latency.
+const STEAL_FALLBACK_POLL: Duration = Duration::from_millis(50);
+
+struct Shard<T> {
+    deque: Mutex<VecDeque<T>>,
+    cv: Condvar,
+    /// Lock-free mirror of `deque.len()`, updated under the deque lock.
+    /// Routing and victim selection read it without touching the mutex.
+    len: AtomicUsize,
+    /// Owner worker died abnormally (panic). Routing skips dead shards;
+    /// with stealing disabled their deques also reject new work.
+    dead: AtomicBool,
+    /// Owner worker is currently executing a batch (set by `pop`). Lets
+    /// routing prefer a genuinely idle shard over a busy one whose deque
+    /// merely happens to be empty.
+    busy: AtomicBool,
+}
+
+/// N per-owner deques plus the closed flag that drives shutdown.
+pub(crate) struct ShardDeques<T> {
+    shards: Vec<Shard<T>>,
+    steal: bool,
+    closed: AtomicBool,
+}
+
+impl<T> ShardDeques<T> {
+    pub fn new(n: usize, steal: bool) -> Self {
+        ShardDeques {
+            shards: (0..n.max(1))
+                .map(|_| Shard {
+                    deque: Mutex::new(VecDeque::new()),
+                    cv: Condvar::new(),
+                    len: AtomicUsize::new(0),
+                    dead: AtomicBool::new(false),
+                    busy: AtomicBool::new(false),
+                })
+                .collect(),
+            steal,
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    /// Index of the live shard with the lightest load (ties -> lowest
+    /// index). Load counts the queued backlog plus one for a batch
+    /// currently executing, so an idle shard beats a busy one whose deque
+    /// is momentarily empty. Entirely lock-free (length mirrors + flags) —
+    /// the snapshot is racy by design, routing only needs to be roughly
+    /// right. Falls back to shard 0 if every shard is dead.
+    pub fn least_loaded(&self) -> usize {
+        let mut best: Option<(usize, usize)> = None; // (index, load)
+        for (i, s) in self.shards.iter().enumerate() {
+            if s.dead.load(Ordering::SeqCst) {
+                continue;
+            }
+            let load =
+                s.len.load(Ordering::SeqCst) + s.busy.load(Ordering::SeqCst) as usize;
+            if best.is_none_or(|(_, l)| load < l) {
+                best = Some((i, load));
+            }
+        }
+        best.map_or(0, |(i, _)| i)
+    }
+
+    /// Enqueue onto `target`'s deque and wake it. When the owner already
+    /// has a backlog, also nudge the other shards so thieves wake early
+    /// instead of riding out their poll interval. Returns `false` — with
+    /// the item dropped, releasing any channels it holds — when nobody
+    /// would ever drain it: the pool is closed/failed, or the target's
+    /// owner died and stealing is off.
+    pub fn push(&self, target: usize, item: T) -> bool {
+        let target = target.min(self.shards.len() - 1);
+        let shard = &self.shards[target];
+        let mut q = shard.deque.lock().unwrap();
+        if self.closed.load(Ordering::SeqCst)
+            || (!self.steal && shard.dead.load(Ordering::SeqCst))
+        {
+            return false; // drops `item`
+        }
+        q.push_back(item);
+        let backlog = q.len();
+        shard.len.store(backlog, Ordering::SeqCst);
+        drop(q);
+        shard.cv.notify_one();
+        // Nudge thieves whenever the owner cannot take this item right
+        // now — it has a backlog, is mid-batch, or is dead — so idle
+        // shards wake immediately instead of riding out the fallback poll.
+        let owner_stuck = backlog > 1
+            || shard.busy.load(Ordering::SeqCst)
+            || shard.dead.load(Ordering::SeqCst);
+        if self.steal && owner_stuck {
+            for (i, s) in self.shards.iter().enumerate() {
+                if i != target {
+                    s.cv.notify_one();
+                }
+            }
+        }
+        true
+    }
+
+    /// Close the pool gracefully: no pushes may follow; queued items stay
+    /// for their owners to drain. Wakes every shard so each can drain what
+    /// is left and exit.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        for s in &self.shards {
+            // Taking the lock orders the store against an owner that just
+            // checked `closed` under this lock and is about to wait: the
+            // notify below cannot be lost.
+            drop(s.deque.lock().unwrap());
+            s.cv.notify_all();
+        }
+    }
+
+    /// Mark the pool failed: close it AND drop whatever is still queued,
+    /// releasing any channels the items hold, so producers' clients read a
+    /// clean disconnect instead of hanging on work nobody will drain. Used
+    /// when every consumer has died; prefer [`close`](Self::close) for
+    /// graceful shutdown. Returns how many items each shard's deque held,
+    /// so the caller can reconcile its depth gauges.
+    pub fn fail(&self) -> Vec<usize> {
+        self.closed.store(true, Ordering::SeqCst);
+        self.shards
+            .iter()
+            .map(|s| {
+                let dropped = {
+                    let mut q = s.deque.lock().unwrap();
+                    let n = q.len();
+                    q.clear();
+                    s.len.store(0, Ordering::SeqCst);
+                    n
+                };
+                s.cv.notify_all();
+                dropped
+            })
+            .collect()
+    }
+
+    /// Record that shard `wid`'s owner died abnormally. Routing will skip
+    /// it from now on. With stealing enabled its backlog stays for thieves
+    /// to rescue; with stealing off the backlog is dropped (nobody will
+    /// ever drain it) and the count is returned for gauge reconciliation.
+    pub fn mark_dead(&self, wid: usize) -> usize {
+        self.shards[wid].dead.store(true, Ordering::SeqCst);
+        let dropped = if self.steal {
+            0
+        } else {
+            let mut q = self.shards[wid].deque.lock().unwrap();
+            let n = q.len();
+            q.clear();
+            self.shards[wid].len.store(0, Ordering::SeqCst);
+            n
+        };
+        // wake everyone: thieves may rescue the backlog, and the waiting
+        // dispatcher-side invariants re-evaluate
+        for s in &self.shards {
+            s.cv.notify_all();
+        }
+        dropped
+    }
+
+    /// One non-blocking acquisition attempt for shard `wid`: own deque
+    /// front first, then (if stealing is on) the back of the busiest other
+    /// shard. Returns the item and the shard it came from.
+    fn try_take(&self, wid: usize) -> Option<(T, usize)> {
+        {
+            let mut q = self.shards[wid].deque.lock().unwrap();
+            if let Some(item) = q.pop_front() {
+                self.shards[wid].len.store(q.len(), Ordering::SeqCst);
+                return Some((item, wid));
+            }
+        }
+        if self.steal {
+            // victim = busiest other shard by its lock-free length mirror
+            let mut victim: Option<(usize, usize)> = None; // (index, len)
+            for (i, s) in self.shards.iter().enumerate() {
+                if i == wid {
+                    continue;
+                }
+                let len = s.len.load(Ordering::SeqCst);
+                if len > 0 && victim.is_none_or(|(_, l)| len > l) {
+                    victim = Some((i, len));
+                }
+            }
+            if let Some((v, _)) = victim {
+                let mut q = self.shards[v].deque.lock().unwrap();
+                if let Some(item) = q.pop_back() {
+                    self.shards[v].len.store(q.len(), Ordering::SeqCst);
+                    return Some((item, v));
+                }
+            }
+        }
+        None
+    }
+
+    /// Block until work is available for shard `wid` or the pool is closed
+    /// and drained. Returns `(item, source_shard)`; `source_shard != wid`
+    /// means the item was stolen. The shard's `busy` flag is true exactly
+    /// while its owner is outside this call executing a batch.
+    pub fn pop(&self, wid: usize) -> Option<(T, usize)> {
+        self.shards[wid].busy.store(false, Ordering::SeqCst);
+        loop {
+            if let Some(hit) = self.try_take(wid) {
+                self.shards[wid].busy.store(true, Ordering::SeqCst);
+                return Some(hit);
+            }
+            if self.closed.load(Ordering::SeqCst) {
+                // `close` happens after the last push, so one final sweep
+                // (taken after observing the flag) sees anything enqueued
+                // just before it flipped.
+                return self.try_take(wid);
+            }
+            let guard = self.shards[wid].deque.lock().unwrap();
+            // Re-check `closed` under the lock: close() locks this mutex
+            // before notifying, so either we see the flag here or the
+            // notify arrives after we wait — never a lost wakeup.
+            if guard.is_empty() && !self.closed.load(Ordering::SeqCst) {
+                let guard = if self.steal {
+                    // bounded wait: push nudges us for stealable work, but
+                    // a nudge can race a thief between scan and wait, so a
+                    // coarse fallback poll re-scans eventually
+                    self.shards[wid]
+                        .cv
+                        .wait_timeout(guard, STEAL_FALLBACK_POLL)
+                        .unwrap()
+                        .0
+                } else {
+                    // no stealing: every push targeting us and close() both
+                    // signal this condvar, so sleep untimed
+                    self.shards[wid].cv.wait(guard).unwrap()
+                };
+                drop(guard);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn own_deque_is_fifo() {
+        let q: ShardDeques<u32> = ShardDeques::new(2, true);
+        q.push(0, 1);
+        q.push(0, 2);
+        assert_eq!(q.pop(0), Some((1, 0)));
+        assert_eq!(q.pop(0), Some((2, 0)));
+    }
+
+    #[test]
+    fn idle_shard_steals_from_busiest_back() {
+        let q: ShardDeques<u32> = ShardDeques::new(3, true);
+        q.push(0, 10); // shard 0: backlog of 2
+        q.push(0, 11);
+        q.push(1, 20); // shard 1: backlog of 1
+        // shard 2 owns nothing -> steals from shard 0 (busiest), back end
+        assert_eq!(q.pop(2), Some((11, 0)));
+        // shard 0 still drains its front in order
+        assert_eq!(q.pop(0), Some((10, 0)));
+    }
+
+    #[test]
+    fn steal_disabled_leaves_other_deques_alone() {
+        let q: ShardDeques<u32> = ShardDeques::new(2, false);
+        q.push(0, 1);
+        q.close();
+        // shard 1 finds nothing (no stealing) and exits on the closed flag
+        assert_eq!(q.pop(1), None);
+        // shard 0 drains its own item, then exits
+        assert_eq!(q.pop(0), Some((1, 0)));
+        assert_eq!(q.pop(0), None);
+    }
+
+    #[test]
+    fn least_loaded_prefers_shortest_backlog() {
+        let q: ShardDeques<u32> = ShardDeques::new(3, true);
+        assert_eq!(q.least_loaded(), 0); // all empty -> lowest index
+        q.push(0, 1);
+        assert_eq!(q.least_loaded(), 1);
+        q.push(1, 2);
+        q.push(1, 3);
+        assert_eq!(q.least_loaded(), 2);
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let q: ShardDeques<u32> = ShardDeques::new(1, true);
+        q.push(0, 7);
+        q.close();
+        assert_eq!(q.pop(0), Some((7, 0)));
+        assert_eq!(q.pop(0), None);
+    }
+
+    #[test]
+    fn fail_drops_queued_items_and_rejects_new_pushes() {
+        let q: ShardDeques<u32> = ShardDeques::new(2, true);
+        assert!(q.push(0, 1));
+        // queued item was dropped, not left for a (dead) owner
+        assert_eq!(q.fail(), vec![1, 0]);
+        assert_eq!(q.pop(0), None);
+        // late pushes are rejected, not stranded
+        assert!(!q.push(0, 2));
+        assert_eq!(q.pop(0), None);
+        assert_eq!(q.pop(1), None);
+    }
+
+    #[test]
+    fn dead_shard_is_skipped_by_routing() {
+        let q: ShardDeques<u32> = ShardDeques::new(2, true);
+        assert_eq!(q.mark_dead(0), 0); // steal on: backlog kept for thieves
+        assert_eq!(q.least_loaded(), 1);
+        // pinned pushes to a dead shard still land while stealing is on
+        assert!(q.push(0, 7));
+        assert_eq!(q.pop(1), Some((7, 0)));
+    }
+
+    #[test]
+    fn dead_shard_without_steal_drops_its_backlog() {
+        let q: ShardDeques<u32> = ShardDeques::new(2, false);
+        assert!(q.push(0, 1));
+        assert!(q.push(0, 2));
+        // owner died: nobody can ever drain these
+        assert_eq!(q.mark_dead(0), 2);
+        // and new work aimed at it is rejected rather than stranded
+        assert!(!q.push(0, 3));
+        assert_eq!(q.least_loaded(), 1);
+        assert!(q.push(1, 4));
+        q.close();
+        assert_eq!(q.pop(1), Some((4, 1)));
+        assert_eq!(q.pop(1), None);
+    }
+
+    #[test]
+    fn routing_prefers_idle_over_busy_empty_shard() {
+        let q: ShardDeques<u32> = ShardDeques::new(2, true);
+        assert!(q.push(0, 1));
+        // shard 0's owner takes the item and is now executing (busy, deque
+        // empty); a genuinely idle shard must win the tie
+        assert_eq!(q.pop(0), Some((1, 0)));
+        assert_eq!(q.least_loaded(), 1);
+    }
+
+    #[test]
+    fn concurrent_consumers_conserve_items() {
+        const ITEMS: u32 = 500;
+        let q: Arc<ShardDeques<u32>> = Arc::new(ShardDeques::new(4, true));
+        let mut handles = Vec::new();
+        for wid in 0..4 {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some((item, _from)) = q.pop(wid) {
+                    got.push(item);
+                }
+                got
+            }));
+        }
+        // skewed producer: everything lands on shard 0
+        for i in 0..ITEMS {
+            q.push(0, i);
+        }
+        q.close();
+        let mut all: Vec<u32> = handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        let want: Vec<u32> = (0..ITEMS).collect();
+        assert_eq!(all, want, "items lost or duplicated");
+    }
+}

@@ -211,8 +211,13 @@ fn cmd_fig4(argv: &[String]) -> Result<()> {
     };
     let acc = &rows[0];
     let low = &rows[1];
-    let fixed = run_fixed(&acc.profile, &bat, acc.power_mw, acc.latency_us,
-                          acc.accuracy_pct / 100.0);
+    let fixed = run_fixed(
+        &acc.profile,
+        &bat,
+        acc.power_mw,
+        acc.latency_us,
+        acc.accuracy_pct / 100.0,
+    );
     let adaptive = simulate_battery(
         &bat,
         &policy,
@@ -286,10 +291,13 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let spec = Spec::new("onnx2hw serve", "adaptive server on a synthetic workload")
         .opt("requests", "256", "number of requests to push")
         .opt("backend", "sim", "sim | pjrt")
-        .opt("battery-j", "0.05", "battery energy in joules (small = fast demo)")
+        .opt("battery-j", "0.05", "global battery energy in joules (split across shards)")
+        .opt("shard-capacity", "", "per-shard battery in joules (overrides the split)")
+        .opt("power-cap", "", "per-shard power cap in mW")
         .opt("pair", "A8-W8,Mixed", "accurate,low-power profiles")
         .opt("workers", "2", "inference worker shards (backend replicas)")
-        .opt("clients", "2", "concurrent synthetic client threads");
+        .opt("clients", "2", "concurrent synthetic client threads")
+        .flag("no-steal", "disable work stealing between shards");
     let a = parse_or_usage(spec, argv)?;
     let store = ArtifactStore::discover()?;
     let testset = store.testset()?;
@@ -314,11 +322,29 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let backend_kind = a.get("backend").unwrap().to_string();
     let workers: usize = a.parse_num("workers")?;
     let clients: usize = std::cmp::max(1, a.parse_num("clients")?);
+    let shard_capacity_j = match a.get("shard-capacity") {
+        Some(s) if !s.is_empty() => Some(vec![s
+            .parse::<f64>()
+            .map_err(|_| anyhow::anyhow!("--shard-capacity: cannot parse '{s}'"))?]),
+        _ => None,
+    };
+    let shard_power_cap_mw = match a.get("power-cap") {
+        Some(s) if !s.is_empty() => Some(
+            s.parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--power-cap: cannot parse '{s}'"))?,
+        ),
+        _ => None,
+    };
     let store2 = store.clone();
     let pair2 = pair.clone();
-    let srv = Arc::new(AdaptiveServer::start(
+    // No Arc needed: client threads hold detached ClientHandles, not the
+    // server value.
+    let srv = AdaptiveServer::start(
         ServerConfig {
             workers,
+            shard_capacity_j,
+            shard_power_cap_mw,
+            steal: !a.flag("no-steal"),
             ..Default::default()
         },
         move || {
@@ -330,24 +356,26 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         },
         manager,
         energy,
-    )?);
+    )?;
     let n: usize = a.parse_num("requests")?;
     let testset = Arc::new(testset);
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
     for c in 0..clients {
-        let srv = srv.clone();
+        // Async client API: pipelined submission keeps a window of
+        // requests in flight instead of blocking per request.
+        let client = srv.client();
         let testset = testset.clone();
         handles.push(std::thread::spawn(move || -> Result<usize> {
+            let idxs: Vec<usize> =
+                (c..n).step_by(clients).map(|i| i % testset.len()).collect();
+            let replies = client
+                .classify_pipelined(idxs.iter().map(|&i| testset.image(i).to_vec()), 16);
             let mut correct = 0usize;
-            let mut i = c;
-            while i < n {
-                let idx = i % testset.len();
-                let resp = srv.classify(testset.image(idx).to_vec())?;
-                if resp.pred == testset.labels[idx] as usize {
+            for (&idx, reply) in idxs.iter().zip(replies) {
+                if reply?.pred == testset.labels[idx] as usize {
                     correct += 1;
                 }
-                i += clients;
             }
             Ok(correct)
         }));
@@ -367,25 +395,28 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     );
     println!(
         "accuracy {:.1}% | batches {} | switches {} | \
-         p50 {}us p95 {}us | battery left {:.1}%",
+         p50 {}us p95 {}us | mean battery left {:.1}%",
         100.0 * correct as f64 / n as f64,
         srv.stats.batches.get(),
         srv.stats.switches.get(),
         srv.stats.latency.quantile_us(0.5),
         srv.stats.latency.quantile_us(0.95),
-        srv.energy.remaining_fraction() * 100.0
+        srv.battery_fraction() * 100.0
     );
-    let per_worker: Vec<u64> = srv.stats.worker_batches.iter().map(|c| c.get()).collect();
-    println!(
-        "per-worker batches: {per_worker:?} | queue depth now: {}",
-        srv.stats.queue_depth.get()
-    );
+    for (i, e) in srv.shard_energy.iter().enumerate() {
+        println!(
+            "  shard {i}: {} batches ({} stolen) | battery {:.1}% of {:.3} mJ",
+            srv.stats.worker_batches[i].get(),
+            srv.stats.worker_steals[i].get(),
+            e.remaining_fraction() * 100.0,
+            e.capacity_j() * 1e3
+        );
+    }
+    println!("queue depth now: {}", srv.stats.queue_depth.get());
     for ev in srv.stats.events.snapshot() {
         println!("  event: {ev}");
     }
-    if let Ok(srv) = Arc::try_unwrap(srv) {
-        srv.shutdown();
-    }
+    srv.shutdown();
     Ok(())
 }
 

@@ -51,6 +51,35 @@ impl Gauge {
     }
 }
 
+/// Float gauge (lock-free; f64 bits in an AtomicU64), e.g. the per-shard
+/// remaining-battery fraction. Last write wins; no read-modify-write.
+#[derive(Debug)]
+pub struct FloatGauge {
+    bits: AtomicU64,
+}
+
+impl Default for FloatGauge {
+    fn default() -> Self {
+        FloatGauge::new(0.0)
+    }
+}
+
+impl FloatGauge {
+    pub fn new(v: f64) -> Self {
+        FloatGauge {
+            bits: AtomicU64::new(v.to_bits()),
+        }
+    }
+
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
 /// Log-bucketed latency histogram (microseconds). Buckets: 1us .. ~17min in
 /// x2 steps — cheap, fixed memory, good-enough percentiles for reports.
 #[derive(Debug)]
@@ -181,6 +210,16 @@ mod tests {
         assert_eq!(g.get(), -2);
         g.set(0);
         assert_eq!(g.get(), 0);
+    }
+
+    #[test]
+    fn float_gauge_round_trips() {
+        let g = FloatGauge::default();
+        assert_eq!(g.get(), 0.0);
+        g.set(0.375);
+        assert_eq!(g.get(), 0.375);
+        let g = FloatGauge::new(1.0);
+        assert_eq!(g.get(), 1.0);
     }
 
     #[test]

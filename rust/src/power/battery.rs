@@ -32,6 +32,42 @@ impl BatteryModel {
     }
 }
 
+/// A pack of per-shard batteries: the sharded server gives every
+/// accelerator replica its own cell instead of draining one global budget,
+/// so a hot shard degrades alone. `split` conserves the total energy and
+/// mirrors the even joule split `AdaptiveServer::start` applies to a
+/// global `EnergyMonitor` — change the policy in both places together.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatteryPack {
+    pub cells: Vec<BatteryModel>,
+}
+
+impl BatteryPack {
+    /// Split `total` evenly into `shards` cells (clamped to at least 1).
+    pub fn split(total: &BatteryModel, shards: usize) -> Self {
+        let n = shards.max(1);
+        BatteryPack {
+            cells: vec![
+                BatteryModel {
+                    capacity_ah: total.capacity_ah / n as f64,
+                    voltage_v: total.voltage_v,
+                };
+                n
+            ],
+        }
+    }
+
+    /// Energy of each cell in joules (what each shard's monitor is seeded
+    /// with).
+    pub fn cell_energy_j(&self) -> Vec<f64> {
+        self.cells.iter().map(|c| c.energy_j()).collect()
+    }
+
+    pub fn total_energy_j(&self) -> f64 {
+        self.cells.iter().map(|c| c.energy_j()).sum()
+    }
+}
+
 /// Threshold policy of the Profile Manager (paper Fig. 4 left): run the
 /// accurate profile while charge >= `switch_at_fraction`, then drop to the
 /// low-power profile.
@@ -151,6 +187,22 @@ mod tests {
         let run = run_fixed("x", &bat, 1000.0, 1e6, 1.0); // 1 s per image
         assert!((run.duration_h - 5.0).abs() < 1e-9);
         assert_eq!(run.classifications, 18000);
+    }
+
+    #[test]
+    fn pack_split_conserves_energy() {
+        let bat = BatteryModel::default();
+        for shards in [1usize, 2, 4, 7] {
+            let pack = BatteryPack::split(&bat, shards);
+            assert_eq!(pack.cells.len(), shards);
+            assert!((pack.total_energy_j() - bat.energy_j()).abs() < 1e-6);
+            let per_cell = pack.cell_energy_j();
+            assert!(per_cell
+                .iter()
+                .all(|&j| (j - bat.energy_j() / shards as f64).abs() < 1e-6));
+        }
+        // degenerate shard count clamps instead of dividing by zero
+        assert_eq!(BatteryPack::split(&bat, 0).cells.len(), 1);
     }
 
     #[test]

@@ -15,5 +15,7 @@
 mod battery;
 mod model;
 
-pub use battery::{run_fixed, simulate_battery, AdaptivePolicy, BatteryModel, BatteryRun};
+pub use battery::{
+    run_fixed, simulate_battery, AdaptivePolicy, BatteryModel, BatteryPack, BatteryRun,
+};
 pub use model::{estimate_power, PowerBreakdown};

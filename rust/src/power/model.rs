@@ -110,8 +110,13 @@ mod tests {
     #[test]
     fn power_is_positive_and_decomposes() {
         let (m, est, sims) = setup();
-        let p = estimate_power(&m, &est, &sims, &Calibration::default(),
-                               &DeviceModel::kria_kv260());
+        let p = estimate_power(
+            &m,
+            &est,
+            &sims,
+            &Calibration::default(),
+            &DeviceModel::kria_kv260(),
+        );
         assert!(p.total_mw > 0.0);
         let sum = p.static_mw + p.toggle_mw + p.mac_mw + p.bram_mw;
         assert!((p.total_mw - sum).abs() < 1e-9);
