@@ -36,19 +36,9 @@ fn main() -> Result<()> {
             backend_kind = "sim".into();
         }
     }
-    let n_requests: usize = std::env::args()
-        .nth(2)
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(512);
-    let workers: usize = std::env::args()
-        .nth(3)
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(2);
-    let clients: usize = std::env::args()
-        .nth(4)
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(4)
-        .max(1);
+    let n_requests: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(512);
+    let workers: usize = std::env::args().nth(3).and_then(|s| s.parse().ok()).unwrap_or(2);
+    let clients: usize = std::env::args().nth(4).and_then(|s| s.parse().ok()).unwrap_or(4).max(1);
 
     let store = ArtifactStore::discover()?;
     let testset = Arc::new(store.testset()?);
@@ -77,8 +67,7 @@ fn main() -> Result<()> {
 
     // Battery sized so the threshold crossing happens mid-run; the server
     // splits it into one cell per shard (per-accelerator batteries).
-    let per_classification_j =
-        specs[0].power_mw * 1e-3 * specs[0].latency_us * 1e-6;
+    let per_classification_j = specs[0].power_mw * 1e-3 * specs[0].latency_us * 1e-6;
     let battery_j = per_classification_j * n_requests as f64 * 0.9;
     println!(
         "\nbattery: {:.3} mJ (~90% of what {} requests need on {}), \

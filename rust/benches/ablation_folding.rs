@@ -63,10 +63,7 @@ fn main() {
         ]);
         // Table-1 invariant at every folding: W4 engine has identical cycles.
         let sim_w4 = simulate_image(&model_w4, &fold, img);
-        assert_eq!(
-            sim.cycles, sim_w4.cycles,
-            "latency must not depend on precision"
-        );
+        assert_eq!(sim.cycles, sim_w4.cycles, "latency must not depend on precision");
     }
     println!("{}", t.render());
     println!("invariant held: A8-W8 and A4-W4 cycles identical at every folding\n");

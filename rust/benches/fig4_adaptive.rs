@@ -60,8 +60,7 @@ fn main() {
             latency_us: r.latency_us,
         });
     }
-    let overhead =
-        merged.luts as f64 / rows.iter().map(|r| r.luts).max().unwrap() as f64 - 1.0;
+    let overhead = merged.luts as f64 / rows.iter().map(|r| r.luts).max().unwrap() as f64 - 1.0;
     println!(
         "\nadaptivity overhead vs largest non-adaptive engine: +{:.1}% LUTs (paper: 'limited overhead')",
         overhead * 100.0

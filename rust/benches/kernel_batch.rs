@@ -1,0 +1,223 @@
+//! Bench: packed batched kernels vs the scalar reference executor.
+//!
+//! Needs no artifacts — two synthetic QONNX models bracket the envelope:
+//!
+//! * `conv-heavy` — 16x16x3 -> conv32 -> pool -> conv64 -> pool -> dense10
+//!   (~1.4 MMAC/image, the serving-shaped load the CI gate measures);
+//! * `conv-light` — the 8/16-filter, 4-bit-weight variant.
+//!
+//! For each model the *scalar baseline* pushes the image set one image at a
+//! time through the cached reference [`Executor`] (the oracle path every
+//! accuracy sweep uses); the *packed path* hands the same images to
+//! [`BatchExecutor::run_batch`] at batch sizes 1/3/8 (pre-packed weight
+//! tiles, batch-major/layer-major order, warm arenas). Before any number is
+//! reported, every (model, batch) pairing is asserted bit-exact against
+//! `exec::execute` — packing and tiling must never change an integer.
+//!
+//! Run: `cargo bench --bench kernel_batch [-- <iters> [--json <path>]
+//!       [--assert-speedup <factor>]]`
+//!
+//! `--json` writes the rows (imgs/s, speedup vs scalar, per-iteration
+//! p50/p99 latency) for the CI artifact; `--assert-speedup F` requires the
+//! conv-heavy packed batch-8 throughput >= F x the scalar per-image
+//! baseline — the kernel-level gate beneath the serving-level scaling gate.
+
+use onnx2hw::bench_harness::{bench, Table};
+use onnx2hw::dataflow::{exec, BatchExecutor, Executor};
+use onnx2hw::json::{self, Value};
+use onnx2hw::qonnx::{self, read_str, QonnxModel, RandModelCfg};
+use onnx2hw::testkit::Rng;
+
+const WARMUP: usize = 3;
+const BATCHES: [usize; 3] = [1, 3, 8];
+const N_IMAGES: usize = 8;
+
+fn synthetic_models() -> Vec<(&'static str, QonnxModel)> {
+    let mut rng = Rng::new(23);
+    let heavy_cfg = RandModelCfg {
+        side: 16,
+        cin: 3,
+        blocks: vec![(32, 8, 8), (64, 8, 8)],
+        classes: 10,
+    };
+    let light_cfg = RandModelCfg {
+        blocks: vec![(8, 8, 4), (16, 8, 4)],
+        ..heavy_cfg.clone()
+    };
+    let heavy = read_str(&qonnx::random_model_json(&heavy_cfg, &mut rng)).expect("heavy");
+    let light = read_str(&qonnx::random_model_json(&light_cfg, &mut rng)).expect("light");
+    vec![("conv-heavy", heavy), ("conv-light", light)]
+}
+
+fn images_for(model: &QonnxModel) -> Vec<Vec<u8>> {
+    let elems = model.input_shape.elems();
+    (0..N_IMAGES)
+        .map(|k| (0..elems).map(|i| ((i * 31 + k * 17) % 256) as u8).collect())
+        .collect()
+}
+
+/// Every batch size must reproduce the oracle's integers exactly before
+/// any throughput number is trusted (this also warms the arenas).
+fn assert_bit_exact(model: &QonnxModel, bex: &mut BatchExecutor, images: &[Vec<u8>]) {
+    let k = bex.out_features();
+    for &b in &BATCHES {
+        let refs: Vec<&[u8]> = images[..b].iter().map(Vec::as_slice).collect();
+        let got = bex.run_batch(&refs).to_vec();
+        for (i, img) in refs.iter().enumerate() {
+            let want = exec::execute(model, img);
+            assert_eq!(
+                &got[i * k..(i + 1) * k],
+                want.as_slice(),
+                "batch {b} image {i} not bit-exact vs the scalar oracle"
+            );
+        }
+    }
+}
+
+struct Row {
+    model: &'static str,
+    path: &'static str,
+    batch: usize,
+    imgs_per_s: f64,
+    speedup: f64,
+    p50_us: f64,
+    p99_us: f64,
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut iters: usize = 24;
+    let mut json_path: Option<String> = None;
+    let mut assert_speedup: Option<f64> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--json" => {
+                i += 1;
+                json_path = Some(args.get(i).expect("--json needs a path").clone());
+            }
+            "--assert-speedup" => {
+                i += 1;
+                assert_speedup = Some(
+                    args.get(i)
+                        .expect("--assert-speedup needs a factor")
+                        .parse()
+                        .expect("--assert-speedup: not a number"),
+                );
+            }
+            other => {
+                iters = other.parse().unwrap_or_else(|_| {
+                    panic!("unexpected argument '{other}' (want an iteration count)")
+                });
+            }
+        }
+        i += 1;
+    }
+
+    let mut table = Table::new(&["model", "path", "batch", "imgs/s", "speedup", "p50", "p99"]);
+    let mut rows: Vec<Row> = Vec::new();
+    for (name, model) in synthetic_models() {
+        let images = images_for(&model);
+        let mut bex = BatchExecutor::from_model(&model);
+        assert_bit_exact(&model, &mut bex, &images);
+
+        // Scalar per-image baseline: one iteration = the whole image set
+        // through the cached reference executor, image by image.
+        let mut scalar_ex = Executor::new(&model);
+        let s = bench(WARMUP, iters, || {
+            let mut sink = 0i64;
+            for img in &images {
+                sink = sink.wrapping_add(scalar_ex.run(img)[0]);
+            }
+            sink
+        });
+        let scalar_imgs_per_s = N_IMAGES as f64 / s.mean.as_secs_f64();
+        rows.push(Row {
+            model: name,
+            path: "scalar",
+            batch: 1,
+            imgs_per_s: scalar_imgs_per_s,
+            speedup: 1.0,
+            p50_us: s.p50.as_secs_f64() * 1e6,
+            p99_us: s.p99.as_secs_f64() * 1e6,
+        });
+
+        for &b in &BATCHES {
+            let refs: Vec<&[u8]> = images[..b].iter().map(Vec::as_slice).collect();
+            let s = bench(WARMUP, iters, || {
+                bex.run_batch(&refs).iter().fold(0i64, |a, &v| a.wrapping_add(v))
+            });
+            rows.push(Row {
+                model: name,
+                path: "packed",
+                batch: b,
+                imgs_per_s: b as f64 / s.mean.as_secs_f64(),
+                speedup: (b as f64 / s.mean.as_secs_f64()) / scalar_imgs_per_s,
+                p50_us: s.p50.as_secs_f64() * 1e6,
+                p99_us: s.p99.as_secs_f64() * 1e6,
+            });
+        }
+    }
+
+    for r in &rows {
+        table.row(&[
+            r.model.to_string(),
+            r.path.to_string(),
+            r.batch.to_string(),
+            format!("{:.0}", r.imgs_per_s),
+            format!("x{:.2}", r.speedup),
+            format!("{:.0}us", r.p50_us),
+            format!("{:.0}us", r.p99_us),
+        ]);
+    }
+    println!(
+        "== packed batched kernels vs scalar oracle ({iters} iters, \
+         {N_IMAGES}-image set) ==\n"
+    );
+    println!("{}", table.render());
+    println!("bit-exactness vs exec::execute asserted for every (model, batch)");
+    println!("before any row above was timed. p50/p99 are per-iteration wall");
+    println!("times (scalar iteration = {N_IMAGES} images; packed = its batch).");
+
+    if let Some(path) = &json_path {
+        let json_rows = Value::Array(
+            rows.iter()
+                .map(|r| {
+                    Value::obj(vec![
+                        ("model", r.model.into()),
+                        ("path", r.path.into()),
+                        ("batch", r.batch.into()),
+                        ("iters", iters.into()),
+                        ("imgs_per_s", r.imgs_per_s.into()),
+                        ("speedup_vs_scalar", r.speedup.into()),
+                        ("p50_us", r.p50_us.into()),
+                        ("p99_us", r.p99_us.into()),
+                    ])
+                })
+                .collect(),
+        );
+        std::fs::write(path, json::to_string_pretty(&json_rows)).expect("write json");
+        println!("wrote {} rows to {path}", rows.len());
+    }
+
+    if let Some(factor) = assert_speedup {
+        let gate = rows
+            .iter()
+            .find(|r| r.model == "conv-heavy" && r.path == "packed" && r.batch == 8)
+            .expect("gate row present");
+        assert!(
+            gate.speedup >= factor,
+            "packed batch-8 throughput {:.0} imgs/s is x{:.2} of the scalar \
+             baseline, below the required x{factor}",
+            gate.imgs_per_s,
+            gate.speedup
+        );
+        println!(
+            "kernel gate passed: conv-heavy packed batch-8 = x{:.2} of scalar \
+             (>= {factor}), {} vs {} imgs/s",
+            gate.speedup,
+            gate.imgs_per_s as u64,
+            (gate.imgs_per_s / gate.speedup) as u64
+        );
+    }
+}

@@ -22,7 +22,9 @@
 //!       [--json <path>] [--assert-scaling <factor>]]`
 //!
 //! `--json` writes the rows as a JSON array (the CI bench-smoke job
-//! uploads it as an artifact); `--assert-scaling F` additionally requires
+//! uploads it as an artifact); each row carries end-to-end latency p50/p99
+//! (`latency_p50_us`/`latency_p99_us`, log-bucket upper bounds from the
+//! server histogram). `--assert-scaling F` additionally requires
 //! skewed-mode 4-shard throughput >= F x 1-shard throughput.
 
 use std::collections::BTreeMap;
@@ -73,6 +75,10 @@ struct RunResult {
     batches: u64,
     steals: u64,
     per_worker: Vec<u64>,
+    /// End-to-end request latency percentiles (us) from the server's
+    /// log-bucketed histogram.
+    p50_us: u64,
+    p99_us: u64,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -115,18 +121,17 @@ fn run_one(
         let expect = expect.clone();
         let all_ids = all_ids.clone();
         handles.push(std::thread::spawn(move || {
-            let ks: Vec<usize> = (c..requests)
-                .step_by(CLIENTS)
-                .map(|i| i % images.len())
-                .collect();
-            let replies =
-                client.classify_pipelined(ks.iter().map(|&k| images[k].clone()), WINDOW);
+            let n_img = images.len();
+            let ks: Vec<usize> = (c..requests).step_by(CLIENTS).map(|i| i % n_img).collect();
+            let imgs = ks.iter().map(|&k| images[k].clone());
+            let replies = client.classify_pipelined(imgs, WINDOW);
             let mut ids = Vec::new();
             for (&k, reply) in ks.iter().zip(replies) {
                 let resp = reply.expect("reply lost");
                 let want = &expect[&resp.profile][k];
                 assert_eq!(
-                    &resp.logits, want,
+                    &resp.logits,
+                    want,
                     "reply for image {k} on '{}' not bit-exact",
                     resp.profile
                 );
@@ -147,8 +152,7 @@ fn run_one(
     ids.dedup();
     assert_eq!(ids.len(), requests, "duplicate reply ids");
     assert_eq!(srv.stats.requests.get(), requests as u64);
-    let per_worker: Vec<u64> =
-        srv.stats.worker_batches.iter().map(|c| c.get()).collect();
+    let per_worker: Vec<u64> = srv.stats.worker_batches.iter().map(|c| c.get()).collect();
     assert_eq!(
         per_worker.iter().sum::<u64>(),
         srv.stats.batches.get(),
@@ -169,6 +173,8 @@ fn run_one(
         batches: srv.stats.batches.get(),
         steals: srv.stats.worker_steals.iter().map(|c| c.get()).sum(),
         per_worker,
+        p50_us: srv.stats.latency.quantile_us(0.5),
+        p99_us: srv.stats.latency.quantile_us(0.99),
     };
     srv.shutdown();
     result
@@ -249,7 +255,8 @@ fn main() {
     ];
 
     let mut table = Table::new(&[
-        "mode", "workers", "wall", "req/s", "speedup", "batches", "steals", "per-worker",
+        "mode", "workers", "wall", "req/s", "speedup", "p50", "p99", "batches", "steals",
+        "per-worker",
     ]);
     let mut results: Vec<RunResult> = Vec::new();
     for &mode in &["uniform", "skewed", "skewed-nosteal"] {
@@ -267,6 +274,8 @@ fn main() {
                 format!("{:.3}s", r.wall_s),
                 format!("{:.0}", r.rps),
                 format!("x{:.2}", r.speedup),
+                format!("{}us", r.p50_us),
+                format!("{}us", r.p99_us),
                 r.batches.to_string(),
                 r.steals.to_string(),
                 format!("{:?}", r.per_worker),
@@ -296,6 +305,8 @@ fn main() {
                         ("wall_s", r.wall_s.into()),
                         ("req_per_s", r.rps.into()),
                         ("speedup_vs_1_shard", r.speedup.into()),
+                        ("latency_p50_us", (r.p50_us as i64).into()),
+                        ("latency_p99_us", (r.p99_us as i64).into()),
                         ("batches", (r.batches as i64).into()),
                         ("steals", (r.steals as i64).into()),
                         (

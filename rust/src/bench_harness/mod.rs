@@ -13,6 +13,7 @@ pub struct Stats {
     pub mean: Duration,
     pub p50: Duration,
     pub p95: Duration,
+    pub p99: Duration,
     pub min: Duration,
     pub max: Duration,
 }
@@ -47,6 +48,7 @@ pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Stats 
         mean: sum / iters as u32,
         p50: samples[iters / 2],
         p95: samples[((iters as f64 * 0.95) as usize).min(iters - 1)],
+        p99: samples[((iters as f64 * 0.99) as usize).min(iters - 1)],
         min: samples[0],
         max: samples[iters - 1],
     }
@@ -120,7 +122,8 @@ mod tests {
     #[test]
     fn bench_produces_ordered_stats() {
         let s = bench(2, 20, || std::thread::sleep(Duration::from_micros(50)));
-        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.max);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.p99);
+        assert!(s.p99 <= s.max);
         assert!(s.mean >= Duration::from_micros(40));
         assert!(s.throughput_per_s() > 0.0);
     }

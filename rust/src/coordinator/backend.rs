@@ -6,17 +6,22 @@
 //!   per-request is the paper's functional-equivalence argument.
 //!
 //! Each worker shard of the sharded server owns one `Backend` replica. The
-//! Sim variant keeps a per-profile [`Executor`] cache so the hot path pays
-//! shape inference and scratch-buffer allocation once per profile, not once
-//! per batch; switching profiles stays O(1) — a cache lookup, mirroring the
-//! MDC configuration-word write.
+//! Sim variant pre-packs every profile into a [`CompiledModel`] at load
+//! time (blocked weight tiles, fused bias/requant params) and keeps a
+//! per-profile [`BatchExecutor`] cache, so the hot path pays packing, shape
+//! inference, and arena allocation once per profile, not once per batch;
+//! switching profiles stays O(1) — a cache lookup, mirroring the MDC
+//! configuration-word write. Batches execute batch-major/layer-major via
+//! [`Backend::run_batch`]; the scalar `dataflow::exec` path remains the
+//! bit-exactness oracle the packed results are checked against in the
+//! bench/test suites.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::dataflow::{self, Executor};
+use crate::dataflow::{self, BatchExecutor, CompiledModel};
 use crate::qonnx::QonnxModel;
 use crate::runtime::{ArtifactStore, PjrtEngine};
 
@@ -32,9 +37,12 @@ pub enum Backend {
         engine: PjrtEngine,
     },
     Sim {
-        models: BTreeMap<String, Arc<QonnxModel>>,
-        /// Per-profile cached executors (populated lazily on first use).
-        executors: BTreeMap<String, Executor>,
+        /// Per-profile models pre-packed at load time (see
+        /// `dataflow::kernels`).
+        models: BTreeMap<String, Arc<CompiledModel>>,
+        /// Per-profile batch executors (lazily built on first use; their
+        /// arenas warm up once and are then allocation-free per batch).
+        executors: BTreeMap<String, BatchExecutor>,
     },
 }
 
@@ -59,11 +67,13 @@ impl Backend {
         Ok(Backend::Pjrt { engine })
     }
 
-    /// Build the integer dataflow backend from QONNX artifacts.
+    /// Build the integer dataflow backend from QONNX artifacts. Weights
+    /// are packed into their blocked execution layout here, at load time.
     pub fn sim(store: &ArtifactStore, profiles: &[&str]) -> Result<Self> {
         let mut models = BTreeMap::new();
         for p in profiles {
-            models.insert(p.to_string(), Arc::new(store.qonnx(p)?));
+            let compiled = CompiledModel::compile(Arc::new(store.qonnx(p)?));
+            models.insert(p.to_string(), Arc::new(compiled));
         }
         Ok(Backend::Sim {
             models,
@@ -72,12 +82,12 @@ impl Backend {
     }
 
     /// Build the Sim backend from in-memory models (tests, benches,
-    /// synthetic workloads).
+    /// synthetic workloads); packs them exactly like [`Backend::sim`].
     pub fn sim_from_models(models: BTreeMap<String, QonnxModel>) -> Self {
         Backend::Sim {
             models: models
                 .into_iter()
-                .map(|(name, m)| (name, Arc::new(m)))
+                .map(|(name, m)| (name, Arc::new(CompiledModel::compile(Arc::new(m)))))
                 .collect(),
             executors: BTreeMap::new(),
         }
@@ -99,12 +109,16 @@ impl Backend {
         }
     }
 
-    /// Classify a batch on `profile`. Returns (logits_f32, pred) per image.
+    /// Classify a whole batch on `profile` — the true batch entry point the
+    /// server shards call. Returns (logits_f32, pred) per image, in order.
     ///
     /// Takes `&mut self`: the Sim arm reuses (and lazily populates) its
     /// per-profile executor cache. Each server worker owns its replica, so
-    /// no locking is involved.
-    pub fn classify(
+    /// no locking is involved. The Sim path hands the *whole batch* to the
+    /// packed batch-major engine rather than looping images; its integers
+    /// are asserted equal to the scalar oracle (`dataflow::exec::execute`)
+    /// on every bench reply and across the property suite.
+    pub fn run_batch(
         &mut self,
         profile: &str,
         images: &[&[u8]],
@@ -113,18 +127,20 @@ impl Backend {
             Backend::Pjrt { engine } => engine.classify_batch(profile, images),
             Backend::Sim { models, executors } => {
                 if !executors.contains_key(profile) {
-                    let model = models
+                    let compiled = models
                         .get(profile)
                         .with_context(|| format!("profile '{profile}' not loaded"))?;
-                    executors.insert(profile.to_string(), Executor::from_arc(model.clone()));
+                    let ex = BatchExecutor::new(compiled.clone());
+                    executors.insert(profile.to_string(), ex);
                 }
                 let ex = executors.get_mut(profile).unwrap();
-                Ok(images
-                    .iter()
-                    .map(|img| {
-                        let logits = ex.run(img);
-                        let pred = dataflow::exec::argmax(&logits);
-                        (logits.iter().map(|&v| v as f32).collect(), pred)
+                let k = ex.out_features();
+                let logits = ex.run_batch(images);
+                Ok((0..images.len())
+                    .map(|i| {
+                        let row = &logits[i * k..(i + 1) * k];
+                        let pred = dataflow::exec::argmax(row);
+                        (row.iter().map(|&v| v as f32).collect(), pred)
                     })
                     .collect())
             }
@@ -156,10 +172,10 @@ mod tests {
         models.insert("T".to_string(), m.clone());
         let mut b = Backend::sim_from_models(models);
         let img: Vec<u8> = (0..m.input_shape.elems()).map(|i| i as u8).collect();
-        let out = b.classify("T", &[&img, &img]).unwrap();
+        let out = b.run_batch("T", &[&img, &img]).unwrap();
         assert_eq!(out.len(), 2);
         assert_eq!(out[0].1, out[1].1);
-        assert!(b.classify("missing", &[&img]).is_err());
+        assert!(b.run_batch("missing", &[&img]).is_err());
         assert!(b.ensure_profile("T").is_ok());
         assert!(b.ensure_profile("missing").is_err());
     }
@@ -184,12 +200,37 @@ mod tests {
         // Repeated batches hit the cached executor; logits must stay equal
         // to the one-shot `exec::execute` reference on every call.
         for _ in 0..3 {
-            let out = b.classify("T", &[&img_a, &img_b]).unwrap();
+            let out = b.run_batch("T", &[&img_a, &img_b]).unwrap();
             assert_eq!(out[0].0, want_a);
             assert_eq!(out[1].0, want_b);
         }
         if let Backend::Sim { executors, .. } = &b {
             assert_eq!(executors.len(), 1, "one cached executor per profile");
+        }
+    }
+
+    #[test]
+    fn run_batch_is_bit_exact_vs_scalar_oracle_across_batch_sizes() {
+        // cout=11 forces a remainder weight tile; batch sizes cover the
+        // batcher's envelope (solo request, partial batch, full batch-8).
+        let m = read_str(&test_model_json(3, 11)).unwrap();
+        let elems = m.input_shape.elems();
+        let mut models = BTreeMap::new();
+        models.insert("T".to_string(), m.clone());
+        let mut b = Backend::sim_from_models(models);
+        for &batch in &[1usize, 3, 8] {
+            let images: Vec<Vec<u8>> = (0..batch)
+                .map(|k| (0..elems).map(|i| ((i * 7 + k * 29) % 256) as u8).collect())
+                .collect();
+            let refs: Vec<&[u8]> = images.iter().map(Vec::as_slice).collect();
+            let out = b.run_batch("T", &refs).unwrap();
+            assert_eq!(out.len(), batch);
+            for (img, (logits, pred)) in images.iter().zip(&out) {
+                let want = dataflow::exec::execute(&m, img);
+                let want_f: Vec<f32> = want.iter().map(|&v| v as f32).collect();
+                assert_eq!(logits, &want_f);
+                assert_eq!(*pred, dataflow::exec::argmax(&want));
+            }
         }
     }
 

@@ -202,10 +202,9 @@ impl ProfileManager {
                 .collect(),
             _ => (0..self.profiles.len()).collect(),
         };
-        let hi_idx =
-            Self::most_accurate_meeting(&self.profiles, &allowed, self.cfg.accuracy_floor);
-        let lo_idx =
-            Self::lowest_power_meeting(&self.profiles, &allowed, self.cfg.accuracy_floor);
+        let floor = self.cfg.accuracy_floor;
+        let hi_idx = Self::most_accurate_meeting(&self.profiles, &allowed, floor);
+        let lo_idx = Self::lowest_power_meeting(&self.profiles, &allowed, floor);
         let t = self.cfg.low_energy_threshold;
         let h = self.cfg.hysteresis;
         let target = if frac < t - h {

@@ -298,14 +298,16 @@ impl AdaptiveServer {
                             ));
                             active = spec.name.clone();
                         }
-                        let images: Vec<&[u8]> =
+                        // Hand the backend the whole batch: the Sim path
+                        // executes it batch-major over pre-packed weights
+                        // (one warm executor per profile), not image by
+                        // image.
+                        let imgs: Vec<&[u8]> =
                             batch.iter().map(|r| r.image.as_slice()).collect();
-                        let results = match backend.classify(&spec.name, &images) {
+                        let results = match backend.run_batch(&spec.name, &imgs) {
                             Ok(r) => r,
                             Err(e) => {
-                                w_stats
-                                    .events
-                                    .push(format!("worker {wid}: batch failed: {e}"));
+                                w_stats.events.push(format!("worker {wid}: batch failed: {e}"));
                                 continue;
                             }
                         };
@@ -360,9 +362,8 @@ impl AdaptiveServer {
                             .push("dispatch failed: all workers exited".to_string());
                         break;
                     }
-                    let target = pin
-                        .unwrap_or_else(|| d_pool.least_loaded())
-                        .min(n_workers - 1);
+                    let routed = pin.unwrap_or_else(|| d_pool.least_loaded());
+                    let target = routed.min(n_workers - 1);
                     d_stats.queue_depth.inc();
                     d_stats.shard_depth[target].inc();
                     if !d_pool.push(target, batch) {
@@ -385,8 +386,8 @@ impl AdaptiveServer {
                     startup_err.get_or_insert(e);
                 }
                 Err(_) => {
-                    startup_err
-                        .get_or_insert(anyhow::anyhow!("worker died during startup"));
+                    let died = anyhow::anyhow!("worker died during startup");
+                    startup_err.get_or_insert(died);
                 }
             }
         }
@@ -540,8 +541,7 @@ mod tests {
         // Each classification drains 142mW * 329us ~= 4.7e-5 J.
         let energy = EnergyMonitor::new(9.0e-4);
         let mgr = ProfileManager::new(ManagerConfig::default(), specs());
-        let srv = AdaptiveServer::start(ServerConfig::default(), backend, mgr, energy)
-            .unwrap();
+        let srv = AdaptiveServer::start(ServerConfig::default(), backend, mgr, energy).unwrap();
 
         let img = vec![7u8; elems];
         let mut profiles_seen = Vec::new();
@@ -574,9 +574,7 @@ mod tests {
         }];
         let mgr = ProfileManager::new(ManagerConfig::default(), bad_specs);
         let energy = EnergyMonitor::new(1.0);
-        assert!(
-            AdaptiveServer::start(ServerConfig::default(), backend, mgr, energy).is_err()
-        );
+        assert!(AdaptiveServer::start(ServerConfig::default(), backend, mgr, energy).is_err());
     }
 
     #[test]
@@ -599,7 +597,7 @@ mod tests {
                 ServerConfig::with_workers(workers),
                 backend,
                 mgr,
-                energy
+                energy,
             )
             .is_err());
         }
@@ -614,9 +612,7 @@ mod tests {
             shard_capacity_j: Some(vec![1.0, 1.0, 1.0]),
             ..Default::default()
         };
-        assert!(
-            AdaptiveServer::start(cfg, backend, mgr, EnergyMonitor::new(1.0)).is_err()
-        );
+        assert!(AdaptiveServer::start(cfg, backend, mgr, EnergyMonitor::new(1.0)).is_err());
     }
 
     #[test]
@@ -708,8 +704,7 @@ mod tests {
         );
 
         // per-worker counters are consistent with the global counter
-        let per_worker: Vec<u64> =
-            srv.stats.worker_batches.iter().map(|c| c.get()).collect();
+        let per_worker: Vec<u64> = srv.stats.worker_batches.iter().map(|c| c.get()).collect();
         assert_eq!(
             per_worker.iter().sum::<u64>(),
             srv.stats.batches.get(),
@@ -740,11 +735,9 @@ mod tests {
             pin_dispatch_to: Some(0),
             ..Default::default()
         };
-        let srv =
-            AdaptiveServer::start(cfg, backend, mgr, EnergyMonitor::new(1e9)).unwrap();
+        let srv = AdaptiveServer::start(cfg, backend, mgr, EnergyMonitor::new(1e9)).unwrap();
         let client = srv.client();
-        let images: Vec<Vec<u8>> =
-            (0..N).map(|i| vec![(i % 251) as u8; elems]).collect();
+        let images: Vec<Vec<u8>> = (0..N).map(|i| vec![(i % 251) as u8; elems]).collect();
         let tickets = client.submit_many(images);
         assert_eq!(tickets.len(), N);
         let mut ids: Vec<u64> = tickets
@@ -755,10 +748,8 @@ mod tests {
         ids.dedup();
         assert_eq!(ids.len(), N, "conservation: one reply per submit");
 
-        let per_worker: Vec<u64> =
-            srv.stats.worker_batches.iter().map(|c| c.get()).collect();
-        let steals: Vec<u64> =
-            srv.stats.worker_steals.iter().map(|c| c.get()).collect();
+        let per_worker: Vec<u64> = srv.stats.worker_batches.iter().map(|c| c.get()).collect();
+        let steals: Vec<u64> = srv.stats.worker_steals.iter().map(|c| c.get()).collect();
         assert_eq!(
             per_worker.iter().sum::<u64>(),
             srv.stats.batches.get(),
@@ -799,34 +790,27 @@ mod tests {
             steal: false,
             ..Default::default()
         };
-        let srv =
-            AdaptiveServer::start(cfg, backend, mgr, EnergyMonitor::new(1e9)).unwrap();
+        let srv = AdaptiveServer::start(cfg, backend, mgr, EnergyMonitor::new(1e9)).unwrap();
         assert_eq!(srv.shard_energy.len(), 3);
         assert!(srv.shard_energy[0].depleted());
         let client = srv.client();
-        let tickets =
-            client.submit_many((0..N).map(|i| vec![(i % 97) as u8; elems]));
+        let tickets = client.submit_many((0..N).map(|i| vec![(i % 97) as u8; elems]));
         let mut by_shard = [0usize; 3];
         for t in tickets {
             let resp = t.await_reply().expect("reply lost");
             by_shard[resp.shard] += 1;
             if resp.shard == 0 {
-                assert_eq!(
-                    resp.profile, "lo",
-                    "depleted shard must serve the degraded profile"
-                );
+                assert_eq!(resp.profile, "lo", "depleted shard must serve the degraded profile");
             } else {
                 assert_eq!(
-                    resp.profile, "hi",
+                    resp.profile,
+                    "hi",
                     "healthy shard {} must stay on the exact profile",
                     resp.shard
                 );
             }
         }
-        assert!(
-            by_shard.iter().all(|&n| n > 0),
-            "every shard must serve a share: {by_shard:?}"
-        );
+        assert!(by_shard.iter().all(|&n| n > 0), "every shard must serve a share: {by_shard:?}");
         assert_eq!(srv.stats.shard_battery[0].get(), 0.0);
         assert!(srv.stats.shard_battery[1].get() > 0.99);
         drop(client);
@@ -863,11 +847,9 @@ mod tests {
         let h = std::thread::spawn(move || c2.classify(vec![1u8; elems]).unwrap().id);
         assert_eq!(h.join().unwrap(), 40);
         // pipelined convenience: replies in submission order, one per input
-        let replies =
-            client.classify_pipelined((0..10).map(|i| vec![i as u8; elems]), 4);
+        let replies = client.classify_pipelined((0..10).map(|i| vec![i as u8; elems]), 4);
         assert_eq!(replies.len(), 10);
-        let pipeline_ids: Vec<u64> =
-            replies.into_iter().map(|r| r.unwrap().id).collect();
+        let pipeline_ids: Vec<u64> = replies.into_iter().map(|r| r.unwrap().id).collect();
         assert_eq!(pipeline_ids, (41..51).collect::<Vec<u64>>());
         drop(client);
         srv.shutdown();
@@ -890,10 +872,7 @@ mod tests {
         // `client` still holds a live Sender: shutdown must not block on it
         srv.shutdown();
         let dead = client.submit(vec![4u8; elems]);
-        assert!(
-            dead.await_reply().is_err(),
-            "post-shutdown submit must resolve to Err, not hang"
-        );
+        assert!(dead.await_reply().is_err(), "post-shutdown submit must resolve to Err, not hang");
     }
 
     #[test]

@@ -76,8 +76,7 @@ impl<T> ShardDeques<T> {
             if s.dead.load(Ordering::SeqCst) {
                 continue;
             }
-            let load =
-                s.len.load(Ordering::SeqCst) + s.busy.load(Ordering::SeqCst) as usize;
+            let load = s.len.load(Ordering::SeqCst) + s.busy.load(Ordering::SeqCst) as usize;
             if best.is_none_or(|(_, l)| load < l) {
                 best = Some((i, load));
             }
@@ -385,10 +384,7 @@ mod tests {
             q.push(0, i);
         }
         q.close();
-        let mut all: Vec<u32> = handles
-            .into_iter()
-            .flat_map(|h| h.join().unwrap())
-            .collect();
+        let mut all: Vec<u32> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
         all.sort_unstable();
         let want: Vec<u32> = (0..ITEMS).collect();
         assert_eq!(all, want, "items lost or duplicated");

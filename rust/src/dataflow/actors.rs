@@ -150,8 +150,7 @@ impl LineBuffer {
                 }
                 let src = ((sy as usize) * self.w + sx as usize) * self.c;
                 let dst = ((dy as usize * 3) + dx as usize) * self.c;
-                win[dst..dst + self.c]
-                    .copy_from_slice(&self.rows[src..src + self.c]);
+                win[dst..dst + self.c].copy_from_slice(&self.rows[src..src + self.c]);
             }
         }
         win.into_boxed_slice()
@@ -212,7 +211,14 @@ pub struct ConvMac {
 }
 
 impl ConvMac {
-    pub fn new(name: &str, inp: usize, out: usize, layer: ConvLayer, pe: usize, simd: usize) -> Self {
+    pub fn new(
+        name: &str,
+        inp: usize,
+        out: usize,
+        layer: ConvLayer,
+        pe: usize,
+        simd: usize,
+    ) -> Self {
         let taps = 9 * layer.cin;
         let ii = (layer.cout.div_ceil(pe) * taps.div_ceil(simd)) as u64;
         ConvMac {

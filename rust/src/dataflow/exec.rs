@@ -1,9 +1,15 @@
-//! Fast functional integer executor (bit-exact vs python intref.py).
+//! Functional integer executor (bit-exact vs python intref.py).
 //!
 //! Semantics per conv layer (see intref.py for the derivation):
 //!   acc_c = sum_{dy,dx,ci} qx * qw + qb_c                 (i64)
 //!   qy_c  = clamp((acc_c * M_c + round_half) >> sh_c, 0, 2^act_bits - 1)
 //! Max-pool on codes; dense emits raw i64 accumulators (logits).
+//!
+//! This scalar path is the *reference oracle*: deliberately close to the
+//! Python derivation, one image at a time. The serving hot path is the
+//! packed, batch-major engine in [`super::kernels`], which is asserted
+//! bit-exact against this module by the property suite and on every bench
+//! reply.
 
 use std::sync::Arc;
 
@@ -20,6 +26,8 @@ pub struct Executor {
     /// Double-buffered activation planes (codes).
     buf_a: Vec<i64>,
     buf_b: Vec<i64>,
+    /// Conv accumulator scratch (max `cout` lanes), reused across runs.
+    acc: Vec<i64>,
 }
 
 impl Executor {
@@ -35,11 +43,13 @@ impl Executor {
     /// executor caches that already hold the model in an `Arc`).
     pub fn from_arc(model: Arc<QonnxModel>) -> Self {
         let (shapes, buf_a, buf_b) = scratch_for(&model);
+        let max_cout = model.conv_layers().map(|c| c.cout).max().unwrap_or(0);
         Executor {
             model,
             shapes,
             buf_a,
             buf_b,
+            acc: vec![0; max_cout],
         }
     }
 
@@ -55,6 +65,7 @@ impl Executor {
             &self.shapes,
             &mut self.buf_a,
             &mut self.buf_b,
+            &mut self.acc,
             input,
         )
     }
@@ -68,6 +79,7 @@ fn run_layers(
     shapes: &[TensorShape],
     buf_a: &mut [i64],
     buf_b: &mut [i64],
+    acc: &mut Vec<i64>,
     input: &[u8],
 ) -> Vec<i64> {
     let in_shape = model.input_shape;
@@ -87,16 +99,21 @@ fn run_layers(
         };
         match layer {
             Layer::Conv(c) => {
-                conv_forward(c, src, cur_shape, dst);
+                if acc.len() < c.cout {
+                    acc.resize(c.cout, 0);
+                }
+                conv_forward(c, src, cur_shape, dst, &mut acc[..c.cout]);
                 in_a = !in_a;
             }
             Layer::Pool(_) => {
-                pool_forward(src, cur_shape, dst);
+                pool_forward(&src[..cur_shape.elems()], cur_shape, dst);
                 in_a = !in_a;
             }
             Layer::Flatten { .. } => { /* layout already flat (HWC) */ }
             Layer::Dense(d) => {
-                logits = dense_forward(d, &src[..cur_shape.elems()]);
+                let out = &mut dst[..d.out_features];
+                dense_forward(d, &src[..cur_shape.elems()], out);
+                logits = out.to_vec();
                 in_a = !in_a;
             }
         }
@@ -105,26 +122,55 @@ fn run_layers(
     logits
 }
 
-fn scratch_for(model: &QonnxModel) -> (Vec<TensorShape>, Vec<i64>, Vec<i64>) {
+/// Shape walk shared by the scalar executor and the batched
+/// [`super::kernels::CompiledModel`]: tracks which ping/pong buffer holds
+/// each activation, so each buffer is sized by the widest tensor it will
+/// actually hold. (The previous plan sized both buffers to the global max,
+/// over-allocating whenever the widest activation lands in only one of
+/// them — e.g. a model whose first conv is the widest layer.)
+pub(crate) fn scratch_plan(model: &QonnxModel) -> (Vec<TensorShape>, usize, usize) {
     let shapes = crate::qonnx::infer_shapes(model);
-    let max_elems = shapes.iter().map(TensorShape::elems).max().unwrap_or(0);
-    (shapes, vec![0; max_elems], vec![0; max_elems])
+    let mut a_elems = shapes[0].elems();
+    let mut b_elems = 0;
+    let mut in_a = true;
+    for (i, layer) in model.layers.iter().enumerate() {
+        match layer {
+            Layer::Flatten { .. } => {}
+            Layer::Conv(_) | Layer::Pool(_) | Layer::Dense(_) => {
+                in_a = !in_a;
+                let elems = shapes[i + 1].elems();
+                if in_a {
+                    a_elems = a_elems.max(elems);
+                } else {
+                    b_elems = b_elems.max(elems);
+                }
+            }
+        }
+    }
+    (shapes, a_elems, b_elems)
+}
+
+fn scratch_for(model: &QonnxModel) -> (Vec<TensorShape>, Vec<i64>, Vec<i64>) {
+    let (shapes, a_elems, b_elems) = scratch_plan(model);
+    (shapes, vec![0; a_elems], vec![0; b_elems])
 }
 
 /// One-shot execution. Borrows the model — no weight cloning.
 pub fn execute(model: &QonnxModel, input: &[u8]) -> Vec<i64> {
     let (shapes, mut buf_a, mut buf_b) = scratch_for(model);
-    run_layers(model, &shapes, &mut buf_a, &mut buf_b, input)
+    let mut acc = Vec::new();
+    run_layers(model, &shapes, &mut buf_a, &mut buf_b, &mut acc, input)
 }
 
 /// Classify a batch; returns (logits per image, argmax per image).
 /// Borrows the model and reuses one scratch allocation across the batch.
 pub fn execute_batch(model: &QonnxModel, inputs: &[&[u8]]) -> (Vec<Vec<i64>>, Vec<usize>) {
     let (shapes, mut buf_a, mut buf_b) = scratch_for(model);
+    let mut acc = Vec::new();
     let mut all = Vec::with_capacity(inputs.len());
     let mut preds = Vec::with_capacity(inputs.len());
     for &img in inputs {
-        let logits = run_layers(model, &shapes, &mut buf_a, &mut buf_b, img);
+        let logits = run_layers(model, &shapes, &mut buf_a, &mut buf_b, &mut acc, img);
         preds.push(argmax(&logits));
         all.push(logits);
     }
@@ -150,10 +196,12 @@ pub fn requant(acc: i64, mult: i64, shift: i64, act_bits: u32) -> i64 {
     q.clamp(0, qmax)
 }
 
-fn conv_forward(c: &ConvLayer, src: &[i64], shape: TensorShape, dst: &mut [i64]) {
+/// `acc` is caller-provided scratch of exactly `cout` lanes (the executor
+/// reuses one allocation across runs instead of allocating per layer).
+fn conv_forward(c: &ConvLayer, src: &[i64], shape: TensorShape, dst: &mut [i64], acc: &mut [i64]) {
     let (h, w, cin, cout) = (shape.h, shape.w, c.cin, c.cout);
     debug_assert_eq!(shape.c, cin);
-    let mut acc = vec![0i64; cout];
+    debug_assert_eq!(acc.len(), cout);
     for y in 0..h {
         for x in 0..w {
             acc.copy_from_slice(&c.b_codes);
@@ -189,7 +237,10 @@ fn conv_forward(c: &ConvLayer, src: &[i64], shape: TensorShape, dst: &mut [i64])
     }
 }
 
-fn pool_forward(src: &[i64], shape: TensorShape, dst: &mut [i64]) {
+/// 2x2 stride-2 max-pool on codes. Generic over the cell type so the
+/// batched engine (i32 arenas) and this oracle (i64 planes) share one
+/// implementation and cannot diverge.
+pub(crate) fn pool_forward<T: Copy + Ord>(src: &[T], shape: TensorShape, dst: &mut [T]) {
     let (h, w, ch) = (shape.h, shape.w, shape.c);
     let (oh, ow) = (h / 2, w / 2);
     for y in 0..oh {
@@ -206,19 +257,21 @@ fn pool_forward(src: &[i64], shape: TensorShape, dst: &mut [i64]) {
     }
 }
 
-fn dense_forward(d: &DenseLayer, src: &[i64]) -> Vec<i64> {
+/// Accumulate raw logits into `out` (len = `out_features`), starting from
+/// the bias codes — no intermediate allocation (the old implementation
+/// cloned `b_codes` per image).
+fn dense_forward(d: &DenseLayer, src: &[i64], out: &mut [i64]) {
     let k = d.out_features;
-    let mut acc = d.b_codes.clone();
+    out.copy_from_slice(&d.b_codes);
     for (f, &xv) in src.iter().enumerate() {
         if xv == 0 {
             continue;
         }
         let wrow = &d.w_codes[f * k..f * k + k];
-        for (a, &wv) in acc.iter_mut().zip(wrow) {
+        for (a, &wv) in out.iter_mut().zip(wrow) {
             *a += xv * wv as i64;
         }
     }
-    acc
 }
 
 #[cfg(test)]
@@ -271,9 +324,7 @@ mod tests {
         let m = tiny();
         let imgs: Vec<Vec<u8>> = (0..4)
             .map(|k| {
-                (0..m.input_shape.elems())
-                    .map(|i| ((i * 31 + k * 7) % 256) as u8)
-                    .collect()
+                (0..m.input_shape.elems()).map(|i| ((i * 31 + k * 7) % 256) as u8).collect()
             })
             .collect();
         let mut cached = Executor::new(&m);
@@ -290,5 +341,18 @@ mod tests {
     fn argmax_ties_break_low_index() {
         assert_eq!(argmax(&[3, 5, 5, 1]), 1);
         assert_eq!(argmax(&[-2]), 0);
+    }
+
+    #[test]
+    fn scratch_plan_sizes_buffers_from_the_shape_walk() {
+        // tiny(1, 2) pipeline: input 4x4x1 (16, buffer A) -> conv 4x4x2
+        // (32, B) -> pool 2x2x2 (8, A) -> flatten -> dense 3 (B). The walk
+        // must size A by 16 (not the global max 32, which the old plan used
+        // for both buffers) and B by 32.
+        let m = tiny();
+        let (shapes, a_elems, b_elems) = scratch_plan(&m);
+        assert_eq!(shapes.len(), m.layers.len() + 1);
+        assert_eq!(a_elems, 16);
+        assert_eq!(b_elems, 32);
     }
 }

@@ -62,12 +62,7 @@ impl Fifo {
     /// Push a token. Panics if full — actors must check `has_room` first
     /// (firing rules enforce back-pressure; a panic is a scheduler bug).
     pub fn push(&mut self, token: Box<[i64]>) {
-        assert!(
-            self.has_room(),
-            "FIFO '{}' overflow (capacity {})",
-            self.name,
-            self.capacity
-        );
+        assert!(self.has_room(), "FIFO '{}' overflow (capacity {})", self.name, self.capacity);
         self.record_toggles(&token);
         self.queue.push_back(token);
         self.pushes += 1;

@@ -1,0 +1,679 @@
+//! Batched, pre-packed, allocation-free inference kernels — the Sim
+//! backend's serving hot path.
+//!
+//! [`super::exec`] stays the bit-exactness *reference oracle*: scalar,
+//! per-image, structured like `python/compile/intref.py`. This module is
+//! what the server shards actually run:
+//!
+//! * **Pre-packing** — at profile-load time a [`CompiledModel`] repacks
+//!   every conv/dense weight tensor into output-channel tiles of
+//!   [`CO_TILE`] lanes ((dy,dx,ci)-major within a tile, zero-padded on the
+//!   last tile) and fuses bias + requant multiplier/shift into per-channel
+//!   [`ChannelParams`]. The fixed tile width keeps the inner MAC loop
+//!   branch-free with compile-time trip count, so the compiler unrolls and
+//!   vectorizes it; padded lanes are computed but never written back.
+//! * **Batch-major, layer-major execution** — [`BatchExecutor::run_batch`]
+//!   pushes the whole batch through one layer before the next, with the
+//!   tile loop outermost: one packed weight tile stays cache-resident
+//!   across every image of the batch instead of being re-streamed per
+//!   image (the software analogue of the streaming fabric's weight reuse).
+//! * **Arena scratch** — activations live in two ping/pong arenas sized by
+//!   the per-layer shape walk ([`super::exec::scratch_plan`]) times the
+//!   batch, plus one logits arena. Arenas only grow, so once warmed for a
+//!   batch size the executor performs zero heap allocations per batch.
+//! * **Narrow arithmetic** — activation codes are stored as `i32` (the
+//!   requant clamp bounds them by `2^act_bits - 1`); a conv layer whose
+//!   exact worst-case accumulator interval fits `i32` runs 32-bit MACs
+//!   (SIMD-friendly) and falls back to 64-bit accumulators otherwise. Both
+//!   paths accumulate in the oracle's per-channel order and the narrow one
+//!   is selected only when it provably cannot overflow, so the integers
+//!   match the oracle exactly.
+//!
+//! Models outside the packable envelope (activations wider than 31 bits,
+//! or a dense layer that is not terminal) compile to a scalar-fallback
+//! plan that loops the oracle per image — correct, just not fast-pathed.
+
+use std::sync::Arc;
+
+use crate::qonnx::{ConvLayer, DenseLayer, Layer, QonnxModel, TensorShape};
+
+use super::exec::{self, Executor};
+
+/// Output channels per packed weight tile (lanes of the inner MAC loop).
+pub const CO_TILE: usize = 8;
+
+/// Per-output-channel parameters: bias at accumulator scale fused with the
+/// TFLite-style requantization multiplier and right shift, so the whole
+/// epilogue of a channel is one struct read away from its weight tile.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ChannelParams {
+    pub bias: i64,
+    pub mult: i64,
+    pub shift: i64,
+}
+
+/// A 3x3 SAME conv layer repacked into output-channel tiles.
+#[derive(Debug, Clone)]
+pub struct PackedConv {
+    cin: usize,
+    cout: usize,
+    act_bits: u32,
+    n_tiles: usize,
+    /// Weight codes, `[tile][(dy*3+dx)*cin + ci][CO_TILE]` flattened; lanes
+    /// past `cout` on the last tile are zero.
+    w: Vec<i32>,
+    /// Fused per-channel params, `[tile][CO_TILE]`, default-padded.
+    params: Vec<ChannelParams>,
+    /// 32-bit accumulators are provably overflow-free for this layer.
+    narrow: bool,
+}
+
+/// Exact worst-case accumulator check for the 32-bit MAC path. Terms are
+/// `w * x` with `x in [0, in_max]`, so each term's range contains 0 and any
+/// partial accumulation stays inside `bias + [sum of negative term minima,
+/// sum of positive term maxima]`. The narrow path is chosen only when that
+/// interval — and every individual product — fits `i32`.
+fn conv_fits_i32(c: &ConvLayer, in_max: i64) -> bool {
+    if in_max > i32::MAX as i64 {
+        return false;
+    }
+    for co in 0..c.cout {
+        let mut lo = c.b_codes[co] as i128;
+        let mut hi = lo;
+        for tap in 0..9 * c.cin {
+            let term = c.w_codes[tap * c.cout + co] as i128 * in_max as i128;
+            if term.abs() > i32::MAX as i128 {
+                return false;
+            }
+            if term > 0 {
+                hi += term;
+            } else {
+                lo += term;
+            }
+        }
+        if lo < i32::MIN as i128 || hi > i32::MAX as i128 {
+            return false;
+        }
+    }
+    true
+}
+
+impl PackedConv {
+    /// Repack `c` for tiled execution. `in_max` is the largest activation
+    /// code the previous stage can produce (drives the accumulator-width
+    /// proof, not the values).
+    pub fn pack(c: &ConvLayer, in_max: i64) -> Self {
+        let n_tiles = c.cout.div_ceil(CO_TILE);
+        let mut w = vec![0i32; n_tiles * 9 * c.cin * CO_TILE];
+        let mut params = vec![ChannelParams::default(); n_tiles * CO_TILE];
+        for co in 0..c.cout {
+            let (tile, lane) = (co / CO_TILE, co % CO_TILE);
+            params[tile * CO_TILE + lane] = ChannelParams {
+                bias: c.b_codes[co],
+                mult: c.mult[co],
+                shift: c.shift[co],
+            };
+            for tap in 0..9 * c.cin {
+                w[(tile * 9 * c.cin + tap) * CO_TILE + lane] = c.w_codes[tap * c.cout + co];
+            }
+        }
+        PackedConv {
+            cin: c.cin,
+            cout: c.cout,
+            act_bits: c.act_bits,
+            n_tiles,
+            w,
+            params,
+            narrow: conv_fits_i32(c, in_max),
+        }
+    }
+
+    /// Run the layer over the whole batch, tile loop outermost: one packed
+    /// weight tile is reused across every image before the next tile is
+    /// touched. `src`/`dst` are batch-major arenas with the given per-image
+    /// strides.
+    pub fn forward_batch(
+        &self,
+        batch: usize,
+        src: &[i32],
+        src_stride: usize,
+        dst: &mut [i32],
+        dst_stride: usize,
+        shape: TensorShape,
+    ) {
+        debug_assert_eq!(shape.c, self.cin);
+        let in_elems = shape.elems();
+        let out_elems = shape.h * shape.w * self.cout;
+        for tile in 0..self.n_tiles {
+            for img in 0..batch {
+                let s = &src[img * src_stride..][..in_elems];
+                let d = &mut dst[img * dst_stride..][..out_elems];
+                if self.narrow {
+                    self.tile_forward_narrow(tile, s, shape, d);
+                } else {
+                    self.tile_forward_wide(tile, s, shape, d);
+                }
+            }
+        }
+    }
+
+    /// 32-bit accumulator kernel (proven overflow-free by `conv_fits_i32`,
+    /// hence bit-exact vs the oracle's 64-bit accumulation).
+    fn tile_forward_narrow(&self, tile: usize, src: &[i32], shape: TensorShape, dst: &mut [i32]) {
+        let (h, w, cin, cout) = (shape.h, shape.w, self.cin, self.cout);
+        let tw = &self.w[tile * 9 * cin * CO_TILE..][..9 * cin * CO_TILE];
+        let tp = &self.params[tile * CO_TILE..][..CO_TILE];
+        let co0 = tile * CO_TILE;
+        let lanes = CO_TILE.min(cout - co0);
+        for y in 0..h {
+            for x in 0..w {
+                let mut acc = [0i32; CO_TILE];
+                for (a, p) in acc.iter_mut().zip(tp) {
+                    *a = p.bias as i32;
+                }
+                for dy in 0..3usize {
+                    let sy = y as isize + dy as isize - 1;
+                    if sy < 0 || sy >= h as isize {
+                        continue;
+                    }
+                    for dx in 0..3usize {
+                        let sx = x as isize + dx as isize - 1;
+                        if sx < 0 || sx >= w as isize {
+                            continue;
+                        }
+                        let base = (sy as usize * w + sx as usize) * cin;
+                        let wbase = (dy * 3 + dx) * cin * CO_TILE;
+                        for ci in 0..cin {
+                            let xv = src[base + ci];
+                            if xv == 0 {
+                                continue; // ReLU-sparse activations: skip zero MACs
+                            }
+                            let wrow = &tw[wbase + ci * CO_TILE..][..CO_TILE];
+                            for (a, &wv) in acc.iter_mut().zip(wrow) {
+                                *a += xv * wv;
+                            }
+                        }
+                    }
+                }
+                let obase = (y * w + x) * cout + co0;
+                for k in 0..lanes {
+                    let p = tp[k];
+                    let q = exec::requant(acc[k] as i64, p.mult, p.shift, self.act_bits);
+                    dst[obase + k] = q as i32;
+                }
+            }
+        }
+    }
+
+    /// 64-bit accumulator kernel for layers whose bounds exceed `i32`
+    /// (same tiling and accumulation order, wider lanes).
+    fn tile_forward_wide(&self, tile: usize, src: &[i32], shape: TensorShape, dst: &mut [i32]) {
+        let (h, w, cin, cout) = (shape.h, shape.w, self.cin, self.cout);
+        let tw = &self.w[tile * 9 * cin * CO_TILE..][..9 * cin * CO_TILE];
+        let tp = &self.params[tile * CO_TILE..][..CO_TILE];
+        let co0 = tile * CO_TILE;
+        let lanes = CO_TILE.min(cout - co0);
+        for y in 0..h {
+            for x in 0..w {
+                let mut acc = [0i64; CO_TILE];
+                for (a, p) in acc.iter_mut().zip(tp) {
+                    *a = p.bias;
+                }
+                for dy in 0..3usize {
+                    let sy = y as isize + dy as isize - 1;
+                    if sy < 0 || sy >= h as isize {
+                        continue;
+                    }
+                    for dx in 0..3usize {
+                        let sx = x as isize + dx as isize - 1;
+                        if sx < 0 || sx >= w as isize {
+                            continue;
+                        }
+                        let base = (sy as usize * w + sx as usize) * cin;
+                        let wbase = (dy * 3 + dx) * cin * CO_TILE;
+                        for ci in 0..cin {
+                            let xv = src[base + ci] as i64;
+                            if xv == 0 {
+                                continue;
+                            }
+                            let wrow = &tw[wbase + ci * CO_TILE..][..CO_TILE];
+                            for (a, &wv) in acc.iter_mut().zip(wrow) {
+                                *a += xv * wv as i64;
+                            }
+                        }
+                    }
+                }
+                let obase = (y * w + x) * cout + co0;
+                for k in 0..lanes {
+                    let p = tp[k];
+                    let q = exec::requant(acc[k], p.mult, p.shift, self.act_bits);
+                    dst[obase + k] = q as i32;
+                }
+            }
+        }
+    }
+}
+
+/// A dense head repacked into output tiles (raw i64 logits, no requant).
+#[derive(Debug, Clone)]
+pub struct PackedDense {
+    in_features: usize,
+    out_features: usize,
+    n_tiles: usize,
+    /// Weight codes, `[tile][f][CO_TILE]` flattened, zero-padded lanes.
+    w: Vec<i32>,
+    /// Bias codes, `[tile][CO_TILE]`, zero-padded.
+    bias: Vec<i64>,
+}
+
+impl PackedDense {
+    pub fn pack(d: &DenseLayer) -> Self {
+        let n_tiles = d.out_features.div_ceil(CO_TILE);
+        let mut w = vec![0i32; n_tiles * d.in_features * CO_TILE];
+        let mut bias = vec![0i64; n_tiles * CO_TILE];
+        for k in 0..d.out_features {
+            let (tile, lane) = (k / CO_TILE, k % CO_TILE);
+            bias[tile * CO_TILE + lane] = d.b_codes[k];
+            for f in 0..d.in_features {
+                w[(tile * d.in_features + f) * CO_TILE + lane] = d.w_codes[f * d.out_features + k];
+            }
+        }
+        PackedDense {
+            in_features: d.in_features,
+            out_features: d.out_features,
+            n_tiles,
+            w,
+            bias,
+        }
+    }
+
+    /// Accumulate raw i64 logits rows (`out_features` per image) into
+    /// `dst`, tile loop outermost. Dense always accumulates in i64: its
+    /// output *is* the raw accumulator the FPGA head would emit.
+    pub fn forward_batch(&self, batch: usize, src: &[i32], src_stride: usize, dst: &mut [i64]) {
+        let fcount = self.in_features;
+        let k_total = self.out_features;
+        for tile in 0..self.n_tiles {
+            let tw = &self.w[tile * fcount * CO_TILE..][..fcount * CO_TILE];
+            let tb = &self.bias[tile * CO_TILE..][..CO_TILE];
+            let k0 = tile * CO_TILE;
+            let lanes = CO_TILE.min(k_total - k0);
+            for img in 0..batch {
+                let s = &src[img * src_stride..][..fcount];
+                let mut acc = [0i64; CO_TILE];
+                acc.copy_from_slice(tb);
+                for (f, &xv) in s.iter().enumerate() {
+                    if xv == 0 {
+                        continue;
+                    }
+                    let xv = xv as i64;
+                    let wrow = &tw[f * CO_TILE..][..CO_TILE];
+                    for (a, &wv) in acc.iter_mut().zip(wrow) {
+                        *a += xv * wv as i64;
+                    }
+                }
+                let obase = img * k_total + k0;
+                dst[obase..obase + lanes].copy_from_slice(&acc[..lanes]);
+            }
+        }
+    }
+}
+
+/// One stage of the packed execution plan.
+enum CompiledStep {
+    Conv(PackedConv),
+    Pool,
+    Flatten,
+    Dense(PackedDense),
+}
+
+/// A model pre-packed for batched execution: built once per profile at
+/// load time (the MDC "configuration write" analogue), shared across
+/// executors via `Arc`.
+pub struct CompiledModel {
+    model: Arc<QonnxModel>,
+    shapes: Vec<TensorShape>,
+    /// `None` => outside the packable envelope; executors fall back to
+    /// looping the scalar oracle per image.
+    steps: Option<Vec<CompiledStep>>,
+    /// Per-image ping/pong arena sizes from the shape walk.
+    a_elems: usize,
+    b_elems: usize,
+    out_features: usize,
+}
+
+impl CompiledModel {
+    pub fn compile(model: Arc<QonnxModel>) -> Self {
+        let (shapes, a_elems, b_elems) = exec::scratch_plan(&model);
+        let out_features = model.dense().map(|d| d.out_features).unwrap_or(0);
+        let steps = Self::pack_steps(&model);
+        CompiledModel {
+            model,
+            shapes,
+            steps,
+            a_elems,
+            b_elems,
+            out_features,
+        }
+    }
+
+    /// Convenience for callers not holding an `Arc` yet (clones weights).
+    pub fn from_model(model: &QonnxModel) -> Self {
+        Self::compile(Arc::new(model.clone()))
+    }
+
+    /// Activation arenas hold i32 codes, so every producer must stay within
+    /// 31 bits; dense emits raw i64 accumulators, so it must be terminal.
+    fn pack_steps(model: &QonnxModel) -> Option<Vec<CompiledStep>> {
+        let mut in_max = 255i64; // input codes arrive as u8
+        let mut steps = Vec::with_capacity(model.layers.len());
+        for (i, layer) in model.layers.iter().enumerate() {
+            match layer {
+                Layer::Conv(c) => {
+                    if c.act_bits > 31 {
+                        return None;
+                    }
+                    steps.push(CompiledStep::Conv(PackedConv::pack(c, in_max)));
+                    in_max = (1i64 << c.act_bits) - 1;
+                }
+                Layer::Pool(_) => steps.push(CompiledStep::Pool),
+                Layer::Flatten { .. } => steps.push(CompiledStep::Flatten),
+                Layer::Dense(d) => {
+                    if i + 1 != model.layers.len() {
+                        return None;
+                    }
+                    steps.push(CompiledStep::Dense(PackedDense::pack(d)));
+                }
+            }
+        }
+        Some(steps)
+    }
+
+    pub fn model(&self) -> &Arc<QonnxModel> {
+        &self.model
+    }
+
+    pub fn out_features(&self) -> usize {
+        self.out_features
+    }
+
+    /// Whether the fast packed plan applies (false = scalar fallback).
+    pub fn is_packed(&self) -> bool {
+        self.steps.is_some()
+    }
+}
+
+/// Batched executor over a [`CompiledModel`]: owns the activation/logits
+/// arenas and runs batch-major, layer-major. One per (worker shard,
+/// profile); not shared across threads.
+pub struct BatchExecutor {
+    compiled: Arc<CompiledModel>,
+    /// Ping/pong activation arenas (i32 codes), `capacity * {a,b}_elems`.
+    buf_a: Vec<i32>,
+    buf_b: Vec<i32>,
+    /// Logits arena, `capacity * out_features` raw i64 accumulators.
+    out: Vec<i64>,
+    /// Images the arenas currently accommodate. Grows monotonically: a
+    /// warmed executor allocates nothing per batch.
+    capacity: usize,
+    /// Scalar oracle, used only when the model is outside the packed
+    /// envelope.
+    fallback: Option<Executor>,
+}
+
+impl BatchExecutor {
+    pub fn new(compiled: Arc<CompiledModel>) -> Self {
+        let fallback = if compiled.is_packed() {
+            None
+        } else {
+            Some(Executor::from_arc(compiled.model().clone()))
+        };
+        BatchExecutor {
+            compiled,
+            buf_a: Vec::new(),
+            buf_b: Vec::new(),
+            out: Vec::new(),
+            capacity: 0,
+            fallback,
+        }
+    }
+
+    /// Convenience: compile + wrap in one step (tests/benches).
+    pub fn from_model(model: &QonnxModel) -> Self {
+        Self::new(Arc::new(CompiledModel::from_model(model)))
+    }
+
+    pub fn compiled(&self) -> &Arc<CompiledModel> {
+        &self.compiled
+    }
+
+    pub fn out_features(&self) -> usize {
+        self.compiled.out_features
+    }
+
+    /// Grow (never shrink) the arenas to hold `batch` images. The
+    /// scalar-fallback plan only uses the logits arena (the oracle owns its
+    /// own scratch), so the activation arenas stay empty there.
+    fn reserve(&mut self, batch: usize) {
+        if batch <= self.capacity {
+            return;
+        }
+        if self.fallback.is_none() {
+            self.buf_a.resize(batch * self.compiled.a_elems, 0);
+            self.buf_b.resize(batch * self.compiled.b_elems, 0);
+        }
+        self.out.resize(batch * self.compiled.out_features, 0);
+        self.capacity = batch;
+    }
+
+    /// Classify a batch. Returns the raw logits rows ([`Self::out_features`]
+    /// per image, submission order) — the same i64 accumulators
+    /// [`exec::execute`] returns for each image. The slice borrows the
+    /// executor's arena until the next call; copy out what must outlive it.
+    pub fn run_batch(&mut self, images: &[&[u8]]) -> &[i64] {
+        let n = images.len();
+        let in_elems = self.compiled.shapes[0].elems();
+        for img in images {
+            assert_eq!(img.len(), in_elems, "input size mismatch");
+        }
+        self.reserve(n);
+        if self.fallback.is_some() {
+            return self.run_batch_scalar(images);
+        }
+        let CompiledModel {
+            shapes,
+            steps,
+            a_elems,
+            b_elems,
+            out_features,
+            ..
+        } = &*self.compiled;
+        let (a_stride, b_stride) = (*a_elems, *b_elems);
+        let steps = steps.as_ref().expect("packed plan");
+        for (img, &data) in images.iter().enumerate() {
+            let dst = &mut self.buf_a[img * a_stride..][..in_elems];
+            for (d, &s) in dst.iter_mut().zip(data) {
+                *d = s as i32;
+            }
+        }
+        let mut cur_shape = shapes[0];
+        let mut in_a = true;
+        for (i, step) in steps.iter().enumerate() {
+            let out_shape = shapes[i + 1];
+            let (src, dst, src_stride, dst_stride) = if in_a {
+                (&self.buf_a[..], &mut self.buf_b[..], a_stride, b_stride)
+            } else {
+                (&self.buf_b[..], &mut self.buf_a[..], b_stride, a_stride)
+            };
+            match step {
+                CompiledStep::Conv(pc) => {
+                    pc.forward_batch(n, src, src_stride, dst, dst_stride, cur_shape);
+                    in_a = !in_a;
+                }
+                CompiledStep::Pool => {
+                    for img in 0..n {
+                        let s = &src[img * src_stride..][..cur_shape.elems()];
+                        let d = &mut dst[img * dst_stride..][..out_shape.elems()];
+                        exec::pool_forward(s, cur_shape, d);
+                    }
+                    in_a = !in_a;
+                }
+                CompiledStep::Flatten => {}
+                CompiledStep::Dense(pd) => {
+                    pd.forward_batch(n, src, src_stride, &mut self.out);
+                    in_a = !in_a;
+                }
+            }
+            cur_shape = out_shape;
+        }
+        &self.out[..n * out_features]
+    }
+
+    /// Scalar-fallback plan: loop the oracle per image into the logits
+    /// arena (exotic bit-widths only — correctness over speed).
+    fn run_batch_scalar(&mut self, images: &[&[u8]]) -> &[i64] {
+        let k = self.compiled.out_features;
+        let ex = self.fallback.as_mut().expect("scalar fallback");
+        for (img, &data) in images.iter().enumerate() {
+            let logits = ex.run(data);
+            self.out[img * k..][..k].copy_from_slice(&logits);
+        }
+        &self.out[..images.len() * k]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qonnx::{random_model_json, read_str, test_model_json, RandModelCfg};
+    use crate::testkit::Rng;
+
+    fn imgs_for(m: &QonnxModel, n: usize, salt: usize) -> Vec<Vec<u8>> {
+        let elems = m.input_shape.elems();
+        (0..n)
+            .map(|k| (0..elems).map(|i| ((i * 31 + k * 17 + salt) % 256) as u8).collect())
+            .collect()
+    }
+
+    fn assert_matches_oracle(m: &QonnxModel, batches: &[usize]) {
+        let mut ex = BatchExecutor::from_model(m);
+        let k = ex.out_features();
+        for (bi, &b) in batches.iter().enumerate() {
+            let imgs = imgs_for(m, b, bi * 97);
+            let refs: Vec<&[u8]> = imgs.iter().map(Vec::as_slice).collect();
+            let got = ex.run_batch(&refs).to_vec();
+            assert_eq!(got.len(), b * k);
+            for (i, img) in imgs.iter().enumerate() {
+                let want = exec::execute(m, img);
+                assert_eq!(
+                    &got[i * k..(i + 1) * k],
+                    want.as_slice(),
+                    "batch {b} image {i} diverges from the scalar oracle"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_matches_oracle_on_tiny_models() {
+        // cout exercises exact tiles (8, 16), remainder lanes (2, 3, 11),
+        // and multi-tile remainders; the dense head (3 classes) is always a
+        // remainder tile.
+        for (cin, cout) in [(1, 2), (2, 3), (3, 8), (1, 11), (2, 16)] {
+            let m = read_str(&test_model_json(cin, cout)).unwrap();
+            assert_matches_oracle(&m, &[1, 3, 8]);
+        }
+    }
+
+    #[test]
+    fn packed_matches_oracle_on_random_models() {
+        let mut rng = Rng::new(0xC0FFEE);
+        for _ in 0..8 {
+            let cfg = RandModelCfg::gen(&mut rng);
+            let m = read_str(&random_model_json(&cfg, &mut rng)).unwrap();
+            assert_matches_oracle(&m, &[1, 3, 8]);
+        }
+    }
+
+    #[test]
+    fn conv_packing_places_every_code_in_its_lane() {
+        let m = read_str(&test_model_json(2, 11)).unwrap();
+        let c = m.conv_layers().next().unwrap();
+        let pc = PackedConv::pack(c, 255);
+        assert_eq!(pc.n_tiles, 2);
+        assert!(pc.narrow, "tiny model bounds fit 32-bit accumulators");
+        for dy in 0..3 {
+            for dx in 0..3 {
+                for ci in 0..c.cin {
+                    for co in 0..c.cout {
+                        let (tile, lane) = (co / CO_TILE, co % CO_TILE);
+                        let tap = (dy * 3 + dx) * c.cin + ci;
+                        let idx = (tile * 9 * c.cin + tap) * CO_TILE + lane;
+                        assert_eq!(pc.w[idx], c.w(dy, dx, ci, co));
+                    }
+                }
+            }
+        }
+        // padded lanes of the last tile are zero, and their params inert
+        for tap in 0..9 * c.cin {
+            for lane in (c.cout % CO_TILE)..CO_TILE {
+                assert_eq!(pc.w[(9 * c.cin + tap) * CO_TILE + lane], 0);
+            }
+        }
+        assert_eq!(pc.params[CO_TILE + c.cout % CO_TILE].bias, 0);
+    }
+
+    #[test]
+    fn wide_bias_takes_the_i64_path_and_matches() {
+        // 3e9 exceeds i32: the layer must pick 64-bit accumulators and
+        // still agree with the oracle.
+        let wide = "\"b_codes\":[3000000000,1]";
+        let json = test_model_json(1, 2).replace("\"b_codes\":[1,1]", wide);
+        let m = read_str(&json).unwrap();
+        let compiled = CompiledModel::from_model(&m);
+        assert!(compiled.is_packed());
+        match compiled.steps.as_ref().unwrap().first() {
+            Some(CompiledStep::Conv(pc)) => assert!(!pc.narrow, "must widen"),
+            _ => panic!("first step should be conv"),
+        }
+        assert_matches_oracle(&m, &[1, 4]);
+    }
+
+    #[test]
+    fn act_bits_over_31_fall_back_to_scalar_plan() {
+        let json = test_model_json(1, 2).replace("\"act_bits\":8", "\"act_bits\":32");
+        let m = read_str(&json).unwrap();
+        let compiled = CompiledModel::from_model(&m);
+        assert!(!compiled.is_packed(), "32-bit activations exceed i32 codes");
+        assert_matches_oracle(&m, &[2]);
+    }
+
+    #[test]
+    fn arena_grows_monotonically_and_stays_bit_exact() {
+        let m = read_str(&test_model_json(2, 5)).unwrap();
+        let mut ex = BatchExecutor::from_model(&m);
+        let k = ex.out_features();
+        let mut max_seen = 0usize;
+        for &b in &[2usize, 8, 1, 5, 8] {
+            max_seen = max_seen.max(b);
+            let imgs = imgs_for(&m, b, b * 13);
+            let refs: Vec<&[u8]> = imgs.iter().map(Vec::as_slice).collect();
+            let got = ex.run_batch(&refs).to_vec();
+            for (i, img) in imgs.iter().enumerate() {
+                assert_eq!(&got[i * k..(i + 1) * k], exec::execute(&m, img).as_slice());
+            }
+            assert_eq!(
+                ex.capacity,
+                max_seen,
+                "arena must grow to the high-water mark and never shrink"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_batch_is_a_no_op() {
+        let m = read_str(&test_model_json(1, 2)).unwrap();
+        let mut ex = BatchExecutor::from_model(&m);
+        assert!(ex.run_batch(&[]).is_empty());
+    }
+}

@@ -5,11 +5,17 @@
 //! layers connected by on-chip FIFOs and running concurrently. This module
 //! is the substitution for that fabric (DESIGN.md §2):
 //!
-//! * [`exec`] — the fast functional path: executes the integer pipeline of a
-//!   [`crate::qonnx::QonnxModel`] bit-exactly (i64 accumulators, TFLite-style
-//!   per-channel requantization). Pinned against `python/compile/intref.py`
-//!   via exported test vectors. Used for accuracy sweeps and by the
-//!   coordinator when the PJRT runtime is not in play.
+//! * [`exec`] — the functional reference path: executes the integer
+//!   pipeline of a [`crate::qonnx::QonnxModel`] bit-exactly (i64
+//!   accumulators, TFLite-style per-channel requantization). Pinned against
+//!   `python/compile/intref.py` via exported test vectors. Used for
+//!   accuracy sweeps and as the bit-exactness oracle for the packed engine.
+//! * [`kernels`] — the serving hot path: per-profile [`CompiledModel`]s
+//!   pre-pack conv/dense weights into output-channel tiles with fused
+//!   bias/requant params, and [`BatchExecutor`] runs whole batches
+//!   batch-major and layer-major from a per-executor arena (zero
+//!   allocations after warm-up). Asserted bit-exact vs [`exec`] by the
+//!   property suite and on every bench reply.
 //! * [`actors`] + [`sim`] — the cycle-approximate actor/FIFO simulation of
 //!   the streaming template (Fig. 2 right in the paper): line-buffer,
 //!   conv-MAC (with PE/SIMD folding), max-pool, and gemm actors exchanging
@@ -22,8 +28,10 @@
 pub mod actors;
 pub mod exec;
 pub mod fifo;
+pub mod kernels;
 pub mod sim;
 
 pub use exec::{execute, execute_batch, Executor};
 pub use fifo::Fifo;
+pub use kernels::{BatchExecutor, ChannelParams, CompiledModel, PackedConv, PackedDense};
 pub use sim::{simulate_image, FoldingConfig, SimReport};

@@ -240,10 +240,7 @@ pub fn simulate_image(model: &QonnxModel, cfg: &FoldingConfig, image: &[u8]) -> 
             }
         }
         if done || !fifos[logits_fifo].is_empty() {
-            logits = fifos[logits_fifo]
-                .pop()
-                .expect("logits token missing")
-                .to_vec();
+            logits = fifos[logits_fifo].pop().expect("logits token missing").to_vec();
             break;
         }
         assert!(any, "deadlock: no actor could fire at cycle {cycles}");
@@ -313,9 +310,8 @@ mod tests {
             let cfg = crate::qonnx::RandModelCfg::gen(rng);
             let json = crate::qonnx::random_model_json(&cfg, rng);
             let m = read_str(&json).map_err(|e| e.to_string())?;
-            let img: Vec<u8> = (0..m.input_shape.elems())
-                .map(|_| rng.u64(0, 255) as u8)
-                .collect();
+            let elems = m.input_shape.elems();
+            let img: Vec<u8> = (0..elems).map(|_| rng.u64(0, 255) as u8).collect();
             let want = exec::execute(&m, &img);
             let fold = random_fold(rng);
             let rep = simulate_image(&m, &fold, &img);
@@ -360,11 +356,7 @@ mod tests {
         let img: Vec<u8> = (0..m.input_shape.elems()).map(|i| (i * 7 % 256) as u8).collect();
         let rep = simulate_image(&m, &FoldingConfig::default(), &img);
         for f in &rep.fifos {
-            assert!(
-                f.max_occupancy <= f.capacity,
-                "{} exceeded capacity",
-                f.name
-            );
+            assert!(f.max_occupancy <= f.capacity, "{} exceeded capacity", f.name);
         }
     }
 

@@ -244,18 +244,14 @@ mod tests {
         let est = estimate_engine(&m, &FoldingConfig::default(), &Calibration::default());
         assert!(est.luts > 0);
         assert!(est.latency_cycles > 0);
-        assert_eq!(
-            est.luts,
-            est.actors.iter().map(|a| a.luts).sum::<u64>()
-        );
+        assert_eq!(est.luts, est.actors.iter().map(|a| a.luts).sum::<u64>());
     }
 
     #[test]
     fn luts_monotone_in_weight_bits() {
         // Table-1 invariant: resources monotone non-decreasing in bit-width.
         let m4 = tiny(); // weight_bits=4 in the generator
-        let json8 = test_model_json(2, 4)
-            .replace("\"weight_bits\":4", "\"weight_bits\":8");
+        let json8 = test_model_json(2, 4).replace("\"weight_bits\":4", "\"weight_bits\":8");
         let m8 = read_str(&json8).unwrap();
         let cal = Calibration::default();
         let f = FoldingConfig::default();

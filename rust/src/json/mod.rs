@@ -35,10 +35,7 @@ mod tests {
         assert_eq!(parse("1e3").unwrap().as_f64(), Some(1000.0));
         assert_eq!(parse("-1.5e-2").unwrap().as_f64(), Some(-0.015));
         // i64 range boundaries stay integral
-        assert_eq!(
-            parse("9223372036854775807").unwrap().as_i64(),
-            Some(i64::MAX)
-        );
+        assert_eq!(parse("9223372036854775807").unwrap().as_i64(), Some(i64::MAX));
     }
 
     #[test]

@@ -223,9 +223,7 @@ impl<'a> Parser<'a> {
         let mut v = 0u32;
         for _ in 0..4 {
             let b = self.bump().ok_or_else(|| self.err("eof in \\u escape"))?;
-            let d = (b as char)
-                .to_digit(16)
-                .ok_or_else(|| self.err("bad hex digit"))?;
+            let d = (b as char).to_digit(16).ok_or_else(|| self.err("bad hex digit"))?;
             v = v * 16 + d;
         }
         Ok(v)

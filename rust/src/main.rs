@@ -197,8 +197,7 @@ fn cmd_fig4(argv: &[String]) -> Result<()> {
             r.profile, r.accuracy_pct, r.power_mw, r.latency_us
         );
     }
-    let lut_overhead =
-        merged.luts as f64 / rows.iter().map(|r| r.luts).max().unwrap_or(1) as f64;
+    let lut_overhead = merged.luts as f64 / rows.iter().map(|r| r.luts).max().unwrap_or(1) as f64;
     println!("overhead vs largest non-adaptive engine: x{lut_overhead:.2} LUTs");
 
     // --- right of Fig. 4: battery duration + classifications ---
@@ -367,8 +366,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         let client = srv.client();
         let testset = testset.clone();
         handles.push(std::thread::spawn(move || -> Result<usize> {
-            let idxs: Vec<usize> =
-                (c..n).step_by(clients).map(|i| i % testset.len()).collect();
+            let idxs: Vec<usize> = (c..n).step_by(clients).map(|i| i % testset.len()).collect();
             let replies = client
                 .classify_pipelined(idxs.iter().map(|&i| testset.image(i).to_vec()), 16);
             let mut correct = 0usize;

@@ -78,8 +78,7 @@ pub fn estimate_power(
     let lut_pct = dev.lut_pct(est.luts);
     let static_mw = cal.p_static_mw + cal.p_leak_per_lut_pct * lut_pct;
 
-    let toggle_rate =
-        sims.iter().map(SimReport::mean_toggle_rate).sum::<f64>() / n;
+    let toggle_rate = sims.iter().map(SimReport::mean_toggle_rate).sum::<f64>() / n;
 
     PowerBreakdown {
         static_mw,

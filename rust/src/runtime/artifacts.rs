@@ -90,8 +90,7 @@ impl ArtifactStore {
 
     fn read_json(&self, name: &str) -> Result<Value> {
         let path = self.root.join(name);
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {path:?}"))?;
+        let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path:?}"))?;
         json::parse(&text).with_context(|| format!("parsing {path:?}"))
     }
 
@@ -214,11 +213,7 @@ mod tests {
     #[test]
     fn hlo_path_naming() {
         let store = ArtifactStore::at("/tmp/x");
-        assert!(store
-            .hlo_path("A8-W8", 1)
-            .ends_with("model_A8-W8.hlo.txt"));
-        assert!(store
-            .hlo_path("A8-W8", 8)
-            .ends_with("model_A8-W8_b8.hlo.txt"));
+        assert!(store.hlo_path("A8-W8", 1).ends_with("model_A8-W8.hlo.txt"));
+        assert!(store.hlo_path("A8-W8", 8).ends_with("model_A8-W8_b8.hlo.txt"));
     }
 }

@@ -132,6 +132,9 @@ impl PjrtEngine {
         if batches.is_empty() {
             bail!("profile '{profile}' not loaded");
         }
+        // One staging buffer reused across chunks (cleared, never shrunk),
+        // mirroring the Sim path's allocation discipline.
+        let mut flat: Vec<u8> = Vec::new();
         while i < images.len() {
             let remaining = images.len() - i;
             let b = *batches
@@ -140,7 +143,8 @@ impl PjrtEngine {
                 .unwrap_or(batches.last().unwrap());
             let exe = self.get(profile, b).unwrap();
             // Pad with the last image if the variant is larger than remaining.
-            let mut flat = Vec::with_capacity(b * self.pixels_per_image);
+            flat.clear();
+            flat.reserve(b * self.pixels_per_image);
             for j in 0..b {
                 let img = images[(i + j).min(images.len() - 1)];
                 flat.extend_from_slice(img);

@@ -23,10 +23,7 @@ fn truncated_qonnx_json_is_a_clean_error() {
         fs::write(dir.join("model_T.qonnx.json"), cut).unwrap();
         let store = ArtifactStore::at(&dir);
         let err = store.qonnx("T").unwrap_err().to_string();
-        assert!(
-            err.contains("model_T.qonnx.json"),
-            "error should name the file: {err}"
-        );
+        assert!(err.contains("model_T.qonnx.json"), "error should name the file: {err}");
     }
 }
 

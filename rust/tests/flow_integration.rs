@@ -40,10 +40,7 @@ fn rust_dataflow_is_bit_exact_vs_python_vectors() {
         let mut ex = Executor::new(&model);
         for (i, want) in vectors.logits.iter().enumerate() {
             let got = ex.run(testset.image(i));
-            assert_eq!(
-                &got, want,
-                "{profile}: image {i} logits diverge from python intref"
-            );
+            assert_eq!(&got, want, "{profile}: image {i} logits diverge from python intref");
         }
     }
 }
@@ -73,10 +70,7 @@ fn real_latency_is_precision_independent_table1_invariant() {
         let Ok(model) = store.qonnx(profile) else { continue };
         cycles.insert(simulate_image(&model, &fold, img).cycles);
     }
-    assert!(
-        cycles.len() <= 1,
-        "latency differs across precisions: {cycles:?}"
-    );
+    assert!(cycles.len() <= 1, "latency differs across precisions: {cycles:?}");
 }
 
 #[test]
@@ -145,8 +139,7 @@ fn table1_shape_holds() {
     };
     let get = |n: &str| rows.iter().find(|r| r.profile == n).unwrap();
     // latency constant
-    let lat: std::collections::BTreeSet<u64> =
-        rows.iter().map(|r| r.latency_us as u64).collect();
+    let lat: std::collections::BTreeSet<u64> = rows.iter().map(|r| r.latency_us as u64).collect();
     assert_eq!(lat.len(), 1, "latency not constant: {lat:?}");
     // LUTs: W8 engines > W4 engines; A16 >= A8 at same W
     assert!(get("A16-W8").lut_pct > get("A16-W4").lut_pct);
@@ -159,10 +152,7 @@ fn table1_shape_holds() {
         .accuracy_pct
         .max(get("A8-W4").accuracy_pct)
         .max(get("A4-W4").accuracy_pct);
-    assert!(
-        w8_min > w4_max,
-        "W8 accuracy ({w8_min}) not above W4 ({w4_max})"
-    );
+    assert!(w8_min > w4_max, "W8 accuracy ({w8_min}) not above W4 ({w4_max})");
     // power: every engine in a plausible edge envelope and the W8 flagship
     // costs more than its W4 sibling
     for r in &rows {

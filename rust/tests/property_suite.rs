@@ -1,7 +1,7 @@
 //! Cross-module property suite (DESIGN.md §7) — invariants that span
 //! substrate boundaries, driven by the in-house testkit.
 
-use onnx2hw::dataflow::{exec, simulate_image, FoldingConfig};
+use onnx2hw::dataflow::{exec, simulate_image, BatchExecutor, FoldingConfig};
 use onnx2hw::hls::{estimate_engine, Calibration};
 use onnx2hw::json::{self, Value};
 use onnx2hw::mdc;
@@ -43,8 +43,7 @@ fn json_round_trip_on_random_values() {
         let back = json::parse(&text).map_err(|e| format!("{e}: {text}"))?;
         onnx2hw::prop_assert!(back == v, "round trip changed value: {text}");
         // pretty printer agrees too
-        let back2 = json::parse(&json::to_string_pretty(&v))
-            .map_err(|e| e.to_string())?;
+        let back2 = json::parse(&json::to_string_pretty(&v)).map_err(|e| e.to_string())?;
         onnx2hw::prop_assert!(back2 == v, "pretty round trip changed value");
         Ok(())
     });
@@ -54,14 +53,43 @@ fn json_round_trip_on_random_values() {
 fn executor_is_deterministic_and_input_sensitive() {
     testkit::check("exec deterministic", |rng| {
         let cfg = RandModelCfg::gen(rng);
-        let m = read_str(&qonnx::random_model_json(&cfg, rng))
-            .map_err(|e| e.to_string())?;
-        let img: Vec<u8> = (0..m.input_shape.elems())
-            .map(|_| rng.u64(0, 255) as u8)
-            .collect();
+        let m = read_str(&qonnx::random_model_json(&cfg, rng)).map_err(|e| e.to_string())?;
+        let img: Vec<u8> = (0..m.input_shape.elems()).map(|_| rng.u64(0, 255) as u8).collect();
         let a = exec::execute(&m, &img);
         let b = exec::execute(&m, &img);
         onnx2hw::prop_assert!(a == b, "nondeterministic executor");
+        Ok(())
+    });
+}
+
+#[test]
+fn batched_packed_kernels_match_scalar_oracle() {
+    // The serving hot path (CompiledModel + BatchExecutor) must produce the
+    // exact integers of the scalar reference path for every model, batch
+    // size, and image: packing, tiling, arena reuse, and batch-major order
+    // must never change a logit. Batch sizes cover the batcher envelope
+    // (solo request / partial batch / full batch-8), and one executor is
+    // reused across them so stale arena contents would be caught.
+    testkit::check("packed batch == scalar oracle", |rng| {
+        let cfg = RandModelCfg::gen(rng);
+        let m = read_str(&qonnx::random_model_json(&cfg, rng)).map_err(|e| e.to_string())?;
+        let elems = m.input_shape.elems();
+        let k = m.dense().map(|d| d.out_features).unwrap_or(0);
+        let mut ex = BatchExecutor::from_model(&m);
+        for &batch in &[1usize, 3, 8] {
+            let images: Vec<Vec<u8>> = (0..batch)
+                .map(|_| (0..elems).map(|_| rng.u64(0, 255) as u8).collect())
+                .collect();
+            let refs: Vec<&[u8]> = images.iter().map(Vec::as_slice).collect();
+            let got = ex.run_batch(&refs);
+            for (i, img) in images.iter().enumerate() {
+                let want = exec::execute(&m, img);
+                onnx2hw::prop_assert!(
+                    got[i * k..(i + 1) * k] == want[..],
+                    "cfg {cfg:?}: batch {batch} image {i} diverges from oracle"
+                );
+            }
+        }
         Ok(())
     });
 }
@@ -135,11 +163,7 @@ fn resources_monotone_in_weight_bits_property() {
         // Force 4-bit weights at generation time (codes within ±7), so the
         // same codes remain valid when the declaration widens to 8 bits.
         let mut cfg = RandModelCfg::gen(rng);
-        cfg.blocks = cfg
-            .blocks
-            .iter()
-            .map(|&(f, a, _)| (f, a, 4))
-            .collect();
+        cfg.blocks = cfg.blocks.iter().map(|&(f, a, _)| (f, a, 4)).collect();
         let json4 = qonnx::random_model_json(&cfg, rng);
         let json8 = json4.replace("\"weight_bits\":4", "\"weight_bits\":8");
         let m4 = read_str(&json4).map_err(|e| e.to_string())?;
@@ -160,12 +184,8 @@ fn sim_cycles_depend_only_on_structure() {
         let json_a = qonnx::random_model_json(&cfg, rng);
         let m = read_str(&json_a).map_err(|e| e.to_string())?;
         let fold = FoldingConfig::default();
-        let img_a: Vec<u8> = (0..m.input_shape.elems())
-            .map(|_| rng.u64(0, 255) as u8)
-            .collect();
-        let img_b: Vec<u8> = (0..m.input_shape.elems())
-            .map(|_| rng.u64(0, 255) as u8)
-            .collect();
+        let img_a: Vec<u8> = (0..m.input_shape.elems()).map(|_| rng.u64(0, 255) as u8).collect();
+        let img_b: Vec<u8> = (0..m.input_shape.elems()).map(|_| rng.u64(0, 255) as u8).collect();
         let ca = simulate_image(&m, &fold, &img_a).cycles;
         let cb = simulate_image(&m, &fold, &img_b).cycles;
         onnx2hw::prop_assert!(ca == cb, "cycles vary with data: {ca} vs {cb}");
