@@ -8,7 +8,12 @@
 //! exercises coordinator + batcher + profile manager + worker shards +
 //! backend (PJRT by default; pass `sim` to use the integer dataflow engine).
 //!
-//! Run: `cargo run --release --example adaptive_engine -- [pjrt|sim] [requests] [workers] [clients]`
+//! Run: `cargo run --release --example adaptive_engine -- [pjrt|sim] [requests] [workers]
+//!       [clients] [recharge_mw]`
+//!
+//! A nonzero `recharge_mw` attaches a constant harvest source to every
+//! shard's battery (integrated on virtual batch time), so degraded shards
+//! recover and the Profile Manager's hysteresis upswitch fires.
 
 use std::sync::Arc;
 
@@ -19,7 +24,7 @@ use onnx2hw::coordinator::{
 };
 use onnx2hw::flow::{self, FlowConfig};
 use onnx2hw::power::{
-    run_fixed, simulate_battery, AdaptivePolicy, BatteryModel, BatteryPack,
+    run_fixed, simulate_battery, AdaptivePolicy, BatteryModel, BatteryPack, EnergySource,
 };
 use onnx2hw::runtime::ArtifactStore;
 
@@ -39,6 +44,12 @@ fn main() -> Result<()> {
     let n_requests: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(512);
     let workers: usize = std::env::args().nth(3).and_then(|s| s.parse().ok()).unwrap_or(2);
     let clients: usize = std::env::args().nth(4).and_then(|s| s.parse().ok()).unwrap_or(4).max(1);
+    let recharge_mw: f64 = std::env::args().nth(5).and_then(|s| s.parse().ok()).unwrap_or(0.0);
+    let recharge = if recharge_mw > 0.0 {
+        EnergySource::constant(recharge_mw)
+    } else {
+        EnergySource::None
+    };
 
     let store = ArtifactStore::discover()?;
     let testset = Arc::new(store.testset()?);
@@ -87,6 +98,7 @@ fn main() -> Result<()> {
     let srv = AdaptiveServer::start(
         ServerConfig {
             workers,
+            recharge: recharge.clone(),
             ..Default::default()
         },
         move || match kind.as_str() {
@@ -157,12 +169,16 @@ fn main() -> Result<()> {
         srv.stats.latency.quantile_us(0.95),
         srv.battery_fraction() * 100.0
     );
+    if recharge != EnergySource::None {
+        println!("recharge source per shard: {}", recharge.label());
+    }
     for (i, e) in srv.shard_energy.iter().enumerate() {
         println!(
-            "  shard {i}: {} batches ({} stolen) | battery {:.1}%",
+            "  shard {i}: {} batches ({} stolen) | battery {:.1}% | recharged {:.3} mJ",
             srv.stats.worker_batches[i].get(),
             srv.stats.worker_steals[i].get(),
-            e.remaining_fraction() * 100.0
+            e.remaining_fraction() * 100.0,
+            srv.stats.shard_recharged_j[i].get() * 1e3
         );
     }
     for ev in srv.stats.events.snapshot() {

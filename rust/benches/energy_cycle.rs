@@ -1,0 +1,330 @@
+//! Bench: the adaptive engine's degrade → recover → upswitch energy cycle.
+//!
+//! Needs no artifacts — a tiny synthetic QONNX model is served under two
+//! profile names ("hi": 1 W accurate, "lo": 0.2 W degraded) by a one-shard
+//! server whose battery carries a recharge source *between* the two draws
+//! (0.6 W average). Under continuous load the trajectory is forced:
+//!
+//! 1. **degrade** — "hi" nets −0.4 W, the battery falls through the
+//!    downswitch threshold and the shard moves to "lo";
+//! 2. **recover** — "lo" nets +0.4 W, the battery climbs back through the
+//!    hysteresis band;
+//! 3. **upswitch** — the Profile Manager restores "hi".
+//!
+//! Recharge is integrated on *virtual* time (accumulated per-batch
+//! `latency_us`), so the whole trajectory is deterministic — no wall
+//! clock, no retries needed in CI. Two sources are exercised: a constant
+//! harvest and a 50 ms on/off duty cycle whose off-phases brown the shard
+//! out entirely before the on-phase revives it. Every reply is asserted
+//! bit-exact against the scalar oracle (`exec::execute`) before any row is
+//! reported — adaptivity must never change the integers.
+//!
+//! Run: `cargo bench --bench energy_cycle [-- <requests> [--json <path>]
+//!       [--assert-recovery]]`
+//!
+//! `--json` writes one row per scenario (switch events, battery extrema,
+//! recharge totals) for the CI artifact; `--assert-recovery` gates that
+//! each scenario degrades below the threshold AND switches back to the
+//! accurate profile on a recovered battery.
+
+use std::collections::BTreeMap;
+
+use onnx2hw::bench_harness::Table;
+use onnx2hw::coordinator::{
+    AdaptiveServer, Backend, EnergyMonitor, ManagerConfig, ProfileManager, ProfileSpec,
+    ServerConfig,
+};
+use onnx2hw::dataflow::exec;
+use onnx2hw::json::{self, Value};
+use onnx2hw::power::EnergySource;
+use onnx2hw::qonnx::{read_str, test_model_json, QonnxModel};
+
+const N_IMAGES: usize = 8;
+const THRESHOLD: f64 = 0.5;
+const HYSTERESIS: f64 = 0.02;
+/// Sized so "hi" (net −0.4 W x 329 us/request) crosses the downswitch
+/// after ~60 requests.
+const CAPACITY_J: f64 = 1.5e-2;
+
+fn profile_specs() -> Vec<ProfileSpec> {
+    vec![
+        ProfileSpec {
+            name: "hi".into(),
+            accuracy: 0.96,
+            power_mw: 1000.0,
+            latency_us: 329.0,
+        },
+        ProfileSpec {
+            name: "lo".into(),
+            accuracy: 0.94,
+            power_mw: 200.0,
+            latency_us: 329.0,
+        },
+    ]
+}
+
+struct SwitchEvent {
+    request: usize,
+    from: String,
+    to: String,
+    /// Shard battery fraction right after the switching request.
+    battery: f64,
+}
+
+struct ScenarioResult {
+    name: &'static str,
+    source: EnergySource,
+    requests: usize,
+    switches: Vec<SwitchEvent>,
+    min_fraction: f64,
+    final_fraction: f64,
+    recharged_j: f64,
+    drained_j: f64,
+    virtual_s: f64,
+    /// Request index of the first degraded ("lo") reply.
+    degrade: Option<usize>,
+    /// Request index of the first "hi" reply after the first degrade.
+    upswitch: Option<usize>,
+}
+
+fn run_scenario(
+    name: &'static str,
+    source: EnergySource,
+    requests: usize,
+    model: &QonnxModel,
+) -> ScenarioResult {
+    let models: BTreeMap<String, QonnxModel> = [
+        ("hi".to_string(), model.clone()),
+        ("lo".to_string(), model.clone()),
+    ]
+    .into_iter()
+    .collect();
+    let factory = move || Ok(Backend::sim_from_models(models.clone()));
+    let manager = ProfileManager::new(
+        ManagerConfig {
+            low_energy_threshold: THRESHOLD,
+            hysteresis: HYSTERESIS,
+            accuracy_floor: 0.0,
+        },
+        profile_specs(),
+    );
+    let cfg = ServerConfig {
+        recharge: source.clone(),
+        ..Default::default()
+    };
+    let srv = AdaptiveServer::start(cfg, factory, manager, EnergyMonitor::new(CAPACITY_J))
+        .expect("server");
+
+    let elems = model.input_shape.elems();
+    let images: Vec<Vec<u8>> = (0..N_IMAGES)
+        .map(|k| (0..elems).map(|i| ((i * 31 + k * 17) % 256) as u8).collect())
+        .collect();
+    let expect: Vec<Vec<f32>> = images
+        .iter()
+        .map(|img| exec::execute(model, img).iter().map(|&v| v as f32).collect())
+        .collect();
+
+    let mut switches = Vec::new();
+    let mut prev = String::new();
+    let mut min_fraction = 1.0_f64;
+    let mut degrade = None;
+    let mut upswitch = None;
+    // One synchronous client -> one request per batch: the battery walk is
+    // a pure function of the request index.
+    for i in 0..requests {
+        let k = i % N_IMAGES;
+        let resp = srv.classify(images[k].clone()).expect("reply lost");
+        assert_eq!(resp.shard, 0, "single-shard run");
+        assert_eq!(
+            resp.logits,
+            expect[k],
+            "request {i} on '{}' not bit-exact vs the scalar oracle",
+            resp.profile
+        );
+        let frac = srv.shard_energy[0].remaining_fraction();
+        min_fraction = min_fraction.min(frac);
+        if degrade.is_none() && resp.profile == "lo" {
+            degrade = Some(i);
+        }
+        if degrade.is_some() && upswitch.is_none() && resp.profile == "hi" {
+            upswitch = Some(i);
+        }
+        if !prev.is_empty() && prev != resp.profile {
+            switches.push(SwitchEvent {
+                request: i,
+                from: prev.clone(),
+                to: resp.profile.clone(),
+                battery: frac,
+            });
+        }
+        prev = resp.profile;
+    }
+
+    let monitor = &srv.shard_energy[0];
+    let result = ScenarioResult {
+        name,
+        source,
+        requests,
+        min_fraction,
+        final_fraction: monitor.remaining_fraction(),
+        recharged_j: monitor.recharged_j(),
+        drained_j: monitor.drained_j(),
+        virtual_s: monitor.virtual_time_s(),
+        degrade,
+        upswitch,
+        switches,
+    };
+    // conservation on the shard monitor: remaining == cap - drained + in
+    let lhs = monitor.remaining_j();
+    let rhs = monitor.capacity_j() - monitor.drained_j() + monitor.recharged_j();
+    assert!(
+        (lhs - rhs).abs() < 1e-12,
+        "energy books out of balance: remaining {lhs} != {rhs}"
+    );
+    srv.shutdown();
+    result
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut requests: usize = 400;
+    let mut json_path: Option<String> = None;
+    let mut assert_recovery = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--json" => {
+                i += 1;
+                json_path = Some(args.get(i).expect("--json needs a path").clone());
+            }
+            "--assert-recovery" => assert_recovery = true,
+            other => {
+                requests = other.parse().unwrap_or_else(|_| {
+                    panic!("unexpected argument '{other}' (want a request count)")
+                });
+            }
+        }
+        i += 1;
+    }
+
+    let model = read_str(&test_model_json(1, 2)).expect("model");
+    let scenarios: Vec<(&'static str, EnergySource)> = vec![
+        // steady 0.6 W harvest between the 0.2 W and 1 W draws
+        ("constant", EnergySource::constant(600.0)),
+        // same average power, delivered 50 ms on / 50 ms off: the
+        // off-phases brown the shard out before the on-phase revives it
+        ("duty-cycle", EnergySource::duty_cycle(1200.0, 0.05, 0.05)),
+    ];
+
+    let mut table = Table::new(&[
+        "scenario", "requests", "switches", "degrade@", "upswitch@", "min batt", "final batt",
+        "recharged",
+    ]);
+    let mut results = Vec::new();
+    for (name, source) in scenarios {
+        let r = run_scenario(name, source, requests, &model);
+        table.row(&[
+            r.name.to_string(),
+            r.requests.to_string(),
+            r.switches.len().to_string(),
+            r.degrade.map_or("-".into(), |i| i.to_string()),
+            r.upswitch.map_or("-".into(), |i| i.to_string()),
+            format!("{:.1}%", r.min_fraction * 100.0),
+            format!("{:.1}%", r.final_fraction * 100.0),
+            format!("{:.3} mJ", r.recharged_j * 1e3),
+        ]);
+        results.push(r);
+    }
+
+    println!(
+        "== adaptive energy cycle (Sim backend, 1 shard, capacity {:.1} mJ, \
+         threshold {THRESHOLD} +/- {HYSTERESIS}) ==\n",
+        CAPACITY_J * 1e3
+    );
+    println!("{}", table.render());
+    println!("bit-exactness vs exec::execute and energy conservation asserted on");
+    println!("every reply before any row above was reported.");
+
+    if let Some(path) = &json_path {
+        let rows = Value::Array(
+            results
+                .iter()
+                .map(|r| {
+                    Value::obj(vec![
+                        ("scenario", r.name.into()),
+                        ("source", r.source.label().into()),
+                        ("requests", r.requests.into()),
+                        ("capacity_j", CAPACITY_J.into()),
+                        ("threshold", THRESHOLD.into()),
+                        ("hysteresis", HYSTERESIS.into()),
+                        ("min_battery_fraction", r.min_fraction.into()),
+                        ("final_battery_fraction", r.final_fraction.into()),
+                        ("recharged_j", r.recharged_j.into()),
+                        ("drained_j", r.drained_j.into()),
+                        ("virtual_time_s", r.virtual_s.into()),
+                        ("degrade_at", r.degrade.map_or(Value::Int(-1), Value::from)),
+                        ("upswitch_at", r.upswitch.map_or(Value::Int(-1), Value::from)),
+                        (
+                            "switches",
+                            Value::Array(
+                                r.switches
+                                    .iter()
+                                    .map(|s| {
+                                        Value::obj(vec![
+                                            ("request", s.request.into()),
+                                            ("from", s.from.clone().into()),
+                                            ("to", s.to.clone().into()),
+                                            ("battery_fraction", s.battery.into()),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        std::fs::write(path, json::to_string_pretty(&rows)).expect("write json");
+        println!("wrote {} rows to {path}", results.len());
+    }
+
+    if assert_recovery {
+        for r in &results {
+            let degrade = r.degrade.unwrap_or_else(|| {
+                panic!("{}: engine never degraded (min battery {:.3})", r.name, r.min_fraction)
+            });
+            assert!(
+                r.min_fraction < THRESHOLD - HYSTERESIS,
+                "{}: battery never fell below the downswitch threshold: {:.3}",
+                r.name,
+                r.min_fraction
+            );
+            let upswitch = r.upswitch.unwrap_or_else(|| {
+                panic!(
+                    "{}: degraded at request {degrade} but never switched back \
+                     (final battery {:.3})",
+                    r.name, r.final_fraction
+                )
+            });
+            // the switch event carrying the upswitch must have happened on
+            // a recovered battery
+            let ev = r
+                .switches
+                .iter()
+                .find(|s| s.request == upswitch && s.to == "hi")
+                .expect("upswitch event recorded");
+            assert!(
+                ev.battery > THRESHOLD,
+                "{}: upswitched at battery {:.3} <= threshold {THRESHOLD}",
+                r.name,
+                ev.battery
+            );
+            assert!(r.recharged_j > 0.0, "{}: recharge never banked energy", r.name);
+        }
+        println!(
+            "recovery gate passed: every scenario degraded below {:.2} and \
+             upswitched on a recovered battery",
+            THRESHOLD - HYSTERESIS
+        );
+    }
+}

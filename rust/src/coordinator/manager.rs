@@ -12,6 +12,8 @@
 
 use std::sync::Mutex;
 
+use crate::power::EnergySource;
+
 /// Static description of one execution profile (from Table 1 / the HLS +
 /// power reports).
 #[derive(Debug, Clone, PartialEq)]
@@ -22,22 +24,47 @@ pub struct ProfileSpec {
     pub latency_us: f64,
 }
 
+/// Mutable battery state behind one mutex so drain/recharge accounting is
+/// atomic: the conservation invariant
+/// `remaining == capacity - drained + recharged` holds at every instant.
+#[derive(Debug)]
+struct EnergyState {
+    remaining_j: f64,
+    /// Virtual time (s) the monitor has been advanced through; the source
+    /// integral is evaluated on this clock, never wall time.
+    time_s: f64,
+    /// Joules actually drained (post-clamp: draining an empty battery
+    /// removes nothing and reports nothing).
+    drained_j: f64,
+    /// Joules actually banked from the source (post-saturation: harvest
+    /// offered to a full battery is discarded, not counted).
+    recharged_j: f64,
+}
+
 /// Simulated battery the manager monitors (energy in joules), optionally
 /// carrying a power cap — the per-accelerator constraint of a sharded
-/// deployment where each replica has its own supply rail.
+/// deployment where each replica has its own supply rail — and an
+/// [`EnergySource`] that recharges it as virtual time advances.
 #[derive(Debug)]
 pub struct EnergyMonitor {
     capacity_j: f64,
-    remaining_j: Mutex<f64>,
+    state: Mutex<EnergyState>,
     power_cap_mw: Option<f64>,
+    source: EnergySource,
 }
 
 impl EnergyMonitor {
     pub fn new(capacity_j: f64) -> Self {
         EnergyMonitor {
             capacity_j,
-            remaining_j: Mutex::new(capacity_j),
+            state: Mutex::new(EnergyState {
+                remaining_j: capacity_j,
+                time_s: 0.0,
+                drained_j: 0.0,
+                recharged_j: 0.0,
+            }),
             power_cap_mw: None,
+            source: EnergySource::None,
         }
     }
 
@@ -50,6 +77,13 @@ impl EnergyMonitor {
         }
     }
 
+    /// Attach a recharge source (builder style). The source is integrated
+    /// over the virtual time passed to [`EnergyMonitor::advance`].
+    pub fn with_source(mut self, source: EnergySource) -> Self {
+        self.source = source;
+        self
+    }
+
     pub fn capacity_j(&self) -> f64 {
         self.capacity_j
     }
@@ -58,11 +92,40 @@ impl EnergyMonitor {
         self.power_cap_mw
     }
 
-    /// Drain energy for one classification: P * t.
-    pub fn drain(&self, power_mw: f64, duration_us: f64) {
-        let j = power_mw * 1e-3 * duration_us * 1e-6;
-        let mut rem = self.remaining_j.lock().unwrap();
-        *rem = (*rem - j).max(0.0);
+    pub fn source(&self) -> &EnergySource {
+        &self.source
+    }
+
+    /// Drain energy for one classification: P * t. Returns the joules
+    /// *actually* removed — clamped at empty, so callers (and the recharge
+    /// accounting) can never double-count past depletion.
+    pub fn drain(&self, power_mw: f64, duration_us: f64) -> f64 {
+        let want = (power_mw * 1e-3 * duration_us * 1e-6).max(0.0);
+        let mut st = self.state.lock().unwrap();
+        let got = want.min(st.remaining_j).max(0.0);
+        st.remaining_j -= got;
+        st.drained_j += got;
+        got
+    }
+
+    /// Advance the monitor's virtual clock by `elapsed_s` seconds, banking
+    /// whatever the source delivers over that interval. Saturates at
+    /// capacity; returns the joules *actually* added. The server loop
+    /// calls this per batch with the batch's accumulated `latency_us`, so
+    /// recharge is deterministic (no wall clock anywhere).
+    pub fn advance(&self, elapsed_s: f64) -> f64 {
+        if elapsed_s <= 0.0 {
+            return 0.0;
+        }
+        let mut st = self.state.lock().unwrap();
+        let t0 = st.time_s;
+        let t1 = t0 + elapsed_s;
+        let offered = self.source.energy_between(t0, t1);
+        let banked = offered.min(self.capacity_j - st.remaining_j).max(0.0);
+        st.remaining_j += banked;
+        st.recharged_j += banked;
+        st.time_s = t1;
+        banked
     }
 
     pub fn remaining_fraction(&self) -> f64 {
@@ -73,11 +136,26 @@ impl EnergyMonitor {
             // silently disabled.
             return 0.0;
         }
-        *self.remaining_j.lock().unwrap() / self.capacity_j
+        self.state.lock().unwrap().remaining_j / self.capacity_j
     }
 
     pub fn remaining_j(&self) -> f64 {
-        *self.remaining_j.lock().unwrap()
+        self.state.lock().unwrap().remaining_j
+    }
+
+    /// Total joules actually drained over the monitor's lifetime.
+    pub fn drained_j(&self) -> f64 {
+        self.state.lock().unwrap().drained_j
+    }
+
+    /// Total joules actually banked from the source over the lifetime.
+    pub fn recharged_j(&self) -> f64 {
+        self.state.lock().unwrap().recharged_j
+    }
+
+    /// The monitor's virtual clock (seconds of accumulated batch latency).
+    pub fn virtual_time_s(&self) -> f64 {
+        self.state.lock().unwrap().time_s
     }
 
     pub fn depleted(&self) -> bool {
@@ -232,6 +310,7 @@ impl ProfileManager {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::power::EnergySource;
     use crate::testkit;
 
     fn specs() -> Vec<ProfileSpec> {
@@ -270,7 +349,8 @@ mod tests {
             accuracy_floor: 0.0,
         };
         let mgr = ProfileManager::new(cfg, specs());
-        let e = EnergyMonitor::new(100.0);
+        // 1 W constant source: advance(x) banks x joules while below cap.
+        let e = EnergyMonitor::new(100.0).with_source(EnergySource::constant(1000.0));
         e.drain(1000.0, 52.0 * 1e6); // 48% remaining: inside [0.45, 0.55]
         let frac = e.remaining_fraction();
         assert!(frac > 0.45 && frac < 0.55);
@@ -278,9 +358,14 @@ mod tests {
         assert_eq!(mgr.select(&e).name, "A8-W8");
         e.drain(1000.0, 10.0 * 1e6); // now 38% -> switches
         assert_eq!(mgr.select(&e).name, "Mixed");
-        // back inside the band from below -> holds Mixed (no flap)
-        // (cannot recharge; just verify it stays on Mixed)
+        // recharge back inside the band from below -> holds Mixed (no flap)
+        e.advance(10.0); // -> 48%
+        let frac = e.remaining_fraction();
+        assert!(frac > 0.45 && frac < 0.55);
         assert_eq!(mgr.select(&e).name, "Mixed");
+        // recharge above the band -> the recovery upswitch fires
+        e.advance(10.0); // -> 58%
+        assert_eq!(mgr.select(&e).name, "A8-W8");
     }
 
     #[test]
@@ -394,10 +479,164 @@ mod tests {
     #[test]
     fn energy_monitor_drains_exactly() {
         let e = EnergyMonitor::new(10.0);
-        e.drain(1000.0, 1e6); // 1 W for 1 s = 1 J
+        let got = e.drain(1000.0, 1e6); // 1 W for 1 s = 1 J
+        assert!((got - 1.0).abs() < 1e-9);
         assert!((e.remaining_j() - 9.0).abs() < 1e-9);
-        e.drain(1e9, 1e9); // overdrain clamps at 0
+        // overdrain clamps at 0 and reports only what was actually left
+        let got = e.drain(1e9, 1e9);
+        assert!((got - 9.0).abs() < 1e-9);
         assert_eq!(e.remaining_j(), 0.0);
         assert!(e.depleted());
+        // draining a dead battery removes (and reports) nothing
+        assert_eq!(e.drain(1000.0, 1e6), 0.0);
+        assert!((e.drained_j() - 10.0).abs() < 1e-9);
+        // conservation after every clamp
+        let rhs = e.capacity_j() - e.drained_j() + e.recharged_j();
+        assert!((e.remaining_j() - rhs).abs() < 1e-9);
+    }
+
+    #[test]
+    fn monitor_recharges_saturating_at_capacity() {
+        let e = EnergyMonitor::new(10.0).with_source(EnergySource::constant(2000.0)); // 2 W
+        assert_eq!(e.advance(1.0), 0.0, "a full battery banks nothing");
+        assert!((e.remaining_j() - 10.0).abs() < 1e-12);
+        e.drain(1000.0, 5e6); // 1 W x 5 s -> 5 J left... of 10
+        let banked = e.advance(2.0); // 4 J offered, all fits
+        assert!((banked - 4.0).abs() < 1e-9);
+        assert!((e.remaining_j() - 9.0).abs() < 1e-9);
+        let banked = e.advance(10.0); // 20 J offered, 1 J of headroom
+        assert!((banked - 1.0).abs() < 1e-9);
+        assert!((e.remaining_j() - 10.0).abs() < 1e-9);
+        assert!((e.virtual_time_s() - 13.0).abs() < 1e-12);
+        // conservation: remaining == capacity - drained + recharged
+        let rhs = e.capacity_j() - e.drained_j() + e.recharged_j();
+        assert!((e.remaining_j() - rhs).abs() < 1e-9);
+        // a source is attached but a plain monitor has none
+        assert_eq!(EnergyMonitor::new(1.0).source(), &EnergySource::None);
+        assert_ne!(e.source(), &EnergySource::None);
+    }
+
+    #[test]
+    fn duty_cycle_recharge_tracks_virtual_time() {
+        // 1 W for 1 s on / 1 s off; the monitor advances in 0.5 s steps
+        // and must see exactly the on-phase energy regardless of how the
+        // steps straddle the edges.
+        let e = EnergyMonitor::new(100.0).with_source(EnergySource::duty_cycle(1000.0, 1.0, 1.0));
+        e.drain(1000.0, 50e6); // 50 J out -> plenty of headroom
+        let banked: f64 = (0..8).map(|_| e.advance(0.5)).sum(); // 4 s of schedule
+        assert!((banked - 2.0).abs() < 1e-9, "2 of 4 seconds are on: got {banked}");
+        assert!((e.virtual_time_s() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drain_recharge_conservation_property() {
+        testkit::check("energy is conserved through drain/advance", |rng| {
+            let cap = rng.f64(1.0, 50.0);
+            let src = EnergySource::constant(rng.f64(0.0, 5000.0));
+            let e = EnergyMonitor::new(cap).with_source(src);
+            for _ in 0..40 {
+                if rng.u64(0, 1) == 0 {
+                    e.drain(rng.f64(0.0, 3000.0), rng.f64(0.0, 5e6));
+                } else {
+                    e.advance(rng.f64(0.0, 3.0));
+                }
+                let lhs = e.remaining_j();
+                let rhs = e.capacity_j() - e.drained_j() + e.recharged_j();
+                crate::prop_assert!(
+                    (lhs - rhs).abs() < 1e-6,
+                    "conservation violated: remaining {lhs} != cap - drained + recharged {rhs}"
+                );
+                crate::prop_assert!(
+                    lhs >= 0.0 && lhs <= e.capacity_j() + 1e-9,
+                    "remaining out of bounds: {lhs} of {cap}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn recharged_battery_upswitches_through_hysteresis() {
+        let mgr = ProfileManager::new(ManagerConfig::default(), specs());
+        let e = EnergyMonitor::new(100.0).with_source(EnergySource::constant(1000.0));
+        e.drain(1e6, 60.0 * 1e3); // 60 J out -> 40% remaining
+        assert_eq!(mgr.select(&e).name, "Mixed");
+        // recover into the hysteresis band: still held on Mixed (no flap)
+        e.advance(10.0); // -> 50%
+        assert_eq!(mgr.select(&e).name, "Mixed");
+        // recover past threshold + hysteresis: the upswitch fires
+        e.advance(5.0); // -> 55% > 0.52
+        assert_eq!(mgr.select(&e).name, "A8-W8");
+    }
+
+    #[test]
+    fn oscillation_inside_hysteresis_band_never_flaps_property() {
+        testkit::check("no flapping inside the band", |rng| {
+            let cfg = ManagerConfig {
+                low_energy_threshold: 0.5,
+                hysteresis: 0.05,
+                accuracy_floor: 0.0,
+            };
+            let mgr = ProfileManager::new(cfg, specs());
+            // 1 W source: advance(x) banks x J; drain(1e6, x * 1e3) takes x J.
+            let e = EnergyMonitor::new(100.0).with_source(EnergySource::constant(1000.0));
+            // enter the band from below (degraded) or from above (accurate)
+            let from_below = rng.u64(0, 1) == 0;
+            if from_below {
+                e.drain(1e6, 60.0 * 1e3); // 40% -> selects Mixed
+            } else {
+                e.drain(1e6, 30.0 * 1e3); // 70% -> stays accurate
+            }
+            let held = mgr.select(&e).name.clone();
+            // drift to mid-band, then jitter without leaving (45.5, 54.5)
+            let mid = 50.0 - e.remaining_j();
+            if mid > 0.0 {
+                e.advance(mid);
+            } else {
+                e.drain(1e6, -mid * 1e3);
+            }
+            for _ in 0..50 {
+                let room_up = (54.5 - e.remaining_j()).max(0.0);
+                let room_down = (e.remaining_j() - 45.5).max(0.0);
+                if rng.u64(0, 1) == 0 {
+                    e.advance(rng.f64(0.0, room_up));
+                } else {
+                    e.drain(1e6, rng.f64(0.0, room_down) * 1e3);
+                }
+                let frac = e.remaining_fraction();
+                crate::prop_assert!(frac > 0.45 && frac < 0.55, "jitter left the band: {frac}");
+                let sel = mgr.select(&e).name.clone();
+                crate::prop_assert!(
+                    sel == held,
+                    "flapped from {held} to {sel} at battery {frac}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn full_drain_recharge_cycle_ends_on_accurate_property() {
+        testkit::check("drain -> recharge cycle restores the accurate profile", |rng| {
+            let mgr = ProfileManager::new(ManagerConfig::default(), specs());
+            let e = EnergyMonitor::new(100.0).with_source(EnergySource::constant(1000.0));
+            // drain somewhere below the band, possibly to full depletion
+            e.drain(1e6, rng.f64(55.0, 120.0) * 1e3);
+            let sel = mgr.select(&e).name.clone();
+            crate::prop_assert!(sel == "Mixed", "expected the degraded profile, got {sel}");
+            // recharge to full (saturating at capacity)
+            e.advance(rng.f64(100.0, 200.0));
+            crate::prop_assert!(
+                (e.remaining_fraction() - 1.0).abs() < 1e-9,
+                "not full after recharge: {}",
+                e.remaining_fraction()
+            );
+            let sel = mgr.select(&e).name.clone();
+            crate::prop_assert!(
+                sel == "A8-W8",
+                "cycle ended on {sel}, not the accurate profile"
+            );
+            Ok(())
+        });
     }
 }

@@ -19,9 +19,12 @@
 //! PJRT runtime (AOT artifacts) or the integer dataflow engine (bit-exact
 //! simulator, with a per-profile cached executor) — *and its own energy
 //! monitor*: the adaptation step runs per shard, so a replica running hot
-//! degrades to a cheaper profile while the others stay exact. See
-//! `server.rs` for the pipeline diagram and `steal.rs` for the deque
-//! discipline.
+//! degrades to a cheaper profile while the others stay exact. Monitors can
+//! carry an [`EnergySource`] (constant / duty-cycle / solar-like recharge)
+//! integrated on the shard's virtual batch time, so a degraded shard
+//! recovers and the manager's hysteresis upswitch restores the accurate
+//! profile. See `server.rs` for the pipeline diagram and `steal.rs` for
+//! the deque discipline.
 
 mod backend;
 mod batcher;
@@ -37,3 +40,6 @@ pub use client::{ClientHandle, Ticket};
 pub use manager::{EnergyMonitor, ManagerConfig, ProfileManager, ProfileSpec};
 pub use request::{ClassifyRequest, ClassifyResponse, Submission};
 pub use server::{AdaptiveServer, ServerConfig, ServerStats};
+// The recharge-source type lives in `power` but is part of the server
+// configuration surface; re-exported for callers wiring `ServerConfig`.
+pub use crate::power::EnergySource;

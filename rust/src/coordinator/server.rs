@@ -37,6 +37,7 @@ use super::manager::{EnergyMonitor, ProfileManager};
 use super::request::{ClassifyRequest, ClassifyResponse, Submission};
 use super::steal::ShardDeques;
 use crate::metrics::{Counter, EventLog, FloatGauge, Gauge, Histogram};
+use crate::power::EnergySource;
 
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
@@ -50,6 +51,11 @@ pub struct ServerConfig {
     pub shard_capacity_j: Option<Vec<f64>>,
     /// Per-shard power cap in mW (falls back to the global monitor's cap).
     pub shard_power_cap_mw: Option<f64>,
+    /// Recharge source attached to every shard's battery (each shard gets
+    /// its own independent copy). The source is integrated on *virtual*
+    /// time — the latency the shard's batches accumulate — so recharge,
+    /// like drain, is deterministic and wall-clock free.
+    pub recharge: EnergySource,
     /// Work stealing: idle shards pull from the back of the busiest deque.
     pub steal: bool,
     /// Route every batch to one shard instead of the least-loaded one
@@ -64,6 +70,7 @@ impl Default for ServerConfig {
             workers: 1,
             shard_capacity_j: None,
             shard_power_cap_mw: None,
+            recharge: EnergySource::None,
             steal: true,
             pin_dispatch_to: None,
         }
@@ -97,6 +104,9 @@ pub struct ServerStats {
     pub shard_depth: Vec<Gauge>,
     /// Remaining battery fraction per shard (updated after each batch).
     pub shard_battery: Vec<FloatGauge>,
+    /// Joules each shard has banked from its recharge source (accumulated
+    /// after each batch; stays 0 without a source).
+    pub shard_recharged_j: Vec<FloatGauge>,
 }
 
 impl ServerStats {
@@ -112,6 +122,7 @@ impl ServerStats {
             worker_steals: (0..n).map(|_| Counter::default()).collect(),
             shard_depth: (0..n).map(|_| Gauge::default()).collect(),
             shard_battery: (0..n).map(|_| FloatGauge::new(1.0)).collect(),
+            shard_recharged_j: (0..n).map(|_| FloatGauge::new(0.0)).collect(),
         }
     }
 }
@@ -215,10 +226,13 @@ impl AdaptiveServer {
         let shard_energy: Vec<Arc<EnergyMonitor>> = caps
             .iter()
             .map(|&c| {
-                Arc::new(match cap_mw {
+                let monitor = match cap_mw {
                     Some(cap) => EnergyMonitor::with_power_cap(c, cap),
                     None => EnergyMonitor::new(c),
-                })
+                };
+                // Every shard integrates its own copy of the recharge
+                // source on its own virtual clock.
+                Arc::new(monitor.with_source(cfg.recharge.clone()))
             })
             .collect();
 
@@ -313,6 +327,7 @@ impl AdaptiveServer {
                         };
                         w_stats.batches.inc();
                         w_stats.worker_batches[wid].inc();
+                        let n_served = batch.len();
                         for (req, (logits, pred)) in batch.into_iter().zip(results) {
                             w_energy.drain(spec.power_mw, spec.latency_us);
                             let latency_us = req.submitted.elapsed().as_micros() as u64;
@@ -326,6 +341,13 @@ impl AdaptiveServer {
                                 shard: wid,
                                 latency_us,
                             });
+                        }
+                        // Recharge on the virtual time this batch occupied
+                        // the accelerator (profile latency x batch size) —
+                        // deterministic, no wall clock.
+                        let banked = w_energy.advance(n_served as f64 * spec.latency_us * 1e-6);
+                        if banked > 0.0 {
+                            w_stats.shard_recharged_j[wid].add(banked);
                         }
                         w_stats.shard_battery[wid].set(w_energy.remaining_fraction());
                     }
@@ -416,12 +438,7 @@ impl AdaptiveServer {
 
     /// Mean remaining battery fraction over all shards.
     pub fn battery_fraction(&self) -> f64 {
-        let n = self.shard_energy.len().max(1);
-        self.shard_energy
-            .iter()
-            .map(|e| e.remaining_fraction())
-            .sum::<f64>()
-            / n as f64
+        mean_battery_fraction(&self.shard_energy)
     }
 
     /// `tx` is `Some` for the whole `&self` lifetime: `close()` runs only
@@ -475,6 +492,18 @@ impl Drop for AdaptiveServer {
     fn drop(&mut self) {
         self.close();
     }
+}
+
+/// Mean remaining fraction over `monitors`. A server with *no* energy
+/// monitors is not energy-limited at all, so the empty set reports 1.0
+/// (full). (Regression: the old inline mean divided by `len().max(1)`,
+/// which silently turned "unlimited energy" into 0.0 — a dead battery —
+/// for the empty set.)
+pub(crate) fn mean_battery_fraction(monitors: &[Arc<EnergyMonitor>]) -> f64 {
+    if monitors.is_empty() {
+        return 1.0;
+    }
+    monitors.iter().map(|e| e.remaining_fraction()).sum::<f64>() / monitors.len() as f64
 }
 
 #[cfg(test)]
@@ -889,6 +918,76 @@ mod tests {
         .unwrap();
         assert_eq!(srv.workers(), 1);
         assert!(srv.classify(vec![0u8; elems]).is_ok());
+        srv.shutdown();
+    }
+
+    #[test]
+    fn empty_monitor_set_reports_full_battery() {
+        // Regression: a server with no energy monitors has unlimited
+        // energy — the mean must read 1.0 (full), not 0.0 (dead), which is
+        // what the old `len().max(1)` divisor silently produced.
+        assert_eq!(super::mean_battery_fraction(&[]), 1.0);
+        let half = Arc::new(EnergyMonitor::new(10.0));
+        half.drain(1000.0, 5e6); // 5 of 10 J gone
+        let full = Arc::new(EnergyMonitor::new(10.0));
+        let mean = super::mean_battery_fraction(&[half, full]);
+        assert!((mean - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shard_recovers_and_upswitches_under_recharge() {
+        // One shard, a recharge source between the two profiles' draws:
+        // under continuous load the battery drains on "hi" (1 W draw vs
+        // 0.6 W harvest), degrades below the threshold, then *recovers* on
+        // "lo" (0.2 W draw) and upswitches back — the full degrade ->
+        // recover -> upswitch cycle, all on virtual time.
+        let (backend, elems) = sim_backend();
+        let profile_specs = vec![
+            ProfileSpec {
+                name: "hi".into(),
+                accuracy: 0.96,
+                power_mw: 1000.0,
+                latency_us: 329.0,
+            },
+            ProfileSpec {
+                name: "lo".into(),
+                accuracy: 0.94,
+                power_mw: 200.0,
+                latency_us: 329.0,
+            },
+        ];
+        let mgr = ProfileManager::new(ManagerConfig::default(), profile_specs);
+        let cfg = ServerConfig {
+            recharge: EnergySource::constant(600.0),
+            ..Default::default()
+        };
+        // "hi" nets -400 mW x 329 us ~= -1.3e-4 J per request, so a
+        // 1.5e-2 J battery crosses the 48% downswitch after ~60 requests;
+        // "lo" nets +400 mW, recovering past 52% in ~5 more.
+        let srv = AdaptiveServer::start(cfg, backend, mgr, EnergyMonitor::new(1.5e-2)).unwrap();
+        let img = vec![7u8; elems];
+        let mut profiles = Vec::new();
+        for _ in 0..160 {
+            profiles.push(srv.classify(img.clone()).unwrap().profile);
+        }
+        let first_lo = profiles.iter().position(|p| p == "lo").expect("never degraded");
+        assert!(profiles[..first_lo].iter().all(|p| p == "hi"));
+        let upswitch = profiles[first_lo..].iter().position(|p| p == "hi");
+        assert!(
+            upswitch.is_some(),
+            "battery recovered but the profile never switched back: {:?}",
+            &profiles[first_lo..]
+        );
+        assert!(srv.stats.switches.get() >= 2, "need a down- and an up-switch");
+        assert!(
+            srv.stats.shard_recharged_j[0].get() > 0.0,
+            "recharge gauge never moved"
+        );
+        // the drain and recharge books balance on the shard's monitor
+        let m = &srv.shard_energy[0];
+        let rhs = m.capacity_j() - m.drained_j() + m.recharged_j();
+        assert!((m.remaining_j() - rhs).abs() < 1e-12);
+        assert!(m.virtual_time_s() > 0.0);
         srv.shutdown();
     }
 

@@ -21,7 +21,10 @@ use onnx2hw::coordinator::{
 use onnx2hw::flow::{self, FlowConfig};
 use onnx2hw::json::{self, Value};
 use onnx2hw::mdc;
-use onnx2hw::power::{run_fixed, simulate_battery, AdaptivePolicy, BatteryModel};
+use onnx2hw::power::{
+    run_fixed, simulate_battery, simulate_battery_cycles, AdaptivePolicy, BatteryModel,
+    CycleSimConfig, EnergySource,
+};
 use onnx2hw::runtime::{ArtifactStore, PjrtEngine};
 use onnx2hw::writer;
 
@@ -160,7 +163,9 @@ fn cmd_fig4(argv: &[String]) -> Result<()> {
     let spec = Spec::new("onnx2hw fig4", "adaptive engine merge + battery (Fig. 4)")
         .opt("pair", "A8-W8,Mixed", "profiles merged into the adaptive engine")
         .opt("battery-ah", "10", "battery capacity in Ah")
-        .opt("switch-at", "0.5", "battery fraction at which to switch profile");
+        .opt("switch-at", "0.5", "battery fraction at which to switch profile")
+        .opt("recharge-mw", "", "also project an N-phase drain/recharge cycle at this harvest")
+        .opt("horizon-h", "24", "horizon (hours) for the drain/recharge projection");
     let a = parse_or_usage(spec, argv)?;
     let store = ArtifactStore::discover()?;
     let cfg = FlowConfig::default();
@@ -235,6 +240,37 @@ fn cmd_fig4(argv: &[String]) -> Result<()> {
         (adaptive.duration_h / fixed.duration_h - 1.0) * 100.0,
         (adaptive.classifications as f64 / fixed.classifications as f64 - 1.0) * 100.0
     );
+
+    // --- optional: N-phase drain/recharge cycle projection ---
+    let src = parse_recharge(a.get("recharge-mw"), None)?;
+    if src != EnergySource::None {
+        let horizon_h: f64 = a.parse_num("horizon-h")?;
+        let run = simulate_battery_cycles(
+            &bat,
+            &policy,
+            (&acc.profile, acc.power_mw, acc.latency_us, acc.accuracy_pct / 100.0),
+            (&low.profile, low.power_mw, low.latency_us, low.accuracy_pct / 100.0),
+            &src,
+            &CycleSimConfig {
+                horizon_s: horizon_h * 3600.0,
+                hysteresis: 0.02,
+                ..Default::default()
+            },
+        );
+        println!(
+            "\n== Drain/recharge cycle projection ({} over {horizon_h} h) ==",
+            src.label()
+        );
+        for (name, hours, c) in &run.phases {
+            println!("  {name:<8} {hours:>8.2} h {c:>14} classifications");
+        }
+        println!(
+            "  total: {} classifications over {} phases, mean accuracy {:.2}%",
+            run.classifications,
+            run.phases.len(),
+            run.mean_accuracy * 100.0
+        );
+    }
     Ok(())
 }
 
@@ -293,6 +329,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("battery-j", "0.05", "global battery energy in joules (split across shards)")
         .opt("shard-capacity", "", "per-shard battery in joules (overrides the split)")
         .opt("power-cap", "", "per-shard power cap in mW")
+        .opt("recharge-mw", "", "constant per-shard recharge source in mW")
+        .opt("duty-cycle", "", "duty-cycled recharge 'mw:on_s:off_s' (per shard)")
         .opt("pair", "A8-W8,Mixed", "accurate,low-power profiles")
         .opt("workers", "2", "inference worker shards (backend replicas)")
         .opt("clients", "2", "concurrent synthetic client threads")
@@ -334,6 +372,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         ),
         _ => None,
     };
+    let recharge = parse_recharge(a.get("recharge-mw"), a.get("duty-cycle"))?;
     let store2 = store.clone();
     let pair2 = pair.clone();
     // No Arc needed: client threads hold detached ClientHandles, not the
@@ -343,6 +382,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             workers,
             shard_capacity_j,
             shard_power_cap_mw,
+            recharge: recharge.clone(),
             steal: !a.flag("no-steal"),
             ..Default::default()
         },
@@ -401,13 +441,19 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         srv.stats.latency.quantile_us(0.95),
         srv.battery_fraction() * 100.0
     );
+    if recharge != EnergySource::None {
+        println!("recharge source per shard: {}", recharge.label());
+    }
     for (i, e) in srv.shard_energy.iter().enumerate() {
         println!(
-            "  shard {i}: {} batches ({} stolen) | battery {:.1}% of {:.3} mJ",
+            "  shard {i}: {} batches ({} stolen) | battery {:.1}% of {:.3} mJ | \
+             recharged {:.3} mJ over {:.3} s virtual",
             srv.stats.worker_batches[i].get(),
             srv.stats.worker_steals[i].get(),
             e.remaining_fraction() * 100.0,
-            e.capacity_j() * 1e3
+            e.capacity_j() * 1e3,
+            srv.stats.shard_recharged_j[i].get() * 1e3,
+            e.virtual_time_s()
         );
     }
     println!("queue depth now: {}", srv.stats.queue_depth.get());
@@ -416,6 +462,51 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     }
     srv.shutdown();
     Ok(())
+}
+
+/// Build the per-shard recharge source from `--recharge-mw` / `--duty-cycle`
+/// (mutually exclusive; both absent means the battery only drains).
+fn parse_recharge(recharge_mw: Option<&str>, duty: Option<&str>) -> Result<EnergySource> {
+    let recharge_mw = recharge_mw.filter(|s| !s.is_empty());
+    let duty = duty.filter(|s| !s.is_empty());
+    match (recharge_mw, duty) {
+        (Some(_), Some(_)) => bail!("--recharge-mw and --duty-cycle are mutually exclusive"),
+        (Some(mw), None) => {
+            let mw: f64 = mw
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--recharge-mw: cannot parse '{mw}'"))?;
+            if !mw.is_finite() || mw < 0.0 {
+                bail!("--recharge-mw must be finite and >= 0, got {mw}");
+            }
+            Ok(EnergySource::constant(mw))
+        }
+        (None, Some(spec)) => {
+            let parts: Vec<f64> = spec
+                .split(':')
+                .map(|p| {
+                    p.parse::<f64>()
+                        .map_err(|_| anyhow::anyhow!("--duty-cycle: cannot parse '{p}'"))
+                })
+                .collect::<Result<_>>()?;
+            if parts.len() != 3 {
+                bail!("--duty-cycle wants 'mw:on_s:off_s', got '{spec}'");
+            }
+            let (mw, on_s, off_s) = (parts[0], parts[1], parts[2]);
+            if !mw.is_finite() || mw < 0.0 {
+                bail!("--duty-cycle power must be finite and >= 0, got {mw}");
+            }
+            // NaN/inf must fail here with a usage error, not trip the
+            // library assert downstream.
+            if !on_s.is_finite() || !off_s.is_finite() || on_s < 0.0 || off_s < 0.0 {
+                bail!("--duty-cycle needs finite on_s, off_s >= 0, got {on_s}:{off_s}");
+            }
+            if on_s + off_s <= 0.0 {
+                bail!("--duty-cycle needs a positive period (on_s + off_s > 0)");
+            }
+            Ok(EnergySource::duty_cycle(mw, on_s, off_s))
+        }
+        (None, None) => Ok(EnergySource::None),
+    }
 }
 
 fn cmd_verify(argv: &[String]) -> Result<()> {

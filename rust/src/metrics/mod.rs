@@ -52,7 +52,9 @@ impl Gauge {
 }
 
 /// Float gauge (lock-free; f64 bits in an AtomicU64), e.g. the per-shard
-/// remaining-battery fraction. Last write wins; no read-modify-write.
+/// remaining-battery fraction. `set` is last-write-wins; `add` is a CAS
+/// read-modify-write accumulator safe under concurrent writers (used for
+/// summed quantities like recharged joules).
 #[derive(Debug)]
 pub struct FloatGauge {
     bits: AtomicU64,
@@ -73,6 +75,22 @@ impl FloatGauge {
 
     pub fn set(&self, v: f64) {
         self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Accumulate into the gauge (CAS loop — safe under concurrent
+    /// writers), e.g. the per-shard recharged-joules total.
+    pub fn add(&self, d: f64) {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + d).to_bits();
+            match self
+                .bits
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
     }
 
     pub fn get(&self) -> f64 {
@@ -220,6 +238,25 @@ mod tests {
         assert_eq!(g.get(), 0.375);
         let g = FloatGauge::new(1.0);
         assert_eq!(g.get(), 1.0);
+    }
+
+    #[test]
+    fn float_gauge_accumulates_concurrently() {
+        let g = std::sync::Arc::new(FloatGauge::default());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let g = g.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    g.add(0.25);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // 0.25 is exact in binary, so no accumulation error is tolerated
+        assert_eq!(g.get(), 1000.0);
     }
 
     #[test]

@@ -6,6 +6,14 @@
 //! switches to the low-power profile once the remaining charge falls below
 //! a threshold. The outputs are battery duration and the total number of
 //! classifications executed — the adaptive engine extends both.
+//!
+//! [`simulate_battery`] keeps the paper's drain-only two-phase setup;
+//! [`simulate_battery_cycles`] generalizes it to an arbitrary
+//! [`EnergySource`] (harvesting / duty-cycled recharge), stepping through
+//! as many drain/recharge threshold crossings as the horizon contains —
+//! including brown-out (depleted, engine idle) and restart phases.
+
+use super::source::EnergySource;
 
 /// Battery parameters.
 #[derive(Debug, Clone, PartialEq)]
@@ -73,7 +81,11 @@ impl BatteryPack {
 /// low-power profile.
 #[derive(Debug, Clone, PartialEq)]
 pub struct AdaptivePolicy {
-    /// Remaining-energy fraction at which to switch (e.g. 0.5).
+    /// *Remaining*-energy fraction below which the low-power profile runs
+    /// (e.g. `0.5` switches once half the charge is gone). The two
+    /// extremes: `0.0` never switches — the accurate profile runs until
+    /// the battery dies — and `1.0` serves the low-power profile from the
+    /// very start.
     pub switch_at_fraction: f64,
 }
 
@@ -158,6 +170,263 @@ pub fn simulate_battery(
     }
 }
 
+/// Options for the phase-stepped battery/recharge simulator
+/// ([`simulate_battery_cycles`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CycleSimConfig {
+    /// Stop after this much simulated time (seconds). A recharging battery
+    /// can cycle forever, so the horizon bounds the walk; drain-only runs
+    /// (a source that never delivers again) also stop at depletion.
+    pub horizon_s: f64,
+    /// Hysteresis band (remaining fraction) around the switch threshold,
+    /// mirroring `ManagerConfig::hysteresis`: downswitch below
+    /// `switch_at_fraction - hysteresis`, upswitch above
+    /// `switch_at_fraction + hysteresis`. With `0.0` and a source whose
+    /// power sits between the two profiles' draws, the trajectory pins at
+    /// the threshold and is served as low-power (the online manager needs
+    /// the band to upswitch cleanly for the same reason).
+    pub hysteresis: f64,
+    /// Remaining fraction at which a browned-out (fully depleted, idle)
+    /// engine restarts once the source has recharged it that far.
+    pub restart_fraction: f64,
+    /// Safety cap on recorded phases.
+    pub max_phases: usize,
+}
+
+impl Default for CycleSimConfig {
+    fn default() -> Self {
+        CycleSimConfig {
+            horizon_s: 24.0 * 3600.0,
+            hysteresis: 0.0,
+            restart_fraction: 0.05,
+            max_phases: 10_000,
+        }
+    }
+}
+
+/// Engine state between phase boundaries of the cycle simulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    Accurate,
+    LowPower,
+    /// Browned out: battery fully depleted, engine off, only the source
+    /// moves the energy level.
+    Idle,
+}
+
+/// Label used for brown-out phases in [`BatteryRun::phases`].
+pub const IDLE_PHASE: &str = "idle";
+
+fn close_phase(
+    phases: &mut Vec<(String, f64, u64)>,
+    total_c: &mut u64,
+    acc_weighted: &mut f64,
+    label: &str,
+    latency_us: f64,
+    accuracy: f64,
+    seconds: f64,
+) {
+    if seconds <= 0.0 {
+        return;
+    }
+    let c = if latency_us > 0.0 {
+        (seconds / (latency_us * 1e-6)) as u64
+    } else {
+        0
+    };
+    *total_c += c;
+    *acc_weighted += accuracy * c as f64;
+    phases.push((label.to_string(), seconds / 3600.0, c));
+}
+
+/// Drain *and recharge* the battery with the adaptive engine: an N-phase
+/// generalization of [`simulate_battery`].
+///
+/// The walk is event-driven, not fixed-step: within each constant-power
+/// segment of `source` the net rate is constant, so the next threshold /
+/// depletion / restart crossing is closed-form and energy accounting is
+/// exact. Phases alternate between the accurate profile, the low-power
+/// profile, and [`IDLE_PHASE`] brown-outs; with `source ==
+/// EnergySource::None` and an infinite horizon the result reduces to the
+/// paper's two-phase [`simulate_battery`].
+pub fn simulate_battery_cycles(
+    battery: &BatteryModel,
+    policy: &AdaptivePolicy,
+    accurate: (&str, f64, f64, f64), // (name, power_mw, latency_us, accuracy)
+    low_power: (&str, f64, f64, f64),
+    source: &EnergySource,
+    cfg: &CycleSimConfig,
+) -> BatteryRun {
+    let cap_j = battery.energy_j();
+    let (a_name, a_mw, a_lat, a_acc) = accurate;
+    let (l_name, l_mw, l_lat, l_acc) = low_power;
+    let thr_j = cap_j * policy.switch_at_fraction;
+    let h_j = cap_j * cfg.hysteresis;
+    let down_j = (thr_j - h_j).max(0.0);
+    let up_j = (thr_j + h_j).min(cap_j);
+    let restart_j = (cap_j * cfg.restart_fraction).clamp(0.0, cap_j);
+    let mode_info = |m: Mode| match m {
+        Mode::Accurate => (a_name, a_lat, a_acc),
+        Mode::LowPower => (l_name, l_lat, l_acc),
+        Mode::Idle => (IDLE_PHASE, 0.0, 0.0),
+    };
+
+    let mut e = cap_j;
+    let mut t = 0.0_f64;
+    let mut mode = if e < thr_j { Mode::LowPower } else { Mode::Accurate };
+    let mut phases: Vec<(String, f64, u64)> = Vec::new();
+    let mut phase_start = 0.0_f64;
+    let mut total_c = 0_u64;
+    let mut acc_weighted = 0.0_f64;
+    let mut zero_streak = 0_u32;
+    // Hard step bound: a short-period duty cycle over a long horizon walks
+    // one iteration per segment even with no phase changes.
+    let mut steps = 0_u64;
+
+    while t < cfg.horizon_s && phases.len() < cfg.max_phases && steps < 20_000_000 {
+        steps += 1;
+        let (seg_end, s_mw) = source.segment_at(t);
+        if mode == Mode::Idle && e <= 0.0 && s_mw <= 0.0 && seg_end.is_infinite() {
+            break; // dead battery and the source will never deliver again
+        }
+        // Out-of-band correction (no time passes): a pinned or saturating
+        // engine can leave a segment strictly outside the hysteresis band
+        // when the source strength changes; re-select like the online
+        // manager would. Strict comparisons keep the threshold-pinned
+        // equilibrium (e == up_j) stable.
+        let corrected = match mode {
+            Mode::LowPower if e > up_j => Some(Mode::Accurate),
+            Mode::Accurate if e < down_j => Some(Mode::LowPower),
+            _ => None,
+        };
+        if let Some(next) = corrected {
+            let (label, lat, acc) = mode_info(mode);
+            close_phase(
+                &mut phases,
+                &mut total_c,
+                &mut acc_weighted,
+                label,
+                lat,
+                acc,
+                t - phase_start,
+            );
+            phase_start = t;
+            mode = next;
+        }
+        let draw_mw = match mode {
+            Mode::Accurate => a_mw,
+            Mode::LowPower => l_mw,
+            Mode::Idle => 0.0,
+        };
+        let net_w = (s_mw - draw_mw) * 1e-3;
+        let t_seg = seg_end.min(cfg.horizon_s);
+
+        // The energy level that would change the mode next, given the slope.
+        let target_j = if net_w < 0.0 {
+            match mode {
+                // >= so an engine starting exactly on the boundary (e.g.
+                // switch_at_fraction 1.0 on a full battery) downswitches
+                // in a zero-length crossing instead of draining to empty.
+                Mode::Accurate if e >= down_j && down_j > 0.0 => Some(down_j),
+                _ => Some(0.0),
+            }
+        } else if net_w > 0.0 {
+            match mode {
+                Mode::LowPower if e < up_j => Some(up_j),
+                Mode::Idle => Some(restart_j),
+                _ => None, // charging with no boundary above: saturate at cap
+            }
+        } else {
+            None
+        };
+
+        let t_cross = target_j.map(|tj| t + (tj - e) / net_w);
+        let (t_next, crossed) = match t_cross {
+            Some(tc) if tc <= t_seg => (tc.max(t), true),
+            _ => (t_seg, false),
+        };
+        let dt = t_next - t;
+
+        // Zeno guard: crossings can alternate with zero elapsed time —
+        // zero hysteresis with a source between the two draws (pinned at
+        // the threshold), or restart_fraction 0 with a source weaker than
+        // the low-power draw (pinned at depletion). Hold the boundary
+        // until the segment ends instead of flapping forever. At a
+        // positive boundary the engine serves low-power along it; at
+        // depletion it stays browned out — counting full-rate service on
+        // a dead battery would create energy from nothing.
+        zero_streak = if crossed && dt <= 1e-12 { zero_streak + 1 } else { 0 };
+        if zero_streak >= 2 {
+            let pinned = if e > 0.0 { Mode::LowPower } else { Mode::Idle };
+            if mode != pinned {
+                let (label, lat, acc) = mode_info(mode);
+                close_phase(
+                    &mut phases,
+                    &mut total_c,
+                    &mut acc_weighted,
+                    label,
+                    lat,
+                    acc,
+                    t - phase_start,
+                );
+                phase_start = t;
+                mode = pinned;
+            }
+            zero_streak = 0;
+            t = t_seg; // energy pinned at the boundary
+            continue;
+        }
+
+        let e_next = if crossed {
+            target_j.unwrap()
+        } else {
+            (e + net_w * dt).clamp(0.0, cap_j)
+        };
+        if crossed {
+            let (label, lat, acc) = mode_info(mode);
+            close_phase(
+                &mut phases,
+                &mut total_c,
+                &mut acc_weighted,
+                label,
+                lat,
+                acc,
+                t_next - phase_start,
+            );
+            phase_start = t_next;
+            let tj = target_j.unwrap();
+            mode = match mode {
+                Mode::Accurate | Mode::LowPower if tj <= 0.0 => Mode::Idle,
+                Mode::Accurate => Mode::LowPower,
+                Mode::LowPower => Mode::Accurate,
+                Mode::Idle if restart_j < thr_j => Mode::LowPower,
+                Mode::Idle => Mode::Accurate,
+            };
+        }
+        e = e_next;
+        t = t_next;
+    }
+
+    let (label, lat, acc) = mode_info(mode);
+    close_phase(
+        &mut phases,
+        &mut total_c,
+        &mut acc_weighted,
+        label,
+        lat,
+        acc,
+        t - phase_start,
+    );
+
+    BatteryRun {
+        label: format!("cycles({a_name}<->{l_name}, {})", source.label()),
+        duration_h: t / 3600.0,
+        classifications: total_c,
+        phases,
+        mean_accuracy: if total_c == 0 { 0.0 } else { acc_weighted / total_c as f64 },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -206,7 +475,11 @@ mod tests {
     }
 
     #[test]
-    fn threshold_zero_equals_low_power_only() {
+    fn threshold_one_equals_low_power_only() {
+        // switch_at_fraction is the REMAINING fraction below which the
+        // low-power profile runs: 1.0 means the battery is "low" from the
+        // first instant, so the whole budget is served low-power. (This
+        // test was previously misnamed `threshold_zero_...`.)
         let bat = BatteryModel::default();
         let adaptive = simulate_battery(
             &bat,
@@ -218,6 +491,25 @@ mod tests {
         );
         let fixed_low = run_fixed(L.0, &bat, L.1, L.2, L.3);
         assert!((adaptive.duration_h - fixed_low.duration_h).abs() < 1e-6);
+    }
+
+    #[test]
+    fn threshold_zero_never_switches_equals_fixed_accurate() {
+        // The true threshold-zero case: the battery is never "low", so the
+        // adaptive engine is indistinguishable from the fixed accurate one.
+        let bat = BatteryModel::default();
+        let adaptive = simulate_battery(
+            &bat,
+            &AdaptivePolicy {
+                switch_at_fraction: 0.0,
+            },
+            A,
+            L,
+        );
+        let fixed_acc = run_fixed(A.0, &bat, A.1, A.2, A.3);
+        assert!((adaptive.duration_h - fixed_acc.duration_h).abs() < 1e-6);
+        assert_eq!(adaptive.classifications, fixed_acc.classifications);
+        assert!((adaptive.mean_accuracy - fixed_acc.mean_accuracy).abs() < 1e-12);
     }
 
     #[test]
@@ -234,6 +526,199 @@ mod tests {
                 "threshold {hi} gave {} < {} at {lo}",
                 r_hi.duration_h,
                 r_lo.duration_h
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cycles_with_no_source_match_two_phase_sim() {
+        // With no recharge and an unbounded horizon the N-phase simulator
+        // must reduce exactly to the paper's two-phase one.
+        let bat = BatteryModel::default();
+        let policy = AdaptivePolicy::default();
+        let two = simulate_battery(&bat, &policy, A, L);
+        let n = simulate_battery_cycles(
+            &bat,
+            &policy,
+            A,
+            L,
+            &EnergySource::None,
+            &CycleSimConfig {
+                horizon_s: f64::INFINITY,
+                ..Default::default()
+            },
+        );
+        assert!((n.duration_h - two.duration_h).abs() < 1e-9);
+        assert_eq!(n.classifications, two.classifications);
+        assert!((n.mean_accuracy - two.mean_accuracy).abs() < 1e-12);
+        assert_eq!(n.phases.len(), 2);
+        assert_eq!(n.phases[0].0, A.0);
+        assert_eq!(n.phases[1].0, L.0);
+    }
+
+    #[test]
+    fn constant_recharge_between_draws_cycles_and_upswitches() {
+        // A source stronger than the low-power draw but weaker than the
+        // accurate draw: the engine oscillates across the hysteresis band —
+        // degrade, recover, upswitch, repeat — for the whole horizon.
+        let bat = BatteryModel {
+            capacity_ah: 1e-4, // 1.8 J
+            voltage_v: 5.0,
+        };
+        let src = EnergySource::constant(138.5); // between L (135) and A (142)
+        let cfg = CycleSimConfig {
+            horizon_s: 2000.0,
+            hysteresis: 0.05,
+            ..Default::default()
+        };
+        let run = simulate_battery_cycles(&bat, &AdaptivePolicy::default(), A, L, &src, &cfg);
+        assert!(
+            (run.duration_h - cfg.horizon_s / 3600.0).abs() < 1e-9,
+            "recharging battery must survive to the horizon"
+        );
+        assert!(
+            run.phases.len() > 2,
+            "expected repeated drain/recharge crossings, got {:?}",
+            run.phases
+        );
+        // at least one recovery upswitch: a low-power phase followed by an
+        // accurate phase
+        let upswitch = run.phases.windows(2).any(|w| w[0].0 == L.0 && w[1].0 == A.0);
+        assert!(upswitch, "no upswitch in {:?}", run.phases);
+        assert!(run.phases.iter().all(|p| p.0 != IDLE_PHASE));
+        assert!(run.classifications > 0);
+        assert!(run.mean_accuracy > L.3 && run.mean_accuracy < A.3);
+    }
+
+    #[test]
+    fn duty_cycle_browns_out_and_restarts() {
+        // A strong but mostly-off source: the battery dies during the off
+        // phase (idle brown-out), recharges when the source returns, and
+        // the engine restarts.
+        let bat = BatteryModel {
+            capacity_ah: 0.2 / (5.0 * 3600.0), // 0.2 J
+            voltage_v: 5.0,
+        };
+        let src = EnergySource::duty_cycle(1000.0, 1.0, 10.0);
+        let cfg = CycleSimConfig {
+            horizon_s: 30.0,
+            hysteresis: 0.02,
+            ..Default::default()
+        };
+        let run = simulate_battery_cycles(&bat, &AdaptivePolicy::default(), A, L, &src, &cfg);
+        let idle = run.phases.iter().position(|p| p.0 == IDLE_PHASE);
+        assert!(idle.is_some(), "no brown-out phase in {:?}", run.phases);
+        let idle = idle.unwrap();
+        assert!(
+            run.phases[idle + 1..].iter().any(|p| p.0 != IDLE_PHASE),
+            "engine never restarted after brown-out: {:?}",
+            run.phases
+        );
+        assert_eq!(run.phases[idle].2, 0, "idle phases classify nothing");
+    }
+
+    #[test]
+    fn zero_hysteresis_pinning_terminates() {
+        // Source between the two draws with no hysteresis: the trajectory
+        // pins at the threshold instead of flapping forever, served as
+        // low-power, and the walk still reaches the horizon.
+        let bat = BatteryModel {
+            capacity_ah: 1e-4,
+            voltage_v: 5.0,
+        };
+        let src = EnergySource::constant(138.5);
+        let cfg = CycleSimConfig {
+            horizon_s: 600.0,
+            hysteresis: 0.0,
+            ..Default::default()
+        };
+        let run = simulate_battery_cycles(&bat, &AdaptivePolicy::default(), A, L, &src, &cfg);
+        assert!((run.duration_h - cfg.horizon_s / 3600.0).abs() < 1e-9);
+        assert!(run.phases.len() <= 3, "pinning must not spray phases: {:?}", run.phases);
+        // the pinned tail serves the low-power profile
+        assert_eq!(run.phases.last().unwrap().0, L.0);
+    }
+
+    #[test]
+    fn zero_restart_with_weak_source_stays_browned_out() {
+        // Regression: with restart_fraction 0 and a source weaker than the
+        // low-power draw, the depleted engine must stay browned out (an
+        // idle tail), not get pinned into serving low-power at full rate
+        // on harvest it does not have.
+        let bat = BatteryModel {
+            capacity_ah: 1e-4, // 1.8 J
+            voltage_v: 5.0,
+        };
+        let src = EnergySource::constant(50.0); // well below L's 135 mW
+        let cfg = CycleSimConfig {
+            horizon_s: 4000.0,
+            restart_fraction: 0.0,
+            ..Default::default()
+        };
+        let run = simulate_battery_cycles(&bat, &AdaptivePolicy::default(), A, L, &src, &cfg);
+        let last = run.phases.last().unwrap();
+        assert_eq!(last.0, IDLE_PHASE, "expected an idle tail: {:?}", run.phases);
+        assert_eq!(last.2, 0);
+        assert!((run.duration_h - cfg.horizon_s / 3600.0).abs() < 1e-9);
+        // Energy actually served never exceeds capacity + harvest banked
+        // before death (conservation: no service on a dead battery).
+        let served_j: f64 = run
+            .phases
+            .iter()
+            .map(|p| match p.0.as_str() {
+                s if s == A.0 => p.1 * 3600.0 * A.1 * 1e-3,
+                s if s == L.0 => p.1 * 3600.0 * L.1 * 1e-3,
+                _ => 0.0,
+            })
+            .sum();
+        let alive_s: f64 = run
+            .phases
+            .iter()
+            .filter(|p| p.0 != IDLE_PHASE)
+            .map(|p| p.1 * 3600.0)
+            .sum();
+        let budget_j = bat.energy_j() + 50.0 * 1e-3 * alive_s;
+        assert!(served_j <= budget_j + 1e-6, "served {served_j} J > budget {budget_j} J");
+    }
+
+    #[test]
+    fn cycle_phase_durations_sum_to_run_duration_property() {
+        testkit::check("cycle phases partition the run", |rng| {
+            let bat = BatteryModel {
+                capacity_ah: rng.f64(0.5e-4, 3e-4),
+                voltage_v: 5.0,
+            };
+            let src = match rng.u64(0, 2) {
+                0 => EnergySource::None,
+                1 => EnergySource::constant(rng.f64(0.0, 300.0)),
+                _ => EnergySource::duty_cycle(
+                    rng.f64(50.0, 500.0),
+                    rng.f64(0.5, 5.0),
+                    rng.f64(0.5, 5.0),
+                ),
+            };
+            let cfg = CycleSimConfig {
+                horizon_s: rng.f64(10.0, 1000.0),
+                hysteresis: rng.f64(0.0, 0.1),
+                ..Default::default()
+            };
+            let policy = AdaptivePolicy {
+                switch_at_fraction: rng.f64(0.0, 1.0),
+            };
+            let run = simulate_battery_cycles(&bat, &policy, A, L, &src, &cfg);
+            let phase_sum_h: f64 = run.phases.iter().map(|p| p.1).sum();
+            crate::prop_assert!(
+                (phase_sum_h - run.duration_h).abs() < 1e-9,
+                "phases sum to {phase_sum_h} h but run lasted {} h ({:?})",
+                run.duration_h,
+                run.phases
+            );
+            crate::prop_assert!(
+                run.duration_h * 3600.0 <= cfg.horizon_s + 1e-9,
+                "run overshot the horizon: {} h vs {} s",
+                run.duration_h,
+                cfg.horizon_s
             );
             Ok(())
         });

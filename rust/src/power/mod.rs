@@ -14,8 +14,11 @@
 
 mod battery;
 mod model;
+mod source;
 
 pub use battery::{
-    run_fixed, simulate_battery, AdaptivePolicy, BatteryModel, BatteryPack, BatteryRun,
+    run_fixed, simulate_battery, simulate_battery_cycles, AdaptivePolicy, BatteryModel,
+    BatteryPack, BatteryRun, CycleSimConfig, IDLE_PHASE,
 };
 pub use model::{estimate_power, PowerBreakdown};
+pub use source::EnergySource;
