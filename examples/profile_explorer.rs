@@ -1,11 +1,15 @@
 //! Profile explorer (paper Fig. 3 + Sect. 4.3): sweep all execution
 //! profiles through the design flow, print the accuracy/power trade-off,
-//! and report which pairs are good merge candidates for the adaptive engine
-//! (shared layers under MDC signatures).
+//! report which pairs are good merge candidates for the adaptive engine
+//! (shared layers under MDC signatures) — then go beyond the hand-exported
+//! table: run the approximation explorer on the most accurate profile and
+//! auto-generate a Pareto ladder of derived profiles the adaptive server
+//! could serve directly (`ProfileManager::from_frontier`).
 //!
 //! Run: `cargo run --release --example profile_explorer`
 
 use anyhow::Result;
+use onnx2hw::approx::{CalibSet, Explorer, ExplorerConfig};
 use onnx2hw::flow::{self, FlowConfig};
 use onnx2hw::hls::Calibration;
 use onnx2hw::mdc;
@@ -75,5 +79,52 @@ fn main() -> Result<()> {
         println!("\nbest adaptive-engine candidate: {label} ({shared} shared slots)");
         println!("(the paper selects A8-W8 + Mixed — Sect. 4.3)");
     }
+
+    // --- auto-generate a ladder instead of hand-picking one ---
+    // The hand-exported profiles above were trained offline; the
+    // approximation explorer derives new per-layer bit-width variants from
+    // the most accurate one and searches out the accuracy/energy frontier.
+    let seed_row = rows
+        .iter()
+        .max_by(|a, b| a.accuracy_pct.total_cmp(&b.accuracy_pct))
+        .expect("at least one profile");
+    let base = store.qonnx(&seed_row.profile)?;
+    let testset = store.testset()?;
+    let calib = CalibSet::from_testset(&testset, 64);
+    let mut explorer = Explorer::new(
+        &base,
+        &calib,
+        ExplorerConfig {
+            power_images: 1,
+            max_rungs: 6,
+            ..Default::default()
+        },
+    );
+    let frontier = explorer.explore();
+    println!(
+        "\nauto-generated ladder from {} ({} candidates evaluated):",
+        base.profile,
+        explorer.evaluations()
+    );
+    for (i, p) in frontier.points.iter().enumerate() {
+        println!(
+            "  rung {i}: {:<12} [{}] acc {:>5.1}% power {:>6.1} mW energy {:>6.2} uJ",
+            p.name,
+            p.model.precision_signature(),
+            p.accuracy * 100.0,
+            p.power_mw,
+            p.energy_uj
+        );
+    }
+    let baseline = explorer.uniform_baseline();
+    let strict = baseline
+        .iter()
+        .filter(|b| frontier.strictly_dominates(b.accuracy, b.energy_uj, b.latency_us))
+        .count();
+    println!(
+        "ladder strictly dominates {strict}/{} uniform-precision rungs \
+         (serve it via ProfileManager::from_frontier)",
+        baseline.len()
+    );
     Ok(())
 }

@@ -1,0 +1,309 @@
+//! Bench: the approximation explorer's Pareto ladder vs the naive
+//! uniform-precision baseline — and the ladder served end to end.
+//!
+//! Needs no artifacts: a deterministic synthetic two-conv model (seeded
+//! generator) is explored against a seeded self-labelled calibration set,
+//! so every number here is reproducible bit-for-bit — no wall clock, no
+//! global RNG, no retries needed in CI. Three things are measured/gated:
+//!
+//! 1. **Frontier quality** — the explorer's per-layer search must emit a
+//!    >= 4-rung Pareto ladder whose points cover every uniform-precision
+//!    baseline rung (drop k bits everywhere — the allocation that ignores
+//!    per-layer sensitivity) and strictly dominate the baseline.
+//! 2. **Bit-exactness** — every candidate is evaluated on the packed batch
+//!    kernels and cross-checked against the scalar oracle inside the
+//!    explorer; this bench re-asserts it per frontier rung across batch
+//!    sizes, and again on every serving reply below.
+//! 3. **End-to-end serving** — the auto-generated ladder is loaded into an
+//!    `AdaptiveServer` via `ProfileManager::from_frontier` +
+//!    `Backend::sim_from_models`; under a draining battery the shard must
+//!    walk down the ladder monotonically, serving >= 3 distinct rungs,
+//!    with each reply bit-exact vs the scalar oracle *of its selected
+//!    rung's derived model*.
+//!
+//! Run: `cargo bench --bench pareto_explore [-- [requests]
+//!       [--json <path>] [--assert-dominates]]`
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use onnx2hw::approx::{CalibSet, Explorer, ExplorerConfig, Frontier};
+use onnx2hw::bench_harness::Table;
+use onnx2hw::coordinator::{
+    AdaptiveServer, Backend, EnergyMonitor, ManagerConfig, ProfileManager, ServerConfig,
+};
+use onnx2hw::dataflow::{exec, BatchExecutor};
+use onnx2hw::json::{self, Value};
+use onnx2hw::qonnx::{random_model_json, read_str, QonnxModel, RandModelCfg};
+use onnx2hw::testkit::Rng;
+
+/// Seeds are the determinism contract: same seeds -> same model, same
+/// calibration workload, same frontier. Cross-validated against an
+/// independent Python port of the generator/executor/transform.
+const MODEL_SEED: u64 = 0xA11CE;
+const CALIB_SEED: u64 = 0x5EED5;
+const CALIB_N: usize = 96;
+const UNIFORM_RUNGS: usize = 4;
+const MIN_FRONTIER_RUNGS: usize = 4;
+const MIN_SERVED_RUNGS: usize = 3;
+
+fn bench_model() -> QonnxModel {
+    let cfg = RandModelCfg {
+        side: 8,
+        cin: 1,
+        blocks: vec![(4, 8, 8), (8, 8, 8)],
+        classes: 5,
+    };
+    read_str(&random_model_json(&cfg, &mut Rng::new(MODEL_SEED))).expect("bench model")
+}
+
+/// Re-assert packed-vs-oracle bit-exactness for one derived rung across
+/// the batcher's envelope (the explorer already checked its first replies;
+/// this covers partial and full batches too).
+fn assert_rung_bit_exact(model: &QonnxModel, calib: &CalibSet) {
+    let mut ex = BatchExecutor::from_model(model);
+    let k = ex.out_features();
+    for &batch in &[1usize, 3, 8] {
+        let refs: Vec<&[u8]> = calib.images.iter().take(batch).map(Vec::as_slice).collect();
+        let got = ex.run_batch(&refs).to_vec();
+        for (i, img) in refs.iter().enumerate() {
+            assert_eq!(
+                &got[i * k..(i + 1) * k],
+                exec::execute(model, img).as_slice(),
+                "rung '{}' batch {batch} image {i} diverges from the scalar oracle",
+                model.profile
+            );
+        }
+    }
+}
+
+struct ServeResult {
+    requests: usize,
+    served_rungs: Vec<String>,
+    switches: u64,
+}
+
+/// Serve the auto-generated ladder end to end and prove the walk.
+fn serve_ladder(frontier: &Frontier, calib: &CalibSet, requests: usize) -> ServeResult {
+    let models = frontier.models();
+    let oracle: BTreeMap<String, QonnxModel> = models.clone();
+    let manager = ProfileManager::from_frontier(
+        ManagerConfig {
+            low_energy_threshold: 0.6,
+            hysteresis: 0.01,
+            accuracy_floor: 0.0,
+        },
+        frontier,
+    );
+    let factory = move || Ok(Backend::sim_from_models(models.clone()));
+    // Battery sized so the top rung alone would drain it well before the
+    // run ends: the shard is forced through every band down to the
+    // cheapest rung (drain-only, so the walk must be monotone).
+    let top = &frontier.points[0];
+    let per_request_j = top.power_mw * 1e-3 * top.latency_us * 1e-6;
+    let capacity_j = per_request_j * requests as f64 / 4.0;
+    let srv = AdaptiveServer::start(
+        ServerConfig::default(),
+        factory,
+        manager,
+        EnergyMonitor::new(capacity_j),
+    )
+    .expect("server");
+
+    let rung_of = |name: &str| -> usize {
+        frontier
+            .points
+            .iter()
+            .position(|p| p.name == name)
+            .expect("reply profile must be a frontier rung")
+    };
+    let mut served = Vec::new();
+    let mut prev_rung = 0usize;
+    for i in 0..requests {
+        let img = &calib.images[i % calib.images.len()];
+        let resp = srv.classify(img.clone()).expect("reply lost");
+        let want: Vec<f32> = exec::execute(&oracle[&resp.profile], img)
+            .iter()
+            .map(|&v| v as f32)
+            .collect();
+        assert_eq!(
+            resp.logits, want,
+            "request {i} not bit-exact vs the oracle of rung '{}'",
+            resp.profile
+        );
+        let rung = rung_of(&resp.profile);
+        assert!(
+            rung >= prev_rung,
+            "drain-only battery walked back up the ladder: {prev_rung} -> {rung}"
+        );
+        prev_rung = rung;
+        if served.last() != Some(&resp.profile) {
+            served.push(resp.profile);
+        }
+    }
+    let switches = srv.stats.switches.get();
+    srv.shutdown();
+    ServeResult {
+        requests,
+        served_rungs: served,
+        switches,
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut requests: usize = 1200;
+    let mut json_path: Option<String> = None;
+    let mut assert_dominates = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--json" => {
+                i += 1;
+                json_path = Some(args.get(i).expect("--json needs a path").clone());
+            }
+            "--assert-dominates" => assert_dominates = true,
+            other => {
+                requests = other.parse().unwrap_or_else(|_| {
+                    panic!("unexpected argument '{other}' (want a request count)")
+                });
+            }
+        }
+        i += 1;
+    }
+
+    let model = bench_model();
+    let calib = CalibSet::self_labeled(&model, CALIB_N, CALIB_SEED);
+    let mut explorer = Explorer::new(
+        &model,
+        &calib,
+        ExplorerConfig {
+            power_images: 1,
+            uniform_rungs: UNIFORM_RUNGS,
+            ..Default::default()
+        },
+    );
+    let t0 = Instant::now();
+    let frontier = explorer.explore();
+    let explore_s = t0.elapsed().as_secs_f64();
+    let baseline = explorer.uniform_baseline();
+
+    println!(
+        "== pareto_explore: {} ({}) | {} calib images | {} candidates in {:.2}s ==\n",
+        model.profile,
+        model.precision_signature(),
+        calib.len(),
+        explorer.evaluations(),
+        explore_s
+    );
+    let mut table =
+        Table::new(&["rung", "profile", "precisions", "accuracy", "power", "energy/inf"]);
+    for (i, p) in frontier.points.iter().enumerate() {
+        assert_rung_bit_exact(&p.model, &calib);
+        table.row(&[
+            i.to_string(),
+            p.name.clone(),
+            p.model.precision_signature(),
+            format!("{:.1}%", p.accuracy * 100.0),
+            format!("{:.1} mW", p.power_mw),
+            format!("{:.3} uJ", p.energy_uj),
+        ]);
+    }
+    println!("{}", table.render());
+
+    let mut strict = 0usize;
+    let mut covered = 0usize;
+    let mut baseline_rows = Vec::new();
+    for (k, b) in baseline.iter().enumerate() {
+        let weak = frontier.weakly_dominates(b.accuracy, b.energy_uj, b.latency_us);
+        let beats = frontier.strictly_dominates(b.accuracy, b.energy_uj, b.latency_us);
+        covered += weak as usize;
+        strict += beats as usize;
+        println!(
+            "uniform rung {}: acc {:>5.1}% energy {:.3} uJ -> {}",
+            k + 1,
+            b.accuracy * 100.0,
+            b.energy_uj,
+            if beats { "strictly dominated" } else { "covered" }
+        );
+        baseline_rows.push(Value::obj(vec![
+            ("rung", (k + 1).into()),
+            ("accuracy", b.accuracy.into()),
+            ("energy_uj", b.energy_uj.into()),
+            ("weakly_dominated", weak.into()),
+            ("strictly_dominated", beats.into()),
+        ]));
+    }
+
+    // JSON schema round trip through the vendored module before writing.
+    let frontier_json = frontier.to_json();
+    let reparsed = json::parse(&json::to_string_pretty(&frontier_json)).expect("round trip parse");
+    let back = Frontier::from_json(&reparsed, &model).expect("round trip load");
+    assert_eq!(back.len(), frontier.len(), "frontier JSON round trip lost rungs");
+
+    let serve = serve_ladder(&frontier, &calib, requests);
+    println!(
+        "\nserved {} requests on the auto-generated ladder: rung walk {:?} \
+         ({} switches), every reply bit-exact vs its rung's oracle",
+        serve.requests, serve.served_rungs, serve.switches
+    );
+
+    if let Some(path) = &json_path {
+        let doc = Value::obj(vec![
+            ("bench", "pareto_explore".into()),
+            ("calib_images", CALIB_N.into()),
+            ("evaluations", explorer.evaluations().into()),
+            ("explore_seconds", explore_s.into()),
+            ("frontier", frontier_json),
+            ("baseline", Value::Array(baseline_rows)),
+            (
+                "serving",
+                Value::obj(vec![
+                    ("requests", serve.requests.into()),
+                    (
+                        "served_rungs",
+                        Value::Array(
+                            serve.served_rungs.iter().map(|s| s.as_str().into()).collect(),
+                        ),
+                    ),
+                    ("switches", (serve.switches as i64).into()),
+                ]),
+            ),
+        ]);
+        std::fs::write(path, json::to_string_pretty(&doc)).expect("write json");
+        println!("wrote frontier + gates to {path}");
+    }
+
+    if assert_dominates {
+        assert!(
+            frontier.len() >= MIN_FRONTIER_RUNGS,
+            "frontier has {} rungs, need >= {MIN_FRONTIER_RUNGS}",
+            frontier.len()
+        );
+        assert_eq!(
+            covered,
+            baseline.len(),
+            "every uniform baseline rung must be weakly dominated"
+        );
+        assert_eq!(
+            strict,
+            baseline.len(),
+            "every uniform baseline rung must be strictly dominated \
+             (got {strict}/{})",
+            baseline.len()
+        );
+        assert!(
+            serve.served_rungs.len() >= MIN_SERVED_RUNGS,
+            "ladder walk served {} distinct rungs, need >= {MIN_SERVED_RUNGS}: {:?}",
+            serve.served_rungs.len(),
+            serve.served_rungs
+        );
+        println!(
+            "\ndominance gate passed: {}-rung frontier, {strict}/{} baseline rungs \
+             strictly dominated, {} rungs served end-to-end",
+            frontier.len(),
+            baseline.len(),
+            serve.served_rungs.len()
+        );
+    }
+}

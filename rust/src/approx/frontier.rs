@@ -1,0 +1,295 @@
+//! The explorer's output: a Pareto ladder of auto-generated profiles, plus
+//! its JSON interchange (round-trips through the in-repo `json` module, so
+//! the artifact stays vendored-offline) and the bridge into the serving
+//! stack (`ProfileManager::from_frontier`, `Frontier::models`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{ManagerConfig, ProfileManager, ProfileSpec};
+use crate::json::Value;
+use crate::qonnx::QonnxModel;
+
+use super::quant::{derive_model, knobs_for};
+
+/// One rung of the auto-generated ladder: the knob vector, its measured
+/// objectives, and the derived model ready to serve.
+#[derive(Debug, Clone)]
+pub struct FrontierPoint {
+    /// Deterministic profile name ([`super::config_name`]).
+    pub name: String,
+    pub config: Vec<u32>,
+    pub accuracy: f64,
+    pub power_mw: f64,
+    pub latency_us: f64,
+    pub energy_uj: f64,
+    /// Per conv layer: the packed plan proved the 32-bit accumulator path.
+    pub acc_narrow: Vec<bool>,
+    pub model: QonnxModel,
+}
+
+impl FrontierPoint {
+    /// The [`ProfileSpec`] the Profile Manager selects on.
+    pub fn spec(&self) -> ProfileSpec {
+        ProfileSpec {
+            name: self.name.clone(),
+            accuracy: self.accuracy,
+            power_mw: self.power_mw,
+            latency_us: self.latency_us,
+        }
+    }
+}
+
+/// An epsilon-pruned Pareto ladder, most accurate rung first.
+#[derive(Debug, Clone)]
+pub struct Frontier {
+    /// Profile name of the base model the ladder was derived from.
+    pub base_profile: String,
+    pub points: Vec<FrontierPoint>,
+}
+
+impl Frontier {
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Profile table for [`ProfileManager::new`] / `from_frontier`.
+    pub fn specs(&self) -> Vec<ProfileSpec> {
+        self.points.iter().map(FrontierPoint::spec).collect()
+    }
+
+    /// The derived models keyed by profile name — drop-in input for
+    /// `Backend::sim_from_models`, so the coordinator shards serve the
+    /// auto-generated ladder exactly like hand-exported artifacts.
+    pub fn models(&self) -> BTreeMap<String, QonnxModel> {
+        self.points
+            .iter()
+            .map(|p| (p.name.clone(), p.model.clone()))
+            .collect()
+    }
+
+    /// Some rung is at least as good as `(accuracy, energy, latency)` on
+    /// every objective.
+    pub fn weakly_dominates(&self, accuracy: f64, energy_uj: f64, latency_us: f64) -> bool {
+        self.points.iter().any(|p| {
+            p.accuracy >= accuracy && p.energy_uj <= energy_uj && p.latency_us <= latency_us
+        })
+    }
+
+    /// Some rung weakly dominates `(accuracy, energy, latency)` and is
+    /// strictly better on at least one objective.
+    pub fn strictly_dominates(&self, accuracy: f64, energy_uj: f64, latency_us: f64) -> bool {
+        self.points.iter().any(|p| {
+            p.accuracy >= accuracy
+                && p.energy_uj <= energy_uj
+                && p.latency_us <= latency_us
+                && (p.accuracy > accuracy || p.energy_uj < energy_uj || p.latency_us < latency_us)
+        })
+    }
+
+    /// Serialize (schema `pareto-frontier/v1`). The derived models are
+    /// *not* embedded — a rung is reproducible from the base model plus its
+    /// knob vector, which is what [`Frontier::from_json`] re-derives.
+    pub fn to_json(&self) -> Value {
+        let points = self
+            .points
+            .iter()
+            .map(|p| {
+                let config: Vec<i64> = p.config.iter().map(|&v| v as i64).collect();
+                Value::obj(vec![
+                    ("name", p.name.as_str().into()),
+                    ("config", Value::from_i64_slice(&config)),
+                    ("accuracy", p.accuracy.into()),
+                    ("power_mw", p.power_mw.into()),
+                    ("latency_us", p.latency_us.into()),
+                    ("energy_uj", p.energy_uj.into()),
+                    (
+                        "acc_narrow",
+                        Value::Array(p.acc_narrow.iter().map(|&b| Value::Bool(b)).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        Value::obj(vec![
+            ("schema", "pareto-frontier/v1".into()),
+            ("base_profile", self.base_profile.as_str().into()),
+            ("points", Value::Array(points)),
+        ])
+    }
+
+    /// Rebuild a frontier from its JSON form, re-deriving each rung's model
+    /// from `base` (which must be the model the frontier was explored on).
+    pub fn from_json(v: &Value, base: &QonnxModel) -> Result<Frontier> {
+        match v.get("schema").and_then(Value::as_str) {
+            Some("pareto-frontier/v1") => {}
+            other => bail!("unsupported frontier schema {other:?}"),
+        }
+        let base_profile = v
+            .get("base_profile")
+            .and_then(Value::as_str)
+            .context("frontier base_profile")?
+            .to_string();
+        let rows = v.get("points").and_then(Value::as_array).context("frontier points")?;
+        let knobs = knobs_for(base);
+        let mut points = Vec::with_capacity(rows.len());
+        for row in rows {
+            let name = row.get("name").and_then(Value::as_str).context("point name")?;
+            // Checked conversion: an out-of-u32 stored value must fail the
+            // load, not truncate its way past the knob-range check below.
+            let config: Vec<u32> = row
+                .get("config")
+                .and_then(Value::to_i64_vec)
+                .context("point config")?
+                .into_iter()
+                .map(|x| u32::try_from(x).ok().context("point config value out of range"))
+                .collect::<Result<Vec<u32>>>()?;
+            if config.len() != knobs.len() || config.iter().zip(&knobs).any(|(v, k)| *v > k.max) {
+                bail!("point '{name}': config does not fit the base model's knobs");
+            }
+            let acc_narrow = row
+                .get("acc_narrow")
+                .and_then(Value::as_array)
+                .context("point acc_narrow")?
+                .iter()
+                .map(|b| b.as_bool().context("acc_narrow flag"))
+                .collect::<Result<Vec<bool>>>()?;
+            let num = |key: &str| -> Result<f64> {
+                row.get(key).and_then(Value::as_f64).with_context(|| format!("point {key}"))
+            };
+            points.push(FrontierPoint {
+                name: name.to_string(),
+                model: derive_model(base, &config, name),
+                config,
+                accuracy: num("accuracy")?,
+                power_mw: num("power_mw")?,
+                latency_us: num("latency_us")?,
+                energy_uj: num("energy_uj")?,
+                acc_narrow,
+            });
+        }
+        Ok(Frontier {
+            base_profile,
+            points,
+        })
+    }
+}
+
+impl ProfileManager {
+    /// Serve an auto-generated ladder: build the Profile Manager straight
+    /// from an explorer frontier. Construction sorts the rungs by accuracy
+    /// (see [`ProfileManager::new`]), so the frontier's own ordering is
+    /// irrelevant.
+    pub fn from_frontier(cfg: ManagerConfig, frontier: &Frontier) -> ProfileManager {
+        assert!(!frontier.is_empty(), "cannot serve an empty frontier");
+        ProfileManager::new(cfg, frontier.specs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::quant::config_name;
+    use super::*;
+    use crate::json;
+    use crate::qonnx::{read_str, test_model_json};
+
+    fn sample() -> (QonnxModel, Frontier) {
+        let base = read_str(&test_model_json(1, 2)).unwrap();
+        let mk = |config: Vec<u32>, accuracy: f64, energy_uj: f64| {
+            let name = config_name(&config);
+            FrontierPoint {
+                model: derive_model(&base, &config, &name),
+                name,
+                config,
+                accuracy,
+                power_mw: energy_uj / 3.29e-4,
+                latency_us: 329.0,
+                energy_uj,
+                acc_narrow: vec![true],
+            }
+        };
+        let frontier = Frontier {
+            base_profile: base.profile.clone(),
+            points: vec![mk(vec![0, 0, 0], 1.0, 50.0), mk(vec![1, 2, 1], 0.75, 40.0)],
+        };
+        (base, frontier)
+    }
+
+    #[test]
+    fn json_round_trips_through_the_vendored_module() {
+        let (base, frontier) = sample();
+        let text = json::to_string_pretty(&frontier.to_json());
+        let parsed = json::parse(&text).expect("frontier JSON parses");
+        let back = Frontier::from_json(&parsed, &base).expect("frontier JSON loads");
+        assert_eq!(back.base_profile, frontier.base_profile);
+        assert_eq!(back.len(), frontier.len());
+        for (a, b) in frontier.points.iter().zip(&back.points) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.config, b.config);
+            assert_eq!(a.accuracy, b.accuracy, "floats survive the writer exactly");
+            assert_eq!(a.power_mw, b.power_mw);
+            assert_eq!(a.latency_us, b.latency_us);
+            assert_eq!(a.energy_uj, b.energy_uj);
+            assert_eq!(a.acc_narrow, b.acc_narrow);
+            assert_eq!(a.model, b.model, "models re-derive identically");
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_foreign_schemas() {
+        let (base, _) = sample();
+        let bogus = json::parse(r#"{"schema": "something-else", "points": []}"#).unwrap();
+        assert!(Frontier::from_json(&bogus, &base).is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_configs_that_do_not_fit_the_base() {
+        // conv weight headroom on the tiny model is 2: a stored drop of 9
+        // must error cleanly instead of panicking inside derive_model.
+        let (base, _) = sample();
+        let text = r#"{"schema":"pareto-frontier/v1","base_profile":"T","points":[
+            {"name":"apx-900","config":[9,0,0],"accuracy":1.0,"power_mw":1.0,
+             "latency_us":1.0,"energy_uj":1.0,"acc_narrow":[true]}]}"#;
+        assert!(Frontier::from_json(&json::parse(text).unwrap(), &base).is_err());
+    }
+
+    #[test]
+    fn specs_and_models_mirror_the_points() {
+        let (_, frontier) = sample();
+        let specs = frontier.specs();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].name, "apx-000");
+        assert_eq!(specs[1].name, "apx-121");
+        let models = frontier.models();
+        assert_eq!(models.len(), 2);
+        assert!(models.contains_key("apx-000") && models.contains_key("apx-121"));
+        assert_eq!(models["apx-121"].profile, "apx-121");
+    }
+
+    #[test]
+    fn dominance_predicates_cover_the_ladder() {
+        let (_, frontier) = sample();
+        // a point worse than the degraded rung on energy alone
+        assert!(frontier.weakly_dominates(0.75, 45.0, 329.0));
+        assert!(frontier.strictly_dominates(0.75, 45.0, 329.0));
+        // the rung itself: weakly covered, not strictly beaten
+        assert!(frontier.weakly_dominates(1.0, 50.0, 329.0));
+        assert!(!frontier.strictly_dominates(1.0, 50.0, 329.0));
+        // better than anything on the ladder
+        assert!(!frontier.weakly_dominates(1.0, 30.0, 329.0));
+    }
+
+    #[test]
+    fn manager_builds_from_a_frontier() {
+        let (_, frontier) = sample();
+        let mgr = ProfileManager::from_frontier(ManagerConfig::default(), &frontier);
+        assert_eq!(mgr.profiles().len(), 2);
+        // sorted most accurate first; startup selects the top rung
+        assert_eq!(mgr.profiles()[0].name, "apx-000");
+        assert_eq!(mgr.current().name, "apx-000");
+    }
+}

@@ -1,0 +1,34 @@
+//! Approximation explorer: auto-generate the Pareto profile ladder the
+//! adaptive server runs on.
+//!
+//! The paper's adaptivity rests on a table of execution profiles trading
+//! accuracy for energy (Table 1 / Fig. 3) — but someone has to *make* that
+//! table. This subsystem searches the per-layer quantization design space
+//! of a [`crate::qonnx::QonnxModel`] (weight and activation bit-widths per
+//! layer, following NN2CAM-style automated multi-precision mapping) and
+//! emits an epsilon-pruned Pareto frontier of auto-generated
+//! [`crate::coordinator::ProfileSpec`]s:
+//!
+//! * [`quant`] — the bit-slicing transform: a knob vector -> a derived
+//!   reduced-precision model with the requantization rebased so the
+//!   pipeline stays consistent ([`derive_model`]);
+//! * [`search`] — the deterministic explorer ([`Explorer`]): greedy
+//!   per-layer descent plus local refinement, accuracy measured on the
+//!   packed batch kernels (bit-exact vs the scalar oracle), cost from the
+//!   activity-based power model, epsilon-dominance pruning;
+//! * [`frontier`] — the resulting [`Frontier`]: JSON round-trip through
+//!   the vendored `json` module, `ProfileManager::from_frontier`, and
+//!   per-rung derived models for `Backend::sim_from_models`.
+//!
+//! End-to-end wiring: `onnx2hw explore` (CLI), the `pareto_explore` bench
+//! (CI gate: the frontier must strictly dominate the naive
+//! uniform-precision baseline), and the multi-rung ladder walk in
+//! `coordinator::manager`. See `docs/approximation.md`.
+
+mod frontier;
+mod quant;
+mod search;
+
+pub use frontier::{Frontier, FrontierPoint};
+pub use quant::{config_name, derive_model, knobs_for, Knob, KnobKind, MIN_BITS};
+pub use search::{dominates, CalibSet, Candidate, Explorer, ExplorerConfig};

@@ -1,0 +1,345 @@
+//! Post-training bit-slicing: derive a reduced-precision variant of a
+//! [`QonnxModel`] from a per-layer knob vector.
+//!
+//! The paper's execution profiles (A8-W8 ... A4-W4, Mixed) are per-layer
+//! precision assignments baked in during QAT. The explorer needs the same
+//! family of variants *without retraining*, so this module slices bits off
+//! an existing integer model the way A8-W8 -> A8-W4 drops weight LSBs:
+//!
+//! * **Weight drop `k`** — weight codes are rescaled `w' = round(w / 2^k)`
+//!   (round-half-up, the oracle's requant rounding) and clamped to the
+//!   narrower signed range; the lost factor is folded back into the
+//!   requantization so the layer's output scale is unchanged.
+//! * **Activation drop `j`** — the layer emits codes one step coarser per
+//!   dropped bit (`out_step * 2^j`, clamp range `2^(act_bits-j) - 1`); the
+//!   *next* layer's bias and requant are rebased so the coarser stream is
+//!   consumed consistently.
+//!
+//! Both rebasings act on the TFLite-style `(mult, shift)` pair: the new
+//! effective shift is `shift + j - k - j_in`; when that underflows zero the
+//! remainder is folded into `mult` instead (exact — a left shift).
+//!
+//! The derived model is a plain [`QonnxModel`]: it runs on the scalar
+//! oracle, the packed batch kernels, the actor-level simulator, and the HLS
+//! + power estimators like any hand-exported profile. A zero knob vector
+//! reproduces the base model bit-for-bit (property-tested).
+
+use crate::qonnx::{ConvLayer, DenseLayer, Layer, QonnxModel};
+
+/// Narrowest precision the slicer will leave on any tensor.
+pub const MIN_BITS: u32 = 2;
+
+/// Which precision a knob controls.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KnobKind {
+    WeightBits,
+    ActBits,
+}
+
+/// One searchable dimension: drop `0..=max` bits from one tensor of one
+/// layer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Knob {
+    pub layer: String,
+    pub kind: KnobKind,
+    /// Largest legal drop (keeps at least [`MIN_BITS`] bits; capped at 15
+    /// so a knob value always fits one hex digit of [`config_name`]).
+    pub max: u32,
+}
+
+fn headroom(bits: u32) -> u32 {
+    bits.saturating_sub(MIN_BITS).min(15)
+}
+
+/// Enumerate the search space of `model`: per conv layer a weight-bit and
+/// an activation-bit knob (in layer order, weight first), plus a weight-bit
+/// knob for the dense head. Pool/flatten stages operate on codes and have
+/// nothing to drop.
+pub fn knobs_for(model: &QonnxModel) -> Vec<Knob> {
+    let mut knobs = Vec::new();
+    for layer in &model.layers {
+        match layer {
+            Layer::Conv(c) => {
+                knobs.push(Knob {
+                    layer: c.name.clone(),
+                    kind: KnobKind::WeightBits,
+                    max: headroom(c.weight_bits),
+                });
+                knobs.push(Knob {
+                    layer: c.name.clone(),
+                    kind: KnobKind::ActBits,
+                    max: headroom(c.act_bits),
+                });
+            }
+            Layer::Dense(d) => knobs.push(Knob {
+                layer: d.name.clone(),
+                kind: KnobKind::WeightBits,
+                max: headroom(d.weight_bits),
+            }),
+            _ => {}
+        }
+    }
+    knobs
+}
+
+/// Deterministic profile name for a knob vector: one hex digit per knob
+/// (`[0, 2, 10]` -> `"apx-02a"`). Unique per config, stable across runs.
+pub fn config_name(config: &[u32]) -> String {
+    let digits: String = config
+        .iter()
+        .map(|&v| char::from_digit(v, 16).unwrap_or('f'))
+        .collect();
+    format!("apx-{digits}")
+}
+
+/// Round-half-up rescale by `2^s` (the oracle's requant rounding, applied
+/// to weight/bias codes).
+fn qscale(x: i64, s: u32) -> i64 {
+    if s == 0 {
+        x
+    } else {
+        (x + (1i64 << (s - 1))) >> s
+    }
+}
+
+/// Rebase a TFLite-style `(mult, shift)` pair by `delta` effective shift
+/// steps; negative remainders fold into `mult` (exact).
+fn rebase(mult: i64, shift: i64, delta: i64) -> (i64, i64) {
+    let s = shift + delta;
+    if s < 0 {
+        (mult << (-s) as u32, 0)
+    } else {
+        (mult, s)
+    }
+}
+
+fn quantize_conv(c: &ConvLayer, k: u32, j: u32, j_in: u32) -> ConvLayer {
+    let weight_bits = c.weight_bits - k;
+    let wmax = (1i64 << (weight_bits - 1)) - 1;
+    let w_codes = c
+        .w_codes
+        .iter()
+        .map(|&w| qscale(w as i64, k).clamp(-wmax, wmax) as i32)
+        .collect();
+    let b_codes = c.b_codes.iter().map(|&b| qscale(b, k + j_in)).collect();
+    let delta = j as i64 - k as i64 - j_in as i64;
+    let (mult, shift): (Vec<i64>, Vec<i64>) = c
+        .mult
+        .iter()
+        .zip(&c.shift)
+        .map(|(&m, &s)| rebase(m, s, delta))
+        .unzip();
+    ConvLayer {
+        name: c.name.clone(),
+        w_codes,
+        cin: c.cin,
+        cout: c.cout,
+        b_codes,
+        mult,
+        shift,
+        act_bits: c.act_bits - j,
+        act_int_bits: c.act_int_bits,
+        weight_bits,
+        in_step: c.in_step * f64::powi(2.0, j_in as i32),
+        out_step: c.out_step * f64::powi(2.0, j as i32),
+    }
+}
+
+fn quantize_dense(d: &DenseLayer, k: u32, j_in: u32) -> DenseLayer {
+    let weight_bits = d.weight_bits - k;
+    let wmax = (1i64 << (weight_bits - 1)) - 1;
+    let w_codes = d
+        .w_codes
+        .iter()
+        .map(|&w| qscale(w as i64, k).clamp(-wmax, wmax) as i32)
+        .collect();
+    // Logits are raw accumulators: rescaling weights and bias by the same
+    // factor preserves the argmax ordering up to rounding (the intended
+    // approximation).
+    let b_codes = d.b_codes.iter().map(|&b| qscale(b, k + j_in)).collect();
+    DenseLayer {
+        name: d.name.clone(),
+        w_codes,
+        in_features: d.in_features,
+        out_features: d.out_features,
+        b_codes,
+        weight_bits,
+        in_step: d.in_step * f64::powi(2.0, j_in as i32),
+        w_step: d.w_step * f64::powi(2.0, k as i32),
+    }
+}
+
+/// Derive the reduced-precision variant of `base` described by `config`
+/// (one entry per [`knobs_for`] knob, in the same order), named `name`.
+///
+/// Panics on an arity mismatch or an out-of-range knob value — configs are
+/// produced by the explorer, never parsed from untrusted input.
+pub fn derive_model(base: &QonnxModel, config: &[u32], name: &str) -> QonnxModel {
+    let knobs = knobs_for(base);
+    assert_eq!(config.len(), knobs.len(), "config/knob arity mismatch");
+    for (v, knob) in config.iter().zip(&knobs) {
+        assert!(
+            *v <= knob.max,
+            "knob {} ({:?}) out of range: {v} > {}",
+            knob.layer,
+            knob.kind,
+            knob.max
+        );
+    }
+    let mut cursor = 0usize;
+    // Activation-bit drop of the incoming stream (input codes stay u8).
+    let mut j_in = 0u32;
+    let layers = base
+        .layers
+        .iter()
+        .map(|layer| match layer {
+            Layer::Conv(c) => {
+                let (k, j) = (config[cursor], config[cursor + 1]);
+                cursor += 2;
+                let out = Layer::Conv(quantize_conv(c, k, j, j_in));
+                j_in = j;
+                out
+            }
+            Layer::Dense(d) => {
+                let k = config[cursor];
+                cursor += 1;
+                Layer::Dense(quantize_dense(d, k, j_in))
+            }
+            other => other.clone(),
+        })
+        .collect();
+    QonnxModel {
+        profile: name.to_string(),
+        input_shape: base.input_shape,
+        input_bits: base.input_bits,
+        input_int_bits: base.input_int_bits,
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::exec;
+    use crate::qonnx::{read_str, test_model_json};
+
+    fn tiny() -> QonnxModel {
+        read_str(&test_model_json(1, 2)).unwrap()
+    }
+
+    #[test]
+    fn qscale_rounds_half_up() {
+        assert_eq!(qscale(3, 1), 2);
+        assert_eq!(qscale(-3, 1), -1);
+        assert_eq!(qscale(7, 0), 7);
+        assert_eq!(qscale(-8, 2), -2);
+        assert_eq!(qscale(5, 2), 1); // (5+2)>>2
+    }
+
+    #[test]
+    fn knob_enumeration_matches_layer_order() {
+        // tiny model: conv (act 8, weight 4), pool, flatten, dense (weight 4)
+        let knobs = knobs_for(&tiny());
+        assert_eq!(knobs.len(), 3);
+        assert_eq!(knobs[0].kind, KnobKind::WeightBits);
+        assert_eq!(knobs[0].max, 2);
+        assert_eq!(knobs[1].kind, KnobKind::ActBits);
+        assert_eq!(knobs[1].max, 6);
+        assert_eq!(knobs[2].kind, KnobKind::WeightBits);
+        assert_eq!(knobs[2].max, 2);
+        assert_eq!(knobs[0].layer, "conv1");
+        assert_eq!(knobs[2].layer, "dense");
+    }
+
+    #[test]
+    fn config_names_are_hex_digits() {
+        assert_eq!(config_name(&[0, 1, 2]), "apx-012");
+        assert_eq!(config_name(&[10, 15, 0]), "apx-af0");
+        assert_ne!(config_name(&[1, 0, 0]), config_name(&[0, 1, 0]));
+    }
+
+    #[test]
+    fn zero_config_is_the_identity() {
+        let base = tiny();
+        let derived = derive_model(&base, &[0, 0, 0], "apx-000");
+        assert_eq!(derived.profile, "apx-000");
+        assert_eq!(derived.layers, base.layers);
+        assert_eq!(derived.input_shape, base.input_shape);
+    }
+
+    #[test]
+    fn weight_drop_rescales_codes_and_rebases_requant() {
+        let base = tiny();
+        let derived = derive_model(&base, &[1, 0, 0], "apx-100");
+        let (c0, c1) = match (&base.layers[0], &derived.layers[0]) {
+            (Layer::Conv(a), Layer::Conv(b)) => (a, b),
+            _ => panic!("first layer must be conv"),
+        };
+        assert_eq!(c1.weight_bits, c0.weight_bits - 1);
+        let wmax = (1i64 << (c1.weight_bits - 1)) - 1;
+        for (&w0, &w1) in c0.w_codes.iter().zip(&c1.w_codes) {
+            assert_eq!(w1 as i64, qscale(w0 as i64, 1).clamp(-wmax, wmax));
+        }
+        for (&b0, &b1) in c0.b_codes.iter().zip(&c1.b_codes) {
+            assert_eq!(b1, qscale(b0, 1));
+        }
+        // shift absorbs the lost factor: shift' = shift - 1
+        for (&s0, &s1) in c0.shift.iter().zip(&c1.shift) {
+            assert_eq!(s1, s0 - 1);
+        }
+        assert_eq!(c1.act_bits, c0.act_bits, "weight drop leaves activations");
+    }
+
+    #[test]
+    fn act_drop_narrows_the_stream_and_rebases_downstream() {
+        let base = tiny();
+        let derived = derive_model(&base, &[0, 2, 0], "apx-020");
+        let (c0, c1) = match (&base.layers[0], &derived.layers[0]) {
+            (Layer::Conv(a), Layer::Conv(b)) => (a, b),
+            _ => panic!("first layer must be conv"),
+        };
+        assert_eq!(c1.act_bits, c0.act_bits - 2);
+        assert_eq!(c1.out_step, c0.out_step * 4.0);
+        // producing layer shifts 2 further right to emit coarser codes
+        assert_eq!(c1.shift[0], c0.shift[0] + 2);
+        // downstream dense consumes the coarser stream
+        let (d0, d1) = match (&base.layers[3], &derived.layers[3]) {
+            (Layer::Dense(a), Layer::Dense(b)) => (a, b),
+            _ => panic!("last layer must be dense"),
+        };
+        assert_eq!(d1.in_step, d0.in_step * 4.0);
+        assert_eq!(d1.w_codes, d0.w_codes, "dense weights untouched");
+    }
+
+    #[test]
+    fn negative_shift_folds_into_mult_exactly() {
+        // delta pushes the shift below zero: the remainder must move into
+        // mult as an exact left shift.
+        assert_eq!(rebase(5, 3, -3), (5, 0));
+        assert_eq!(rebase(5, 3, -5), (20, 0));
+        assert_eq!(rebase(5, 3, 2), (5, 5));
+    }
+
+    #[test]
+    fn derived_models_execute_and_degrade_gracefully() {
+        let base = tiny();
+        let img: Vec<u8> = (0..base.input_shape.elems()).map(|i| (i * 37 % 256) as u8).collect();
+        let want = exec::execute(&base, &img);
+        // identity config: bit-for-bit equal
+        let same = derive_model(&base, &[0, 0, 0], "apx-000");
+        assert_eq!(exec::execute(&same, &img), want);
+        // every legal config still runs the pipeline end to end
+        for cfg in [[1, 0, 0], [0, 3, 0], [0, 0, 2], [2, 6, 2]] {
+            let m = derive_model(&base, &cfg, "t");
+            let logits = exec::execute(&m, &img);
+            assert_eq!(logits.len(), want.len());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn over_range_knob_is_rejected() {
+        let base = tiny();
+        derive_model(&base, &[3, 0, 0], "bad"); // conv weight headroom is 2
+    }
+}

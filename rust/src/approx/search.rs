@@ -1,0 +1,547 @@
+//! Deterministic design-space exploration over per-layer bit-width knobs.
+//!
+//! The explorer walks the knob lattice of [`knobs_for`] with a seeded,
+//! wall-clock-free strategy — greedy per-layer descent plus local
+//! refinement — evaluating every candidate the same way the serving stack
+//! would run it:
+//!
+//! * **accuracy** on the calibration set via the packed batch kernels
+//!   ([`BatchExecutor`]), with the first replies of every candidate asserted
+//!   bit-exact against the scalar oracle (`exec::execute`) — an approximate
+//!   *profile* may change predictions, an approximate *kernel* may not;
+//! * **power / latency / energy-per-inference** through the activity-based
+//!   `power` model (actor-level simulation of calibration images + the HLS
+//!   resource estimate), exactly the Table-1 code path.
+//!
+//! Determinism contract: no wall clock, no global RNG. The only entropy is
+//! the calibration-set seed ([`CalibSet::self_labeled`]); given the same
+//! base model and calibration set, every run evaluates the same candidates
+//! in the same order and emits the same frontier. Greedy ties break on the
+//! lowest knob index; candidate bookkeeping lives in a `BTreeMap` so
+//! iteration order is the config order, never hash order.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::dataflow::{exec, BatchExecutor, CompiledModel, FoldingConfig};
+use crate::hls::{Calibration, DeviceModel};
+use crate::power::estimate_inference_cost;
+use crate::qonnx::QonnxModel;
+use crate::runtime::TestSet;
+use crate::testkit::Rng;
+
+use super::frontier::{Frontier, FrontierPoint};
+use super::quant::{config_name, derive_model, knobs_for, Knob};
+
+/// Images to score candidates on, plus ground-truth labels.
+#[derive(Debug, Clone)]
+pub struct CalibSet {
+    pub images: Vec<Vec<u8>>,
+    pub labels: Vec<usize>,
+}
+
+impl CalibSet {
+    /// Calibrate on the exported test set (real labels).
+    pub fn from_testset(ts: &TestSet, limit: usize) -> CalibSet {
+        assert!(!ts.is_empty(), "test set is empty");
+        let n = ts.len().min(limit.max(1));
+        CalibSet {
+            images: (0..n).map(|i| ts.image(i).to_vec()).collect(),
+            labels: (0..n).map(|i| ts.labels[i] as usize).collect(),
+        }
+    }
+
+    /// Synthetic calibration workload labelled by the base model itself
+    /// (fidelity labels): the full-precision model scores 1.0 by
+    /// construction and every approximation is measured against it. Seeded
+    /// and deterministic — benches and tests need no artifacts.
+    pub fn self_labeled(model: &QonnxModel, n: usize, seed: u64) -> CalibSet {
+        let elems = model.input_shape.elems();
+        let mut rng = Rng::new(seed);
+        let images: Vec<Vec<u8>> = (0..n.max(1))
+            .map(|_| (0..elems).map(|_| rng.u64(0, 255) as u8).collect())
+            .collect();
+        let labels = images
+            .iter()
+            .map(|img| exec::argmax(&exec::execute(model, img)))
+            .collect();
+        CalibSet { images, labels }
+    }
+
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+}
+
+/// One evaluated point of the design space.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Candidate {
+    /// Knob vector (see [`knobs_for`] for the order).
+    pub config: Vec<u32>,
+    /// Fraction of calibration images classified to their label.
+    pub accuracy: f64,
+    pub power_mw: f64,
+    pub latency_us: f64,
+    /// Energy per inference (power x latency), the frontier's cost axis.
+    pub energy_uj: f64,
+    /// Per conv layer: did the packed plan prove the 32-bit accumulator
+    /// path for this variant? (Dropping bits widens the narrow envelope.)
+    pub acc_narrow: Vec<bool>,
+}
+
+/// `p` (weakly) dominates `q` and is strictly better on >= 1 objective.
+/// Objectives: accuracy up, energy down, latency down.
+pub fn dominates(p: &Candidate, q: &Candidate) -> bool {
+    p.accuracy >= q.accuracy
+        && p.energy_uj <= q.energy_uj
+        && p.latency_us <= q.latency_us
+        && (p.accuracy > q.accuracy || p.energy_uj < q.energy_uj || p.latency_us < q.latency_us)
+}
+
+/// Explorer knobs (the search's own, not the model's).
+#[derive(Debug, Clone)]
+pub struct ExplorerConfig {
+    pub fold: FoldingConfig,
+    pub cal: Calibration,
+    pub device: DeviceModel,
+    /// Calibration images fed to the actor-level power simulation per
+    /// candidate (the accuracy pass always uses the whole set).
+    pub power_images: usize,
+    /// Replies per candidate cross-checked bit-exact vs the scalar oracle.
+    pub oracle_checks: usize,
+    /// Stop the greedy descent once accuracy falls below this.
+    pub min_accuracy: f64,
+    /// Epsilon-dominance band: adjacent frontier rungs closer than this in
+    /// accuracy are merged (0 keeps every Pareto point).
+    pub eps_accuracy: f64,
+    /// Cap the emitted ladder length (0 = unlimited). Thinning keeps the
+    /// endpoints and samples evenly between them.
+    pub max_rungs: usize,
+    /// Rungs of the uniform-precision baseline ladder that are seeded into
+    /// the archive and reported by [`Explorer::uniform_baseline`].
+    pub uniform_rungs: usize,
+}
+
+impl Default for ExplorerConfig {
+    fn default() -> Self {
+        ExplorerConfig {
+            fold: FoldingConfig::default(),
+            cal: Calibration::default(),
+            device: DeviceModel::kria_kv260(),
+            power_images: 2,
+            oracle_checks: 2,
+            min_accuracy: 0.0,
+            eps_accuracy: 0.0,
+            max_rungs: 0,
+            uniform_rungs: 4,
+        }
+    }
+}
+
+/// The design-space explorer. Owns the candidate archive (memoized by knob
+/// vector); borrow it mutably, call [`Explorer::explore`], read the
+/// [`Frontier`].
+pub struct Explorer<'a> {
+    base: &'a QonnxModel,
+    calib: &'a CalibSet,
+    cfg: ExplorerConfig,
+    knobs: Vec<Knob>,
+    cache: BTreeMap<Vec<u32>, Candidate>,
+    evals: usize,
+}
+
+/// Accuracy batch size: bounds the executor arena while amortizing packing.
+const EVAL_BATCH: usize = 32;
+
+impl<'a> Explorer<'a> {
+    pub fn new(base: &'a QonnxModel, calib: &'a CalibSet, cfg: ExplorerConfig) -> Self {
+        assert!(!calib.is_empty(), "calibration set must not be empty");
+        assert_eq!(calib.images.len(), calib.labels.len(), "images/labels mismatch");
+        for img in &calib.images {
+            assert_eq!(img.len(), base.input_shape.elems(), "calibration image size mismatch");
+        }
+        let knobs = knobs_for(base);
+        assert!(!knobs.is_empty(), "model has no quantizable layers");
+        Explorer {
+            base,
+            calib,
+            cfg,
+            knobs,
+            cache: BTreeMap::new(),
+            evals: 0,
+        }
+    }
+
+    pub fn knobs(&self) -> &[Knob] {
+        &self.knobs
+    }
+
+    /// Candidates evaluated so far (cache hits excluded).
+    pub fn evaluations(&self) -> usize {
+        self.evals
+    }
+
+    /// The uniform-precision config at rung `k`: every knob dropped by `k`
+    /// bits (clamped to its own headroom) — the naive baseline that ignores
+    /// per-layer sensitivity.
+    pub fn uniform(&self, k: u32) -> Vec<u32> {
+        self.knobs.iter().map(|kn| k.min(kn.max)).collect()
+    }
+
+    /// Evaluate (memoized) the uniform ladder `1..=uniform_rungs`.
+    pub fn uniform_baseline(&mut self) -> Vec<Candidate> {
+        (1..=self.cfg.uniform_rungs)
+            .map(|k| {
+                let cfg = self.uniform(k as u32);
+                self.evaluate(&cfg)
+            })
+            .collect()
+    }
+
+    /// Evaluate one knob vector: derive the variant, run the calibration
+    /// set on the packed kernels (cross-checking the first replies against
+    /// the scalar oracle), and cost it with the power model. Memoized.
+    pub fn evaluate(&mut self, config: &[u32]) -> Candidate {
+        if let Some(hit) = self.cache.get(config) {
+            return hit.clone();
+        }
+        let name = config_name(config);
+        let model = derive_model(self.base, config, &name);
+        let compiled = CompiledModel::compile(Arc::new(model.clone()));
+        let acc_narrow = compiled.conv_acc_narrow();
+        let mut ex = BatchExecutor::new(Arc::new(compiled));
+        let k = ex.out_features();
+        let mut correct = 0usize;
+        let mut checked = 0usize;
+        for (ci, chunk) in self.calib.images.chunks(EVAL_BATCH).enumerate() {
+            let refs: Vec<&[u8]> = chunk.iter().map(Vec::as_slice).collect();
+            let logits = ex.run_batch(&refs);
+            for (i, img) in chunk.iter().enumerate() {
+                let row = &logits[i * k..(i + 1) * k];
+                if checked < self.cfg.oracle_checks {
+                    let want = exec::execute(&model, img);
+                    assert_eq!(
+                        row,
+                        want.as_slice(),
+                        "packed kernels diverge from the scalar oracle on '{name}'"
+                    );
+                    checked += 1;
+                }
+                if exec::argmax(row) == self.calib.labels[ci * EVAL_BATCH + i] {
+                    correct += 1;
+                }
+            }
+        }
+        let accuracy = correct as f64 / self.calib.images.len() as f64;
+        let sim_imgs: Vec<&[u8]> = self
+            .calib
+            .images
+            .iter()
+            .take(self.cfg.power_images.max(1))
+            .map(Vec::as_slice)
+            .collect();
+        let ExplorerConfig { fold, cal, device, .. } = &self.cfg;
+        let cost = estimate_inference_cost(&model, fold, cal, device, &sim_imgs);
+        let cand = Candidate {
+            config: config.to_vec(),
+            accuracy,
+            power_mw: cost.power_mw,
+            latency_us: cost.latency_us,
+            energy_uj: cost.energy_uj,
+            acc_narrow,
+        };
+        self.cache.insert(config.to_vec(), cand.clone());
+        self.evals += 1;
+        cand
+    }
+
+    /// Run the full search and return the Pareto ladder.
+    ///
+    /// 1. seed the uniform baseline (so the frontier always covers it);
+    /// 2. greedy per-layer descent from full precision: at each step take
+    ///    the single-knob drop with the best energy-saved per
+    ///    accuracy-lost ratio (every probed move joins the archive);
+    /// 3. local refinement around each uniform rung: single deeper drops
+    ///    and pairwise exchanges, hunting configs that dominate the naive
+    ///    allocation;
+    /// 4. Pareto-filter the archive, thin by epsilon-dominance, and emit
+    ///    the ladder sorted by accuracy (most accurate first).
+    pub fn explore(&mut self) -> Frontier {
+        let mut cur = vec![0u32; self.knobs.len()];
+        let mut cur_eval = self.evaluate(&cur);
+        for k in 1..=self.cfg.uniform_rungs {
+            let cfg = self.uniform(k as u32);
+            self.evaluate(&cfg);
+        }
+        // Half a calibration sample: moves that lose nothing rank by pure
+        // energy savings without dividing by zero.
+        let acc_floor = 0.5 / self.calib.images.len() as f64;
+        loop {
+            let moves = self.single_drops(&cur);
+            if moves.is_empty() {
+                break;
+            }
+            let mut best: Option<(Vec<u32>, Candidate, f64)> = None;
+            for m in moves {
+                let cand = self.evaluate(&m);
+                let saved = cur_eval.energy_uj - cand.energy_uj;
+                let lost = (cur_eval.accuracy - cand.accuracy).max(acc_floor);
+                let score = saved / lost;
+                if best.as_ref().is_none_or(|(_, _, s)| score > *s) {
+                    best = Some((m, cand, score));
+                }
+            }
+            let (m, cand, _) = best.expect("non-empty moves");
+            cur = m;
+            cur_eval = cand;
+            if cur_eval.accuracy < self.cfg.min_accuracy {
+                break;
+            }
+        }
+        for k in 1..=self.cfg.uniform_rungs {
+            let u = self.uniform(k as u32);
+            self.refine(&u);
+        }
+        self.emit()
+    }
+
+    /// All single-knob one-bit-deeper drops from `from`.
+    fn single_drops(&self, from: &[u32]) -> Vec<Vec<u32>> {
+        self.knobs
+            .iter()
+            .enumerate()
+            .filter(|(i, kn)| from[*i] < kn.max)
+            .map(|(i, _)| {
+                let mut c = from.to_vec();
+                c[i] += 1;
+                c
+            })
+            .collect()
+    }
+
+    /// Neighborhood pass around `from`: every single deeper drop, plus
+    /// every pairwise exchange (one bit deeper on knob `i`, one bit
+    /// restored on knob `j`) — the reallocation moves that beat a uniform
+    /// assignment at equal-or-less energy.
+    fn refine(&mut self, from: &[u32]) {
+        for m in self.single_drops(from) {
+            self.evaluate(&m);
+        }
+        for i in 0..from.len() {
+            if from[i] >= self.knobs[i].max {
+                continue;
+            }
+            for j in 0..from.len() {
+                if j == i || from[j] == 0 {
+                    continue;
+                }
+                let mut c = from.to_vec();
+                c[i] += 1;
+                c[j] -= 1;
+                self.evaluate(&c);
+            }
+        }
+    }
+
+    /// Pareto filter + dedup + epsilon thinning + ladder cap over the
+    /// archive.
+    fn emit(&self) -> Frontier {
+        let all: Vec<&Candidate> = self.cache.values().collect();
+        let mut front: Vec<Candidate> = Vec::new();
+        for &p in &all {
+            if !all.iter().any(|&q| dominates(q, p)) {
+                front.push(p.clone());
+            }
+        }
+        front.sort_by(|a, b| {
+            b.accuracy
+                .total_cmp(&a.accuracy)
+                .then(a.energy_uj.total_cmp(&b.energy_uj))
+                .then(a.config.cmp(&b.config))
+        });
+        // Objective-identical twins both survive strict dominance; keep the
+        // first in config order.
+        front.dedup_by(|b, a| {
+            a.accuracy == b.accuracy && a.energy_uj == b.energy_uj && a.latency_us == b.latency_us
+        });
+        if self.cfg.eps_accuracy > 0.0 {
+            let eps = self.cfg.eps_accuracy;
+            let mut kept: Vec<Candidate> = Vec::new();
+            for c in front {
+                if kept.last().is_none_or(|l: &Candidate| l.accuracy - c.accuracy >= eps) {
+                    kept.push(c);
+                }
+            }
+            front = kept;
+        }
+        if self.cfg.max_rungs > 0 && front.len() > self.cfg.max_rungs {
+            let (n, m) = (front.len(), self.cfg.max_rungs);
+            front = if m == 1 {
+                vec![front[0].clone()]
+            } else {
+                (0..m).map(|i| front[i * (n - 1) / (m - 1)].clone()).collect()
+            };
+        }
+        let points = front
+            .into_iter()
+            .map(|c| {
+                let name = config_name(&c.config);
+                let model = derive_model(self.base, &c.config, &name);
+                FrontierPoint {
+                    name,
+                    config: c.config,
+                    accuracy: c.accuracy,
+                    power_mw: c.power_mw,
+                    latency_us: c.latency_us,
+                    energy_uj: c.energy_uj,
+                    acc_narrow: c.acc_narrow,
+                    model,
+                }
+            })
+            .collect();
+        Frontier {
+            base_profile: self.base.profile.clone(),
+            points,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qonnx::{read_str, test_model_json};
+
+    fn fast_cfg() -> ExplorerConfig {
+        ExplorerConfig {
+            // high parallelism keeps the per-candidate actor sim cheap
+            fold: FoldingConfig {
+                conv1_pe: 64,
+                conv1_simd: 64,
+                conv2_pe: 64,
+                conv2_simd: 576,
+                dense_pe: 16,
+                dense_simd: 64,
+                fifo_depth: 8,
+            },
+            power_images: 1,
+            uniform_rungs: 2,
+            ..Default::default()
+        }
+    }
+
+    fn setup() -> (QonnxModel, CalibSet) {
+        let m = read_str(&test_model_json(2, 3)).unwrap();
+        let calib = CalibSet::self_labeled(&m, 24, 0xCAFE);
+        (m, calib)
+    }
+
+    #[test]
+    fn self_labeled_calib_scores_the_base_at_one() {
+        let (m, calib) = setup();
+        assert_eq!(calib.len(), 24);
+        let mut ex = Explorer::new(&m, &calib, fast_cfg());
+        let root = ex.evaluate(&vec![0; ex.knobs().len()]);
+        assert_eq!(root.accuracy, 1.0, "fidelity labels make the root exact");
+        assert!(root.power_mw > 0.0 && root.latency_us > 0.0 && root.energy_uj > 0.0);
+        assert_eq!(ex.evaluations(), 1);
+        // memoized: re-evaluating costs nothing
+        let again = ex.evaluate(&vec![0; ex.knobs().len()]);
+        assert_eq!(again, root);
+        assert_eq!(ex.evaluations(), 1);
+    }
+
+    #[test]
+    fn deeper_uniform_config_costs_less_energy() {
+        let (m, calib) = setup();
+        let mut ex = Explorer::new(&m, &calib, fast_cfg());
+        let root = ex.evaluate(&vec![0; ex.knobs().len()]);
+        let deep = ex.uniform(2);
+        let deep_eval = ex.evaluate(&deep);
+        assert!(
+            deep_eval.energy_uj < root.energy_uj,
+            "2-bit uniform drop must cost less: {} vs {}",
+            deep_eval.energy_uj,
+            root.energy_uj
+        );
+        assert!(deep_eval.power_mw < root.power_mw);
+        // latency is folding-bound, not precision-bound (Table-1 invariant)
+        assert_eq!(deep_eval.latency_us, root.latency_us);
+    }
+
+    #[test]
+    fn frontier_is_sorted_covers_baseline_and_keeps_the_root() {
+        let (m, calib) = setup();
+        let mut ex = Explorer::new(&m, &calib, fast_cfg());
+        let frontier = ex.explore();
+        assert!(!frontier.is_empty());
+        for w in frontier.points.windows(2) {
+            assert!(w[0].accuracy > w[1].accuracy, "ladder must be sorted, strictly");
+            assert!(w[0].energy_uj > w[1].energy_uj, "cheaper rungs must be cheaper");
+        }
+        // most accurate rung matches the best archive accuracy (the root)
+        assert_eq!(frontier.points[0].accuracy, 1.0);
+        // the seeded uniform baseline is always weakly covered
+        for b in ex.uniform_baseline() {
+            assert!(
+                frontier.weakly_dominates(b.accuracy, b.energy_uj, b.latency_us),
+                "uniform rung (acc {}, energy {}) escaped the frontier",
+                b.accuracy,
+                b.energy_uj
+            );
+        }
+        // every frontier model re-derives to the stored name
+        for p in &frontier.points {
+            assert_eq!(p.model.profile, p.name);
+            assert_eq!(p.name, super::config_name(&p.config));
+        }
+    }
+
+    #[test]
+    fn dominance_is_strict_on_at_least_one_axis() {
+        let a = Candidate {
+            config: vec![0],
+            accuracy: 0.9,
+            power_mw: 1.0,
+            latency_us: 1.0,
+            energy_uj: 1.0,
+            acc_narrow: vec![],
+        };
+        let mut b = a.clone();
+        assert!(!dominates(&a, &b), "equal points never dominate");
+        b.energy_uj = 2.0;
+        assert!(dominates(&a, &b));
+        assert!(!dominates(&b, &a));
+        b.energy_uj = 0.5;
+        b.accuracy = 0.95;
+        assert!(!dominates(&a, &b) && !dominates(&b, &a), "trade-offs are incomparable");
+    }
+
+    #[test]
+    fn max_rungs_caps_the_ladder_keeping_endpoints() {
+        let (m, calib) = setup();
+        let mut full = Explorer::new(&m, &calib, fast_cfg());
+        let frontier = full.explore();
+        if frontier.len() < 3 {
+            return; // nothing to thin on this tiny model
+        }
+        let mut capped = Explorer::new(
+            &m,
+            &calib,
+            ExplorerConfig {
+                max_rungs: 3,
+                ..fast_cfg()
+            },
+        );
+        let thin = capped.explore();
+        assert_eq!(thin.len(), 3);
+        assert_eq!(thin.points[0].config, frontier.points[0].config);
+        assert_eq!(
+            thin.points[2].config,
+            frontier.points[frontier.len() - 1].config
+        );
+    }
+}

@@ -200,6 +200,12 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
+    /// Option value with the empty string treated as absent — the idiom
+    /// for optional options whose declared default is `""`.
+    pub fn opt_str(&self, name: &str) -> Option<&str> {
+        self.get(name).filter(|s| !s.is_empty())
+    }
+
     pub fn flag(&self, name: &str) -> bool {
         self.flags.get(name).copied().unwrap_or(false)
     }
@@ -244,6 +250,16 @@ mod tests {
         assert_eq!(a.parse_num::<usize>("batch").unwrap(), 16);
         assert!(a.flag("verbose"));
         assert_eq!(a.pos(0), Some("file.bin"));
+    }
+
+    #[test]
+    fn opt_str_treats_empty_default_as_absent() {
+        let spec = Spec::new("t", "test").opt("out", "", "output path");
+        let a = spec.parse(&sv(&[])).unwrap();
+        assert_eq!(a.opt_str("out"), None);
+        assert_eq!(a.opt_str("missing"), None);
+        let a = spec.parse(&sv(&["--out", "x.json"])).unwrap();
+        assert_eq!(a.opt_str("out"), Some("x.json"));
     }
 
     #[test]

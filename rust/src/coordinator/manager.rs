@@ -3,12 +3,18 @@
 //!
 //! Inputs: the (simulated) energy monitor and the application constraints
 //! (accuracy floor, optional power cap). Output: the profile the adaptive
-//! engine should run. Policy: among profiles meeting the constraints, pick
-//! the most accurate while energy is plentiful; once the remaining battery
-//! fraction drops below `low_energy_threshold`, pick the lowest-power
-//! profile still meeting the accuracy floor (negotiating the floor away if
-//! nothing meets it — the paper's "if they can be negotiated"). Hysteresis
-//! prevents flapping around the threshold.
+//! engine should run. Policy: the profile table is a *ladder*, sorted by
+//! accuracy at construction (auto-generated Pareto frontiers arrive
+//! unsorted — see `approx`). While energy is plentiful the top rung runs;
+//! below `low_energy_threshold` the remaining battery range is split into
+//! evenly spaced bands, one per lower rung, so a long ladder degrades
+//! gradually instead of jumping straight to the cheapest profile (and
+//! climbs back rung by rung as the battery recovers). Hysteresis holds the
+//! current rung near every band edge, preventing flapping; the accuracy
+//! floor and power cap restrict the eligible rungs, each negotiated away
+//! if nothing satisfies it — the paper's "if they can be negotiated". With
+//! two profiles this reduces exactly to the original
+//! accurate-above/low-power-below threshold policy.
 
 use std::sync::Mutex;
 
@@ -186,21 +192,50 @@ impl Default for ManagerConfig {
 /// The Profile Manager.
 pub struct ProfileManager {
     cfg: ManagerConfig,
+    /// The ladder, sorted most accurate first (enforced at construction).
     profiles: Vec<ProfileSpec>,
     /// Currently selected profile index (hysteresis state).
     current: Mutex<usize>,
 }
 
 impl ProfileManager {
-    /// `profiles` must be non-empty; order does not matter.
-    pub fn new(cfg: ManagerConfig, profiles: Vec<ProfileSpec>) -> Self {
+    /// `profiles` must be non-empty; any order is accepted. The ladder walk
+    /// in [`ProfileManager::select`] indexes rungs by accuracy rank, so the
+    /// table is sorted here — most accurate first, power then name as
+    /// deterministic tie-breaks — instead of silently mis-selecting on an
+    /// unsorted auto-generated frontier. Rungs that are strictly dominated
+    /// on (accuracy, power) are pruned: a ladder position is an energy
+    /// promise, so walking *down* must never cost more power for less
+    /// accuracy. Explorer frontiers are already Pareto (no-op); hand-written
+    /// tables are not always, and the old policy's low-battery guarantee
+    /// (lowest power wins) only survives the rank walk on a pruned table,
+    /// where power strictly decreases down the ladder.
+    pub fn new(cfg: ManagerConfig, mut profiles: Vec<ProfileSpec>) -> Self {
         assert!(!profiles.is_empty(), "ProfileManager needs >= 1 profile");
-        let all: Vec<usize> = (0..profiles.len()).collect();
-        let start = Self::most_accurate_meeting(&profiles, &all, cfg.accuracy_floor);
+        profiles.sort_by(|a, b| {
+            b.accuracy
+                .total_cmp(&a.accuracy)
+                .then(a.power_mw.total_cmp(&b.power_mw))
+                .then(a.name.cmp(&b.name))
+        });
+        let dominated = |q: &ProfileSpec| {
+            profiles.iter().any(|p| {
+                p.accuracy >= q.accuracy
+                    && p.power_mw <= q.power_mw
+                    && (p.accuracy > q.accuracy || p.power_mw < q.power_mw)
+            })
+        };
+        let profiles: Vec<ProfileSpec> =
+            profiles.iter().filter(|&q| !dominated(q)).cloned().collect();
+        // The sort places the (max accuracy, min power) profile first and
+        // nothing strictly dominates it, so the pruned ladder is never
+        // empty. Rung 0 — the startup profile — is the most accurate
+        // overall, which is also the most accurate meeting any satisfiable
+        // floor.
         ProfileManager {
             cfg,
             profiles,
-            current: Mutex::new(start),
+            current: Mutex::new(0),
         }
     }
 
@@ -215,84 +250,74 @@ impl ProfileManager {
         }
     }
 
-    fn most_accurate_meeting(
-        profiles: &[ProfileSpec],
-        allowed: &[usize],
-        floor: f64,
-    ) -> usize {
-        // Most accurate among floor-meeting, else most accurate overall.
-        let mut best: Option<usize> = None;
-        for &i in allowed {
-            let p = &profiles[i];
-            if p.accuracy >= floor
-                && best.is_none_or(|b: usize| p.accuracy > profiles[b].accuracy)
-            {
-                best = Some(i);
+    /// The eligible ladder (profile indices, accuracy order preserved):
+    /// profiles within the power cap and meeting the accuracy floor. Each
+    /// constraint is negotiated away rather than leaving nothing to run —
+    /// a cap excluding every profile is ignored, and if no capped profile
+    /// meets the floor the floor yields (the paper's "if they can be
+    /// negotiated").
+    fn eligible(&self, cap: Option<f64>) -> Vec<usize> {
+        let all: Vec<usize> = (0..self.profiles.len()).collect();
+        let capped: Vec<usize> = match cap {
+            Some(c) => {
+                let within: Vec<usize> = all
+                    .iter()
+                    .copied()
+                    .filter(|&i| self.profiles[i].power_mw <= c)
+                    .collect();
+                if within.is_empty() {
+                    all
+                } else {
+                    within
+                }
             }
+            None => all,
+        };
+        let floor = self.cfg.accuracy_floor;
+        let floored: Vec<usize> = capped
+            .iter()
+            .copied()
+            .filter(|&i| self.profiles[i].accuracy >= floor)
+            .collect();
+        if floored.is_empty() {
+            capped
+        } else {
+            floored
         }
-        best.unwrap_or_else(|| {
-            allowed
-                .iter()
-                .copied()
-                .max_by(|&a, &b| profiles[a].accuracy.total_cmp(&profiles[b].accuracy))
-                .unwrap()
-        })
     }
 
-    fn lowest_power_meeting(
-        profiles: &[ProfileSpec],
-        allowed: &[usize],
-        floor: f64,
-    ) -> usize {
-        let mut best: Option<usize> = None;
-        for &i in allowed {
-            let p = &profiles[i];
-            if p.accuracy >= floor
-                && best.is_none_or(|b: usize| p.power_mw < profiles[b].power_mw)
-            {
-                best = Some(i);
-            }
+    /// Map a battery fraction onto a ladder rung: 0 (most accurate) at or
+    /// above `threshold`, then the range `(0, threshold)` split into
+    /// `rungs - 1` equal bands, reaching the cheapest rung as the battery
+    /// empties. A two-rung ladder reduces to the original single-threshold
+    /// policy.
+    fn rung_of(frac: f64, threshold: f64, rungs: usize) -> usize {
+        if rungs <= 1 || threshold <= 0.0 || frac >= threshold {
+            return 0;
         }
-        // Negotiate the floor away if nothing meets it: lowest power overall.
-        best.unwrap_or_else(|| {
-            allowed
-                .iter()
-                .copied()
-                .min_by(|&a, &b| profiles[a].power_mw.total_cmp(&profiles[b].power_mw))
-                .unwrap()
-        })
+        let step = threshold / (rungs - 1) as f64;
+        let r = ((threshold - frac.max(0.0)) / step).ceil() as usize;
+        r.clamp(1, rungs - 1)
     }
 
-    /// Decide the profile for the current energy state. A power cap on the
-    /// monitor restricts the candidate set to profiles within the cap,
-    /// unless none qualifies (the cap, like the accuracy floor, can be
-    /// negotiated away rather than leaving nothing to run).
+    /// Decide the profile for the current energy state: clamp the held
+    /// rung into the hysteresis interval `[rung(frac + h), rung(frac - h)]`
+    /// over the eligible ladder. Inside a band edge's hysteresis the held
+    /// rung wins (no flapping); a monotone battery walk therefore steps
+    /// through the ladder monotonically, one adaptation at a time.
     pub fn select(&self, energy: &EnergyMonitor) -> &ProfileSpec {
         let frac = energy.remaining_fraction();
         let mut cur = self.current.lock().unwrap();
-        let allowed: Vec<usize> = match energy.power_cap_mw() {
-            Some(cap) if self.profiles.iter().any(|p| p.power_mw <= cap) => self
-                .profiles
-                .iter()
-                .enumerate()
-                .filter(|(_, p)| p.power_mw <= cap)
-                .map(|(i, _)| i)
-                .collect(),
-            _ => (0..self.profiles.len()).collect(),
-        };
-        let floor = self.cfg.accuracy_floor;
-        let hi_idx = Self::most_accurate_meeting(&self.profiles, &allowed, floor);
-        let lo_idx = Self::lowest_power_meeting(&self.profiles, &allowed, floor);
+        let ladder = self.eligible(energy.power_cap_mw());
         let t = self.cfg.low_energy_threshold;
         let h = self.cfg.hysteresis;
-        let target = if frac < t - h {
-            lo_idx
-        } else if frac > t + h {
-            hi_idx
-        } else if allowed.contains(&*cur) {
-            *cur // inside the hysteresis band: hold
-        } else {
-            lo_idx // held profile no longer within the cap
+        let lo = Self::rung_of(frac + h, t, ladder.len());
+        let hi = Self::rung_of(frac - h, t, ladder.len());
+        let target = match ladder.iter().position(|&i| i == *cur) {
+            Some(pos) => ladder[pos.clamp(lo, hi)],
+            // Held profile no longer eligible (cap or floor changed the
+            // ladder): re-enter at the pessimistic rung for this charge.
+            None => ladder[hi],
         };
         *cur = target;
         &self.profiles[target]
@@ -638,5 +663,176 @@ mod tests {
             );
             Ok(())
         });
+    }
+
+    /// A 5-rung auto-generated-style ladder (accuracy down, power down).
+    fn ladder5() -> Vec<ProfileSpec> {
+        (0..5)
+            .map(|i| ProfileSpec {
+                name: format!("apx-{i}"),
+                accuracy: 0.96 - 0.02 * i as f64,
+                power_mw: 150.0 - 10.0 * i as f64,
+                latency_us: 329.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn unsorted_ladder_is_sorted_at_construction() {
+        // Regression: auto-generated frontiers arrive in search order, not
+        // accuracy order. The ladder walk indexes rungs by accuracy rank,
+        // so an unsorted table used to mis-select (rung 1 could be *more*
+        // accurate than rung 0). Construction must sort.
+        let mut shuffled = ladder5();
+        shuffled.swap(0, 3);
+        shuffled.swap(1, 4);
+        let mgr = ProfileManager::new(ManagerConfig::default(), shuffled);
+        let names: Vec<&str> = mgr.profiles().iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, ["apx-0", "apx-1", "apx-2", "apx-3", "apx-4"]);
+        for w in mgr.profiles().windows(2) {
+            assert!(w[0].accuracy >= w[1].accuracy, "ladder not sorted by accuracy");
+        }
+        // startup = top rung; a dead battery = bottom rung
+        assert_eq!(mgr.current().name, "apx-0");
+        let dead = EnergyMonitor::new(0.0);
+        assert_eq!(mgr.select(&dead).name, "apx-4");
+    }
+
+    #[test]
+    fn dominated_rungs_are_pruned_at_construction() {
+        // "bad" is strictly worse than "mid" on both axes: less accurate
+        // AND hungrier. Rank-walking an unpruned table would serve it near
+        // empty — draining fastest exactly when energy is critical, which
+        // the old lowest-power policy never did.
+        let specs = vec![
+            ProfileSpec {
+                name: "top".into(),
+                accuracy: 0.96,
+                power_mw: 150.0,
+                latency_us: 329.0,
+            },
+            ProfileSpec {
+                name: "bad".into(),
+                accuracy: 0.90,
+                power_mw: 140.0,
+                latency_us: 329.0,
+            },
+            ProfileSpec {
+                name: "mid".into(),
+                accuracy: 0.93,
+                power_mw: 120.0,
+                latency_us: 329.0,
+            },
+            ProfileSpec {
+                name: "eco".into(),
+                accuracy: 0.88,
+                power_mw: 100.0,
+                latency_us: 329.0,
+            },
+        ];
+        let mgr = ProfileManager::new(ManagerConfig::default(), specs);
+        let names: Vec<&str> = mgr.profiles().iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, ["top", "mid", "eco"], "dominated rung must be pruned");
+        // Power strictly decreases down the pruned ladder, so the bottom
+        // rung is the lowest-power profile — the old low-battery guarantee.
+        for w in mgr.profiles().windows(2) {
+            assert!(w[0].power_mw > w[1].power_mw);
+        }
+        let dead = EnergyMonitor::new(0.0);
+        assert_eq!(mgr.select(&dead).name, "eco");
+    }
+
+    #[test]
+    fn five_rung_bands_are_evenly_spaced() {
+        // t = 0.5, h = 0: bands below the threshold are 0.125 wide.
+        let cfg = ManagerConfig {
+            low_energy_threshold: 0.5,
+            hysteresis: 0.0,
+            accuracy_floor: 0.0,
+        };
+        for (charge_j, want) in [
+            (100.0, "apx-0"),
+            (55.0, "apx-0"),
+            (45.0, "apx-1"),
+            (30.0, "apx-2"),
+            (20.0, "apx-3"),
+            (5.0, "apx-4"),
+            (0.0, "apx-4"),
+        ] {
+            let mgr = ProfileManager::new(cfg.clone(), ladder5());
+            let e = EnergyMonitor::new(100.0);
+            e.drain(1e6, (100.0 - charge_j) * 1e3); // leave charge_j joules
+            assert_eq!(mgr.select(&e).name, want, "battery at {charge_j}%");
+        }
+    }
+
+    #[test]
+    fn multi_tier_ladder_walks_monotonically_property() {
+        // Drain an auto-generated-style 5+ rung ladder in random steps: the
+        // selected rung may only move down the ladder; recharge back up and
+        // it may only move up, ending on the top rung. Extends the PR 4
+        // two-profile cycle tests to deep ladders.
+        testkit::check("ladder walk is monotone under drain and recharge", |rng| {
+            let n_rungs = rng.usize(5, 8);
+            let specs: Vec<ProfileSpec> = (0..n_rungs)
+                .map(|i| ProfileSpec {
+                    name: format!("apx-{i}"),
+                    accuracy: 0.99 - 0.015 * i as f64,
+                    power_mw: 200.0 - 12.0 * i as f64,
+                    latency_us: 329.0,
+                })
+                .collect();
+            let mgr = ProfileManager::new(ManagerConfig::default(), specs);
+            let rung = |name: &str| -> usize {
+                mgr.profiles().iter().position(|p| p.name == name).unwrap()
+            };
+            // 1 W source so advance(x) banks x J; drain(1e6, x*1e3) takes x J.
+            let e = EnergyMonitor::new(100.0).with_source(EnergySource::constant(1000.0));
+            let mut prev = rung(&mgr.select(&e).name);
+            crate::prop_assert!(prev == 0, "full battery must start on the top rung");
+            while e.remaining_j() > 0.0 {
+                e.drain(1e6, rng.f64(0.5, 9.0) * 1e3);
+                let now = rung(&mgr.select(&e).name);
+                crate::prop_assert!(
+                    now >= prev,
+                    "drain walked back up: rung {prev} -> {now} at {}",
+                    e.remaining_fraction()
+                );
+                prev = now;
+            }
+            crate::prop_assert!(
+                prev == mgr.profiles().len() - 1,
+                "empty battery must end on the bottom rung, got {prev}"
+            );
+            // f64 saturation can stop one ulp short of 1.0: stop just shy.
+            while e.remaining_fraction() < 1.0 - 1e-9 {
+                e.advance(rng.f64(0.5, 9.0));
+                let now = rung(&mgr.select(&e).name);
+                crate::prop_assert!(
+                    now <= prev,
+                    "recharge walked back down: rung {prev} -> {now} at {}",
+                    e.remaining_fraction()
+                );
+                prev = now;
+            }
+            crate::prop_assert!(prev == 0, "full battery must recover the top rung");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ladder_respects_floor_and_cap_together() {
+        // Floor admits rungs 0..=2, cap admits rungs 2..=4: the eligible
+        // ladder is the single rung 2 at any charge.
+        let cfg = ManagerConfig {
+            low_energy_threshold: 0.5,
+            hysteresis: 0.0,
+            accuracy_floor: 0.915, // apx-0 (.96), apx-1 (.94), apx-2 (~.92)
+        };
+        let mgr = ProfileManager::new(cfg, ladder5());
+        let capped = EnergyMonitor::with_power_cap(100.0, 130.0); // <= apx-2..4
+        assert_eq!(mgr.select(&capped).name, "apx-2");
+        capped.drain(1e6, 90.0 * 1e3); // 10% left: still the only eligible rung
+        assert_eq!(mgr.select(&capped).name, "apx-2");
     }
 }

@@ -19,8 +19,11 @@
 //! adaptation step runs per shard, per batch: a shard running hot degrades
 //! to a cheaper approximate profile while the others stay exact — the
 //! profile rides on the reply so clients observe which fidelity served
-//! them. Idle shards steal from the back of the busiest deque, so a skewed
-//! arrival pattern still saturates the pool without a shared global queue.
+//! them. Routing is battery-aware: equal deque depths tie-break to the
+//! shard with the fullest cell, so a drained accelerator is not fed work an
+//! equally idle healthy one could take. Idle shards steal from the back of
+//! the busiest deque, so a skewed arrival pattern still saturates the pool
+//! without a shared global queue.
 //! Backends are constructed *inside* each worker thread via the factory —
 //! PJRT handles are not `Send`.
 
@@ -365,6 +368,10 @@ impl AdaptiveServer {
         let d_stats = stats.clone();
         let d_pool = pool.clone();
         let d_live = live.clone();
+        // Battery-aware tiebreak: when deque depths tie, route to the shard
+        // with the fullest cell so a drained accelerator is not handed work
+        // an equally idle healthy one could take.
+        let d_energy = shard_energy.clone();
         let pin = cfg.pin_dispatch_to;
         let mut batcher = DynamicBatcher::new(cfg.batcher.clone(), rx);
         let dispatcher = std::thread::Builder::new()
@@ -384,7 +391,9 @@ impl AdaptiveServer {
                             .push("dispatch failed: all workers exited".to_string());
                         break;
                     }
-                    let routed = pin.unwrap_or_else(|| d_pool.least_loaded());
+                    let routed = pin.unwrap_or_else(|| {
+                        d_pool.least_loaded_by(|i| d_energy[i].remaining_fraction())
+                    });
                     let target = routed.min(n_workers - 1);
                     d_stats.queue_depth.inc();
                     d_stats.shard_depth[target].inc();
@@ -844,6 +853,32 @@ mod tests {
         assert!(srv.stats.shard_battery[1].get() > 0.99);
         drop(client);
         srv.shutdown();
+    }
+
+    #[test]
+    fn dispatch_tiebreak_routes_to_the_fullest_cell() {
+        // Both shards are idle when the first request arrives (a cold
+        // server has executed nothing), so deque depths tie at 0 and the
+        // battery tiebreak must decide: the drained shard (capacity 0)
+        // loses to the full one regardless of index order.
+        for (caps, want_shard) in [(vec![0.0, 1e9], 1usize), (vec![1e9, 0.0], 0usize)] {
+            let (backend, elems) = sim_backend();
+            let mgr = ProfileManager::new(ManagerConfig::default(), specs());
+            let cfg = ServerConfig {
+                workers: 2,
+                shard_capacity_j: Some(caps),
+                steal: false,
+                ..Default::default()
+            };
+            let srv = AdaptiveServer::start(cfg, backend, mgr, EnergyMonitor::new(1e9)).unwrap();
+            let resp = srv.classify(vec![5u8; elems]).unwrap();
+            assert_eq!(
+                resp.shard, want_shard,
+                "equal-depth dispatch must pick the fullest cell"
+            );
+            assert_eq!(resp.profile, "hi", "the full shard serves exact");
+            srv.shutdown();
+        }
     }
 
     #[test]

@@ -64,21 +64,42 @@ impl<T> ShardDeques<T> {
         }
     }
 
-    /// Index of the live shard with the lightest load (ties -> lowest
-    /// index). Load counts the queued backlog plus one for a batch
-    /// currently executing, so an idle shard beats a busy one whose deque
-    /// is momentarily empty. Entirely lock-free (length mirrors + flags) —
-    /// the snapshot is racy by design, routing only needs to be roughly
-    /// right. Falls back to shard 0 if every shard is dead.
-    pub fn least_loaded(&self) -> usize {
+    /// Index of the live shard with the lightest load, ties broken by the
+    /// largest `richness(i)` (the dispatcher passes each shard's remaining
+    /// battery fraction, so an equally idle pool routes to the fullest
+    /// cell), then lowest index. Load counts the queued backlog plus one
+    /// for a batch currently executing, so an idle shard beats a busy one
+    /// whose deque is momentarily empty. The deque side stays lock-free
+    /// (length mirrors + flags) and the snapshot is racy by design —
+    /// routing only needs to be roughly right; `richness` may take its own
+    /// locks (the battery fraction reads one), so it is evaluated lazily:
+    /// only load *ties* pay for it. Falls back to shard 0 if every shard
+    /// is dead.
+    pub fn least_loaded_by(&self, richness: impl Fn(usize) -> f64) -> usize {
         let mut best: Option<(usize, usize)> = None; // (index, load)
+        let mut best_rich: Option<f64> = None; // filled on the first tie
         for (i, s) in self.shards.iter().enumerate() {
             if s.dead.load(Ordering::SeqCst) {
                 continue;
             }
             let load = s.len.load(Ordering::SeqCst) + s.busy.load(Ordering::SeqCst) as usize;
-            if best.is_none_or(|(_, l)| load < l) {
-                best = Some((i, load));
+            match best {
+                None => {
+                    best = Some((i, load));
+                }
+                Some((_, bl)) if load < bl => {
+                    best = Some((i, load));
+                    best_rich = None;
+                }
+                Some((bi, bl)) if load == bl => {
+                    let held = *best_rich.get_or_insert_with(|| richness(bi));
+                    let rich = richness(i);
+                    if rich > held {
+                        best = Some((i, load));
+                        best_rich = Some(rich);
+                    }
+                }
+                Some(_) => {}
             }
         }
         best.map_or(0, |(i, _)| i)
@@ -298,12 +319,34 @@ mod tests {
     #[test]
     fn least_loaded_prefers_shortest_backlog() {
         let q: ShardDeques<u32> = ShardDeques::new(3, true);
-        assert_eq!(q.least_loaded(), 0); // all empty -> lowest index
+        assert_eq!(q.least_loaded_by(|_| 0.0), 0); // all empty -> lowest index
         q.push(0, 1);
-        assert_eq!(q.least_loaded(), 1);
+        assert_eq!(q.least_loaded_by(|_| 0.0), 1);
         q.push(1, 2);
         q.push(1, 3);
-        assert_eq!(q.least_loaded(), 2);
+        assert_eq!(q.least_loaded_by(|_| 0.0), 2);
+    }
+
+    #[test]
+    fn battery_tiebreak_prefers_richest_on_equal_load() {
+        let q: ShardDeques<u32> = ShardDeques::new(3, true);
+        let cells = [0.0, 0.9, 0.4]; // shard 0 drained, shard 1 fullest
+        assert_eq!(q.least_loaded_by(|i| cells[i]), 1);
+        // load always beats richness: one queued item demotes the full cell
+        q.push(1, 7);
+        assert_eq!(q.least_loaded_by(|i| cells[i]), 2);
+        // equal richness falls back to the lowest index
+        assert_eq!(q.least_loaded_by(|_| 1.0), 0);
+        // and the plain variant is the all-equal special case
+        assert_eq!(q.least_loaded_by(|_| 0.0), 0);
+    }
+
+    #[test]
+    fn battery_tiebreak_skips_dead_shards() {
+        let q: ShardDeques<u32> = ShardDeques::new(3, true);
+        let cells = [0.2, 0.9, 0.4];
+        q.mark_dead(1); // the fullest cell is dead: next-fullest wins
+        assert_eq!(q.least_loaded_by(|i| cells[i]), 2);
     }
 
     #[test]
@@ -332,7 +375,7 @@ mod tests {
     fn dead_shard_is_skipped_by_routing() {
         let q: ShardDeques<u32> = ShardDeques::new(2, true);
         assert_eq!(q.mark_dead(0), 0); // steal on: backlog kept for thieves
-        assert_eq!(q.least_loaded(), 1);
+        assert_eq!(q.least_loaded_by(|_| 0.0), 1);
         // pinned pushes to a dead shard still land while stealing is on
         assert!(q.push(0, 7));
         assert_eq!(q.pop(1), Some((7, 0)));
@@ -347,7 +390,7 @@ mod tests {
         assert_eq!(q.mark_dead(0), 2);
         // and new work aimed at it is rejected rather than stranded
         assert!(!q.push(0, 3));
-        assert_eq!(q.least_loaded(), 1);
+        assert_eq!(q.least_loaded_by(|_| 0.0), 1);
         assert!(q.push(1, 4));
         q.close();
         assert_eq!(q.pop(1), Some((4, 1)));
@@ -361,7 +404,7 @@ mod tests {
         // shard 0's owner takes the item and is now executing (busy, deque
         // empty); a genuinely idle shard must win the tie
         assert_eq!(q.pop(0), Some((1, 0)));
-        assert_eq!(q.least_loaded(), 1);
+        assert_eq!(q.least_loaded_by(|_| 0.0), 1);
     }
 
     #[test]

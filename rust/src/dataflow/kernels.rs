@@ -401,6 +401,26 @@ impl CompiledModel {
     pub fn is_packed(&self) -> bool {
         self.steps.is_some()
     }
+
+    /// Accumulator width the packed plan proved per conv layer, in layer
+    /// order: `true` = the 32-bit narrow (SIMD-friendly) path, `false` =
+    /// the 64-bit fallback. Empty for scalar-fallback plans. Surfaced so
+    /// the approximation explorer can report which rungs of a bit-width
+    /// ladder unlock the narrow kernels as precisions shrink.
+    pub fn conv_acc_narrow(&self) -> Vec<bool> {
+        self.steps
+            .as_ref()
+            .map(|steps| {
+                steps
+                    .iter()
+                    .filter_map(|s| match s {
+                        CompiledStep::Conv(pc) => Some(pc.narrow),
+                        _ => None,
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
 }
 
 /// Batched executor over a [`CompiledModel`]: owns the activation/logits
@@ -636,6 +656,7 @@ mod tests {
             Some(CompiledStep::Conv(pc)) => assert!(!pc.narrow, "must widen"),
             _ => panic!("first step should be conv"),
         }
+        assert_eq!(compiled.conv_acc_narrow(), vec![false]);
         assert_matches_oracle(&m, &[1, 4]);
     }
 
@@ -645,7 +666,16 @@ mod tests {
         let m = read_str(&json).unwrap();
         let compiled = CompiledModel::from_model(&m);
         assert!(!compiled.is_packed(), "32-bit activations exceed i32 codes");
+        assert!(compiled.conv_acc_narrow().is_empty(), "no packed plan, no widths");
         assert_matches_oracle(&m, &[2]);
+    }
+
+    #[test]
+    fn acc_width_report_lists_conv_layers_in_order() {
+        let m = read_str(&test_model_json(2, 11)).unwrap();
+        let compiled = CompiledModel::from_model(&m);
+        // one conv layer in the tiny pipeline, provably narrow
+        assert_eq!(compiled.conv_acc_narrow(), vec![true]);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //!   fig3       regenerate Fig. 3 (accuracy-vs-power series incl. Mixed)
 //!   fig4       regenerate Fig. 4 (adaptive engine merge + battery sim)
 //!   flow       run the design flow for one profile (writer + HLS report)
+//!   explore    auto-generate a Pareto profile ladder (approximation explorer)
 //!   classify   classify test images on the PJRT runtime
 //!   serve      run the adaptive inference server on a synthetic workload
 //!   verify     cross-check rust dataflow vs python vectors vs PJRT runtime
@@ -13,6 +14,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use onnx2hw::approx::{CalibSet, Explorer, ExplorerConfig};
 use onnx2hw::cli::Spec;
 use onnx2hw::coordinator::{
     AdaptiveServer, Backend, EnergyMonitor, ManagerConfig, ProfileManager, ProfileSpec,
@@ -51,13 +53,14 @@ fn run(sub: &str, argv: &[String]) -> Result<()> {
         "fig3" => cmd_fig3(argv),
         "fig4" => cmd_fig4(argv),
         "flow" => cmd_flow(argv),
+        "explore" => cmd_explore(argv),
         "classify" => cmd_classify(argv),
         "serve" => cmd_serve(argv),
         "verify" => cmd_verify(argv),
         "help" | "--help" | "-h" => {
             println!(
                 "onnx2hw — ONNX-to-Hardware design flow (SAMOS 2024 reproduction)\n\n\
-                 USAGE: onnx2hw <table1|fig3|fig4|flow|classify|serve|verify> [options]\n\
+                 USAGE: onnx2hw <table1|fig3|fig4|flow|explore|classify|serve|verify> [options]\n\
                  Run a subcommand with --help for its options."
             );
             Ok(())
@@ -242,7 +245,7 @@ fn cmd_fig4(argv: &[String]) -> Result<()> {
     );
 
     // --- optional: N-phase drain/recharge cycle projection ---
-    let src = parse_recharge(a.get("recharge-mw"), None)?;
+    let src = parse_recharge(a.opt_str("recharge-mw"), None)?;
     if src != EnergySource::None {
         let horizon_h: f64 = a.parse_num("horizon-h")?;
         let run = simulate_battery_cycles(
@@ -284,7 +287,7 @@ fn cmd_flow(argv: &[String]) -> Result<()> {
     let profile = a.get("profile").unwrap();
     let model = store.qonnx(profile)?;
     let out = writer::write_engine(&model, &cfg.fold);
-    if let Some(dir) = a.get("emit").filter(|d| !d.is_empty()) {
+    if let Some(dir) = a.opt_str("emit") {
         std::fs::create_dir_all(dir)?;
         let base = std::path::Path::new(dir);
         std::fs::write(base.join(format!("{profile}_engine.cpp")), &out.cpp)?;
@@ -294,6 +297,110 @@ fn cmd_flow(argv: &[String]) -> Result<()> {
     }
     let rep = flow::utilization_report(&store, profile, &cfg)?;
     println!("{}", rep.render());
+    Ok(())
+}
+
+fn cmd_explore(argv: &[String]) -> Result<()> {
+    let spec = Spec::new(
+        "onnx2hw explore",
+        "auto-generate a Pareto profile ladder from one base model",
+    )
+    .opt("profile", "A8-W8", "base profile to explore (artifact store)")
+    .opt("calib", "96", "calibration images to score candidates on")
+    .opt("power-images", "2", "images simulated per candidate for the power estimate")
+    .opt("min-accuracy", "0", "stop the greedy descent below this accuracy")
+    .opt("eps", "0", "epsilon-dominance accuracy band for thinning the ladder")
+    .opt("max-rungs", "0", "cap the ladder length (0 = keep every Pareto rung)")
+    .opt("uniform-rungs", "4", "uniform-precision baseline rungs to compare against")
+    .opt("seed", "7", "seed for the synthetic model / calibration workload")
+    .opt("out", "", "write the frontier JSON here")
+    .flag("synthetic", "explore a deterministic synthetic model (no artifacts needed)");
+    let a = parse_or_usage(spec, argv)?;
+    let calib_n: usize = a.parse_num("calib")?;
+    let seed: u64 = a.parse_num("seed")?;
+    let (base, calib) = if a.flag("synthetic") {
+        let mut rng = onnx2hw::testkit::Rng::new(seed);
+        let cfg = onnx2hw::qonnx::RandModelCfg {
+            side: 8,
+            cin: 1,
+            blocks: vec![(4, 8, 8), (8, 8, 8)],
+            classes: 5,
+        };
+        let json_text = onnx2hw::qonnx::random_model_json(&cfg, &mut rng);
+        let model = onnx2hw::qonnx::read_str(&json_text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let calib = CalibSet::self_labeled(&model, calib_n, seed ^ 0x5EED);
+        (model, calib)
+    } else {
+        let store = ArtifactStore::discover()?;
+        let model = store.qonnx(a.get("profile").unwrap())?;
+        let testset = store.testset()?;
+        let calib = CalibSet::from_testset(&testset, calib_n);
+        (model, calib)
+    };
+    let mut explorer = Explorer::new(
+        &base,
+        &calib,
+        ExplorerConfig {
+            power_images: a.parse_num("power-images")?,
+            min_accuracy: a.parse_num("min-accuracy")?,
+            eps_accuracy: a.parse_num("eps")?,
+            max_rungs: a.parse_num("max-rungs")?,
+            uniform_rungs: a.parse_num("uniform-rungs")?,
+            ..Default::default()
+        },
+    );
+    let frontier = explorer.explore();
+    let baseline = explorer.uniform_baseline();
+    println!(
+        "explored {} ({}) on {} calibration images: {} candidates -> {} rungs\n",
+        base.profile,
+        base.precision_signature(),
+        calib.len(),
+        explorer.evaluations(),
+        frontier.len()
+    );
+    let mut table = onnx2hw::bench_harness::Table::new(&[
+        "rung", "profile", "precisions", "accuracy", "power", "latency", "energy/inf",
+    ]);
+    for (i, p) in frontier.points.iter().enumerate() {
+        table.row(&[
+            i.to_string(),
+            p.name.clone(),
+            p.model.precision_signature(),
+            format!("{:.1}%", p.accuracy * 100.0),
+            format!("{:.1} mW", p.power_mw),
+            format!("{:.0} us", p.latency_us),
+            format!("{:.2} uJ", p.energy_uj),
+        ]);
+    }
+    println!("{}", table.render());
+    let mut strict = 0usize;
+    for (k, b) in baseline.iter().enumerate() {
+        let covered = frontier.weakly_dominates(b.accuracy, b.energy_uj, b.latency_us);
+        let beaten = frontier.strictly_dominates(b.accuracy, b.energy_uj, b.latency_us);
+        strict += beaten as usize;
+        println!(
+            "uniform rung {}: accuracy {:.1}% energy {:.2} uJ -> {}",
+            k + 1,
+            b.accuracy * 100.0,
+            b.energy_uj,
+            if beaten {
+                "strictly dominated"
+            } else if covered {
+                "covered"
+            } else {
+                "NOT covered"
+            }
+        );
+    }
+    println!(
+        "\nfrontier strictly dominates {strict}/{} uniform-precision baseline rungs",
+        baseline.len()
+    );
+    if let Some(path) = a.opt_str("out") {
+        std::fs::write(path, json::to_string_pretty(&frontier.to_json()))?;
+        println!("wrote frontier JSON to {path}");
+    }
     Ok(())
 }
 
@@ -359,20 +466,22 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let backend_kind = a.get("backend").unwrap().to_string();
     let workers: usize = a.parse_num("workers")?;
     let clients: usize = std::cmp::max(1, a.parse_num("clients")?);
-    let shard_capacity_j = match a.get("shard-capacity") {
-        Some(s) if !s.is_empty() => Some(vec![s
-            .parse::<f64>()
-            .map_err(|_| anyhow::anyhow!("--shard-capacity: cannot parse '{s}'"))?]),
-        _ => None,
-    };
-    let shard_power_cap_mw = match a.get("power-cap") {
-        Some(s) if !s.is_empty() => Some(
+    let shard_capacity_j = a
+        .opt_str("shard-capacity")
+        .map(|s| {
             s.parse::<f64>()
-                .map_err(|_| anyhow::anyhow!("--power-cap: cannot parse '{s}'"))?,
-        ),
-        _ => None,
-    };
-    let recharge = parse_recharge(a.get("recharge-mw"), a.get("duty-cycle"))?;
+                .map_err(|_| anyhow::anyhow!("--shard-capacity: cannot parse '{s}'"))
+        })
+        .transpose()?
+        .map(|j| vec![j]);
+    let shard_power_cap_mw = a
+        .opt_str("power-cap")
+        .map(|s| {
+            s.parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--power-cap: cannot parse '{s}'"))
+        })
+        .transpose()?;
+    let recharge = parse_recharge(a.opt_str("recharge-mw"), a.opt_str("duty-cycle"))?;
     let store2 = store.clone();
     let pair2 = pair.clone();
     // No Arc needed: client threads hold detached ClientHandles, not the

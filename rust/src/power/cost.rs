@@ -1,0 +1,81 @@
+//! Per-inference cost of one model variant: the Table-1 code path
+//! (HLS estimate + actor-level simulation + activity-based power) folded
+//! into a single number the approximation explorer can rank candidates by.
+
+use crate::dataflow::{simulate_image, FoldingConfig, SimReport};
+use crate::hls::{estimate_engine, Calibration, DeviceModel};
+use crate::qonnx::QonnxModel;
+
+use super::estimate_power;
+
+/// What one classification costs on a given engine configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferenceCost {
+    pub power_mw: f64,
+    pub latency_us: f64,
+    /// Energy per inference in microjoules (`power_mw * latency_us * 1e-3`).
+    pub energy_uj: f64,
+}
+
+/// Cost `model` on `images` (representative inputs — the power model is
+/// value-dependent): runs the HLS resource estimate once and one streaming
+/// simulation per image, then averages. Deterministic for fixed inputs; no
+/// wall clock anywhere.
+pub fn estimate_inference_cost(
+    model: &QonnxModel,
+    fold: &FoldingConfig,
+    cal: &Calibration,
+    dev: &DeviceModel,
+    images: &[&[u8]],
+) -> InferenceCost {
+    assert!(!images.is_empty(), "need at least one image to cost");
+    let est = estimate_engine(model, fold, cal);
+    let sims: Vec<SimReport> = images.iter().map(|img| simulate_image(model, fold, img)).collect();
+    let power = estimate_power(model, &est, &sims, cal, dev);
+    let cycles = sims.iter().map(|s| s.cycles as f64).sum::<f64>() / sims.len() as f64;
+    let latency_us = cycles / dev.clock_mhz;
+    InferenceCost {
+        power_mw: power.total_mw,
+        latency_us,
+        energy_uj: power.total_mw * latency_us * 1e-3,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qonnx::{read_str, test_model_json};
+
+    #[test]
+    fn cost_is_positive_and_consistent() {
+        let m = read_str(&test_model_json(2, 4)).unwrap();
+        let img: Vec<u8> = (0..m.input_shape.elems()).map(|i| (i * 31 % 256) as u8).collect();
+        let cost = estimate_inference_cost(
+            &m,
+            &FoldingConfig::default(),
+            &Calibration::default(),
+            &DeviceModel::kria_kv260(),
+            &[&img],
+        );
+        assert!(cost.power_mw > 0.0);
+        assert!(cost.latency_us > 0.0);
+        let want = cost.power_mw * cost.latency_us * 1e-3;
+        assert!((cost.energy_uj - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn more_images_average_deterministically() {
+        let m = read_str(&test_model_json(1, 2)).unwrap();
+        let a: Vec<u8> = vec![0; m.input_shape.elems()];
+        let b: Vec<u8> = (0..m.input_shape.elems()).map(|i| (i % 256) as u8).collect();
+        let fold = FoldingConfig::default();
+        let cal = Calibration::default();
+        let dev = DeviceModel::kria_kv260();
+        let once = estimate_inference_cost(&m, &fold, &cal, &dev, &[&a, &b]);
+        let again = estimate_inference_cost(&m, &fold, &cal, &dev, &[&a, &b]);
+        assert_eq!(once, again, "costing must be deterministic");
+        // latency is shape/folding-bound: identical across inputs
+        let solo = estimate_inference_cost(&m, &fold, &cal, &dev, &[&a]);
+        assert_eq!(solo.latency_us, once.latency_us);
+    }
+}

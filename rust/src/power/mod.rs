@@ -13,6 +13,7 @@
 //! activity depends on the trained weights and the data being processed).
 
 mod battery;
+mod cost;
 mod model;
 mod source;
 
@@ -20,5 +21,6 @@ pub use battery::{
     run_fixed, simulate_battery, simulate_battery_cycles, AdaptivePolicy, BatteryModel,
     BatteryPack, BatteryRun, CycleSimConfig, IDLE_PHASE,
 };
+pub use cost::{estimate_inference_cost, InferenceCost};
 pub use model::{estimate_power, PowerBreakdown};
 pub use source::EnergySource;

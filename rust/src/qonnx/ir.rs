@@ -148,6 +148,23 @@ impl QonnxModel {
             .sum()
     }
 
+    /// Compact per-layer precision signature, e.g. `a8w8-a8w4-w4` (conv
+    /// layers as `a<act_bits>w<weight_bits>`, the dense head as
+    /// `w<weight_bits>`). Used by the approximation explorer's reports to
+    /// show what a derived profile actually runs.
+    pub fn precision_signature(&self) -> String {
+        let parts: Vec<String> = self
+            .layers
+            .iter()
+            .filter_map(|l| match l {
+                Layer::Conv(c) => Some(format!("a{}w{}", c.act_bits, c.weight_bits)),
+                Layer::Dense(d) => Some(format!("w{}", d.weight_bits)),
+                _ => None,
+            })
+            .collect();
+        parts.join("-")
+    }
+
     /// Total MACs for one classification (28x28 input assumed by caller's
     /// shapes; computed from inferred shapes).
     pub fn total_macs(&self) -> usize {
@@ -163,5 +180,18 @@ impl QonnxModel {
             }
         }
         total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::qonnx::{read_str, test_model_json};
+
+    #[test]
+    fn precision_signature_names_every_parametric_layer() {
+        // tiny model: one conv (act 8, weight 4) + dense head (weight 4);
+        // pool/flatten carry no precision and are skipped.
+        let m = read_str(&test_model_json(1, 2)).unwrap();
+        assert_eq!(m.precision_signature(), "a8w4-w4");
     }
 }

@@ -1,0 +1,176 @@
+//! Integration: the approximation explorer's auto-generated ladder, served
+//! end to end by the sharded adaptive server.
+//!
+//! Everything here is seeded and wall-clock free (the PR's determinism
+//! contract): a synthetic base model + self-labelled calibration set give
+//! the same frontier on every run, and the server walk is driven by a
+//! drain-only battery on virtual time.
+
+use std::collections::BTreeMap;
+
+use onnx2hw::approx::{
+    config_name, derive_model, knobs_for, CalibSet, Explorer, ExplorerConfig, Frontier,
+};
+use onnx2hw::coordinator::{
+    AdaptiveServer, Backend, EnergyMonitor, ManagerConfig, ProfileManager, ServerConfig,
+};
+use onnx2hw::dataflow::{exec, FoldingConfig};
+use onnx2hw::json;
+use onnx2hw::qonnx::{random_model_json, read_str, QonnxModel, RandModelCfg};
+use onnx2hw::testkit::Rng;
+
+const MODEL_SEED: u64 = 0xD1CE;
+const CALIB_SEED: u64 = 0xCAB;
+const CALIB_N: usize = 48;
+
+fn base_model() -> QonnxModel {
+    let cfg = RandModelCfg {
+        side: 8,
+        cin: 1,
+        blocks: vec![(3, 8, 6), (6, 8, 6)],
+        classes: 4,
+    };
+    read_str(&random_model_json(&cfg, &mut Rng::new(MODEL_SEED))).expect("base model")
+}
+
+/// High parallelism keeps the per-candidate actor simulation cheap so the
+/// whole exploration stays test-suite friendly.
+fn explorer_cfg() -> ExplorerConfig {
+    ExplorerConfig {
+        fold: FoldingConfig {
+            conv1_pe: 64,
+            conv1_simd: 64,
+            conv2_pe: 64,
+            conv2_simd: 576,
+            dense_pe: 16,
+            dense_simd: 64,
+            fifo_depth: 8,
+        },
+        power_images: 1,
+        uniform_rungs: 3,
+        ..Default::default()
+    }
+}
+
+fn explore() -> (QonnxModel, CalibSet, Frontier) {
+    let model = base_model();
+    let calib = CalibSet::self_labeled(&model, CALIB_N, CALIB_SEED);
+    let mut explorer = Explorer::new(&model, &calib, explorer_cfg());
+    let frontier = explorer.explore();
+    (model, calib, frontier)
+}
+
+#[test]
+fn explorer_runs_are_reproducible() {
+    let (model, calib, first) = explore();
+    let mut explorer = Explorer::new(&model, &calib, explorer_cfg());
+    let second = explorer.explore();
+    assert_eq!(first.len(), second.len(), "same seeds must give the same ladder");
+    for (a, b) in first.points.iter().zip(&second.points) {
+        assert_eq!(a.config, b.config);
+        assert_eq!(a.accuracy, b.accuracy);
+        assert_eq!(a.energy_uj, b.energy_uj);
+    }
+}
+
+#[test]
+fn frontier_covers_baseline_and_round_trips() {
+    let (model, calib, frontier) = explore();
+    assert!(
+        frontier.len() >= 4,
+        "expected a multi-rung ladder, got {} rungs",
+        frontier.len()
+    );
+    // the top rung carries the fidelity-exact accuracy (the root config is
+    // always in the archive, so the ladder tops out at 1.0)
+    assert_eq!(frontier.points[0].accuracy, 1.0);
+    // seeded uniform baseline rungs are always weakly covered
+    let mut explorer = Explorer::new(&model, &calib, explorer_cfg());
+    explorer.explore();
+    for b in explorer.uniform_baseline() {
+        assert!(frontier.weakly_dominates(b.accuracy, b.energy_uj, b.latency_us));
+    }
+    // JSON round trip through the vendored json module, models re-derived
+    let text = json::to_string_pretty(&frontier.to_json());
+    let back = Frontier::from_json(&json::parse(&text).unwrap(), &model).unwrap();
+    assert_eq!(back.len(), frontier.len());
+    for (a, b) in frontier.points.iter().zip(&back.points) {
+        assert_eq!(a.model, b.model);
+        assert_eq!(a.energy_uj, b.energy_uj);
+    }
+}
+
+#[test]
+fn derived_rungs_match_their_configs() {
+    let (model, _, frontier) = explore();
+    for p in &frontier.points {
+        assert_eq!(p.name, config_name(&p.config));
+        assert_eq!(p.model, derive_model(&model, &p.config, &p.name));
+        assert_eq!(p.config.len(), knobs_for(&model).len());
+    }
+}
+
+#[test]
+fn coordinator_serves_the_auto_generated_ladder_bit_exactly() {
+    // The acceptance path: explorer frontier -> ProfileManager::from_frontier
+    // + Backend::sim_from_models -> AdaptiveServer. Under a drain-only
+    // battery the shard must walk down the ladder monotonically and every
+    // reply must be bit-exact vs the scalar oracle of its *selected* rung.
+    let (_, calib, frontier) = explore();
+    let models = frontier.models();
+    let oracle: BTreeMap<String, QonnxModel> = models.clone();
+    let manager = ProfileManager::from_frontier(
+        ManagerConfig {
+            low_energy_threshold: 0.6,
+            hysteresis: 0.01,
+            accuracy_floor: 0.0,
+        },
+        &frontier,
+    );
+    let factory = move || Ok(Backend::sim_from_models(models.clone()));
+    const REQUESTS: usize = 600;
+    let top = &frontier.points[0];
+    // sized to deplete mid-run: the walk is forced through every band
+    let capacity_j = top.power_mw * 1e-3 * top.latency_us * 1e-6 * REQUESTS as f64 / 4.0;
+    let srv = AdaptiveServer::start(
+        ServerConfig::default(),
+        factory,
+        manager,
+        EnergyMonitor::new(capacity_j),
+    )
+    .expect("server");
+
+    let rung_of = |name: &str| frontier.points.iter().position(|p| p.name == name).unwrap();
+    let mut prev = 0usize;
+    let mut distinct: Vec<String> = Vec::new();
+    for i in 0..REQUESTS {
+        let img = &calib.images[i % calib.images.len()];
+        let resp = srv.classify(img.clone()).expect("reply lost");
+        let want: Vec<f32> = exec::execute(&oracle[&resp.profile], img)
+            .iter()
+            .map(|&v| v as f32)
+            .collect();
+        assert_eq!(
+            resp.logits, want,
+            "request {i}: reply not bit-exact vs rung '{}'",
+            resp.profile
+        );
+        let rung = rung_of(&resp.profile);
+        assert!(rung >= prev, "drain-only walk went back up: {prev} -> {rung}");
+        prev = rung;
+        if distinct.last() != Some(&resp.profile) {
+            distinct.push(resp.profile);
+        }
+    }
+    assert!(
+        distinct.len() >= 3,
+        "expected the walk to serve >= 3 distinct rungs, got {distinct:?}"
+    );
+    assert!(srv.shard_energy[0].depleted(), "battery must deplete mid-run");
+    assert_eq!(
+        prev,
+        frontier.len() - 1,
+        "a dead battery must end on the cheapest rung"
+    );
+    srv.shutdown();
+}
