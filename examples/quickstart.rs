@@ -21,6 +21,7 @@ fn main() -> Result<()> {
     // 2. Classify a few test images.
     let n = 32.min(testset.len());
     let mut correct = 0;
+    #[allow(clippy::disallowed_methods)] // wall-clock: per-image timing demo
     let t0 = std::time::Instant::now();
     for i in 0..n {
         let (_logits, pred) = engine.classify_one(profile, testset.image(i))?;

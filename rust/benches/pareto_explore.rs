@@ -34,7 +34,9 @@ use onnx2hw::coordinator::{
 };
 use onnx2hw::dataflow::{exec, BatchExecutor};
 use onnx2hw::json::{self, Value};
-use onnx2hw::qonnx::{random_model_json, read_str, QonnxModel, RandModelCfg};
+use onnx2hw::qonnx::{
+    prune_stress_model_json, random_model_json, read_str, QonnxModel, RandModelCfg,
+};
 use onnx2hw::testkit::Rng;
 
 /// Seeds are the determinism contract: same seeds -> same model, same
@@ -75,6 +77,49 @@ fn assert_rung_bit_exact(model: &QonnxModel, calib: &CalibSet) {
             );
         }
     }
+}
+
+/// Static pre-pruning must be a pure speedup: on a model whose knob
+/// lattice has a large illegal region (bit-drops that zero the dense
+/// head), the pruned and unpruned explorers must emit byte-identical
+/// frontier JSON while the pruned run evaluates strictly fewer
+/// candidates — `evaluations() + pruned_static()` matches the unpruned
+/// run's `evaluations()` exactly.
+fn assert_pruning_equivalence() {
+    let model = read_str(&prune_stress_model_json()).expect("stress model");
+    let calib = CalibSet::self_labeled(&model, 16, CALIB_SEED);
+    let run = |static_prune: bool| {
+        let mut ex = Explorer::new(
+            &model,
+            &calib,
+            ExplorerConfig {
+                power_images: 1,
+                uniform_rungs: 2,
+                static_prune,
+                ..Default::default()
+            },
+        );
+        let f = ex.explore();
+        (json::to_string_pretty(&f.to_json()), ex.evaluations(), ex.pruned_static())
+    };
+    let (pruned_json, pruned_evals, pruned_n) = run(true);
+    let (full_json, full_evals, full_n) = run(false);
+    assert_eq!(pruned_json, full_json, "static pruning changed the frontier");
+    assert_eq!(full_n, 0, "the unpruned run must not prune anything");
+    assert!(pruned_n > 0, "the stress lattice must exercise the pruner");
+    assert!(
+        pruned_evals < full_evals,
+        "pruning must skip evaluations ({pruned_evals} vs {full_evals})"
+    );
+    assert_eq!(
+        pruned_evals + pruned_n,
+        full_evals,
+        "pruned evaluations + pruned configs must equal the unpruned evaluations"
+    );
+    println!(
+        "static pruning gate: {pruned_evals} evaluations + {pruned_n} pruned == \
+         {full_evals} unpruned, frontier byte-identical"
+    );
 }
 
 struct ServeResult {
@@ -183,6 +228,7 @@ fn main() {
             ..Default::default()
         },
     );
+    #[allow(clippy::disallowed_methods)] // wall-clock: reported explore time
     let t0 = Instant::now();
     let frontier = explorer.explore();
     let explore_s = t0.elapsed().as_secs_f64();
@@ -241,6 +287,8 @@ fn main() {
     let back = Frontier::from_json(&reparsed, &model).expect("round trip load");
     assert_eq!(back.len(), frontier.len(), "frontier JSON round trip lost rungs");
 
+    assert_pruning_equivalence();
+
     let serve = serve_ladder(&frontier, &calib, requests);
     println!(
         "\nserved {} requests on the auto-generated ladder: rung walk {:?} \
@@ -253,6 +301,7 @@ fn main() {
             ("bench", "pareto_explore".into()),
             ("calib_images", CALIB_N.into()),
             ("evaluations", explorer.evaluations().into()),
+            ("candidates_pruned_static", explorer.pruned_static().into()),
             ("explore_seconds", explore_s.into()),
             ("frontier", frontier_json),
             ("baseline", Value::Array(baseline_rows)),

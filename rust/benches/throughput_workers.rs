@@ -113,6 +113,7 @@ fn run_one(
     let srv = AdaptiveServer::start(cfg, factory, manager, energy).expect("server");
 
     let all_ids = Arc::new(Mutex::new(Vec::<u64>::new()));
+    #[allow(clippy::disallowed_methods)] // wall-clock: measured throughput
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
     for c in 0..CLIENTS {

@@ -1,0 +1,73 @@
+//! Ping/pong arena planning: exact high-water sizes of the two activation
+//! buffers from a liveness walk over the inferred shapes.
+//!
+//! This is the single source of truth for scratch sizing — the scalar
+//! executor ([`crate::dataflow::exec`]) and the packed batch engine
+//! ([`crate::dataflow::kernels`]) both derive their buffers from it, so the
+//! two paths can never disagree about where an activation lives or how big
+//! a buffer must be.
+
+use crate::qonnx::{infer_shapes, Layer, QonnxModel, TensorShape};
+
+/// The double-buffer plan of one model: per-layer tensor shapes plus the
+/// high-water element counts of the two ping/pong arenas.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArenaPlan {
+    /// `layers.len() + 1` shapes: input, then one per layer output.
+    pub shapes: Vec<TensorShape>,
+    /// High-water element count of buffer A (holds the input first).
+    pub a_elems: usize,
+    /// High-water element count of buffer B.
+    pub b_elems: usize,
+}
+
+impl ArenaPlan {
+    /// Walk the pipeline tracking which buffer holds each activation:
+    /// flatten is a no-op on the HWC layout (no buffer flip), every other
+    /// layer writes the opposite buffer. Each buffer is sized by the widest
+    /// tensor it will *actually* hold — not the global max, which
+    /// over-allocates whenever the widest activation lands in only one of
+    /// the two.
+    pub fn of(model: &QonnxModel) -> ArenaPlan {
+        let shapes = infer_shapes(model);
+        let mut a_elems = shapes[0].elems();
+        let mut b_elems = 0;
+        let mut in_a = true;
+        for (i, layer) in model.layers.iter().enumerate() {
+            match layer {
+                Layer::Flatten { .. } => {}
+                Layer::Conv(_) | Layer::Pool(_) | Layer::Dense(_) => {
+                    in_a = !in_a;
+                    let elems = shapes[i + 1].elems();
+                    if in_a {
+                        a_elems = a_elems.max(elems);
+                    } else {
+                        b_elems = b_elems.max(elems);
+                    }
+                }
+            }
+        }
+        ArenaPlan {
+            shapes,
+            a_elems,
+            b_elems,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qonnx::{read_str, test_model_json};
+
+    #[test]
+    fn plan_matches_the_documented_tiny_walk() {
+        // tiny(1, 2): input 4x4x1 (16, A) -> conv 4x4x2 (32, B) -> pool
+        // 2x2x2 (8, A) -> flatten (no flip) -> dense 3 (B).
+        let m = read_str(&test_model_json(1, 2)).unwrap();
+        let plan = ArenaPlan::of(&m);
+        assert_eq!(plan.shapes.len(), m.layers.len() + 1);
+        assert_eq!(plan.a_elems, 16);
+        assert_eq!(plan.b_elems, 32);
+    }
+}

@@ -1,0 +1,198 @@
+//! The abstract domain: per-channel integer intervals, and the transfer
+//! functions of the QONNX layer set.
+//!
+//! Everything is computed in `i128` so the *analysis* can never overflow
+//! while reasoning about computations that might; results saturate into
+//! [`Interval`] (i64 endpoints) only after the overflow rules have seen the
+//! exact values.
+
+use crate::qonnx::{ConvLayer, DenseLayer};
+
+/// Inclusive integer interval `[lo, hi]` — the abstract value of one
+/// activation channel or accumulator lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interval {
+    pub lo: i64,
+    pub hi: i64,
+}
+
+impl Interval {
+    pub fn new(lo: i64, hi: i64) -> Self {
+        debug_assert!(lo <= hi, "interval [{lo}, {hi}] is empty");
+        Interval { lo, hi }
+    }
+
+    pub fn contains(&self, v: i64) -> bool {
+        self.lo <= v && v <= self.hi
+    }
+
+    /// Degenerate interval: the value is statically known.
+    pub fn is_point(&self) -> bool {
+        self.lo == self.hi
+    }
+}
+
+pub(crate) fn saturate(v: i128) -> i64 {
+    v.clamp(i64::MIN as i128, i64::MAX as i128) as i64
+}
+
+/// Exact worst-case accumulator bounds of one conv/dense layer, before any
+/// saturation: per-output-channel value interval, plus the absolute-sum
+/// bound that proves no *partial* accumulation (any term order) can leave
+/// `i64`.
+pub(crate) struct AccBounds {
+    /// Per output channel: exact `[lo, hi]` of the final accumulator.
+    pub acc: Vec<(i128, i128)>,
+    /// Per output channel: `|bias| + sum of max |term endpoint|` — an upper
+    /// bound on the magnitude of every partial sum in every order.
+    pub abs_sum: Vec<i128>,
+    /// All products and per-channel intervals fit `i32` (conv only): the
+    /// packed 32-bit MAC path is provably overflow-free.
+    pub narrow: bool,
+}
+
+/// Transfer function of a 3x3 SAME conv, `input` = per-input-channel
+/// activation intervals. Each tap's product range is widened with 0 because
+/// SAME padding feeds zeros at the borders (and the executors skip
+/// zero-valued activations), so every per-tap interval contains 0 — which
+/// also makes every partial accumulation stay inside the final interval.
+pub(crate) fn conv_bounds(c: &ConvLayer, input: &[Interval]) -> AccBounds {
+    assert_eq!(input.len(), c.cin, "conv '{}' input channel mismatch", c.name);
+    let i32max = i32::MAX as i128;
+    let mut acc = Vec::with_capacity(c.cout);
+    let mut abs_sum = Vec::with_capacity(c.cout);
+    let mut narrow = true;
+    for co in 0..c.cout {
+        let bias = c.b_codes[co] as i128;
+        let (mut lo, mut hi) = (bias, bias);
+        let mut mag = bias.abs();
+        for tap in 0..9 * c.cin {
+            let w = c.w_codes[tap * c.cout + co] as i128;
+            let iv = input[tap % c.cin];
+            let (a, b) = (w * iv.lo as i128, w * iv.hi as i128);
+            let tl = 0.min(a).min(b);
+            let th = 0.max(a).max(b);
+            lo += tl;
+            hi += th;
+            mag += (-tl).max(th);
+            if -tl > i32max || th > i32max {
+                narrow = false; // a single product can overflow an i32 MAC
+            }
+        }
+        if lo < i32::MIN as i128 || hi > i32max {
+            narrow = false;
+        }
+        acc.push((lo, hi));
+        abs_sum.push(mag);
+    }
+    AccBounds {
+        acc,
+        abs_sum,
+        narrow,
+    }
+}
+
+/// Transfer function of the dense head: input feature `f` carries the
+/// interval of flattened channel `f % input.len()` (HWC layout). No 0
+/// widening here — dense layers see no padding, and a skipped zero
+/// activation can only occur when 0 is already inside the input interval.
+pub(crate) fn dense_bounds(d: &DenseLayer, input: &[Interval]) -> AccBounds {
+    assert!(!input.is_empty(), "dense '{}' has no input intervals", d.name);
+    assert_eq!(
+        d.in_features % input.len(),
+        0,
+        "dense '{}' features do not tile the input channels",
+        d.name
+    );
+    let k_total = d.out_features;
+    let mut acc = Vec::with_capacity(k_total);
+    let mut abs_sum = Vec::with_capacity(k_total);
+    for k in 0..k_total {
+        let bias = d.b_codes[k] as i128;
+        let (mut lo, mut hi) = (bias, bias);
+        let mut mag = bias.abs();
+        for f in 0..d.in_features {
+            let w = d.w_codes[f * k_total + k] as i128;
+            let iv = input[f % input.len()];
+            let (a, b) = (w * iv.lo as i128, w * iv.hi as i128);
+            let (tl, th) = (a.min(b), a.max(b));
+            lo += tl;
+            hi += th;
+            mag += tl.abs().max(th.abs());
+        }
+        acc.push((lo, hi));
+        abs_sum.push(mag);
+    }
+    AccBounds {
+        acc,
+        abs_sum,
+        narrow: false, // dense always accumulates in i64
+    }
+}
+
+/// Requantization endpoints: `q(v) = clamp((v*mult + half) >> shift, 0,
+/// 2^act_bits - 1)`. For `mult >= 0` the map is monotone in the
+/// accumulator, so the image of `[lo, hi]` is `[q(lo), q(hi)]`; a negative
+/// multiplier flips the endpoints. Exact in `i128` — the caller checks the
+/// executor's `i64` product separately ([`super::RULE_REQUANT_OVERFLOW`]).
+pub(crate) fn requant_interval(
+    lo: i128,
+    hi: i128,
+    mult: i64,
+    shift: i64,
+    act_bits: u32,
+) -> Interval {
+    let qmax = if act_bits >= 63 {
+        i64::MAX as i128
+    } else {
+        (1i128 << act_bits) - 1
+    };
+    let half = if shift > 0 { 1i128 << (shift - 1) } else { 0 };
+    let q = |v: i128| ((v * mult as i128 + half) >> shift).clamp(0, qmax);
+    let (a, b) = (q(lo), q(hi));
+    Interval::new(a.min(b) as i64, a.max(b) as i64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::exec;
+
+    #[test]
+    fn interval_basics() {
+        let iv = Interval::new(-3, 7);
+        assert!(iv.contains(-3) && iv.contains(0) && iv.contains(7));
+        assert!(!iv.contains(8) && !iv.contains(-4));
+        assert!(!iv.is_point());
+        assert!(Interval::new(5, 5).is_point());
+    }
+
+    #[test]
+    fn requant_interval_matches_the_executor_on_endpoints_and_interior() {
+        // The abstract requant must agree with exec::requant pointwise and
+        // bound every interior accumulator (monotonicity).
+        for &(lo, hi, mult, shift, bits) in &[
+            (-5000i64, 9000i64, 16384i64, 15i64, 8u32),
+            (0, 6885, 1, 11, 8),
+            (-100, 100, 3, 0, 4),
+            (i32::MAX as i64, i32::MAX as i64 + 9, 7, 3, 16),
+        ] {
+            let iv = requant_interval(lo as i128, hi as i128, mult, shift, bits);
+            for acc in [lo, lo + (hi - lo) / 2, hi] {
+                let q = exec::requant(acc, mult, shift, bits);
+                assert!(
+                    iv.contains(q),
+                    "requant({acc}, {mult}, {shift}, {bits}) = {q} outside {iv:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn negative_mult_flips_endpoints() {
+        let iv = requant_interval(0, 100, -2, 0, 16);
+        // q(0) = 0, q(100) = -200 -> clamp 0; the interval stays ordered
+        assert!(iv.lo <= iv.hi);
+        assert!(iv.contains(0));
+    }
+}

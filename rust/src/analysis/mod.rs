@@ -1,0 +1,498 @@
+//! Static IR verifier: abstract interpretation over the QONNX pipeline.
+//!
+//! One pass propagates per-channel integer value intervals through the
+//! model (requant clamps are the transfer functions) and proves, per layer:
+//!
+//! * **Accumulator width** — whether every conv product and partial sum
+//!   provably fits `i32` (the packed engine's narrow MAC path) and whether
+//!   the worst case fits `i64` at all ([`RULE_ACC_OVERFLOW`]).
+//! * **Requant legality** — `(mult, shift)` products applied to the
+//!   worst-case accumulator stay inside `i64` ([`RULE_REQUANT_OVERFLOW`]).
+//! * **Output liveness** — a classifier whose logits are all statically
+//!   constant can never depend on its input ([`RULE_CONST_OUTPUT`]); this
+//!   is how over-aggressive bit drops that zero a whole tensor surface.
+//! * **Arena sizing** — exact ping/pong high-water marks ([`ArenaPlan`]).
+//!
+//! The pass is the single source of truth for its consumers: the packed
+//! kernels take their narrow/wide accumulator choice from it, the scratch
+//! planners take the arena sizes, the approximation explorer statically
+//! rejects illegal knob vectors before paying for an evaluation
+//! ([`check_config`]), frontier loading validates untrusted configs through
+//! it, and `onnx2hw check` surfaces it on the command line.
+//!
+//! Soundness contract (property-tested against the scalar oracle): for any
+//! input image, every activation and accumulator the executor observes lies
+//! inside the analysis interval of its channel, and a layer proven narrow
+//! never sees `|acc| > i32::MAX`.
+
+mod arena;
+mod interval;
+
+use std::fmt;
+
+use crate::qonnx::{Layer, QonnxModel};
+
+pub use arena::ArenaPlan;
+pub use interval::Interval;
+
+use interval::{conv_bounds, dense_bounds, requant_interval, saturate};
+
+/// Requant `(mult, shift)` can overflow the executor's `i64` arithmetic, or
+/// the shift is outside the supported `[0, 62]` range.
+pub const RULE_REQUANT_OVERFLOW: &str = "requant-overflow";
+/// A worst-case (partial) accumulator can leave `i64`.
+pub const RULE_ACC_OVERFLOW: &str = "acc-overflow";
+/// Every logit is statically constant: the classifier cannot depend on its
+/// input (typically a bit-drop zeroed an entire weight tensor).
+pub const RULE_CONST_OUTPUT: &str = "const-output";
+/// A knob vector's length does not match the base model's knob count.
+pub const RULE_CONFIG_ARITY: &str = "config-arity";
+/// A knob value exceeds the layer's headroom.
+pub const RULE_CONFIG_RANGE: &str = "config-range";
+/// Conv activation width above 31 bits: the packed engine falls back to the
+/// scalar path (legal, but the fast path is lost).
+pub const RULE_ACT_WIDTH: &str = "act-width";
+/// A dense layer that is not the final layer: unsupported by the packed
+/// plan (scalar fallback).
+pub const RULE_DENSE_NONTERMINAL: &str = "dense-nonterminal";
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+/// One structured finding of the verifier.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub severity: Severity,
+    /// Stable rule code (one of the `RULE_*` constants).
+    pub rule: &'static str,
+    /// Index into `model.layers` when the rule anchors to a layer.
+    pub layer: Option<usize>,
+    /// Name of the offending layer or knob ("" for model-level rules).
+    pub layer_name: String,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let sev = match self.severity {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        };
+        write!(f, "{sev}[{}]", self.rule)?;
+        if let Some(i) = self.layer {
+            write!(f, " layer {i}")?;
+        }
+        if !self.layer_name.is_empty() {
+            write!(f, " '{}'", self.layer_name)?;
+        }
+        write!(f, ": {}", self.message)
+    }
+}
+
+/// Per-layer facts proven by [`analyze`], aligned with `model.layers`.
+#[derive(Debug, Clone)]
+pub struct LayerFacts {
+    pub name: String,
+    /// Pre-requant accumulator interval per output channel (conv), or raw
+    /// logit interval per class (dense); empty for pool/flatten.
+    pub acc: Vec<Interval>,
+    /// Post-layer activation interval per output channel.
+    pub act: Vec<Interval>,
+    /// Conv layers only: the `i32` MAC path is provably overflow-free.
+    pub narrow: Option<bool>,
+}
+
+/// Result of one [`analyze`] pass.
+#[derive(Debug, Clone)]
+pub struct Analysis {
+    pub facts: Vec<LayerFacts>,
+    /// Final dense logit intervals (empty if the model has no dense head).
+    pub logits: Vec<Interval>,
+    /// Narrow-accumulator verdict per conv layer, in layer order.
+    pub conv_narrow: Vec<bool>,
+    pub arena: ArenaPlan,
+    pub diags: Vec<Diagnostic>,
+}
+
+impl Analysis {
+    pub fn errors(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diags.iter().filter(|d| d.severity == Severity::Error)
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.errors().next().is_some()
+    }
+}
+
+/// Abstract-interpret `model` from the input byte range down to the logits.
+pub fn analyze(model: &QonnxModel) -> Analysis {
+    let arena = ArenaPlan::of(model);
+    let mut diags = Vec::new();
+    let mut facts = Vec::with_capacity(model.layers.len());
+    let mut conv_narrow = Vec::new();
+    let mut logits: Vec<Interval> = Vec::new();
+    // Input codes arrive as u8, further clipped by the declared precision.
+    let in_max = ((1i64 << model.input_bits.min(8)) - 1).min(255);
+    let mut acts = vec![Interval::new(0, in_max); model.input_shape.c];
+    let last = model.layers.len().saturating_sub(1);
+    for (i, layer) in model.layers.iter().enumerate() {
+        match layer {
+            Layer::Conv(c) => {
+                let b = conv_bounds(c, &acts);
+                check_i64_overflow(&mut diags, i, &c.name, &b.abs_sum);
+                if c.act_bits > 31 {
+                    diags.push(Diagnostic {
+                        severity: Severity::Warning,
+                        rule: RULE_ACT_WIDTH,
+                        layer: Some(i),
+                        layer_name: c.name.clone(),
+                        message: format!(
+                            "activation width {} > 31 bits: packed engine falls back to scalar",
+                            c.act_bits
+                        ),
+                    });
+                }
+                let qmax = if c.act_bits >= 63 {
+                    i64::MAX
+                } else {
+                    (1i64 << c.act_bits) - 1
+                };
+                let mut out = Vec::with_capacity(c.cout);
+                for (co, &(lo, hi)) in b.acc.iter().enumerate() {
+                    let (mult, shift) = (c.mult[co], c.shift[co]);
+                    if !(0..=62).contains(&shift) {
+                        let d = Diagnostic {
+                            severity: Severity::Error,
+                            rule: RULE_REQUANT_OVERFLOW,
+                            layer: Some(i),
+                            layer_name: c.name.clone(),
+                            message: format!(
+                                "channel {co}: shift {shift} outside the supported range [0, 62]"
+                            ),
+                        };
+                        push_once(&mut diags, d);
+                        out.push(Interval::new(0, qmax));
+                        continue;
+                    }
+                    let half = if shift > 0 { 1i128 << (shift - 1) } else { 0 };
+                    for endpoint in [lo, hi] {
+                        let product = endpoint * mult as i128 + half;
+                        if product < i64::MIN as i128 || product > i64::MAX as i128 {
+                            let d = Diagnostic {
+                                severity: Severity::Error,
+                                rule: RULE_REQUANT_OVERFLOW,
+                                layer: Some(i),
+                                layer_name: c.name.clone(),
+                                message: format!(
+                                    "channel {co}: worst-case accumulator {endpoint} * mult {mult} \
+                                     overflows i64 during requantization"
+                                ),
+                            };
+                            push_once(&mut diags, d);
+                        }
+                    }
+                    if mult < 0 {
+                        // Non-monotone map; fall back to the full clamp range.
+                        out.push(Interval::new(0, qmax));
+                    } else {
+                        out.push(requant_interval(lo, hi, mult, shift, c.act_bits));
+                    }
+                }
+                conv_narrow.push(b.narrow);
+                facts.push(LayerFacts {
+                    name: c.name.clone(),
+                    acc: b
+                        .acc
+                        .iter()
+                        .map(|&(l, h)| Interval::new(saturate(l), saturate(h)))
+                        .collect(),
+                    act: out.clone(),
+                    narrow: Some(b.narrow),
+                });
+                acts = out;
+            }
+            Layer::Pool(p) => {
+                // Max-pool is channel-wise and monotone: intervals pass through.
+                facts.push(LayerFacts {
+                    name: p.name.clone(),
+                    acc: Vec::new(),
+                    act: acts.clone(),
+                    narrow: None,
+                });
+            }
+            Layer::Flatten { name } => {
+                facts.push(LayerFacts {
+                    name: name.clone(),
+                    acc: Vec::new(),
+                    act: acts.clone(),
+                    narrow: None,
+                });
+            }
+            Layer::Dense(d) => {
+                if i != last {
+                    diags.push(Diagnostic {
+                        severity: Severity::Warning,
+                        rule: RULE_DENSE_NONTERMINAL,
+                        layer: Some(i),
+                        layer_name: d.name.clone(),
+                        message: "dense layer is not terminal: packed engine falls back to scalar"
+                            .to_string(),
+                    });
+                }
+                let b = dense_bounds(d, &acts);
+                check_i64_overflow(&mut diags, i, &d.name, &b.abs_sum);
+                let out: Vec<Interval> = b
+                    .acc
+                    .iter()
+                    .map(|&(l, h)| Interval::new(saturate(l), saturate(h)))
+                    .collect();
+                if i == last && !out.is_empty() && out.iter().all(|iv| iv.is_point()) {
+                    diags.push(Diagnostic {
+                        severity: Severity::Error,
+                        rule: RULE_CONST_OUTPUT,
+                        layer: Some(i),
+                        layer_name: d.name.clone(),
+                        message: "every logit is statically constant: the classifier cannot \
+                                  depend on its input"
+                            .to_string(),
+                    });
+                }
+                logits = out.clone();
+                facts.push(LayerFacts {
+                    name: d.name.clone(),
+                    acc: out.clone(),
+                    act: out.clone(),
+                    narrow: None,
+                });
+                acts = out;
+            }
+        }
+    }
+    Analysis {
+        facts,
+        logits,
+        conv_narrow,
+        arena,
+        diags,
+    }
+}
+
+/// Emit [`RULE_ACC_OVERFLOW`] if any channel's absolute partial-sum bound
+/// can leave `i64` (one diagnostic per layer — the first offending channel).
+fn check_i64_overflow(diags: &mut Vec<Diagnostic>, layer: usize, name: &str, abs_sum: &[i128]) {
+    for (co, &mag) in abs_sum.iter().enumerate() {
+        if mag > i64::MAX as i128 {
+            diags.push(Diagnostic {
+                severity: Severity::Error,
+                rule: RULE_ACC_OVERFLOW,
+                layer: Some(layer),
+                layer_name: name.to_string(),
+                message: format!(
+                    "channel {co}: worst-case partial sum magnitude {mag} exceeds i64"
+                ),
+            });
+            return;
+        }
+    }
+}
+
+/// Deduplicate per-layer diagnostics: keep the first finding per
+/// (rule, layer) pair so a 64-channel layer reports once, not 64 times.
+fn push_once(diags: &mut Vec<Diagnostic>, d: Diagnostic) {
+    if !diags.iter().any(|x| x.rule == d.rule && x.layer == d.layer) {
+        diags.push(d);
+    }
+}
+
+/// Statically validate a knob vector against `base`: arity and per-knob
+/// range first (so [`crate::approx::derive_model`] can never panic on
+/// checked input), then the full abstract-interpretation pass over the
+/// derived model. Returns every diagnostic; the config is legal iff none is
+/// an error.
+pub fn check_config(base: &QonnxModel, config: &[u32]) -> Vec<Diagnostic> {
+    let knobs = crate::approx::knobs_for(base);
+    if config.len() != knobs.len() {
+        return vec![Diagnostic {
+            severity: Severity::Error,
+            rule: RULE_CONFIG_ARITY,
+            layer: None,
+            layer_name: String::new(),
+            message: format!(
+                "config has {} knobs, the base model has {}",
+                config.len(),
+                knobs.len()
+            ),
+        }];
+    }
+    let mut diags = Vec::new();
+    for (i, (v, knob)) in config.iter().zip(&knobs).enumerate() {
+        if *v > knob.max {
+            diags.push(Diagnostic {
+                severity: Severity::Error,
+                rule: RULE_CONFIG_RANGE,
+                layer: None,
+                layer_name: knob.layer.clone(),
+                message: format!(
+                    "knob {i} ({:?} of '{}'): drop {v} exceeds headroom {}",
+                    knob.kind, knob.layer, knob.max
+                ),
+            });
+        }
+    }
+    if !diags.is_empty() {
+        return diags;
+    }
+    analyze(&crate::approx::derive_model(base, config, "check")).diags
+}
+
+/// `true` iff [`check_config`] reports no error diagnostics.
+pub fn config_is_legal(base: &QonnxModel, config: &[u32]) -> bool {
+    !check_config(base, config)
+        .iter()
+        .any(|d| d.severity == Severity::Error)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qonnx::{prune_stress_model_json, read_str, test_model_json, QonnxModel};
+
+    fn tiny(cin: usize, cout: usize) -> QonnxModel {
+        read_str(&test_model_json(cin, cout)).unwrap()
+    }
+
+    fn stress() -> QonnxModel {
+        read_str(&prune_stress_model_json()).unwrap()
+    }
+
+    #[test]
+    fn tiny_model_is_clean_and_narrow_with_exact_logit_bounds() {
+        // Cross-checked against the Python lattice scan: tiny(2, 3) logits
+        // are [-3060, 0], [1, 1], [-1, 3059] and the conv is i32-narrow.
+        let a = analyze(&tiny(2, 3));
+        assert!(!a.has_errors(), "diags: {:?}", a.diags);
+        assert_eq!(a.conv_narrow, vec![true]);
+        assert_eq!(a.logits.len(), 3);
+        assert_eq!((a.logits[0].lo, a.logits[0].hi), (-3060, 0));
+        assert_eq!((a.logits[1].lo, a.logits[1].hi), (1, 1));
+        assert_eq!((a.logits[2].lo, a.logits[2].hi), (-1, 3059));
+        assert_eq!(a.facts.len(), 4);
+        assert_eq!(a.facts[0].narrow, Some(true));
+        assert_eq!(a.facts[1].narrow, None);
+    }
+
+    #[test]
+    fn dense_weight_wipeout_is_a_const_output_error() {
+        // Dropping 2 of the dense head's 4 weight bits leaves wmax = 1 and
+        // rounds every {-1, 0, 1} code to 0: the logits collapse to the
+        // rescaled biases. The checker must prove the classifier dead.
+        let diags = check_config(&tiny(2, 3), &[0, 0, 2]);
+        assert!(
+            diags.iter().any(|d| d.rule == RULE_CONST_OUTPUT && d.severity == Severity::Error),
+            "expected const-output, got {diags:?}"
+        );
+        let msg = diags.iter().find(|d| d.rule == RULE_CONST_OUTPUT).unwrap().to_string();
+        assert!(msg.contains("dense"), "diagnostic must name the layer: {msg}");
+    }
+
+    #[test]
+    fn arity_and_range_violations_are_typed() {
+        let base = tiny(1, 2);
+        let diags = check_config(&base, &[0, 0]);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].rule, RULE_CONFIG_ARITY);
+
+        let diags = check_config(&base, &[9, 0, 0]);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].rule, RULE_CONFIG_RANGE);
+        assert_eq!(diags[0].layer_name, "conv1");
+        assert!(diags[0].to_string().contains("conv1"));
+    }
+
+    #[test]
+    fn stress_model_region_matches_the_python_scan() {
+        // prune_stress_model_json's legal region (verified exhaustively by
+        // the offline lattice scan): k <= 2, j <= j_alive[k], dk <= 1 with
+        // j_alive = {0: 2, 1: 3, 2: 3}.
+        let m = stress();
+        let a = analyze(&m);
+        assert!(!a.has_errors(), "root must be legal: {:?}", a.diags);
+        assert_eq!(a.conv_narrow, vec![true]);
+        assert_eq!((a.logits[0].lo, a.logits[0].hi), (-24, 0));
+        assert_eq!((a.logits[1].lo, a.logits[1].hi), (1, 1));
+        assert_eq!((a.logits[2].lo, a.logits[2].hi), (-1, 23));
+
+        let legal = |cfg: &[u32]| config_is_legal(&m, cfg);
+        assert!(legal(&[0, 0, 0]));
+        assert!(legal(&[1, 1, 1]), "uniform(1) must be legal");
+        assert!(legal(&[1, 3, 0]));
+        assert!(legal(&[2, 3, 1]));
+        assert!(!legal(&[2, 2, 2]), "uniform(2) must be illegal (dk = 2)");
+        assert!(!legal(&[3, 0, 0]), "k = 3 wipes the conv weights");
+        assert!(!legal(&[0, 3, 0]), "j = 3 starves the dense head at k = 0");
+        assert!(!legal(&[6, 6, 2]), "the lattice bottom is illegal");
+    }
+
+    #[test]
+    fn shift_out_of_range_is_a_requant_error() {
+        let mut m = tiny(1, 2);
+        if let Layer::Conv(c) = &mut m.layers[0] {
+            c.shift[0] = 63;
+        }
+        let a = analyze(&m);
+        assert!(a.errors().any(|d| d.rule == RULE_REQUANT_OVERFLOW));
+    }
+
+    #[test]
+    fn huge_mult_is_a_requant_overflow_error() {
+        let mut m = tiny(1, 2);
+        if let Layer::Conv(c) = &mut m.layers[0] {
+            c.mult[0] = i64::MAX / 2;
+        }
+        let a = analyze(&m);
+        assert!(
+            a.errors().any(|d| d.rule == RULE_REQUANT_OVERFLOW),
+            "diags: {:?}",
+            a.diags
+        );
+    }
+
+    #[test]
+    fn wide_bias_defeats_the_narrow_verdict_without_errors() {
+        // Mirror of the kernels.rs wide-bias test model: a bias beyond
+        // i32::MAX forces the i64 MAC path but is still executable.
+        let mut m = tiny(1, 2);
+        if let Layer::Conv(c) = &mut m.layers[0] {
+            c.b_codes[0] = 3_000_000_000;
+        }
+        let a = analyze(&m);
+        assert!(!a.has_errors(), "diags: {:?}", a.diags);
+        assert_eq!(a.conv_narrow, vec![false]);
+    }
+
+    #[test]
+    fn act_width_over_31_is_a_warning_not_an_error() {
+        let mut m = tiny(1, 2);
+        if let Layer::Conv(c) = &mut m.layers[0] {
+            c.act_bits = 32;
+        }
+        let a = analyze(&m);
+        assert!(!a.has_errors(), "diags: {:?}", a.diags);
+        assert!(a.diags.iter().any(|d| d.rule == RULE_ACT_WIDTH));
+    }
+
+    #[test]
+    fn diagnostics_render_rule_layer_and_name() {
+        let d = Diagnostic {
+            severity: Severity::Error,
+            rule: RULE_ACC_OVERFLOW,
+            layer: Some(2),
+            layer_name: "conv2".to_string(),
+            message: "boom".to_string(),
+        };
+        assert_eq!(d.to_string(), "error[acc-overflow] layer 2 'conv2': boom");
+    }
+}

@@ -7,11 +7,12 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
 
+use crate::analysis::{check_config, Diagnostic, Severity};
 use crate::coordinator::{ManagerConfig, ProfileManager, ProfileSpec};
 use crate::json::Value;
 use crate::qonnx::QonnxModel;
 
-use super::quant::{derive_model, knobs_for};
+use super::quant::derive_model;
 
 /// One rung of the auto-generated ladder: the knob vector, its measured
 /// objectives, and the derived model ready to serve.
@@ -124,6 +125,10 @@ impl Frontier {
 
     /// Rebuild a frontier from its JSON form, re-deriving each rung's model
     /// from `base` (which must be the model the frontier was explored on).
+    /// Every stored config goes through the static checker
+    /// ([`crate::analysis::check_config`]); the first error diagnostic
+    /// fails the load with a message naming the point, its index, the
+    /// offending layer, and the rule code.
     pub fn from_json(v: &Value, base: &QonnxModel) -> Result<Frontier> {
         match v.get("schema").and_then(Value::as_str) {
             Some("pareto-frontier/v1") => {}
@@ -135,21 +140,12 @@ impl Frontier {
             .context("frontier base_profile")?
             .to_string();
         let rows = v.get("points").and_then(Value::as_array).context("frontier points")?;
-        let knobs = knobs_for(base);
         let mut points = Vec::with_capacity(rows.len());
-        for row in rows {
-            let name = row.get("name").and_then(Value::as_str).context("point name")?;
-            // Checked conversion: an out-of-u32 stored value must fail the
-            // load, not truncate its way past the knob-range check below.
-            let config: Vec<u32> = row
-                .get("config")
-                .and_then(Value::to_i64_vec)
-                .context("point config")?
-                .into_iter()
-                .map(|x| u32::try_from(x).ok().context("point config value out of range"))
-                .collect::<Result<Vec<u32>>>()?;
-            if config.len() != knobs.len() || config.iter().zip(&knobs).any(|(v, k)| *v > k.max) {
-                bail!("point '{name}': config does not fit the base model's knobs");
+        for (idx, row) in rows.iter().enumerate() {
+            let (name, config) = Self::point_identity(row)?;
+            let diags = check_config(base, &config);
+            if let Some(err) = diags.iter().find(|d| d.severity == Severity::Error) {
+                bail!("point '{name}' (index {idx}): {err}");
             }
             let acc_narrow = row
                 .get("acc_narrow")
@@ -162,8 +158,8 @@ impl Frontier {
                 row.get(key).and_then(Value::as_f64).with_context(|| format!("point {key}"))
             };
             points.push(FrontierPoint {
-                name: name.to_string(),
-                model: derive_model(base, &config, name),
+                model: derive_model(base, &config, &name),
+                name,
                 config,
                 accuracy: num("accuracy")?,
                 power_mw: num("power_mw")?,
@@ -176,6 +172,41 @@ impl Frontier {
             base_profile,
             points,
         })
+    }
+
+    /// Structural parse of one stored point: its name and checked `u32`
+    /// knob vector (an out-of-u32 stored value must fail the load, not
+    /// truncate its way past the checker's knob-range rule).
+    fn point_identity(row: &Value) -> Result<(String, Vec<u32>)> {
+        let name = row.get("name").and_then(Value::as_str).context("point name")?;
+        let config: Vec<u32> = row
+            .get("config")
+            .and_then(Value::to_i64_vec)
+            .context("point config")?
+            .into_iter()
+            .map(|x| u32::try_from(x).ok().context("point config value out of range"))
+            .collect::<Result<Vec<u32>>>()?;
+        Ok((name.to_string(), config))
+    }
+
+    /// Run the static checker over every point of a frontier JSON document
+    /// *without* failing fast: returns `(point name, diagnostics)` per
+    /// point, so `onnx2hw check` can print every finding instead of just
+    /// the first. Structural problems (wrong schema, unparseable points)
+    /// still error.
+    pub fn check_json(v: &Value, base: &QonnxModel) -> Result<Vec<(String, Vec<Diagnostic>)>> {
+        match v.get("schema").and_then(Value::as_str) {
+            Some("pareto-frontier/v1") => {}
+            other => bail!("unsupported frontier schema {other:?}"),
+        }
+        let rows = v.get("points").and_then(Value::as_array).context("frontier points")?;
+        let mut report = Vec::with_capacity(rows.len());
+        for row in rows {
+            let (name, config) = Self::point_identity(row)?;
+            let diags = check_config(base, &config);
+            report.push((name, diags));
+        }
+        Ok(report)
     }
 }
 
@@ -249,12 +280,54 @@ mod tests {
     #[test]
     fn from_json_rejects_configs_that_do_not_fit_the_base() {
         // conv weight headroom on the tiny model is 2: a stored drop of 9
-        // must error cleanly instead of panicking inside derive_model.
+        // must error cleanly instead of panicking inside derive_model —
+        // and the diagnostic must name the point, the offending layer, and
+        // the rule code (the checker-backed replacement for the old
+        // generic "does not fit" message).
         let (base, _) = sample();
         let text = r#"{"schema":"pareto-frontier/v1","base_profile":"T","points":[
             {"name":"apx-900","config":[9,0,0],"accuracy":1.0,"power_mw":1.0,
              "latency_us":1.0,"energy_uj":1.0,"acc_narrow":[true]}]}"#;
-        assert!(Frontier::from_json(&json::parse(text).unwrap(), &base).is_err());
+        let err = Frontier::from_json(&json::parse(text).unwrap(), &base)
+            .expect_err("out-of-range knob must fail the load");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("apx-900"), "must name the point: {msg}");
+        assert!(msg.contains("conv1"), "must name the offending layer: {msg}");
+        assert!(msg.contains("config-range"), "must carry the rule code: {msg}");
+    }
+
+    #[test]
+    fn from_json_rejects_semantically_illegal_configs_with_rule_codes() {
+        // [0, 0, 2] is in-range on every knob but zeroes the tiny model's
+        // dense weights: only the abstract-interpretation pass catches it.
+        let (base, _) = sample();
+        let text = r#"{"schema":"pareto-frontier/v1","base_profile":"T","points":[
+            {"name":"apx-002","config":[0,0,2],"accuracy":1.0,"power_mw":1.0,
+             "latency_us":1.0,"energy_uj":1.0,"acc_narrow":[true]}]}"#;
+        let err = Frontier::from_json(&json::parse(text).unwrap(), &base)
+            .expect_err("const-output config must fail the load");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("const-output"), "must carry the rule code: {msg}");
+        assert!(msg.contains("dense"), "must name the offending layer: {msg}");
+    }
+
+    #[test]
+    fn check_json_reports_every_point_without_failing_fast() {
+        let (base, frontier) = sample();
+        let bad = r#"{"schema":"pareto-frontier/v1","base_profile":"T","points":[
+            {"name":"apx-000","config":[0,0,0]},
+            {"name":"apx-900","config":[9,0,0]},
+            {"name":"apx-002","config":[0,0,2]}]}"#;
+        let report = Frontier::check_json(&json::parse(bad).unwrap(), &base).unwrap();
+        assert_eq!(report.len(), 3);
+        assert!(report[0].1.is_empty(), "the root config is clean");
+        assert!(report[1].1.iter().any(|d| d.rule == crate::analysis::RULE_CONFIG_RANGE));
+        assert!(report[2].1.iter().any(|d| d.rule == crate::analysis::RULE_CONST_OUTPUT));
+        // a fully legal frontier reports no errors on any point
+        let clean = Frontier::check_json(&frontier.to_json(), &base).unwrap();
+        assert!(clean
+            .iter()
+            .all(|(_, diags)| diags.iter().all(|d| d.severity != Severity::Error)));
     }
 
     #[test]

@@ -20,7 +20,7 @@
 //! lowest knob index; candidate bookkeeping lives in a `BTreeMap` so
 //! iteration order is the config order, never hash order.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 
 use crate::dataflow::{exec, BatchExecutor, CompiledModel, FoldingConfig};
@@ -124,6 +124,12 @@ pub struct ExplorerConfig {
     /// Rungs of the uniform-precision baseline ladder that are seeded into
     /// the archive and reported by [`Explorer::uniform_baseline`].
     pub uniform_rungs: usize,
+    /// Statically reject illegal knob vectors via [`crate::analysis`]
+    /// before paying packed-executor + cost-model evaluation. The frontier
+    /// is identical either way (illegal candidates are never selected or
+    /// emitted); pruning only skips their evaluations — see
+    /// [`Explorer::pruned_static`].
+    pub static_prune: bool,
 }
 
 impl Default for ExplorerConfig {
@@ -138,6 +144,7 @@ impl Default for ExplorerConfig {
             eps_accuracy: 0.0,
             max_rungs: 0,
             uniform_rungs: 4,
+            static_prune: true,
         }
     }
 }
@@ -152,6 +159,11 @@ pub struct Explorer<'a> {
     knobs: Vec<Knob>,
     cache: BTreeMap<Vec<u32>, Candidate>,
     evals: usize,
+    /// Memoized static-checker verdicts per knob vector.
+    legal: BTreeMap<Vec<u32>, bool>,
+    /// Unique configs statically rejected before evaluation (counted like
+    /// `evals`: one entry per config, however often it is re-proposed).
+    pruned: BTreeSet<Vec<u32>>,
 }
 
 /// Accuracy batch size: bounds the executor arena while amortizing packing.
@@ -173,6 +185,8 @@ impl<'a> Explorer<'a> {
             knobs,
             cache: BTreeMap::new(),
             evals: 0,
+            legal: BTreeMap::new(),
+            pruned: BTreeSet::new(),
         }
     }
 
@@ -183,6 +197,24 @@ impl<'a> Explorer<'a> {
     /// Candidates evaluated so far (cache hits excluded).
     pub fn evaluations(&self) -> usize {
         self.evals
+    }
+
+    /// Search proposals the static checker rejected before evaluation —
+    /// the explorer's speedup (`evaluations() + pruned_static()` equals the
+    /// unpruned run's `evaluations()` on the same seeds).
+    pub fn pruned_static(&self) -> usize {
+        self.pruned.len()
+    }
+
+    /// Memoized [`crate::analysis::check_config`] verdict for one knob
+    /// vector: `true` iff the checker reports no error diagnostics.
+    pub fn config_legal(&mut self, config: &[u32]) -> bool {
+        if let Some(&v) = self.legal.get(config) {
+            return v;
+        }
+        let v = crate::analysis::config_is_legal(self.base, config);
+        self.legal.insert(config.to_vec(), v);
+        v
     }
 
     /// The uniform-precision config at rung `k`: every knob dropped by `k`
@@ -259,23 +291,48 @@ impl<'a> Explorer<'a> {
         cand
     }
 
+    /// Gate one search proposal through the static checker. Legal configs
+    /// are evaluated (memoized) and returned; illegal ones return `None`
+    /// and are never selected or emitted in either mode — with
+    /// `static_prune` their evaluation is skipped entirely (and counted in
+    /// [`Self::pruned_static`]), without it the candidate is still
+    /// evaluated into the archive. The two modes therefore walk the same
+    /// trajectory and emit the same frontier; pruning only saves work.
+    fn probe(&mut self, config: &[u32]) -> Option<Candidate> {
+        if self.config_legal(config) {
+            return Some(self.evaluate(config));
+        }
+        if self.cfg.static_prune {
+            if !self.cache.contains_key(config) {
+                self.pruned.insert(config.to_vec());
+            }
+        } else {
+            self.evaluate(config);
+        }
+        None
+    }
+
     /// Run the full search and return the Pareto ladder.
     ///
-    /// 1. seed the uniform baseline (so the frontier always covers it);
+    /// 1. seed the uniform baseline (so the frontier always covers its
+    ///    legal rungs);
     /// 2. greedy per-layer descent from full precision: at each step take
     ///    the single-knob drop with the best energy-saved per
-    ///    accuracy-lost ratio (every probed move joins the archive);
+    ///    accuracy-lost ratio (every probed move joins the archive; moves
+    ///    the static checker rejects are skipped — or, with pruning off,
+    ///    evaluated but never selected);
     /// 3. local refinement around each uniform rung: single deeper drops
     ///    and pairwise exchanges, hunting configs that dominate the naive
     ///    allocation;
-    /// 4. Pareto-filter the archive, thin by epsilon-dominance, and emit
-    ///    the ladder sorted by accuracy (most accurate first).
+    /// 4. Pareto-filter the statically legal archive, thin by
+    ///    epsilon-dominance, and emit the ladder sorted by accuracy (most
+    ///    accurate first).
     pub fn explore(&mut self) -> Frontier {
         let mut cur = vec![0u32; self.knobs.len()];
         let mut cur_eval = self.evaluate(&cur);
         for k in 1..=self.cfg.uniform_rungs {
             let cfg = self.uniform(k as u32);
-            self.evaluate(&cfg);
+            self.probe(&cfg);
         }
         // Half a calibration sample: moves that lose nothing rank by pure
         // energy savings without dividing by zero.
@@ -287,7 +344,7 @@ impl<'a> Explorer<'a> {
             }
             let mut best: Option<(Vec<u32>, Candidate, f64)> = None;
             for m in moves {
-                let cand = self.evaluate(&m);
+                let Some(cand) = self.probe(&m) else { continue };
                 let saved = cur_eval.energy_uj - cand.energy_uj;
                 let lost = (cur_eval.accuracy - cand.accuracy).max(acc_floor);
                 let score = saved / lost;
@@ -295,7 +352,8 @@ impl<'a> Explorer<'a> {
                     best = Some((m, cand, score));
                 }
             }
-            let (m, cand, _) = best.expect("non-empty moves");
+            // every remaining drop is statically illegal: the descent ends
+            let Some((m, cand, _)) = best else { break };
             cur = m;
             cur_eval = cand;
             if cur_eval.accuracy < self.cfg.min_accuracy {
@@ -329,7 +387,7 @@ impl<'a> Explorer<'a> {
     /// assignment at equal-or-less energy.
     fn refine(&mut self, from: &[u32]) {
         for m in self.single_drops(from) {
-            self.evaluate(&m);
+            self.probe(&m);
         }
         for i in 0..from.len() {
             if from[i] >= self.knobs[i].max {
@@ -342,15 +400,25 @@ impl<'a> Explorer<'a> {
                 let mut c = from.to_vec();
                 c[i] += 1;
                 c[j] -= 1;
-                self.evaluate(&c);
+                self.probe(&c);
             }
         }
     }
 
     /// Pareto filter + dedup + epsilon thinning + ladder cap over the
-    /// archive.
-    fn emit(&self) -> Frontier {
-        let all: Vec<&Candidate> = self.cache.values().collect();
+    /// statically legal archive. Illegal candidates (possible in the
+    /// unpruned mode, or via direct [`Explorer::evaluate`] calls) are
+    /// dropped *before* the Pareto filter so they can neither appear on the
+    /// ladder nor suppress legal points as dominators.
+    fn emit(&mut self) -> Frontier {
+        let keys: Vec<Vec<u32>> = self.cache.keys().cloned().collect();
+        let mut survivors: Vec<Candidate> = Vec::with_capacity(keys.len());
+        for key in keys {
+            if self.config_legal(&key) {
+                survivors.push(self.cache[&key].clone());
+            }
+        }
+        let all: Vec<&Candidate> = survivors.iter().collect();
         let mut front: Vec<Candidate> = Vec::new();
         for &p in &all {
             if !all.iter().any(|&q| dominates(q, p)) {
@@ -484,8 +552,13 @@ mod tests {
         }
         // most accurate rung matches the best archive accuracy (the root)
         assert_eq!(frontier.points[0].accuracy, 1.0);
-        // the seeded uniform baseline is always weakly covered
+        // the seeded uniform baseline's *legal* rungs are always weakly
+        // covered (on tiny(2, 3) the uniform(2) rung zeroes the dense
+        // weights, fails the const-output rule, and is excluded by design)
         for b in ex.uniform_baseline() {
+            if !ex.config_legal(&b.config) {
+                continue;
+            }
             assert!(
                 frontier.weakly_dominates(b.accuracy, b.energy_uj, b.latency_us),
                 "uniform rung (acc {}, energy {}) escaped the frontier",
@@ -498,6 +571,41 @@ mod tests {
             assert_eq!(p.model.profile, p.name);
             assert_eq!(p.name, super::config_name(&p.config));
         }
+    }
+
+    #[test]
+    fn static_pruning_keeps_the_frontier_and_skips_evaluations() {
+        // The acceptance property: pruned and unpruned runs emit
+        // byte-identical frontier JSON, and the pruned run pays strictly
+        // fewer evaluations — the difference being exactly the configs the
+        // static checker rejected. tiny(2, 3)'s lattice guarantees pruning
+        // fires: the whole dense-drop-2 slice (incl. uniform(2)) is
+        // const-output illegal.
+        let (m, calib) = setup();
+        let mut pruned = Explorer::new(&m, &calib, fast_cfg());
+        let f_pruned = pruned.explore();
+        let mut unpruned = Explorer::new(
+            &m,
+            &calib,
+            ExplorerConfig {
+                static_prune: false,
+                ..fast_cfg()
+            },
+        );
+        let f_unpruned = unpruned.explore();
+        assert_eq!(
+            crate::json::to_string_pretty(&f_pruned.to_json()),
+            crate::json::to_string_pretty(&f_unpruned.to_json()),
+            "pruning must not change the frontier"
+        );
+        assert_eq!(unpruned.pruned_static(), 0);
+        assert!(pruned.pruned_static() > 0, "the illegal slice must be pruned");
+        assert!(pruned.evaluations() < unpruned.evaluations());
+        assert_eq!(
+            pruned.evaluations() + pruned.pruned_static(),
+            unpruned.evaluations(),
+            "every skipped evaluation must be accounted for"
+        );
     }
 
     #[test]

@@ -30,6 +30,7 @@ impl Stats {
 
 /// Time `f` with `warmup` + `iters` runs. The closure's return value is
 /// black-boxed to keep the optimizer honest.
+#[allow(clippy::disallowed_methods)] // wall-clock: this IS the timing harness
 pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Stats {
     assert!(iters > 0);
     for _ in 0..warmup {

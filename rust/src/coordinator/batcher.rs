@@ -51,6 +51,7 @@ impl DynamicBatcher {
 
     /// Block for the next batch. Returns `None` once the channel is closed
     /// and drained or the shutdown sentinel has been consumed.
+    #[allow(clippy::disallowed_methods)] // wall-clock: real request-batching deadline
     pub fn next_batch(&mut self) -> Option<Vec<ClassifyRequest>> {
         if self.done {
             return None;
@@ -140,6 +141,7 @@ mod tests {
         );
         let (r, _keep) = req(0); // receiver retained in scope, not leaked
         tx.send(r).unwrap();
+        #[allow(clippy::disallowed_methods)] // wall-clock: bounds the flush wait
         let t0 = Instant::now();
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.len(), 1);

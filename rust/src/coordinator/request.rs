@@ -37,6 +37,7 @@ pub struct ClassifyResponse {
 }
 
 impl ClassifyRequest {
+    #[allow(clippy::disallowed_methods)] // wall-clock: request latency timestamp
     pub fn new(
         id: u64,
         image: Vec<u8>,

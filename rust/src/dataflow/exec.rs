@@ -122,32 +122,14 @@ fn run_layers(
     logits
 }
 
-/// Shape walk shared by the scalar executor and the batched
-/// [`super::kernels::CompiledModel`]: tracks which ping/pong buffer holds
-/// each activation, so each buffer is sized by the widest tensor it will
-/// actually hold. (The previous plan sized both buffers to the global max,
-/// over-allocating whenever the widest activation lands in only one of
-/// them — e.g. a model whose first conv is the widest layer.)
+/// Scratch sizing shared by the scalar executor and the batched
+/// [`super::kernels::CompiledModel`]: delegates to the analysis module's
+/// [`crate::analysis::ArenaPlan`] liveness walk, the single source of truth
+/// for where each activation lives and how big each ping/pong buffer must
+/// be.
 pub(crate) fn scratch_plan(model: &QonnxModel) -> (Vec<TensorShape>, usize, usize) {
-    let shapes = crate::qonnx::infer_shapes(model);
-    let mut a_elems = shapes[0].elems();
-    let mut b_elems = 0;
-    let mut in_a = true;
-    for (i, layer) in model.layers.iter().enumerate() {
-        match layer {
-            Layer::Flatten { .. } => {}
-            Layer::Conv(_) | Layer::Pool(_) | Layer::Dense(_) => {
-                in_a = !in_a;
-                let elems = shapes[i + 1].elems();
-                if in_a {
-                    a_elems = a_elems.max(elems);
-                } else {
-                    b_elems = b_elems.max(elems);
-                }
-            }
-        }
-    }
-    (shapes, a_elems, b_elems)
+    let plan = crate::analysis::ArenaPlan::of(model);
+    (plan.shapes, plan.a_elems, plan.b_elems)
 }
 
 fn scratch_for(model: &QonnxModel) -> (Vec<TensorShape>, Vec<i64>, Vec<i64>) {
@@ -177,6 +159,87 @@ pub fn execute_batch(model: &QonnxModel, inputs: &[&[u8]]) -> (Vec<Vec<i64>>, Ve
     (all, preds)
 }
 
+/// Per-layer extremes actually observed by the scalar oracle on one image —
+/// the measurement side of the analysis soundness property (every observed
+/// value must lie inside the [`crate::analysis`] interval of its layer).
+#[derive(Debug, Clone)]
+pub struct LayerTrace {
+    pub name: String,
+    /// (min, max) raw pre-requant conv accumulator / dense logit observed.
+    pub acc: Option<(i64, i64)>,
+    /// (min, max) of the layer's output activations (None for flatten,
+    /// which writes nothing).
+    pub act: Option<(i64, i64)>,
+}
+
+/// [`execute`] with per-layer observation. Runs the same kernels as the
+/// plain oracle (bit-exactness is asserted by the property suite), but
+/// records the accumulator and activation extremes of every layer.
+pub fn execute_traced(model: &QonnxModel, input: &[u8]) -> (Vec<i64>, Vec<LayerTrace>) {
+    let (shapes, mut buf_a, mut buf_b) = scratch_for(model);
+    let in_shape = model.input_shape;
+    assert_eq!(input.len(), in_shape.elems(), "input size mismatch");
+    for (dst, &src) in buf_a.iter_mut().zip(input) {
+        *dst = src as i64;
+    }
+    let mut acc: Vec<i64> = Vec::new();
+    let mut cur_shape = in_shape;
+    let mut in_a = true;
+    let mut logits = Vec::new();
+    let mut traces = Vec::with_capacity(model.layers.len());
+    for (i, layer) in model.layers.iter().enumerate() {
+        let out_shape = shapes[i + 1];
+        let (src, dst): (&[i64], &mut [i64]) = if in_a {
+            (&*buf_a, &mut *buf_b)
+        } else {
+            (&*buf_b, &mut *buf_a)
+        };
+        let mut acc_seen: Option<(i64, i64)> = None;
+        let mut act_seen: Option<(i64, i64)> = None;
+        match layer {
+            Layer::Conv(c) => {
+                if acc.len() < c.cout {
+                    acc.resize(c.cout, 0);
+                }
+                conv_forward_obs(c, src, cur_shape, dst, &mut acc[..c.cout], |lanes| {
+                    observe_extremes(&mut acc_seen, lanes);
+                });
+                observe_extremes(&mut act_seen, &dst[..out_shape.elems()]);
+                in_a = !in_a;
+            }
+            Layer::Pool(_) => {
+                pool_forward(&src[..cur_shape.elems()], cur_shape, dst);
+                observe_extremes(&mut act_seen, &dst[..out_shape.elems()]);
+                in_a = !in_a;
+            }
+            Layer::Flatten { .. } => { /* layout already flat (HWC) */ }
+            Layer::Dense(d) => {
+                let out = &mut dst[..d.out_features];
+                dense_forward(d, &src[..cur_shape.elems()], out);
+                observe_extremes(&mut acc_seen, out);
+                observe_extremes(&mut act_seen, out);
+                logits = out.to_vec();
+                in_a = !in_a;
+            }
+        }
+        traces.push(LayerTrace {
+            name: layer.name().to_string(),
+            acc: acc_seen,
+            act: act_seen,
+        });
+        cur_shape = out_shape;
+    }
+    (logits, traces)
+}
+
+fn observe_extremes(seen: &mut Option<(i64, i64)>, values: &[i64]) {
+    for &v in values {
+        let e = seen.get_or_insert((v, v));
+        e.0 = e.0.min(v);
+        e.1 = e.1.max(v);
+    }
+}
+
 pub fn argmax(xs: &[i64]) -> usize {
     xs.iter()
         .enumerate()
@@ -199,6 +262,21 @@ pub fn requant(acc: i64, mult: i64, shift: i64, act_bits: u32) -> i64 {
 /// `acc` is caller-provided scratch of exactly `cout` lanes (the executor
 /// reuses one allocation across runs instead of allocating per layer).
 fn conv_forward(c: &ConvLayer, src: &[i64], shape: TensorShape, dst: &mut [i64], acc: &mut [i64]) {
+    conv_forward_obs(c, src, shape, dst, acc, |_| {});
+}
+
+/// [`conv_forward`] with an accumulator observer: `observe` sees every
+/// pixel's raw accumulator lanes *before* requantization. The plain path
+/// passes a no-op closure (monomorphized away); the traced oracle uses it
+/// to record the extremes the analysis intervals must contain.
+fn conv_forward_obs(
+    c: &ConvLayer,
+    src: &[i64],
+    shape: TensorShape,
+    dst: &mut [i64],
+    acc: &mut [i64],
+    mut observe: impl FnMut(&[i64]),
+) {
     let (h, w, cin, cout) = (shape.h, shape.w, c.cin, c.cout);
     debug_assert_eq!(shape.c, cin);
     debug_assert_eq!(acc.len(), cout);
@@ -229,6 +307,7 @@ fn conv_forward(c: &ConvLayer, src: &[i64], shape: TensorShape, dst: &mut [i64],
                     }
                 }
             }
+            observe(&acc[..cout]);
             let obase = (y * w + x) * cout;
             for co in 0..cout {
                 dst[obase + co] = requant(acc[co], c.mult[co], c.shift[co], c.act_bits);
@@ -335,6 +414,20 @@ mod tests {
         for img in imgs.iter().rev() {
             assert_eq!(cached.run(img), execute(&m, img));
         }
+    }
+
+    #[test]
+    fn traced_execution_matches_the_plain_oracle() {
+        let m = tiny();
+        let input: Vec<u8> =
+            (0..m.input_shape.elems()).map(|i| (i * 13 % 256) as u8).collect();
+        let (logits, traces) = execute_traced(&m, &input);
+        assert_eq!(logits, execute(&m, &input));
+        assert_eq!(traces.len(), m.layers.len());
+        assert!(traces[0].acc.is_some(), "conv must trace accumulators");
+        assert!(traces[2].acc.is_none() && traces[2].act.is_none(), "flatten writes nothing");
+        let (lo, hi) = traces[3].acc.unwrap();
+        assert!(logits.iter().all(|&v| lo <= v && v <= hi));
     }
 
     #[test]

@@ -18,13 +18,15 @@
 //!   across every image of the batch instead of being re-streamed per
 //!   image (the software analogue of the streaming fabric's weight reuse).
 //! * **Arena scratch** — activations live in two ping/pong arenas sized by
-//!   the per-layer shape walk ([`super::exec::scratch_plan`]) times the
-//!   batch, plus one logits arena. Arenas only grow, so once warmed for a
-//!   batch size the executor performs zero heap allocations per batch.
+//!   the analysis module's liveness walk ([`crate::analysis::ArenaPlan`])
+//!   times the batch, plus one logits arena. Arenas only grow, so once
+//!   warmed for a batch size the executor performs zero heap allocations
+//!   per batch.
 //! * **Narrow arithmetic** — activation codes are stored as `i32` (the
-//!   requant clamp bounds them by `2^act_bits - 1`); a conv layer whose
-//!   exact worst-case accumulator interval fits `i32` runs 32-bit MACs
-//!   (SIMD-friendly) and falls back to 64-bit accumulators otherwise. Both
+//!   requant clamp bounds them by `2^act_bits - 1`); a conv layer runs
+//!   32-bit MACs (SIMD-friendly) when the abstract-interpretation pass
+//!   ([`crate::analysis::analyze`]) proves every product and partial sum
+//!   fits `i32`, and falls back to 64-bit accumulators otherwise. Both
 //!   paths accumulate in the oracle's per-channel order and the narrow one
 //!   is selected only when it provably cannot overflow, so the integers
 //!   match the oracle exactly.
@@ -68,41 +70,13 @@ pub struct PackedConv {
     narrow: bool,
 }
 
-/// Exact worst-case accumulator check for the 32-bit MAC path. Terms are
-/// `w * x` with `x in [0, in_max]`, so each term's range contains 0 and any
-/// partial accumulation stays inside `bias + [sum of negative term minima,
-/// sum of positive term maxima]`. The narrow path is chosen only when that
-/// interval — and every individual product — fits `i32`.
-fn conv_fits_i32(c: &ConvLayer, in_max: i64) -> bool {
-    if in_max > i32::MAX as i64 {
-        return false;
-    }
-    for co in 0..c.cout {
-        let mut lo = c.b_codes[co] as i128;
-        let mut hi = lo;
-        for tap in 0..9 * c.cin {
-            let term = c.w_codes[tap * c.cout + co] as i128 * in_max as i128;
-            if term.abs() > i32::MAX as i128 {
-                return false;
-            }
-            if term > 0 {
-                hi += term;
-            } else {
-                lo += term;
-            }
-        }
-        if lo < i32::MIN as i128 || hi > i32::MAX as i128 {
-            return false;
-        }
-    }
-    true
-}
-
 impl PackedConv {
-    /// Repack `c` for tiled execution. `in_max` is the largest activation
-    /// code the previous stage can produce (drives the accumulator-width
-    /// proof, not the values).
-    pub fn pack(c: &ConvLayer, in_max: i64) -> Self {
+    /// Repack `c` for tiled execution. `narrow` is the accumulator-width
+    /// verdict proven by [`crate::analysis::analyze`] for this layer: `true`
+    /// selects the 32-bit MAC kernel, and the caller is responsible for
+    /// passing a verdict the analysis actually proved (every per-tap product
+    /// interval and every partial sum fits `i32`).
+    pub fn pack(c: &ConvLayer, narrow: bool) -> Self {
         let n_tiles = c.cout.div_ceil(CO_TILE);
         let mut w = vec![0i32; n_tiles * 9 * c.cin * CO_TILE];
         let mut params = vec![ChannelParams::default(); n_tiles * CO_TILE];
@@ -124,7 +98,7 @@ impl PackedConv {
             n_tiles,
             w,
             params,
-            narrow: conv_fits_i32(c, in_max),
+            narrow,
         }
     }
 
@@ -157,8 +131,8 @@ impl PackedConv {
         }
     }
 
-    /// 32-bit accumulator kernel (proven overflow-free by `conv_fits_i32`,
-    /// hence bit-exact vs the oracle's 64-bit accumulation).
+    /// 32-bit accumulator kernel (proven overflow-free by the static
+    /// analysis pass, hence bit-exact vs the oracle's 64-bit accumulation).
     fn tile_forward_narrow(&self, tile: usize, src: &[i32], shape: TensorShape, dst: &mut [i32]) {
         let (h, w, cin, cout) = (shape.h, shape.w, self.cin, self.cout);
         let tw = &self.w[tile * 9 * cin * CO_TILE..][..9 * cin * CO_TILE];
@@ -344,15 +318,17 @@ pub struct CompiledModel {
 
 impl CompiledModel {
     pub fn compile(model: Arc<QonnxModel>) -> Self {
-        let (shapes, a_elems, b_elems) = exec::scratch_plan(&model);
+        // One analysis pass is the single source of truth for both the
+        // arena plan and the per-conv accumulator-width verdicts.
+        let analysis = crate::analysis::analyze(&model);
         let out_features = model.dense().map(|d| d.out_features).unwrap_or(0);
-        let steps = Self::pack_steps(&model);
+        let steps = Self::pack_steps(&model, &analysis.conv_narrow);
         CompiledModel {
             model,
-            shapes,
+            shapes: analysis.arena.shapes,
             steps,
-            a_elems,
-            b_elems,
+            a_elems: analysis.arena.a_elems,
+            b_elems: analysis.arena.b_elems,
             out_features,
         }
     }
@@ -364,8 +340,9 @@ impl CompiledModel {
 
     /// Activation arenas hold i32 codes, so every producer must stay within
     /// 31 bits; dense emits raw i64 accumulators, so it must be terminal.
-    fn pack_steps(model: &QonnxModel) -> Option<Vec<CompiledStep>> {
-        let mut in_max = 255i64; // input codes arrive as u8
+    /// `narrow` is the analysis verdict per conv layer, in layer order.
+    fn pack_steps(model: &QonnxModel, narrow: &[bool]) -> Option<Vec<CompiledStep>> {
+        let mut conv_idx = 0usize;
         let mut steps = Vec::with_capacity(model.layers.len());
         for (i, layer) in model.layers.iter().enumerate() {
             match layer {
@@ -373,8 +350,8 @@ impl CompiledModel {
                     if c.act_bits > 31 {
                         return None;
                     }
-                    steps.push(CompiledStep::Conv(PackedConv::pack(c, in_max)));
-                    in_max = (1i64 << c.act_bits) - 1;
+                    steps.push(CompiledStep::Conv(PackedConv::pack(c, narrow[conv_idx])));
+                    conv_idx += 1;
                 }
                 Layer::Pool(_) => steps.push(CompiledStep::Pool),
                 Layer::Flatten { .. } => steps.push(CompiledStep::Flatten),
@@ -619,7 +596,8 @@ mod tests {
     fn conv_packing_places_every_code_in_its_lane() {
         let m = read_str(&test_model_json(2, 11)).unwrap();
         let c = m.conv_layers().next().unwrap();
-        let pc = PackedConv::pack(c, 255);
+        let narrow = crate::analysis::analyze(&m).conv_narrow[0];
+        let pc = PackedConv::pack(c, narrow);
         assert_eq!(pc.n_tiles, 2);
         assert!(pc.narrow, "tiny model bounds fit 32-bit accumulators");
         for dy in 0..3 {
@@ -676,6 +654,22 @@ mod tests {
         let compiled = CompiledModel::from_model(&m);
         // one conv layer in the tiny pipeline, provably narrow
         assert_eq!(compiled.conv_acc_narrow(), vec![true]);
+    }
+
+    #[test]
+    fn acc_width_verdict_is_the_analysis_verdict() {
+        // The packed plan and the static analysis must never disagree about
+        // accumulator widths — the former is now derived from the latter,
+        // and this pins the wiring on the kernel-test model family.
+        for (cin, cout) in [(1, 2), (2, 3), (3, 8), (1, 11), (2, 16)] {
+            let m = read_str(&test_model_json(cin, cout)).unwrap();
+            let compiled = CompiledModel::from_model(&m);
+            assert_eq!(
+                compiled.conv_acc_narrow(),
+                crate::analysis::analyze(&m).conv_narrow,
+                "tiny({cin}, {cout})"
+            );
+        }
     }
 
     #[test]

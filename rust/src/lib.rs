@@ -2,6 +2,7 @@
 //! reproduction of Manca/Ratto/Palumbo (SAMOS 2024) as a three-layer
 //! Rust + JAX + Pallas stack. See DESIGN.md for the system inventory.
 
+pub mod analysis;
 pub mod approx;
 pub mod bench_harness;
 pub mod cli;

@@ -6,6 +6,7 @@
 //!   fig4       regenerate Fig. 4 (adaptive engine merge + battery sim)
 //!   flow       run the design flow for one profile (writer + HLS report)
 //!   explore    auto-generate a Pareto profile ladder (approximation explorer)
+//!   check      statically verify a model or frontier JSON (range/width analysis)
 //!   classify   classify test images on the PJRT runtime
 //!   serve      run the adaptive inference server on a synthetic workload
 //!   verify     cross-check rust dataflow vs python vectors vs PJRT runtime
@@ -14,7 +15,8 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use onnx2hw::approx::{CalibSet, Explorer, ExplorerConfig};
+use onnx2hw::analysis::{self, Severity};
+use onnx2hw::approx::{CalibSet, Explorer, ExplorerConfig, Frontier};
 use onnx2hw::cli::Spec;
 use onnx2hw::coordinator::{
     AdaptiveServer, Backend, EnergyMonitor, ManagerConfig, ProfileManager, ProfileSpec,
@@ -54,13 +56,14 @@ fn run(sub: &str, argv: &[String]) -> Result<()> {
         "fig4" => cmd_fig4(argv),
         "flow" => cmd_flow(argv),
         "explore" => cmd_explore(argv),
+        "check" => cmd_check(argv),
         "classify" => cmd_classify(argv),
         "serve" => cmd_serve(argv),
         "verify" => cmd_verify(argv),
         "help" | "--help" | "-h" => {
             println!(
                 "onnx2hw — ONNX-to-Hardware design flow (SAMOS 2024 reproduction)\n\n\
-                 USAGE: onnx2hw <table1|fig3|fig4|flow|explore|classify|serve|verify> [options]\n\
+                 USAGE: onnx2hw <table1|fig3|fig4|flow|explore|check|classify|serve|verify> [options]\n\
                  Run a subcommand with --help for its options."
             );
             Ok(())
@@ -337,6 +340,19 @@ fn cmd_explore(argv: &[String]) -> Result<()> {
         let calib = CalibSet::from_testset(&testset, calib_n);
         (model, calib)
     };
+    // A base model that fails the static verifier would poison every
+    // candidate; refuse it up front with the typed diagnostics.
+    let base_analysis = analysis::analyze(&base);
+    for d in &base_analysis.diags {
+        eprintln!("{d}");
+    }
+    if base_analysis.has_errors() {
+        bail!(
+            "base model '{}' fails the static verifier ({} error(s) above)",
+            base.profile,
+            base_analysis.errors().count()
+        );
+    }
     let mut explorer = Explorer::new(
         &base,
         &calib,
@@ -352,12 +368,14 @@ fn cmd_explore(argv: &[String]) -> Result<()> {
     let frontier = explorer.explore();
     let baseline = explorer.uniform_baseline();
     println!(
-        "explored {} ({}) on {} calibration images: {} candidates -> {} rungs\n",
+        "explored {} ({}) on {} calibration images: {} candidates -> {} rungs \
+         ({} statically pruned)\n",
         base.profile,
         base.precision_signature(),
         calib.len(),
         explorer.evaluations(),
-        frontier.len()
+        frontier.len(),
+        explorer.pruned_static()
     );
     let mut table = onnx2hw::bench_harness::Table::new(&[
         "rung", "profile", "precisions", "accuracy", "power", "latency", "energy/inf",
@@ -402,6 +420,86 @@ fn cmd_explore(argv: &[String]) -> Result<()> {
         println!("wrote frontier JSON to {path}");
     }
     Ok(())
+}
+
+fn cmd_check(argv: &[String]) -> Result<()> {
+    let spec = Spec::new(
+        "onnx2hw check",
+        "statically verify a model or frontier JSON (range/width analysis)",
+    )
+    .pos("path", true, "QONNX model JSON, frontier JSON, or bench report")
+    .opt("profile", "", "artifact-store profile providing the frontier's base model")
+    .opt("seed", "659918", "seed for the synthetic base model")
+    .flag("synthetic", "check frontiers against the deterministic synthetic base model");
+    let a = parse_or_usage(spec, argv)?;
+    let path = a.pos(0).unwrap();
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
+    let doc = json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+
+    // Three shapes are accepted: a frontier document, a bench report that
+    // nests one under "frontier", and a bare QONNX model.
+    let frontier_doc = if doc.get("schema").is_some() {
+        Some(&doc)
+    } else {
+        doc.get("frontier").filter(|f| f.get("schema").is_some())
+    };
+    if let Some(fdoc) = frontier_doc {
+        let base = check_base_model(&a)?;
+        let report = Frontier::check_json(fdoc, &base)?;
+        let mut errors = 0usize;
+        for (name, diags) in &report {
+            for d in diags {
+                errors += (d.severity == Severity::Error) as usize;
+                println!("{name}: {d}");
+            }
+        }
+        if errors > 0 {
+            bail!("{errors} error diagnostic(s) across {} frontier point(s)", report.len());
+        }
+        println!("check OK: {} frontier point(s), no error diagnostics", report.len());
+        return Ok(());
+    }
+
+    let model = onnx2hw::qonnx::read_str(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let analysis = analysis::analyze(&model);
+    for d in &analysis.diags {
+        println!("{d}");
+    }
+    let narrow = analysis.conv_narrow.iter().filter(|&&n| n).count();
+    println!(
+        "arena: {} + {} elems | conv accumulators: {narrow}/{} provably i32",
+        analysis.arena.a_elems,
+        analysis.arena.b_elems,
+        analysis.conv_narrow.len()
+    );
+    if analysis.has_errors() {
+        bail!("{} error diagnostic(s) in {path}", analysis.errors().count());
+    }
+    println!("check OK: model '{}' is clean", model.profile);
+    Ok(())
+}
+
+/// Base model a frontier JSON is checked against: `--synthetic [--seed N]`
+/// mirrors `explore --synthetic`, otherwise `--profile` reads the store.
+fn check_base_model(a: &onnx2hw::cli::Args) -> Result<onnx2hw::qonnx::QonnxModel> {
+    if a.flag("synthetic") {
+        let seed: u64 = a.parse_num("seed")?;
+        let mut rng = onnx2hw::testkit::Rng::new(seed);
+        let cfg = onnx2hw::qonnx::RandModelCfg {
+            side: 8,
+            cin: 1,
+            blocks: vec![(4, 8, 8), (8, 8, 8)],
+            classes: 5,
+        };
+        let text = onnx2hw::qonnx::random_model_json(&cfg, &mut rng);
+        return onnx2hw::qonnx::read_str(&text).map_err(|e| anyhow::anyhow!("{e}"));
+    }
+    if let Some(profile) = a.opt_str("profile") {
+        let store = ArtifactStore::discover()?;
+        return store.qonnx(profile);
+    }
+    bail!("frontier checking needs a base model: pass --profile <P> or --synthetic [--seed N]")
 }
 
 fn cmd_classify(argv: &[String]) -> Result<()> {
@@ -507,6 +605,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     )?;
     let n: usize = a.parse_num("requests")?;
     let testset = Arc::new(testset);
+    #[allow(clippy::disallowed_methods)] // wall-clock: measured serving throughput
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
     for c in 0..clients {

@@ -176,6 +176,7 @@ pub struct EventLog {
 }
 
 impl EventLog {
+    #[allow(clippy::disallowed_methods)] // wall-clock: event timestamps are observational
     pub fn push(&self, msg: impl Into<String>) {
         let mut ev = self.events.lock().unwrap();
         if ev.len() < 10_000 {

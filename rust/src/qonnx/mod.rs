@@ -20,4 +20,6 @@ pub use reader::{read_file, read_str, ReadError};
 pub use shapes::infer_shapes;
 
 #[doc(hidden)]
-pub use testgen::{random_model_json, tiny_model_json as test_model_json, RandModelCfg};
+pub use testgen::{
+    prune_stress_model_json, random_model_json, tiny_model_json as test_model_json, RandModelCfg,
+};

@@ -47,6 +47,44 @@ pub fn tiny_model_json(cin: usize, cout: usize) -> String {
     )
 }
 
+/// A model whose knob lattice has a large *statically illegal* region, for
+/// exercising the explorer's analysis-based pre-pruning: the conv carries 8
+/// weight bits of headroom but its small codes (all 3) round to zero after
+/// a 3-bit drop, and the low-magnitude requant (`mult 1, shift 11`) starves
+/// the dense head under deep activation drops — so a verified majority of
+/// the 7x7x3 lattice fails the `const-output` rule while the root and the
+/// uniform(1) rung stay legal.
+pub fn prune_stress_model_json() -> String {
+    let w_codes: Vec<i64> = vec![3; 9 * 2];
+    let dw: Vec<i64> = (0..8 * 3).map(|i| (i as i64 % 3) - 1).collect();
+    format!(
+        r#"{{
+  "qonnx_version": 1,
+  "profile": "stress",
+  "input": {{"shape": [1,4,4,1], "bits": 8, "int_bits": 0}},
+  "nodes": [
+    {{"name":"conv1","op":"QConv2d","inputs":["input"],"outputs":["c1"],
+      "attrs":{{"kernel":[3,3],"stride":[1,1],"pad":"SAME","filters":2,
+               "in_channels":1,"act_bits":8,"act_int_bits":2,"weight_bits":8}},
+      "weights":{{"w_shape":[3,3,1,2],"w_codes":{w},
+                 "b_codes":[0,0],"mult":[1,1],"shift":[11,11],
+                 "in_step":0.00390625,"out_step":0.015625}}}},
+    {{"name":"pool1","op":"MaxPool2","inputs":["c1"],"outputs":["p1"],
+      "attrs":{{"kernel":[2,2],"stride":[2,2]}}}},
+    {{"name":"flatten","op":"Flatten","inputs":["p1"],"outputs":["f"],"attrs":{{}}}},
+    {{"name":"dense","op":"QGemm","inputs":["f"],"outputs":["logits"],
+      "attrs":{{"in_features":8,"out_features":3,"weight_bits":4,
+               "act_bits":0,"act_int_bits":0}},
+      "weights":{{"w_shape":[8,3],"w_codes":{dw},
+                 "b_codes":[0,1,-1],"w_step":0.1,"in_step":0.015625}}}}
+  ],
+  "output": "logits"
+}}"#,
+        w = fmt_vec(&w_codes),
+        dw = fmt_vec(&dw),
+    )
+}
+
 /// Parameters of a randomly generated conv-pool pipeline.
 #[derive(Debug, Clone)]
 pub struct RandModelCfg {
@@ -149,6 +187,11 @@ mod tests {
     #[test]
     fn tiny_model_parses() {
         assert!(read_str(&tiny_model_json(1, 2)).is_ok());
+    }
+
+    #[test]
+    fn prune_stress_model_parses() {
+        assert!(read_str(&prune_stress_model_json()).is_ok());
     }
 
     #[test]

@@ -76,6 +76,7 @@ impl PjrtEngine {
             return Ok(std::time::Duration::ZERO);
         }
         let path = store.hlo_path(profile, batch);
+        #[allow(clippy::disallowed_methods)] // wall-clock: reported compile time
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(&path)
             .with_context(|| format!("loading HLO text {path:?}"))?;

@@ -1,6 +1,8 @@
 //! Cross-module property suite (DESIGN.md §7) — invariants that span
 //! substrate boundaries, driven by the in-house testkit.
 
+use onnx2hw::analysis::{self, Interval};
+use onnx2hw::approx::{derive_model, knobs_for};
 use onnx2hw::dataflow::{exec, simulate_image, BatchExecutor, FoldingConfig};
 use onnx2hw::hls::{estimate_engine, Calibration};
 use onnx2hw::json::{self, Value};
@@ -87,6 +89,72 @@ fn batched_packed_kernels_match_scalar_oracle() {
                 onnx2hw::prop_assert!(
                     got[i * k..(i + 1) * k] == want[..],
                     "cfg {cfg:?}: batch {batch} image {i} diverges from oracle"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Widest `[lo, hi]` covering every per-channel interval (None when empty).
+fn envelope(ivs: &[Interval]) -> Option<(i64, i64)> {
+    ivs.iter().fold(None, |e, iv| match e {
+        None => Some((iv.lo, iv.hi)),
+        Some((lo, hi)) => Some((lo.min(iv.lo), hi.max(iv.hi))),
+    })
+}
+
+#[test]
+fn analysis_intervals_contain_every_observed_value() {
+    // Soundness of the static verifier: on random models x random knob
+    // vectors, the proven per-layer intervals must contain every
+    // accumulator/activation value the scalar oracle actually produces,
+    // and a layer proven i32-narrow must never observe an accumulator
+    // outside i32. Derived models may legitimately carry error
+    // diagnostics (e.g. a bit-drop zeroing a weight tensor) — soundness
+    // has to hold on them regardless.
+    testkit::check("analysis soundness vs scalar oracle", |rng| {
+        let cfg = RandModelCfg::gen(rng);
+        let base = read_str(&qonnx::random_model_json(&cfg, rng)).map_err(|e| e.to_string())?;
+        let knobs = knobs_for(&base);
+        let config: Vec<u32> = knobs.iter().map(|k| rng.u64(0, k.max as u64) as u32).collect();
+        let m = derive_model(&base, &config, "prop");
+        let an = analysis::analyze(&m);
+        let img: Vec<u8> = (0..m.input_shape.elems()).map(|_| rng.u64(0, 255) as u8).collect();
+        let (logits, traces) = exec::execute_traced(&m, &img);
+        onnx2hw::prop_assert!(traces.len() == an.facts.len(), "trace/facts misaligned");
+        for (i, (trace, facts)) in traces.iter().zip(&an.facts).enumerate() {
+            if let Some((lo, hi)) = trace.acc {
+                let (alo, ahi) = envelope(&facts.acc).ok_or("acc facts missing")?;
+                onnx2hw::prop_assert!(
+                    alo <= lo && hi <= ahi,
+                    "cfg {cfg:?} config {config:?} layer {i} '{}': \
+                     observed acc [{lo},{hi}] outside proven [{alo},{ahi}]",
+                    facts.name
+                );
+                if facts.narrow == Some(true) {
+                    onnx2hw::prop_assert!(
+                        lo >= i32::MIN as i64 && hi <= i32::MAX as i64,
+                        "layer {i} '{}' proven narrow but observed acc [{lo},{hi}]",
+                        facts.name
+                    );
+                }
+            }
+            if let Some((lo, hi)) = trace.act {
+                let (alo, ahi) = envelope(&facts.act).ok_or("act facts missing")?;
+                onnx2hw::prop_assert!(
+                    alo <= lo && hi <= ahi,
+                    "cfg {cfg:?} config {config:?} layer {i} '{}': \
+                     observed act [{lo},{hi}] outside proven [{alo},{ahi}]",
+                    facts.name
+                );
+            }
+        }
+        if let Some((llo, lhi)) = envelope(&an.logits) {
+            for &v in &logits {
+                onnx2hw::prop_assert!(
+                    llo <= v && v <= lhi,
+                    "logit {v} outside proven [{llo},{lhi}]"
                 );
             }
         }
