@@ -1,0 +1,189 @@
+//! Wire-protocol round trip on a loopback socket: a self-hosted adaptive
+//! server behind the TCP front end, driven by a Poisson arrival schedule
+//! through [`NetClient`].
+//!
+//! The synthetic model needs no artifacts, so this runs anywhere:
+//!
+//! 1. start the spine (`AdaptiveServer`, Sim backend) + [`NetServer`] on
+//!    `127.0.0.1:0`;
+//! 2. generate a seeded Poisson schedule (`loadgen::poisson_arrivals`) and
+//!    pace it on the wall clock, keeping a bounded window in flight;
+//! 3. print exact client-side latency quantiles and an ASCII log2-bucket
+//!    histogram, then drain gracefully and check the gauges read zero.
+//!
+//! Run: `cargo run --release --example net_roundtrip -- [requests]
+//!       [rate_per_s] [shards]`
+
+use std::collections::{BTreeMap, VecDeque};
+
+use anyhow::Result;
+use onnx2hw::coordinator::{
+    AdaptiveServer, Backend, EnergyMonitor, ManagerConfig, ProfileManager, ProfileSpec,
+    ServerConfig,
+};
+use onnx2hw::loadgen;
+use onnx2hw::metrics::exact_quantile_us;
+use onnx2hw::net::{NetClient, NetReply, NetServer, NetServerConfig};
+use onnx2hw::qonnx::{read_str, test_model_json, QonnxModel};
+
+const SEED: u64 = 7;
+const WINDOW: usize = 16;
+
+fn arg<T: std::str::FromStr>(n: usize, default: T) -> T {
+    std::env::args()
+        .nth(n)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn histogram(latencies: &[u64]) -> String {
+    // log2 buckets, rendered like the metrics::Histogram but from the
+    // exact per-request samples this example retains.
+    let mut buckets = [0usize; 24];
+    for &us in latencies {
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(buckets.len() - 1);
+        buckets[idx] += 1;
+    }
+    let peak = buckets.iter().copied().max().unwrap_or(1).max(1);
+    let mut out = String::new();
+    for (i, &n) in buckets.iter().enumerate() {
+        if n == 0 {
+            continue;
+        }
+        let bar = "#".repeat((n * 40).div_ceil(peak));
+        out.push_str(&format!(
+            "  {:>9}us..{:<9}us {:>6}  {bar}\n",
+            1u64 << i,
+            1u64 << (i + 1),
+            n
+        ));
+    }
+    out
+}
+
+#[allow(clippy::disallowed_methods)] // wall-clock: a live paced demo, not a gated number
+fn main() -> Result<()> {
+    use std::time::{Duration, Instant};
+
+    let requests: usize = arg(1, 512);
+    let rate_per_s: f64 = arg(2, 4000.0);
+    let shards: usize = arg(3, 2).max(1);
+
+    // --- spine + front end on a loopback port ---
+    let model = read_str(&test_model_json(1, 2)).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let elems = model.input_shape.elems();
+    let models: BTreeMap<String, QonnxModel> = [
+        ("hi".to_string(), model.clone()),
+        ("lo".to_string(), model.clone()),
+    ]
+    .into_iter()
+    .collect();
+    let specs = vec![
+        ProfileSpec {
+            name: "hi".into(),
+            accuracy: 0.96,
+            power_mw: 142.0,
+            latency_us: 329.0,
+        },
+        ProfileSpec {
+            name: "lo".into(),
+            accuracy: 0.94,
+            power_mw: 76.0,
+            latency_us: 329.0,
+        },
+    ];
+    let srv = AdaptiveServer::start(
+        ServerConfig {
+            workers: shards,
+            ..Default::default()
+        },
+        move || Ok(Backend::sim_from_models(models.clone())),
+        ProfileManager::new(ManagerConfig::default(), specs),
+        EnergyMonitor::new(10.0),
+    )?;
+    let net = NetServer::start(
+        NetServerConfig {
+            expected_image_len: Some(elems),
+            ..Default::default()
+        },
+        srv.client(),
+    )?;
+    println!(
+        "serving on {} | {shards} shard(s) | image payload {elems} bytes",
+        net.addr()
+    );
+
+    // --- paced open-loop client ---
+    let arrivals = loadgen::poisson_arrivals(rate_per_s, requests, SEED);
+    let images: Vec<Vec<u8>> = (0..8)
+        .map(|k| (0..elems).map(|i| ((i * 31 + k * 17) % 256) as u8).collect())
+        .collect();
+    let mut client = NetClient::connect(&net.addr().to_string())?;
+    let mut send_times: VecDeque<Instant> = VecDeque::new();
+    let mut latencies: Vec<u64> = Vec::with_capacity(requests);
+    let mut denied = 0usize;
+    let drain_one = |client: &mut NetClient,
+                     send_times: &mut VecDeque<Instant>,
+                     latencies: &mut Vec<u64>,
+                     denied: &mut usize|
+     -> Result<()> {
+        let sent = send_times.pop_front().expect("a reply implies a send");
+        match client.recv()? {
+            NetReply::Response(_) => latencies.push(sent.elapsed().as_micros() as u64),
+            NetReply::Denied { .. } => *denied += 1,
+        }
+        Ok(())
+    };
+    let t0 = Instant::now();
+    for (i, &at) in arrivals.iter().enumerate() {
+        let target = t0 + Duration::from_secs_f64(at);
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        while send_times.len() >= WINDOW {
+            drain_one(&mut client, &mut send_times, &mut latencies, &mut denied)?;
+        }
+        client.submit(&images[i % images.len()])?;
+        send_times.push_back(Instant::now());
+    }
+    while !send_times.is_empty() {
+        drain_one(&mut client, &mut send_times, &mut latencies, &mut denied)?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // --- report ---
+    latencies.sort_unstable();
+    println!(
+        "\n{} requests at {rate_per_s:.0}/s offered over {wall:.2}s wall \
+         ({:.0} req/s achieved) | served {} | denied {denied}",
+        requests,
+        requests as f64 / wall.max(1e-9),
+        latencies.len()
+    );
+    println!(
+        "client-side latency: p50 {}us p90 {}us p99 {}us p999 {}us max {}us",
+        exact_quantile_us(&latencies, 0.50),
+        exact_quantile_us(&latencies, 0.90),
+        exact_quantile_us(&latencies, 0.99),
+        exact_quantile_us(&latencies, 0.999),
+        latencies.last().copied().unwrap_or(0)
+    );
+    println!("\nlatency histogram (log2 buckets):\n{}", histogram(&latencies));
+
+    // --- graceful drain: gauges must read zero ---
+    drop(client);
+    let stats = net.stats.clone();
+    net.shutdown();
+    println!(
+        "drained: served {} | shed {} | in-flight {} | open connections {}",
+        stats.served.get(),
+        stats.shed.get(),
+        stats.inflight.get(),
+        stats.open_connections.get()
+    );
+    assert_eq!(stats.inflight.get(), 0);
+    assert_eq!(stats.open_connections.get(), 0);
+    srv.shutdown();
+    Ok(())
+}

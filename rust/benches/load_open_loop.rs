@@ -1,0 +1,336 @@
+//! Bench: open-loop offered load — p99 under a fixed rate, with admission
+//! control gating the tail.
+//!
+//! Two deterministic layers, no wall clock in any gated number:
+//!
+//! 1. **Virtual-time model** (`loadgen::simulate`): seeded Poisson arrivals
+//!    pushed through the M/D/c queue model at the serving spine's geometry
+//!    (4 shards x 329 us service, admission depth 64). Two scenarios:
+//!    *nominal* (6000 req/s — under the ~12158 req/s capacity; nothing may
+//!    be shed and p99 must stay under the gate) and *overload* (30000 req/s
+//!    — admission control must shed instead of letting the tail grow, so
+//!    p99 stays below the closed-form bound
+//!    `(depth/shards + 1) * service_us` no matter the offered rate).
+//! 2. **Wire round trip**: the same spine behind the real TCP front end
+//!    ([`onnx2hw::net::NetServer`]) on a loopback socket. A pipelined
+//!    [`NetClient`] pushes requests through the framed protocol and every
+//!    reply is asserted bit-exact against the scalar oracle
+//!    (`exec::execute`) — the wire must never change the integers — and
+//!    all queue/in-flight gauges must read zero after the drain.
+//!
+//! Run: `cargo bench --bench load_open_loop [-- <wire_requests>
+//!       [--json <path>] [--assert-gate]]`
+//!
+//! `--json` writes one row per scenario for the CI artifact;
+//! `--assert-gate` enforces the latency/shed gates above.
+
+use std::collections::BTreeMap;
+
+use onnx2hw::bench_harness::Table;
+use onnx2hw::coordinator::{
+    AdaptiveServer, Backend, EnergyMonitor, ManagerConfig, ProfileManager, ProfileSpec,
+    ServerConfig,
+};
+use onnx2hw::dataflow::exec;
+use onnx2hw::json::{self, Value};
+use onnx2hw::loadgen::{poisson_arrivals, simulate, OpenLoopConfig, OpenLoopReport};
+use onnx2hw::metrics::exact_quantile_us;
+use onnx2hw::net::{NetClient, NetReply, NetServer, NetServerConfig};
+use onnx2hw::qonnx::{read_str, test_model_json, QonnxModel};
+
+const N_IMAGES: usize = 8;
+/// Queue-model geometry: matches the paper's per-inference latency on the
+/// A8-W8 engine (329 us) across a 4-shard spine.
+const SERVICE_US: f64 = 329.0;
+const SHARDS: usize = 4;
+const ADMISSION: usize = 64;
+/// Closed-form worst case for an *admitted* request: it waits behind at
+/// most `depth` others spread over `shards` servers, then runs.
+const LATENCY_BOUND_US: u64 = ((ADMISSION as u64 / SHARDS as u64) + 1) * SERVICE_US as u64;
+/// Nominal-scenario p99 gate: measured 647 us at seed 7; 3x margin.
+const NOMINAL_P99_GATE_US: u64 = 2000;
+const SEED: u64 = 7;
+
+struct Scenario {
+    name: &'static str,
+    rate_per_s: f64,
+    requests: usize,
+}
+
+const SCENARIOS: [Scenario; 2] = [
+    // ~49% utilisation of the 4 x (1/329us) = ~12158 req/s capacity
+    Scenario {
+        name: "nominal",
+        rate_per_s: 6000.0,
+        requests: 4000,
+    },
+    // ~2.5x capacity: admission control must shed, the tail must not grow
+    Scenario {
+        name: "overload",
+        rate_per_s: 30000.0,
+        requests: 6000,
+    },
+];
+
+struct WireResult {
+    requests: usize,
+    p50_us: u64,
+    p99_us: u64,
+    max_us: u64,
+}
+
+/// Serve `requests` images through the TCP front end and assert every reply
+/// bit-exact against the scalar oracle. Returns the spine-side latency
+/// quantiles (virtual service time, not wall clock).
+fn run_wire_roundtrip(requests: usize) -> WireResult {
+    let model = read_str(&test_model_json(1, 2)).expect("model");
+    let elems = model.input_shape.elems();
+    let models: BTreeMap<String, QonnxModel> = [
+        ("hi".to_string(), model.clone()),
+        ("lo".to_string(), model.clone()),
+    ]
+    .into_iter()
+    .collect();
+    let factory = move || Ok(Backend::sim_from_models(models.clone()));
+    let specs = vec![
+        ProfileSpec {
+            name: "hi".into(),
+            accuracy: 0.96,
+            power_mw: 142.0,
+            latency_us: SERVICE_US,
+        },
+        ProfileSpec {
+            name: "lo".into(),
+            accuracy: 0.94,
+            power_mw: 76.0,
+            latency_us: SERVICE_US,
+        },
+    ];
+    let manager = ProfileManager::new(ManagerConfig::default(), specs);
+    // Battery sized so the run never degrades: the oracle check is about
+    // the wire, not adaptivity (energy_cycle covers that).
+    let srv = AdaptiveServer::start(
+        ServerConfig {
+            workers: 2,
+            ..Default::default()
+        },
+        factory,
+        manager,
+        EnergyMonitor::new(10.0),
+    )
+    .expect("server");
+    let srv_stats = srv.stats.clone();
+    let net = NetServer::start(
+        NetServerConfig {
+            expected_image_len: Some(elems),
+            ..Default::default()
+        },
+        srv.client(),
+    )
+    .expect("net server");
+    let net_stats = net.stats.clone();
+
+    let patterns: Vec<Vec<u8>> = (0..N_IMAGES)
+        .map(|k| (0..elems).map(|i| ((i * 31 + k * 17) % 256) as u8).collect())
+        .collect();
+    let expect: Vec<Vec<f32>> = patterns
+        .iter()
+        .map(|img| exec::execute(&model, img).iter().map(|&v| v as f32).collect())
+        .collect();
+
+    let mut client = NetClient::connect(&net.addr().to_string()).expect("connect");
+    let replies = client
+        .classify_pipelined((0..requests).map(|i| patterns[i % N_IMAGES].clone()), 16)
+        .expect("pipelined run");
+    assert_eq!(replies.len(), requests, "one reply per request");
+    let mut latencies: Vec<u64> = Vec::with_capacity(requests);
+    for (i, reply) in replies.iter().enumerate() {
+        match reply {
+            NetReply::Response(resp) => {
+                assert_eq!(resp.id, i as u64, "replies keep submission order");
+                assert_eq!(
+                    resp.logits,
+                    expect[i % N_IMAGES],
+                    "request {i} on '{}' not bit-exact vs the scalar oracle",
+                    resp.profile
+                );
+                latencies.push(resp.latency_us);
+            }
+            NetReply::Denied { id, code, message } => {
+                panic!("request {id} denied under default admission: {code}: {message}")
+            }
+        }
+    }
+
+    // Drain: the client hangs up, the front end joins every thread, and
+    // all gauges must be back at zero — nothing leaked on the happy path.
+    drop(client);
+    net.shutdown();
+    assert_eq!(net_stats.served.get(), requests as u64);
+    assert_eq!(net_stats.shed.get(), 0);
+    assert_eq!(net_stats.failed.get(), 0);
+    assert_eq!(net_stats.inflight.get(), 0, "in-flight gauge leaked");
+    assert_eq!(net_stats.open_connections.get(), 0, "connection gauge leaked");
+    assert!(srv_stats.drained(), "spine queue/shard gauges leaked");
+    srv.shutdown();
+
+    latencies.sort_unstable();
+    WireResult {
+        requests,
+        p50_us: exact_quantile_us(&latencies, 0.50),
+        p99_us: exact_quantile_us(&latencies, 0.99),
+        max_us: latencies.last().copied().unwrap_or(0),
+    }
+}
+
+fn report_row(s: &Scenario, r: &OpenLoopReport) -> Value {
+    Value::obj(vec![
+        ("scenario", s.name.into()),
+        ("rate_per_s", s.rate_per_s.into()),
+        ("seed", (SEED as i64).into()),
+        ("shards", SHARDS.into()),
+        ("service_us", SERVICE_US.into()),
+        ("admission_depth", ADMISSION.into()),
+        ("offered", r.offered.into()),
+        ("served", r.served.into()),
+        ("shed", r.shed.into()),
+        ("shed_fraction", r.shed_fraction.into()),
+        ("p50_us", (r.p50_us as i64).into()),
+        ("p99_us", (r.p99_us as i64).into()),
+        ("p999_us", (r.p999_us as i64).into()),
+        ("max_us", (r.max_us as i64).into()),
+        ("mean_us", r.mean_us.into()),
+        ("horizon_s", r.horizon_s.into()),
+        ("latency_bound_us", (LATENCY_BOUND_US as i64).into()),
+        (
+            "max_depth",
+            Value::Array(r.max_depth.iter().map(|&d| d.into()).collect()),
+        ),
+    ])
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut wire_requests: usize = 96;
+    let mut json_path: Option<String> = None;
+    let mut assert_gate = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--json" => {
+                i += 1;
+                json_path = Some(args.get(i).expect("--json needs a path").clone());
+            }
+            "--assert-gate" => assert_gate = true,
+            other => {
+                wire_requests = other.parse().unwrap_or_else(|_| {
+                    panic!("unexpected argument '{other}' (want a wire request count)")
+                });
+            }
+        }
+        i += 1;
+    }
+
+    let cfg = OpenLoopConfig {
+        shards: SHARDS,
+        service_us: SERVICE_US,
+        admission_depth: ADMISSION,
+    };
+    let mut table = Table::new(&[
+        "scenario", "rate", "offered", "served", "shed", "p50", "p99", "p999", "max",
+    ]);
+    let mut reports = Vec::new();
+    for s in &SCENARIOS {
+        let arrivals = poisson_arrivals(s.rate_per_s, s.requests, SEED);
+        let r = simulate(&arrivals, &cfg);
+        table.row(&[
+            s.name.to_string(),
+            format!("{:.0}/s", s.rate_per_s),
+            r.offered.to_string(),
+            r.served.to_string(),
+            format!("{} ({:.1}%)", r.shed, r.shed_fraction * 100.0),
+            format!("{}us", r.p50_us),
+            format!("{}us", r.p99_us),
+            format!("{}us", r.p999_us),
+            format!("{}us", r.max_us),
+        ]);
+        reports.push(r);
+    }
+
+    println!(
+        "== open-loop offered load (seeded Poisson, virtual time; {SHARDS} shards x \
+         {SERVICE_US:.0}us service, admission depth {ADMISSION}) ==\n"
+    );
+    println!("{}", table.render());
+    println!(
+        "admitted-latency bound: (depth/shards + 1) * service = {LATENCY_BOUND_US}us; \
+         capacity ~{:.0} req/s",
+        SHARDS as f64 * 1e6 / SERVICE_US
+    );
+
+    let wire = run_wire_roundtrip(wire_requests);
+    println!(
+        "\nwire round trip: {} framed requests through the TCP front end, every reply \
+         bit-exact vs exec::execute; spine latency p50 {}us p99 {}us max {}us; all \
+         gauges zero after drain",
+        wire.requests, wire.p50_us, wire.p99_us, wire.max_us
+    );
+
+    if let Some(path) = &json_path {
+        let mut rows: Vec<Value> = SCENARIOS
+            .iter()
+            .zip(&reports)
+            .map(|(s, r)| report_row(s, r))
+            .collect();
+        rows.push(Value::obj(vec![
+            ("scenario", "wire-roundtrip".into()),
+            ("requests", wire.requests.into()),
+            ("bit_exact", true.into()),
+            ("p50_us", (wire.p50_us as i64).into()),
+            ("p99_us", (wire.p99_us as i64).into()),
+            ("max_us", (wire.max_us as i64).into()),
+        ]));
+        std::fs::write(path, json::to_string_pretty(&Value::Array(rows))).expect("write json");
+        println!("wrote {} rows to {path}", reports.len() + 1);
+    }
+
+    if assert_gate {
+        let nominal = &reports[0];
+        assert_eq!(
+            nominal.shed, 0,
+            "nominal: shed {} requests below the admission threshold",
+            nominal.shed
+        );
+        assert_eq!(nominal.served, nominal.offered, "nominal: lost requests");
+        assert!(
+            nominal.p99_us <= NOMINAL_P99_GATE_US,
+            "nominal: p99 {}us exceeds the {NOMINAL_P99_GATE_US}us gate",
+            nominal.p99_us
+        );
+        let overload = &reports[1];
+        assert!(
+            overload.shed_fraction >= 0.3,
+            "overload: shed fraction {:.3} — admission control is not biting",
+            overload.shed_fraction
+        );
+        assert!(
+            overload.max_us <= LATENCY_BOUND_US,
+            "overload: max latency {}us exceeds the admitted bound {LATENCY_BOUND_US}us \
+             — the tail grew instead of shedding",
+            overload.max_us
+        );
+        for (i, &d) in overload.max_depth.iter().enumerate() {
+            assert!(
+                d <= ADMISSION,
+                "overload: shard {i} depth {d} exceeded the admission ceiling {ADMISSION}"
+            );
+        }
+        println!(
+            "\ngate passed: nominal p99 {}us <= {NOMINAL_P99_GATE_US}us with zero shed; \
+             overload shed {:.1}% with max {}us <= bound {LATENCY_BOUND_US}us",
+            nominal.p99_us,
+            overload.shed_fraction * 100.0,
+            overload.max_us
+        );
+    }
+}

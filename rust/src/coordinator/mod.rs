@@ -25,6 +25,12 @@
 //! recovers and the manager's hysteresis upswitch restores the accurate
 //! profile. See `server.rs` for the pipeline diagram and `steal.rs` for
 //! the deque discipline.
+//!
+//! Remote clients reach the same spine through the TCP front end in
+//! [`crate::net`]: its acceptor threads decode length-prefixed frames,
+//! apply admission control (shedding with a typed `Overloaded` reply
+//! before the dispatcher ever sees the request), and submit through the
+//! same [`ClientHandle`] in-process callers use.
 
 mod backend;
 mod batcher;

@@ -113,6 +113,17 @@ pub struct ServerStats {
 }
 
 impl ServerStats {
+    /// True when every queue gauge in the spine reads zero — the aggregate
+    /// dispatch gauge and each shard's deque gauge. This is the spine's
+    /// gauge-conservation invariant: after all in-flight work is answered
+    /// (or dropped with the dead-pool accounting below), it must hold.
+    /// The network front end's shed and framing-error paths are
+    /// regression-tested against it: a rejected request must leave no
+    /// depth increment behind.
+    pub fn drained(&self) -> bool {
+        self.queue_depth.get() == 0 && self.shard_depth.iter().all(|g| g.get() == 0)
+    }
+
     fn for_workers(n: usize) -> Self {
         ServerStats {
             requests: Counter::default(),

@@ -10,7 +10,9 @@ pub mod coordinator;
 pub mod dataflow;
 pub mod flow;
 pub mod hls;
+pub mod loadgen;
 pub mod mdc;
+pub mod net;
 pub mod power;
 pub mod writer;
 pub mod json;

@@ -1,0 +1,323 @@
+//! Open-loop load generation on *virtual time*.
+//!
+//! The closed-loop benches (`throughput_workers` etc.) are self-limiting:
+//! a client waits for a reply before submitting again, so offered load
+//! collapses exactly when the server slows down — tail latency under
+//! pressure is invisible by construction. An **open-loop** workload fixes
+//! the arrival schedule up front (requests arrive whether or not earlier
+//! ones finished), which is how real traffic behaves and the standard way
+//! to measure p99/p999 honestly.
+//!
+//! Everything here runs on virtual time — seeded RNG, no wall clock,
+//! consistent with the repo-wide `clippy.toml` ban — so the reports are
+//! bit-for-bit reproducible and CI-gateable without retries:
+//!
+//! * [`poisson_arrivals`] — exponential inter-arrivals via inverse-CDF on
+//!   the seeded xorshift64* [`Rng`]; [`uniform_arrivals`] for a paced
+//!   schedule; any caller-supplied trace (sorted seconds) works too.
+//! * [`simulate`] — a discrete-event model of the serving spine:
+//!   join-shortest-queue routing over `shards` deterministic servers with
+//!   fixed `service_us`, plus the front end's shed-at-aggregate-depth
+//!   admission control. Emits exact p50/p99/p999 (every latency retained,
+//!   not bucketed), served/shed fractions, and per-shard depth high-water
+//!   marks.
+//!
+//! The model is the *planning* half; `onnx2hw loadgen --connect` and the
+//! `load_open_loop` bench drive the same schedules through the real TCP
+//! front end to keep the model honest.
+
+use std::collections::VecDeque;
+
+use crate::metrics::exact_quantile_us;
+use crate::testkit::Rng;
+
+/// Deterministic Poisson process: `n` arrival times (seconds, ascending)
+/// at `rate_per_s`, by inverse-CDF exponential inter-arrivals on the
+/// seeded generator.
+pub fn poisson_arrivals(rate_per_s: f64, n: usize, seed: u64) -> Vec<f64> {
+    assert!(
+        rate_per_s.is_finite() && rate_per_s > 0.0,
+        "rate must be finite and > 0, got {rate_per_s}"
+    );
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            // u in [0,1) so 1-u in (0,1]: ln never sees 0.
+            let u = rng.f64_unit();
+            t += -(1.0 - u).ln() / rate_per_s;
+            t
+        })
+        .collect()
+}
+
+/// Evenly paced arrivals at `rate_per_s` (the deterministic trace twin of
+/// [`poisson_arrivals`]).
+pub fn uniform_arrivals(rate_per_s: f64, n: usize) -> Vec<f64> {
+    assert!(
+        rate_per_s.is_finite() && rate_per_s > 0.0,
+        "rate must be finite and > 0, got {rate_per_s}"
+    );
+    (1..=n).map(|i| i as f64 / rate_per_s).collect()
+}
+
+/// The serving spine as the open-loop model sees it.
+#[derive(Debug, Clone)]
+pub struct OpenLoopConfig {
+    /// Parallel servers (worker shards).
+    pub shards: usize,
+    /// Deterministic per-request service time in microseconds.
+    pub service_us: f64,
+    /// Aggregate queued-or-in-service ceiling: an arrival finding this many
+    /// requests outstanding is shed (mirrors `NetServerConfig::admission_depth`).
+    pub admission_depth: usize,
+}
+
+/// What a fixed offered rate did to the modeled spine.
+#[derive(Debug, Clone)]
+pub struct OpenLoopReport {
+    /// Arrivals offered (the schedule length).
+    pub offered: usize,
+    pub served: usize,
+    pub shed: usize,
+    pub shed_fraction: f64,
+    /// Served latencies in microseconds, ascending (arrival -> completion).
+    pub latencies_us: Vec<u64>,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub p999_us: u64,
+    pub max_us: u64,
+    pub mean_us: f64,
+    /// Queue-depth high-water mark per shard (queued + in service).
+    pub max_depth: Vec<usize>,
+    /// Arrival indices that were admitted, in arrival order (lets callers
+    /// replay exactly the admitted subset through a real server).
+    pub served_ids: Vec<usize>,
+    /// Last arrival time (seconds of virtual time).
+    pub horizon_s: f64,
+}
+
+/// Discrete-event simulation of the spine under a fixed arrival schedule
+/// (`arrivals` in ascending seconds). Admission first (aggregate depth),
+/// then join-shortest-queue routing (ties to the lowest shard index —
+/// deterministic), then FIFO service at `cfg.service_us` per request.
+pub fn simulate(arrivals: &[f64], cfg: &OpenLoopConfig) -> OpenLoopReport {
+    let shards = cfg.shards.max(1);
+    assert!(
+        cfg.service_us.is_finite() && cfg.service_us > 0.0,
+        "service_us must be finite and > 0, got {}",
+        cfg.service_us
+    );
+    let service_s = cfg.service_us * 1e-6;
+    // Per-shard FIFO of completion times; front = oldest outstanding.
+    let mut queues: Vec<VecDeque<f64>> = vec![VecDeque::new(); shards];
+    let mut free_at = vec![0.0f64; shards];
+    let mut max_depth = vec![0usize; shards];
+    let mut latencies: Vec<u64> = Vec::new();
+    let mut served_ids: Vec<usize> = Vec::new();
+    let mut shed = 0usize;
+    let mut last_t = f64::NEG_INFINITY;
+    for (idx, &t) in arrivals.iter().enumerate() {
+        assert!(
+            t >= last_t && t.is_finite(),
+            "arrivals must be finite and ascending: arrival {idx} at {t} after {last_t}"
+        );
+        last_t = t;
+        // Retire everything that completed by now.
+        for q in queues.iter_mut() {
+            while q.front().is_some_and(|&done| done <= t) {
+                q.pop_front();
+            }
+        }
+        let depth: usize = queues.iter().map(VecDeque::len).sum();
+        if depth >= cfg.admission_depth {
+            shed += 1;
+            continue;
+        }
+        // Join the shortest queue; min_by_key keeps the first (lowest
+        // index) minimum, so routing is deterministic.
+        let tgt = (0..shards)
+            .min_by_key(|&i| queues[i].len())
+            .expect("at least one shard");
+        let start = if free_at[tgt] > t { free_at[tgt] } else { t };
+        let done = start + service_s;
+        free_at[tgt] = done;
+        queues[tgt].push_back(done);
+        max_depth[tgt] = max_depth[tgt].max(queues[tgt].len());
+        latencies.push(((done - t) * 1e6).round() as u64);
+        served_ids.push(idx);
+    }
+    latencies.sort_unstable();
+    let served = latencies.len();
+    let offered = arrivals.len();
+    let mean_us = if served == 0 {
+        0.0
+    } else {
+        latencies.iter().sum::<u64>() as f64 / served as f64
+    };
+    OpenLoopReport {
+        offered,
+        served,
+        shed,
+        shed_fraction: if offered == 0 {
+            0.0
+        } else {
+            shed as f64 / offered as f64
+        },
+        p50_us: exact_quantile_us(&latencies, 0.50),
+        p99_us: exact_quantile_us(&latencies, 0.99),
+        p999_us: exact_quantile_us(&latencies, 0.999),
+        max_us: latencies.last().copied().unwrap_or(0),
+        mean_us,
+        latencies_us: latencies,
+        max_depth,
+        served_ids,
+        horizon_s: arrivals.last().copied().unwrap_or(0.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_is_deterministic_and_calibrated() {
+        let a = poisson_arrivals(1000.0, 10_000, 42);
+        let b = poisson_arrivals(1000.0, 10_000, 42);
+        assert_eq!(a, b, "same seed must give the same schedule");
+        let c = poisson_arrivals(1000.0, 10_000, 43);
+        assert_ne!(a, c, "different seeds must differ");
+        assert!(a.windows(2).all(|w| w[1] >= w[0]), "ascending");
+        // mean inter-arrival ~ 1/rate = 1 ms; 10k samples => within 5%
+        let mean = a.last().unwrap() / a.len() as f64;
+        assert!(
+            (mean - 1e-3).abs() < 5e-5,
+            "mean inter-arrival {mean} far from 1e-3"
+        );
+    }
+
+    #[test]
+    fn uniform_paces_exactly() {
+        let a = uniform_arrivals(100.0, 5);
+        for (i, t) in a.iter().enumerate() {
+            assert!((t - (i + 1) as f64 * 0.01).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn single_shard_backlog_is_exact() {
+        // 3 simultaneous arrivals, 1 shard, 100 us service: latencies are
+        // exactly 100/200/300 us.
+        let report = simulate(
+            &[0.0, 0.0, 0.0],
+            &OpenLoopConfig {
+                shards: 1,
+                service_us: 100.0,
+                admission_depth: 10,
+            },
+        );
+        assert_eq!(report.latencies_us, vec![100, 200, 300]);
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.max_depth, vec![3]);
+        assert_eq!(report.served_ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn admission_depth_sheds_and_conserves() {
+        // 5 simultaneous arrivals but only 2 may be outstanding.
+        let report = simulate(
+            &[0.0; 5],
+            &OpenLoopConfig {
+                shards: 1,
+                service_us: 100.0,
+                admission_depth: 2,
+            },
+        );
+        assert_eq!(report.served, 2);
+        assert_eq!(report.shed, 3);
+        assert_eq!(report.served + report.shed, report.offered);
+        assert!((report.shed_fraction - 0.6).abs() < 1e-12);
+        // served latency stays bounded by the depth
+        assert_eq!(report.max_us, 200);
+    }
+
+    #[test]
+    fn depth_zero_sheds_everything() {
+        let report = simulate(
+            &uniform_arrivals(1000.0, 50),
+            &OpenLoopConfig {
+                shards: 4,
+                service_us: 100.0,
+                admission_depth: 0,
+            },
+        );
+        assert_eq!(report.served, 0);
+        assert_eq!(report.shed, 50);
+        assert_eq!(report.shed_fraction, 1.0);
+        assert_eq!(report.p99_us, 0);
+    }
+
+    #[test]
+    fn below_capacity_nothing_sheds_and_tails_are_bounded() {
+        // 4 shards x (1/329us) ~ 12.2k/s capacity; offer 6k/s.
+        let cfg = OpenLoopConfig {
+            shards: 4,
+            service_us: 329.0,
+            admission_depth: 64,
+        };
+        let report = simulate(&poisson_arrivals(6000.0, 4000, 7), &cfg);
+        assert_eq!(report.shed, 0, "below capacity nothing may shed");
+        assert_eq!(report.served, 4000);
+        assert!(report.p50_us >= 329, "p50 can't beat the service time");
+        // Anything outstanding is bounded by the admission depth, so
+        // latency is bounded by (depth/shards + 1) service times.
+        let bound = (cfg.service_us * (cfg.admission_depth as f64 / cfg.shards as f64 + 1.0)) as u64;
+        assert!(
+            report.max_us <= bound,
+            "max {} exceeds the depth bound {bound}",
+            report.max_us
+        );
+        assert!(report.p999_us >= report.p99_us && report.p99_us >= report.p50_us);
+    }
+
+    #[test]
+    fn overload_sheds_but_served_tail_stays_bounded() {
+        let cfg = OpenLoopConfig {
+            shards: 4,
+            service_us: 329.0,
+            admission_depth: 64,
+        };
+        // 30k/s offered into ~12.2k/s capacity: most arrivals shed, but
+        // the ones admitted still complete within the depth bound.
+        let report = simulate(&poisson_arrivals(30_000.0, 6000, 7), &cfg);
+        assert!(
+            report.shed_fraction > 0.3,
+            "overload must shed (got {:.3})",
+            report.shed_fraction
+        );
+        assert_eq!(report.served + report.shed, report.offered);
+        let bound = (cfg.service_us * (cfg.admission_depth as f64 / cfg.shards as f64 + 1.0)) as u64;
+        assert!(report.max_us <= bound);
+        for (i, &d) in report.max_depth.iter().enumerate() {
+            assert!(
+                d <= cfg.admission_depth,
+                "shard {i} depth {d} above the admission ceiling"
+            );
+        }
+    }
+
+    #[test]
+    fn simulate_is_deterministic() {
+        let cfg = OpenLoopConfig {
+            shards: 3,
+            service_us: 200.0,
+            admission_depth: 16,
+        };
+        let arrivals = poisson_arrivals(9000.0, 2000, 99);
+        let a = simulate(&arrivals, &cfg);
+        let b = simulate(&arrivals, &cfg);
+        assert_eq!(a.latencies_us, b.latencies_us);
+        assert_eq!(a.served_ids, b.served_ids);
+        assert_eq!(a.max_depth, b.max_depth);
+    }
+}

@@ -8,7 +8,9 @@
 //!   explore    auto-generate a Pareto profile ladder (approximation explorer)
 //!   check      statically verify a model or frontier JSON (range/width analysis)
 //!   classify   classify test images on the PJRT runtime
-//!   serve      run the adaptive inference server on a synthetic workload
+//!   serve      run the adaptive inference server (in-process workload, or
+//!              --listen for the TCP wire-protocol front end)
+//!   loadgen    open-loop load generator (virtual-time model / live server)
 //!   verify     cross-check rust dataflow vs python vectors vs PJRT runtime
 
 use std::sync::Arc;
@@ -24,7 +26,9 @@ use onnx2hw::coordinator::{
 };
 use onnx2hw::flow::{self, FlowConfig};
 use onnx2hw::json::{self, Value};
+use onnx2hw::loadgen;
 use onnx2hw::mdc;
+use onnx2hw::net::{NetClient, NetReply, NetServer, NetServerConfig};
 use onnx2hw::power::{
     run_fixed, simulate_battery, simulate_battery_cycles, AdaptivePolicy, BatteryModel,
     CycleSimConfig, EnergySource,
@@ -59,11 +63,13 @@ fn run(sub: &str, argv: &[String]) -> Result<()> {
         "check" => cmd_check(argv),
         "classify" => cmd_classify(argv),
         "serve" => cmd_serve(argv),
+        "loadgen" => cmd_loadgen(argv),
         "verify" => cmd_verify(argv),
         "help" | "--help" | "-h" => {
             println!(
                 "onnx2hw — ONNX-to-Hardware design flow (SAMOS 2024 reproduction)\n\n\
-                 USAGE: onnx2hw <table1|fig3|fig4|flow|explore|check|classify|serve|verify> [options]\n\
+                 USAGE: onnx2hw <table1|fig3|fig4|flow|explore|check|classify|serve|loadgen|verify> \
+                 [options]\n\
                  Run a subcommand with --help for its options."
             );
             Ok(())
@@ -539,8 +545,19 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("pair", "A8-W8,Mixed", "accurate,low-power profiles")
         .opt("workers", "2", "inference worker shards (backend replicas)")
         .opt("clients", "2", "concurrent synthetic client threads")
+        .opt("listen", "", "serve the TCP wire protocol on this address (e.g. 127.0.0.1:7070)")
+        .opt("admission-depth", "256", "shed requests past this aggregate in-flight depth (--listen)")
+        .opt("net-window", "32", "per-connection in-flight window (--listen)")
+        .opt("max-requests", "0", "with --listen: exit after this many replies (0 = serve forever)")
+        .flag("synthetic", "with --listen: serve the deterministic synthetic model (no artifacts)")
         .flag("no-steal", "disable work stealing between shards");
     let a = parse_or_usage(spec, argv)?;
+    if let Some(addr) = a.opt_str("listen") {
+        return serve_listen(&a, addr);
+    }
+    if a.flag("synthetic") {
+        bail!("--synthetic only applies to the network front end: pass --listen <addr>");
+    }
     let store = ArtifactStore::discover()?;
     let testset = store.testset()?;
     let pair: Vec<String> = a.get("pair").unwrap().split(',').map(String::from).collect();
@@ -669,6 +686,343 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         println!("  event: {ev}");
     }
     srv.shutdown();
+    Ok(())
+}
+
+type BackendFactory = Box<dyn Fn() -> Result<Backend> + Send + Sync>;
+
+/// `serve --listen`: put the TCP wire-protocol front end ([`NetServer`]) in
+/// front of the adaptive spine and block until `--max-requests` replies have
+/// been written (0 = serve until killed). `--synthetic` serves the
+/// deterministic synthetic model under "hi"/"lo" profiles so no artifact
+/// store is needed — the loopback twin of `explore --synthetic`.
+fn serve_listen(a: &onnx2hw::cli::Args, addr: &str) -> Result<()> {
+    let workers: usize = a.parse_num("workers")?;
+    let admission_depth: usize = a.parse_num("admission-depth")?;
+    let window: usize = a.parse_num("net-window")?;
+    let max_requests: u64 = a.parse_num("max-requests")?;
+    let recharge = parse_recharge(a.opt_str("recharge-mw"), a.opt_str("duty-cycle"))?;
+    let shard_capacity_j = a
+        .opt_str("shard-capacity")
+        .map(|s| {
+            s.parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--shard-capacity: cannot parse '{s}'"))
+        })
+        .transpose()?
+        .map(|j| vec![j]);
+    let shard_power_cap_mw = a
+        .opt_str("power-cap")
+        .map(|s| {
+            s.parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--power-cap: cannot parse '{s}'"))
+        })
+        .transpose()?;
+
+    let (factory, specs, image_len): (BackendFactory, Vec<ProfileSpec>, usize) =
+        if a.flag("synthetic") {
+            let model = onnx2hw::qonnx::read_str(&onnx2hw::qonnx::test_model_json(1, 2))
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let image_len = model.input_shape.elems();
+            let models: std::collections::BTreeMap<String, onnx2hw::qonnx::QonnxModel> =
+                [("hi".to_string(), model.clone()), ("lo".to_string(), model)]
+                    .into_iter()
+                    .collect();
+            let specs = vec![
+                ProfileSpec {
+                    name: "hi".into(),
+                    accuracy: 0.96,
+                    power_mw: 142.0,
+                    latency_us: 329.0,
+                },
+                ProfileSpec {
+                    name: "lo".into(),
+                    accuracy: 0.94,
+                    power_mw: 76.0,
+                    latency_us: 329.0,
+                },
+            ];
+            let factory: BackendFactory =
+                Box::new(move || Ok(Backend::sim_from_models(models.clone())));
+            (factory, specs, image_len)
+        } else {
+            let store = ArtifactStore::discover()?;
+            let pair: Vec<String> = a.get("pair").unwrap().split(',').map(String::from).collect();
+            let cfg = FlowConfig::default();
+            let rows = flow::table1(
+                &store,
+                &pair.iter().map(String::as_str).collect::<Vec<_>>(),
+                &cfg,
+            )?;
+            let specs: Vec<ProfileSpec> = rows
+                .iter()
+                .map(|r| ProfileSpec {
+                    name: r.profile.clone(),
+                    accuracy: r.accuracy_pct / 100.0,
+                    power_mw: r.power_mw,
+                    latency_us: r.latency_us,
+                })
+                .collect();
+            let image_len = store.qonnx(&pair[0])?.input_shape.elems();
+            let backend_kind = a.get("backend").unwrap().to_string();
+            let factory: BackendFactory = Box::new(move || {
+                let names: Vec<&str> = pair.iter().map(String::as_str).collect();
+                match backend_kind.as_str() {
+                    "pjrt" => Backend::pjrt(&store, &names),
+                    _ => Backend::sim(&store, &names),
+                }
+            });
+            (factory, specs, image_len)
+        };
+
+    let manager = ProfileManager::new(ManagerConfig::default(), specs);
+    let energy = EnergyMonitor::new(a.parse_num("battery-j")?);
+    let srv = AdaptiveServer::start(
+        ServerConfig {
+            workers,
+            shard_capacity_j,
+            shard_power_cap_mw,
+            recharge,
+            steal: !a.flag("no-steal"),
+            ..Default::default()
+        },
+        factory,
+        manager,
+        energy,
+    )?;
+    let net = NetServer::start(
+        NetServerConfig {
+            addr: addr.to_string(),
+            admission_depth,
+            window,
+            expected_image_len: Some(image_len),
+            ..Default::default()
+        },
+        srv.client(),
+    )?;
+    println!(
+        "listening on {} | image payload {image_len} bytes | {} shards | \
+         admission depth {admission_depth} | window {window}",
+        net.addr(),
+        srv.workers()
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let replies = net.stats.served.get()
+            + net.stats.failed.get()
+            + net.stats.shed.get()
+            + net.stats.bad_requests.get();
+        if max_requests > 0 && replies >= max_requests {
+            break;
+        }
+    }
+    println!(
+        "draining: served {} | shed {} | bad requests {} | frame errors {} | \
+         connections {} | p50 {}us p99 {}us | battery {:.1}%",
+        net.stats.served.get(),
+        net.stats.shed.get(),
+        net.stats.bad_requests.get(),
+        net.stats.frame_errors.get(),
+        net.stats.connections.get(),
+        srv.stats.latency.quantile_us(0.5),
+        srv.stats.latency.quantile_us(0.99),
+        srv.battery_fraction() * 100.0
+    );
+    net.shutdown();
+    srv.shutdown();
+    Ok(())
+}
+
+fn cmd_loadgen(argv: &[String]) -> Result<()> {
+    let spec = Spec::new(
+        "onnx2hw loadgen",
+        "open-loop load generator: virtual-time queue model, or drive a live server",
+    )
+    .opt("rate", "6000", "offered arrival rate in requests/s")
+    .opt("requests", "4000", "arrivals in the schedule")
+    .opt("pattern", "poisson", "arrival schedule: poisson | uniform")
+    .opt("seed", "7", "seed for the Poisson schedule")
+    .opt("shards", "4", "worker shards (model mode)")
+    .opt("service-us", "329", "per-request service time in us (model mode)")
+    .opt("admission", "64", "admission-control depth")
+    .opt("json", "", "write the report JSON here")
+    .opt("connect", "", "drive a live `serve --listen` server at this address")
+    .opt("image-len", "0", "request payload bytes (required with --connect)")
+    .opt("window", "32", "in-flight window per connection (--connect)");
+    let a = parse_or_usage(spec, argv)?;
+    let rate: f64 = a.parse_num("rate")?;
+    if !rate.is_finite() || rate <= 0.0 {
+        bail!("--rate must be finite and > 0, got {rate}");
+    }
+    let n: usize = a.parse_num("requests")?;
+    let seed: u64 = a.parse_num("seed")?;
+    let arrivals = match a.get("pattern").unwrap() {
+        "poisson" => loadgen::poisson_arrivals(rate, n, seed),
+        "uniform" => loadgen::uniform_arrivals(rate, n),
+        other => bail!("unknown --pattern '{other}' (want poisson|uniform)"),
+    };
+    if let Some(addr) = a.opt_str("connect") {
+        return loadgen_live(&a, addr, &arrivals, rate);
+    }
+
+    let cfg = loadgen::OpenLoopConfig {
+        shards: a.parse_num("shards")?,
+        service_us: a.parse_num("service-us")?,
+        admission_depth: a.parse_num("admission")?,
+    };
+    let report = loadgen::simulate(&arrivals, &cfg);
+    println!(
+        "== open-loop model: {} arrivals at {rate:.0}/s over {:.3}s virtual \
+         ({} shards x {:.0}us service, depth {}) ==",
+        report.offered, report.horizon_s, cfg.shards, cfg.service_us, cfg.admission_depth
+    );
+    println!(
+        "served {} | shed {} ({:.2}%) | p50 {}us p99 {}us p999 {}us max {}us | mean {:.0}us",
+        report.served,
+        report.shed,
+        report.shed_fraction * 100.0,
+        report.p50_us,
+        report.p99_us,
+        report.p999_us,
+        report.max_us,
+        report.mean_us
+    );
+    println!(
+        "per-shard depth high-water: {:?} (ceiling {})",
+        report.max_depth, cfg.admission_depth
+    );
+    if let Some(path) = a.opt_str("json") {
+        let row = Value::obj(vec![
+            ("mode", "model".into()),
+            ("pattern", a.get("pattern").unwrap().into()),
+            ("rate_per_s", rate.into()),
+            ("seed", (seed as i64).into()),
+            ("shards", cfg.shards.into()),
+            ("service_us", cfg.service_us.into()),
+            ("admission_depth", cfg.admission_depth.into()),
+            ("offered", report.offered.into()),
+            ("served", report.served.into()),
+            ("shed", report.shed.into()),
+            ("shed_fraction", report.shed_fraction.into()),
+            ("p50_us", (report.p50_us as i64).into()),
+            ("p99_us", (report.p99_us as i64).into()),
+            ("p999_us", (report.p999_us as i64).into()),
+            ("max_us", (report.max_us as i64).into()),
+            ("mean_us", report.mean_us.into()),
+            ("horizon_s", report.horizon_s.into()),
+            (
+                "max_depth",
+                Value::Array(report.max_depth.iter().map(|&d| d.into()).collect()),
+            ),
+        ]);
+        std::fs::write(path, json::to_string_pretty(&row))?;
+        println!("wrote report to {path}");
+    }
+    Ok(())
+}
+
+/// Drive a live `serve --listen` server with the arrival schedule on the
+/// wall clock: sleep to each arrival instant, submit, and read replies in
+/// submission order whenever the window is full. Overloaded denials count
+/// as shed, exactly like the virtual-time model.
+#[allow(clippy::disallowed_methods)] // wall-clock: pacing a live open-loop run
+fn loadgen_live(
+    a: &onnx2hw::cli::Args,
+    addr: &str,
+    arrivals: &[f64],
+    rate: f64,
+) -> Result<()> {
+    use std::time::{Duration, Instant};
+
+    let image_len: usize = a.parse_num("image-len")?;
+    if image_len == 0 {
+        bail!("--connect needs --image-len (serve --listen prints the expected payload size)");
+    }
+    let window: usize = std::cmp::max(1, a.parse_num("window")?);
+    let mut client = NetClient::connect(addr)?;
+    let images: Vec<Vec<u8>> = (0..8)
+        .map(|k| (0..image_len).map(|i| ((i * 31 + k * 17) % 256) as u8).collect())
+        .collect();
+
+    let mut send_times: std::collections::VecDeque<Instant> = std::collections::VecDeque::new();
+    let mut latencies: Vec<u64> = Vec::new();
+    let mut shed = 0usize;
+    let mut failed = 0usize;
+    // Replies arrive in submission order (per-connection guarantee), so the
+    // oldest send time always matches the next reply.
+    let drain_one = |client: &mut NetClient,
+                         send_times: &mut std::collections::VecDeque<Instant>,
+                         latencies: &mut Vec<u64>,
+                         shed: &mut usize,
+                         failed: &mut usize|
+     -> Result<()> {
+        let sent = send_times.pop_front().expect("a reply implies a send");
+        match client.recv()? {
+            NetReply::Response(_) => latencies.push(sent.elapsed().as_micros() as u64),
+            NetReply::Denied {
+                code: onnx2hw::net::ErrCode::Overloaded,
+                ..
+            } => *shed += 1,
+            NetReply::Denied { .. } => *failed += 1,
+        }
+        Ok(())
+    };
+
+    let t0 = Instant::now();
+    for (i, &at) in arrivals.iter().enumerate() {
+        let target = t0 + Duration::from_secs_f64(at);
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        while send_times.len() >= window {
+            drain_one(&mut client, &mut send_times, &mut latencies, &mut shed, &mut failed)?;
+        }
+        client.submit(&images[i % images.len()])?;
+        send_times.push_back(Instant::now());
+    }
+    while !send_times.is_empty() {
+        drain_one(&mut client, &mut send_times, &mut latencies, &mut shed, &mut failed)?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    latencies.sort_unstable();
+    let offered = arrivals.len();
+    let served = latencies.len();
+    let p50 = onnx2hw::metrics::exact_quantile_us(&latencies, 0.50);
+    let p99 = onnx2hw::metrics::exact_quantile_us(&latencies, 0.99);
+    let p999 = onnx2hw::metrics::exact_quantile_us(&latencies, 0.999);
+    let max = latencies.last().copied().unwrap_or(0);
+    println!(
+        "== open-loop live run against {addr}: {offered} arrivals at {rate:.0}/s \
+         over {wall:.3}s wall (window {window}) ==",
+    );
+    println!(
+        "served {served} | shed {shed} | other denials {failed} | \
+         p50 {p50}us p99 {p99}us p999 {p999}us max {max}us"
+    );
+    println!(
+        "note: the in-flight window bounds this client, so offered load is \
+         windowed open-loop, not pure open-loop — the virtual-time model \
+         (without --connect) is the unthrottled reference"
+    );
+    if let Some(path) = a.opt_str("json") {
+        let row = Value::obj(vec![
+            ("mode", "live".into()),
+            ("addr", addr.into()),
+            ("rate_per_s", rate.into()),
+            ("offered", offered.into()),
+            ("served", served.into()),
+            ("shed", shed.into()),
+            ("other_denials", failed.into()),
+            ("wall_s", wall.into()),
+            ("p50_us", (p50 as i64).into()),
+            ("p99_us", (p99 as i64).into()),
+            ("p999_us", (p999 as i64).into()),
+            ("max_us", (max as i64).into()),
+        ]);
+        std::fs::write(path, json::to_string_pretty(&row))?;
+        println!("wrote report to {path}");
+    }
     Ok(())
 }
 

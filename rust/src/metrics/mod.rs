@@ -169,6 +169,20 @@ impl Histogram {
     }
 }
 
+/// Exact nearest-rank quantile over an *ascending-sorted* sample set: the
+/// smallest value with at least `ceil(q * n)` samples <= it. The log-bucketed
+/// [`Histogram`] answers quantiles as bucket upper bounds (fine for live
+/// gauges); open-loop load reports retain every latency, so their
+/// p50/p99/p999 can and should be exact.
+pub fn exact_quantile_us(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let n = sorted.len();
+    let rank = ((n as f64 * q).ceil() as usize).clamp(1, n);
+    sorted[rank - 1]
+}
+
 /// Event log capturing profile switches etc. (bounded).
 #[derive(Debug, Default)]
 pub struct EventLog {
@@ -216,6 +230,19 @@ mod tests {
         let h = Histogram::default();
         assert_eq!(h.quantile_us(0.99), 0);
         assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn exact_quantiles_nearest_rank() {
+        assert_eq!(exact_quantile_us(&[], 0.99), 0);
+        let one = [42u64];
+        assert_eq!(exact_quantile_us(&one, 0.0), 42);
+        assert_eq!(exact_quantile_us(&one, 1.0), 42);
+        let xs: Vec<u64> = (1..=100).collect();
+        assert_eq!(exact_quantile_us(&xs, 0.50), 50);
+        assert_eq!(exact_quantile_us(&xs, 0.99), 99);
+        assert_eq!(exact_quantile_us(&xs, 0.999), 100);
+        assert_eq!(exact_quantile_us(&xs, 1.0), 100);
     }
 
     #[test]

@@ -1,0 +1,126 @@
+//! Blocking wire client for the `net` protocol.
+//!
+//! [`NetClient`] is the socket twin of the in-process
+//! `coordinator::ClientHandle`: `submit` writes a request frame (ids are
+//! allocated per connection), `recv` blocks for the next reply frame, and
+//! [`classify_pipelined`](NetClient::classify_pipelined) keeps a window of
+//! requests in flight like `ClientHandle::classify_pipelined` does over the
+//! mpsc spine. Replies arrive in submission order (the server guarantees
+//! per-connection ordering); denials surface as typed
+//! [`NetReply::Denied`] values, not errors — shedding is an expected
+//! response under load, and callers decide how to react.
+
+use std::io::{BufReader, BufWriter};
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+use super::frame::{
+    decode_error, decode_response, read_frame, write_frame, ErrCode, Frame, FrameError, FrameKind,
+    WireResponse, DEFAULT_MAX_PAYLOAD,
+};
+
+/// One reply frame, decoded.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NetReply {
+    Response(WireResponse),
+    /// The server denied the request with a typed error frame (id echoes
+    /// the request; framing-level errors carry id 0).
+    Denied {
+        id: u64,
+        code: ErrCode,
+        message: String,
+    },
+}
+
+/// A blocking connection to a [`super::NetServer`].
+pub struct NetClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    next_id: u64,
+}
+
+impl NetClient {
+    pub fn connect(addr: &str) -> Result<NetClient> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        let reader = BufReader::new(stream.try_clone().context("clone stream")?);
+        Ok(NetClient {
+            reader,
+            writer: BufWriter::new(stream),
+            next_id: 0,
+        })
+    }
+
+    /// Write one request frame; returns the id the reply will echo.
+    pub fn submit(&mut self, image: &[u8]) -> Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        write_frame(&mut self.writer, &Frame::request(id, image.to_vec()))
+            .context("write request frame")?;
+        Ok(id)
+    }
+
+    /// Block for the next reply frame (response or typed denial).
+    pub fn recv(&mut self) -> Result<NetReply, FrameError> {
+        let frame = read_frame(&mut self.reader, DEFAULT_MAX_PAYLOAD)?;
+        match frame.kind {
+            FrameKind::Response => Ok(NetReply::Response(decode_response(
+                frame.id,
+                &frame.payload,
+            )?)),
+            FrameKind::Error => {
+                let (code, message) = decode_error(&frame.payload)?;
+                Ok(NetReply::Denied {
+                    id: frame.id,
+                    code,
+                    message,
+                })
+            }
+            FrameKind::Request => Err(FrameError::Malformed(
+                "server sent a request frame".into(),
+            )),
+        }
+    }
+
+    /// Synchronous convenience: one request, one reply; denials become
+    /// errors. Requires no other submissions in flight on this connection.
+    pub fn classify(&mut self, image: &[u8]) -> Result<WireResponse> {
+        let id = self.submit(image)?;
+        match self.recv()? {
+            NetReply::Response(resp) if resp.id == id => Ok(resp),
+            NetReply::Response(resp) => bail!(
+                "reply id {} does not match request {id} (pipelined submissions pending?)",
+                resp.id
+            ),
+            NetReply::Denied { code, message, .. } => {
+                bail!("request {id} denied: {code}: {message}")
+            }
+        }
+    }
+
+    /// Pipelined classify: keep up to `window` requests in flight, reading
+    /// the oldest reply as new requests are written. Replies come back in
+    /// submission order, one per input (denials included in place).
+    pub fn classify_pipelined(
+        &mut self,
+        images: impl IntoIterator<Item = Vec<u8>>,
+        window: usize,
+    ) -> Result<Vec<NetReply>> {
+        let window = window.max(1);
+        let mut out = Vec::new();
+        let mut inflight = 0usize;
+        for img in images {
+            self.submit(&img)?;
+            inflight += 1;
+            if inflight >= window {
+                out.push(self.recv()?);
+                inflight -= 1;
+            }
+        }
+        for _ in 0..inflight {
+            out.push(self.recv()?);
+        }
+        Ok(out)
+    }
+}

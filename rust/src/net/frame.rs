@@ -1,0 +1,527 @@
+//! Wire format: length-prefixed binary frames (hand-rolled — offline, no
+//! serde/tokio).
+//!
+//! Every frame is an 18-byte header followed by `len` payload bytes, all
+//! integers big-endian:
+//!
+//! ```text
+//! +-------+---------+------+--------+--------+-----------------+
+//! | magic | version | kind |   id   |  len   |     payload     |
+//! | 4B    | 1B      | 1B   | 8B BE  | 4B BE  |    len bytes    |
+//! +-------+---------+------+--------+--------+-----------------+
+//! ```
+//!
+//! * magic is `b"O2HW"`; version is [`VERSION`]. Anything else is a typed
+//!   [`FrameError`], never a panic — garbage on the socket must not take a
+//!   serving thread down.
+//! * `id` is chosen by the client and echoed verbatim on the reply, so a
+//!   pipelined client can match responses to requests (per-connection
+//!   ordering is also guaranteed by the server, but ids survive reordering
+//!   across future transports).
+//! * `kind` selects the payload codec: [`FrameKind::Request`] carries raw
+//!   HWC u8 image codes, [`FrameKind::Response`] a [`WireResponse`], and
+//!   [`FrameKind::Error`] an [`ErrCode`] + UTF-8 message.
+//!
+//! [`read_frame`] distinguishes a clean close (EOF *between* frames →
+//! [`FrameError::Closed`]) from a truncated one (EOF *inside* a frame →
+//! [`FrameError::Truncated`]); oversize length prefixes are rejected before
+//! any allocation. See `docs/networking.md` for the full protocol contract.
+
+use std::fmt;
+use std::io::{Read, Write};
+
+/// Frame preamble: "O2HW".
+pub const MAGIC: [u8; 4] = *b"O2HW";
+/// Protocol version carried in every frame header.
+pub const VERSION: u8 = 1;
+/// Fixed header size: magic(4) + version(1) + kind(1) + id(8) + len(4).
+pub const HEADER_LEN: usize = 18;
+/// Default payload ceiling (1 MiB) — far above any model input; a length
+/// prefix beyond the limit is rejected before allocating.
+pub const DEFAULT_MAX_PAYLOAD: usize = 1 << 20;
+
+/// What a frame carries; the `kind` byte on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Client -> server: payload is the raw image bytes.
+    Request,
+    /// Server -> client: payload is an encoded [`WireResponse`].
+    Response,
+    /// Server -> client: payload is an [`ErrCode`] + UTF-8 message.
+    Error,
+}
+
+impl FrameKind {
+    fn code(self) -> u8 {
+        match self {
+            FrameKind::Request => 1,
+            FrameKind::Response => 2,
+            FrameKind::Error => 3,
+        }
+    }
+
+    fn from_code(code: u8) -> Option<FrameKind> {
+        match code {
+            1 => Some(FrameKind::Request),
+            2 => Some(FrameKind::Response),
+            3 => Some(FrameKind::Error),
+            _ => None,
+        }
+    }
+}
+
+/// One decoded frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub id: u64,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    pub fn request(id: u64, image: Vec<u8>) -> Frame {
+        Frame {
+            kind: FrameKind::Request,
+            id,
+            payload: image,
+        }
+    }
+
+    pub fn response(resp: &WireResponse) -> Frame {
+        Frame {
+            kind: FrameKind::Response,
+            id: resp.id,
+            payload: encode_response(resp),
+        }
+    }
+
+    pub fn error(id: u64, code: ErrCode, message: &str) -> Frame {
+        Frame {
+            kind: FrameKind::Error,
+            id,
+            payload: encode_error(code, message),
+        }
+    }
+}
+
+/// Typed error reply codes (the first two payload bytes of an error frame).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrCode {
+    /// Admission control shed the request: the aggregate in-flight depth is
+    /// at the configured limit. Back off and retry; nothing was enqueued.
+    Overloaded,
+    /// The frame or payload was malformed (bad magic/kind, wrong image
+    /// size, unparsable payload).
+    BadRequest,
+    /// The server is draining for shutdown and no longer admits work.
+    Draining,
+    /// The request was admitted but the serving spine dropped it (e.g.
+    /// shutdown raced the in-flight batch).
+    Internal,
+}
+
+impl ErrCode {
+    fn code(self) -> u16 {
+        match self {
+            ErrCode::Overloaded => 1,
+            ErrCode::BadRequest => 2,
+            ErrCode::Draining => 3,
+            ErrCode::Internal => 4,
+        }
+    }
+
+    fn from_code(code: u16) -> Option<ErrCode> {
+        match code {
+            1 => Some(ErrCode::Overloaded),
+            2 => Some(ErrCode::BadRequest),
+            3 => Some(ErrCode::Draining),
+            4 => Some(ErrCode::Internal),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for ErrCode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            ErrCode::Overloaded => "overloaded",
+            ErrCode::BadRequest => "bad-request",
+            ErrCode::Draining => "draining",
+            ErrCode::Internal => "internal",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Typed framing/decoding failures. Every variant is an expected,
+/// recoverable condition for the peer that observes it — the protocol
+/// layer never panics on wire input.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// Clean EOF at a frame boundary: the peer closed the connection.
+    Closed,
+    /// The 4 preamble bytes were not `b"O2HW"`.
+    BadMagic([u8; 4]),
+    /// Unknown protocol version.
+    BadVersion(u8),
+    /// Unknown `kind` byte.
+    UnknownKind(u8),
+    /// The length prefix exceeds the receiver's payload ceiling; rejected
+    /// before allocating.
+    Oversize { len: usize, max: usize },
+    /// EOF in the middle of a frame (header or payload).
+    Truncated { wanted: usize, got: usize },
+    /// A payload codec found structurally invalid bytes.
+    Malformed(String),
+    /// Transport-level I/O failure (reset, broken pipe, ...).
+    Io(String),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::Closed => write!(f, "connection closed"),
+            FrameError::BadMagic(m) => write!(f, "bad magic {m:?} (want {MAGIC:?})"),
+            FrameError::BadVersion(v) => write!(f, "unsupported protocol version {v}"),
+            FrameError::UnknownKind(k) => write!(f, "unknown frame kind {k}"),
+            FrameError::Oversize { len, max } => {
+                write!(f, "payload length {len} exceeds the {max}-byte limit")
+            }
+            FrameError::Truncated { wanted, got } => {
+                write!(f, "truncated frame: wanted {wanted} bytes, got {got}")
+            }
+            FrameError::Malformed(msg) => write!(f, "malformed payload: {msg}"),
+            FrameError::Io(msg) => write!(f, "i/o error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<std::io::Error> for FrameError {
+    fn from(e: std::io::Error) -> Self {
+        FrameError::Io(e.to_string())
+    }
+}
+
+/// Fill `buf`, tolerating short reads; returns the bytes actually read
+/// (short only on EOF). Interrupted reads are retried.
+fn read_full(r: &mut impl Read, buf: &mut [u8]) -> Result<usize, FrameError> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => break,
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError::Io(e.to_string())),
+        }
+    }
+    Ok(got)
+}
+
+/// Read and validate one frame. EOF before the first header byte is the
+/// clean [`FrameError::Closed`]; EOF anywhere inside a frame is
+/// [`FrameError::Truncated`]. A frame whose length prefix exceeds
+/// `max_payload` errs without allocating.
+pub fn read_frame(r: &mut impl Read, max_payload: usize) -> Result<Frame, FrameError> {
+    let mut header = [0u8; HEADER_LEN];
+    let got = read_full(r, &mut header)?;
+    if got == 0 {
+        return Err(FrameError::Closed);
+    }
+    if got < HEADER_LEN {
+        return Err(FrameError::Truncated {
+            wanted: HEADER_LEN,
+            got,
+        });
+    }
+    if header[0..4] != MAGIC {
+        let mut m = [0u8; 4];
+        m.copy_from_slice(&header[0..4]);
+        return Err(FrameError::BadMagic(m));
+    }
+    if header[4] != VERSION {
+        return Err(FrameError::BadVersion(header[4]));
+    }
+    let kind = FrameKind::from_code(header[5]).ok_or(FrameError::UnknownKind(header[5]))?;
+    let id = u64::from_be_bytes(header[6..14].try_into().expect("8-byte slice"));
+    let len = u32::from_be_bytes(header[14..18].try_into().expect("4-byte slice")) as usize;
+    if len > max_payload {
+        return Err(FrameError::Oversize {
+            len,
+            max: max_payload,
+        });
+    }
+    let mut payload = vec![0u8; len];
+    let got = read_full(r, &mut payload)?;
+    if got < len {
+        return Err(FrameError::Truncated { wanted: len, got });
+    }
+    Ok(Frame { kind, id, payload })
+}
+
+/// Write one frame and flush it onto the wire.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> std::io::Result<()> {
+    let mut header = [0u8; HEADER_LEN];
+    header[0..4].copy_from_slice(&MAGIC);
+    header[4] = VERSION;
+    header[5] = frame.kind.code();
+    header[6..14].copy_from_slice(&frame.id.to_be_bytes());
+    header[14..18].copy_from_slice(&(frame.payload.len() as u32).to_be_bytes());
+    w.write_all(&header)?;
+    w.write_all(&frame.payload)?;
+    w.flush()
+}
+
+/// A classification reply as carried on the wire (mirror of the in-process
+/// `ClassifyResponse`, minus the reply channel).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireResponse {
+    /// Echo of the request frame's id.
+    pub id: u64,
+    pub pred: u32,
+    /// Worker shard that executed the batch.
+    pub shard: u32,
+    /// End-to-end server-side latency (queue + batch + execute).
+    pub latency_us: u64,
+    /// Profile that served the request.
+    pub profile: String,
+    /// Raw logits; f32 bit patterns travel verbatim so the bit-exactness
+    /// contract survives the wire.
+    pub logits: Vec<f32>,
+}
+
+/// Response payload: pred u32 | shard u32 | latency_us u64 | profile_len
+/// u16 + UTF-8 | n_logits u32 | f32 bit patterns (u32 each), all BE.
+pub fn encode_response(resp: &WireResponse) -> Vec<u8> {
+    let mut p = Vec::with_capacity(22 + resp.profile.len() + 4 * resp.logits.len());
+    p.extend_from_slice(&resp.pred.to_be_bytes());
+    p.extend_from_slice(&resp.shard.to_be_bytes());
+    p.extend_from_slice(&resp.latency_us.to_be_bytes());
+    p.extend_from_slice(&(resp.profile.len() as u16).to_be_bytes());
+    p.extend_from_slice(resp.profile.as_bytes());
+    p.extend_from_slice(&(resp.logits.len() as u32).to_be_bytes());
+    for l in &resp.logits {
+        p.extend_from_slice(&l.to_bits().to_be_bytes());
+    }
+    p
+}
+
+/// Bounds-checked cursor step for the payload decoders.
+fn take<'a>(p: &mut &'a [u8], n: usize, what: &str) -> Result<&'a [u8], FrameError> {
+    if p.len() < n {
+        return Err(FrameError::Malformed(format!(
+            "{what}: need {n} bytes, have {}",
+            p.len()
+        )));
+    }
+    let (head, rest) = p.split_at(n);
+    *p = rest;
+    Ok(head)
+}
+
+pub fn decode_response(id: u64, payload: &[u8]) -> Result<WireResponse, FrameError> {
+    let mut p = payload;
+    let pred = u32::from_be_bytes(take(&mut p, 4, "pred")?.try_into().expect("4B"));
+    let shard = u32::from_be_bytes(take(&mut p, 4, "shard")?.try_into().expect("4B"));
+    let latency_us = u64::from_be_bytes(take(&mut p, 8, "latency")?.try_into().expect("8B"));
+    let plen = u16::from_be_bytes(take(&mut p, 2, "profile len")?.try_into().expect("2B"));
+    let profile = std::str::from_utf8(take(&mut p, plen as usize, "profile")?)
+        .map_err(|e| FrameError::Malformed(format!("profile not UTF-8: {e}")))?
+        .to_string();
+    let n = u32::from_be_bytes(take(&mut p, 4, "logit count")?.try_into().expect("4B")) as usize;
+    if p.len() != 4 * n {
+        return Err(FrameError::Malformed(format!(
+            "logits: {n} declared but {} payload bytes remain",
+            p.len()
+        )));
+    }
+    let mut logits = Vec::with_capacity(n);
+    for _ in 0..n {
+        let bits = u32::from_be_bytes(take(&mut p, 4, "logit")?.try_into().expect("4B"));
+        logits.push(f32::from_bits(bits));
+    }
+    Ok(WireResponse {
+        id,
+        pred,
+        shard,
+        latency_us,
+        profile,
+        logits,
+    })
+}
+
+/// Error payload: code u16 | msg_len u16 | UTF-8 message, BE.
+pub fn encode_error(code: ErrCode, message: &str) -> Vec<u8> {
+    // Truncate over-long messages on a char boundary so the bytes stay
+    // valid UTF-8 for the decoder.
+    let mut cut = message.len().min(u16::MAX as usize);
+    while !message.is_char_boundary(cut) {
+        cut -= 1;
+    }
+    let msg = &message.as_bytes()[..cut];
+    let mut p = Vec::with_capacity(4 + msg.len());
+    p.extend_from_slice(&code.code().to_be_bytes());
+    p.extend_from_slice(&(msg.len() as u16).to_be_bytes());
+    p.extend_from_slice(msg);
+    p
+}
+
+pub fn decode_error(payload: &[u8]) -> Result<(ErrCode, String), FrameError> {
+    let mut p = payload;
+    let raw = u16::from_be_bytes(take(&mut p, 2, "error code")?.try_into().expect("2B"));
+    let code = ErrCode::from_code(raw)
+        .ok_or_else(|| FrameError::Malformed(format!("unknown error code {raw}")))?;
+    let mlen = u16::from_be_bytes(take(&mut p, 2, "message len")?.try_into().expect("2B"));
+    let message = std::str::from_utf8(take(&mut p, mlen as usize, "message")?)
+        .map_err(|e| FrameError::Malformed(format!("message not UTF-8: {e}")))?
+        .to_string();
+    Ok((code, message))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip(frame: &Frame) -> Frame {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, frame).unwrap();
+        read_frame(&mut Cursor::new(buf), DEFAULT_MAX_PAYLOAD).unwrap()
+    }
+
+    #[test]
+    fn request_frame_round_trips() {
+        let f = Frame::request(42, vec![1, 2, 3, 255, 0]);
+        assert_eq!(roundtrip(&f), f);
+    }
+
+    #[test]
+    fn response_payload_round_trips_bit_exact() {
+        let resp = WireResponse {
+            id: 7,
+            pred: 3,
+            shard: 1,
+            latency_us: 1234,
+            profile: "A8-W8".into(),
+            // includes values that would not survive a text round-trip
+            logits: vec![0.1, -0.0, f32::MIN_POSITIVE, 1.0e30, -42.5],
+        };
+        let f = roundtrip(&Frame::response(&resp));
+        assert_eq!(f.kind, FrameKind::Response);
+        let back = decode_response(f.id, &f.payload).unwrap();
+        assert_eq!(back, resp);
+        for (a, b) in back.logits.iter().zip(&resp.logits) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn error_payload_round_trips() {
+        let f = roundtrip(&Frame::error(9, ErrCode::Overloaded, "queue full"));
+        assert_eq!(f.kind, FrameKind::Error);
+        let (code, msg) = decode_error(&f.payload).unwrap();
+        assert_eq!(code, ErrCode::Overloaded);
+        assert_eq!(msg, "queue full");
+    }
+
+    #[test]
+    fn clean_eof_is_closed_mid_frame_is_truncated() {
+        let err = read_frame(&mut Cursor::new(Vec::new()), 64).unwrap_err();
+        assert_eq!(err, FrameError::Closed);
+
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::request(1, vec![0; 16])).unwrap();
+        // header cut short
+        let err = read_frame(&mut Cursor::new(&buf[..9]), 64).unwrap_err();
+        assert_eq!(
+            err,
+            FrameError::Truncated {
+                wanted: HEADER_LEN,
+                got: 9
+            }
+        );
+        // payload cut short
+        let err = read_frame(&mut Cursor::new(&buf[..HEADER_LEN + 5]), 64).unwrap_err();
+        assert_eq!(err, FrameError::Truncated { wanted: 16, got: 5 });
+    }
+
+    #[test]
+    fn garbage_magic_version_kind_are_typed() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::request(1, vec![7; 4])).unwrap();
+
+        let mut bad = buf.clone();
+        bad[0..4].copy_from_slice(b"HTTP");
+        let err = read_frame(&mut Cursor::new(bad), 64).unwrap_err();
+        assert_eq!(err, FrameError::BadMagic(*b"HTTP"));
+
+        let mut bad = buf.clone();
+        bad[4] = 99;
+        let err = read_frame(&mut Cursor::new(bad), 64).unwrap_err();
+        assert_eq!(err, FrameError::BadVersion(99));
+
+        let mut bad = buf.clone();
+        bad[5] = 0;
+        let err = read_frame(&mut Cursor::new(bad), 64).unwrap_err();
+        assert_eq!(err, FrameError::UnknownKind(0));
+    }
+
+    #[test]
+    fn oversize_length_prefix_rejected_before_allocation() {
+        let mut header = [0u8; HEADER_LEN];
+        header[0..4].copy_from_slice(&MAGIC);
+        header[4] = VERSION;
+        header[5] = 1;
+        header[14..18].copy_from_slice(&u32::MAX.to_be_bytes());
+        let err = read_frame(&mut Cursor::new(header.to_vec()), 1 << 20).unwrap_err();
+        assert_eq!(
+            err,
+            FrameError::Oversize {
+                len: u32::MAX as usize,
+                max: 1 << 20
+            }
+        );
+    }
+
+    #[test]
+    fn malformed_payloads_are_typed_not_panics() {
+        assert!(matches!(
+            decode_response(0, &[1, 2, 3]),
+            Err(FrameError::Malformed(_))
+        ));
+        assert!(matches!(decode_error(&[9]), Err(FrameError::Malformed(_))));
+        // declared logit count larger than the remaining bytes
+        let resp = WireResponse {
+            id: 0,
+            pred: 0,
+            shard: 0,
+            latency_us: 0,
+            profile: "p".into(),
+            logits: vec![1.0],
+        };
+        let mut p = encode_response(&resp);
+        let cnt_at = 4 + 4 + 8 + 2 + 1;
+        p[cnt_at..cnt_at + 4].copy_from_slice(&100u32.to_be_bytes());
+        assert!(matches!(
+            decode_response(0, &p),
+            Err(FrameError::Malformed(_))
+        ));
+        // non-UTF-8 profile bytes
+        let mut p = encode_response(&resp);
+        p[4 + 4 + 8 + 2] = 0xFF;
+        assert!(matches!(
+            decode_response(0, &p),
+            Err(FrameError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn error_message_truncates_at_u16() {
+        let long = "x".repeat(80_000);
+        let payload = encode_error(ErrCode::Internal, &long);
+        let (code, msg) = decode_error(&payload).unwrap();
+        assert_eq!(code, ErrCode::Internal);
+        assert_eq!(msg.len(), u16::MAX as usize);
+    }
+}

@@ -1,0 +1,30 @@
+//! Network front end: a hand-rolled length-prefixed wire protocol over TCP
+//! that puts a socket in front of the in-process serving spine.
+//!
+//! The serving stack's layers, outermost first:
+//!
+//! * [`frame`] — the wire format: 18-byte header (magic, version, kind,
+//!   request id, length) + payload; typed [`FrameError`]s, never panics on
+//!   wire input.
+//! * [`NetServer`] — acceptor + per-connection reader/writer threads with
+//!   aggregate admission control (shed-at-depth with a typed
+//!   [`ErrCode::Overloaded`] reply), bounded per-connection in-flight
+//!   windows, and graceful drain on shutdown.
+//! * [`NetClient`] — the blocking client twin: submit/recv, pipelined
+//!   classify, typed [`NetReply::Denied`] surfaces for shed requests.
+//!
+//! Everything is `std`-only (vendored-offline: no tokio/serde); see
+//! `docs/networking.md` for the protocol contract and
+//! `rust/src/loadgen/` for the open-loop load model that drives it.
+
+pub mod client;
+pub mod frame;
+pub mod server;
+
+pub use client::{NetClient, NetReply};
+pub use frame::{
+    decode_error, decode_response, encode_error, encode_response, read_frame, write_frame,
+    ErrCode, Frame, FrameError, FrameKind, WireResponse, DEFAULT_MAX_PAYLOAD, HEADER_LEN, MAGIC,
+    VERSION,
+};
+pub use server::{NetServer, NetServerConfig, NetStats};

@@ -1,0 +1,386 @@
+//! The network front end: acceptor + per-connection reader/writer threads
+//! bridging TCP frames onto the in-process serving spine.
+//!
+//! ```text
+//!                 accept           frames            tickets
+//! TcpListener --------------> reader thread ----+--> ClientHandle/mpsc
+//!    |                            |  bounded    |        (spine)
+//!    |  (one pair per conn)       v  channel    |
+//!    +----------------------> writer thread <---+  awaits tickets, writes
+//!                                                  Response/Error frames
+//! ```
+//!
+//! Each connection gets a **reader** (decodes frames, runs admission
+//! control, submits admitted images to the dispatcher) and a **writer**
+//! (awaits the resulting tickets and writes reply frames). They are joined
+//! by a *bounded* channel of [`Outcome`]s sized by
+//! [`NetServerConfig::window`]: when a client pipelines more requests than
+//! the window, the reader blocks on the channel — per-connection
+//! backpressure that stops a single socket from flooding the spine. All
+//! outcomes (replies *and* typed denials) flow through the one writer, so
+//! replies keep per-connection submission order.
+//!
+//! **Admission control** is aggregate: when [`NetStats::inflight`] (admitted
+//! but not yet answered, summed over every connection) reaches
+//! [`NetServerConfig::admission_depth`], the request is shed with a typed
+//! [`ErrCode::Overloaded`] frame and *never touches the dispatcher* — the
+//! spine's `queue_depth`/`shard_depth` gauges cannot leak on the shed path
+//! (regression-tested in `rust/tests/net_protocol.rs`, mirroring the
+//! dead-pool drop accounting in `coordinator/server.rs`).
+//!
+//! **Graceful drain** ([`NetServer::shutdown`]): set the closed flag, wake
+//! the acceptor, and half-close (`Shutdown::Read`) every connection. Readers
+//! fall out of their loop and drop the channel sender; writers drain every
+//! queued ticket, flush the replies, and exit; then all threads are joined.
+//! In-flight requests are answered — only *new* work is refused.
+//!
+//! Framing violations (bad magic, oversize length, truncation) earn a typed
+//! error frame and a close: a desynced byte stream cannot be re-framed.
+//! Well-framed invalid requests (wrong image size) are denied without
+//! closing. Nothing on this path panics on wire input.
+
+use std::io::{BufReader, BufWriter};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use super::frame::{read_frame, write_frame, ErrCode, Frame, FrameError, FrameKind, WireResponse};
+use crate::coordinator::{ClientHandle, Ticket};
+use crate::metrics::{Counter, Gauge};
+
+#[derive(Debug, Clone)]
+pub struct NetServerConfig {
+    /// Bind address; use port 0 to let the OS pick (read it back via
+    /// [`NetServer::addr`]).
+    pub addr: String,
+    /// Payload ceiling per frame; larger length prefixes are rejected
+    /// before allocation.
+    pub max_payload: usize,
+    /// Aggregate admitted-but-unanswered ceiling: at this depth new
+    /// requests are shed with [`ErrCode::Overloaded`]. 0 sheds everything
+    /// (useful in tests).
+    pub admission_depth: usize,
+    /// Per-connection in-flight window (bounded reader->writer channel).
+    pub window: usize,
+    /// When set, request payloads of any other size are denied with
+    /// [`ErrCode::BadRequest`] (without closing the connection) instead of
+    /// reaching the backend.
+    pub expected_image_len: Option<usize>,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> Self {
+        NetServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_payload: super::frame::DEFAULT_MAX_PAYLOAD,
+            admission_depth: 256,
+            window: 32,
+            expected_image_len: None,
+        }
+    }
+}
+
+/// Observable front-end state (all lock-free).
+#[derive(Debug, Default)]
+pub struct NetStats {
+    /// Connections ever accepted.
+    pub connections: Counter,
+    /// Connections currently open.
+    pub open_connections: Gauge,
+    /// Requests past admission control and submitted to the spine.
+    pub admitted: Counter,
+    /// Admitted but not yet answered (the admission-control signal).
+    pub inflight: Gauge,
+    /// Replies written with a Response frame.
+    pub served: Counter,
+    /// Admitted requests whose ticket resolved Err (spine dropped them).
+    pub failed: Counter,
+    /// Requests shed by admission control (Overloaded).
+    pub shed: Counter,
+    /// Well-framed requests denied as BadRequest (e.g. wrong image size).
+    pub bad_requests: Counter,
+    /// Framing/protocol violations (each closes its connection).
+    pub frame_errors: Counter,
+}
+
+/// What the reader hands the writer, in per-connection request order.
+enum Outcome {
+    /// Admitted: await the ticket, write Response (or Internal error).
+    Reply { wire_id: u64, ticket: Ticket },
+    /// Denied without touching the spine: write a typed error frame.
+    Deny {
+        wire_id: u64,
+        code: ErrCode,
+        message: String,
+    },
+}
+
+/// Handle to the running front end. Dropping it (or calling
+/// [`shutdown`](NetServer::shutdown)) drains gracefully.
+pub struct NetServer {
+    local_addr: SocketAddr,
+    closed: Arc<AtomicBool>,
+    /// Read-half clones used to interrupt blocked readers on drain.
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    acceptor: Option<JoinHandle<()>>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    pub stats: Arc<NetStats>,
+}
+
+impl NetServer {
+    /// Bind `cfg.addr` and start accepting. `client` is the spine handle
+    /// every connection submits through (`AdaptiveServer::client()`).
+    pub fn start(cfg: NetServerConfig, client: ClientHandle) -> Result<NetServer> {
+        let listener =
+            TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
+        let local_addr = listener.local_addr()?;
+        let closed = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let stats = Arc::new(NetStats::default());
+        let cfg = Arc::new(cfg);
+
+        let a_closed = closed.clone();
+        let a_conns = conns.clone();
+        let a_handlers = handlers.clone();
+        let a_stats = stats.clone();
+        let acceptor = std::thread::Builder::new()
+            .name("net-acceptor".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    // The drain path connects once to unblock this accept;
+                    // check the flag before serving whatever arrived.
+                    if a_closed.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let stream = match conn {
+                        Ok(s) => s,
+                        Err(_) => continue,
+                    };
+                    let _ = stream.set_nodelay(true);
+                    if let Ok(clone) = stream.try_clone() {
+                        a_conns.lock().unwrap().push(clone);
+                    }
+                    let h_client = client.clone();
+                    let h_cfg = cfg.clone();
+                    let h_stats = a_stats.clone();
+                    let h_closed = a_closed.clone();
+                    match std::thread::Builder::new().name("net-conn".into()).spawn(
+                        move || handle_conn(stream, h_client, h_cfg, h_stats, h_closed),
+                    ) {
+                        Ok(h) => a_handlers.lock().unwrap().push(h),
+                        Err(_) => continue, // thread exhaustion: drop the conn
+                    }
+                }
+            })?;
+
+        Ok(NetServer {
+            local_addr,
+            closed,
+            conns,
+            acceptor: Some(acceptor),
+            handlers,
+            stats,
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Graceful drain: stop accepting, flush in-flight tickets, close.
+    pub fn shutdown(mut self) {
+        self.close();
+    }
+
+    fn close(&mut self) {
+        let Some(acceptor) = self.acceptor.take() else {
+            return; // already drained
+        };
+        self.closed.store(true, Ordering::SeqCst);
+        // Wake the blocked accept() with one throwaway connection; the
+        // acceptor re-checks the flag and exits.
+        let _ = TcpStream::connect(self.local_addr);
+        let _ = acceptor.join();
+        // Half-close every connection's read side: readers unblock and fall
+        // out of their loop; writers still own the write side, so queued
+        // replies flush before the close.
+        for s in self.conns.lock().unwrap().iter() {
+            let _ = s.shutdown(Shutdown::Read);
+        }
+        let hs: Vec<JoinHandle<()>> = self.handlers.lock().unwrap().drain(..).collect();
+        for h in hs {
+            let _ = h.join();
+        }
+        self.conns.lock().unwrap().clear();
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+/// One connection: read loop here, write loop in a sibling thread, joined
+/// by a bounded outcome channel (the per-connection backpressure window).
+fn handle_conn(
+    stream: TcpStream,
+    client: ClientHandle,
+    cfg: Arc<NetServerConfig>,
+    stats: Arc<NetStats>,
+    closed: Arc<AtomicBool>,
+) {
+    stats.connections.inc();
+    stats.open_connections.inc();
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => {
+            stats.open_connections.dec();
+            return;
+        }
+    };
+
+    let (tx, rx) = mpsc::sync_channel::<Outcome>(cfg.window.max(1));
+    let w_stats = stats.clone();
+    let writer = std::thread::Builder::new()
+        .name("net-conn-writer".into())
+        .spawn(move || {
+            let mut w = BufWriter::new(write_half);
+            while let Ok(outcome) = rx.recv() {
+                let frame = match outcome {
+                    Outcome::Reply { wire_id, ticket } => {
+                        let frame = match ticket.await_reply() {
+                            Ok(resp) => {
+                                w_stats.served.inc();
+                                Frame::response(&WireResponse {
+                                    id: wire_id,
+                                    pred: resp.pred as u32,
+                                    shard: resp.shard as u32,
+                                    latency_us: resp.latency_us,
+                                    profile: resp.profile,
+                                    logits: resp.logits,
+                                })
+                            }
+                            Err(_) => {
+                                w_stats.failed.inc();
+                                Frame::error(
+                                    wire_id,
+                                    ErrCode::Internal,
+                                    "request dropped by the serving spine",
+                                )
+                            }
+                        };
+                        // The reply left the in-flight set whether or not
+                        // the peer is still there to read it.
+                        w_stats.inflight.dec();
+                        frame
+                    }
+                    Outcome::Deny {
+                        wire_id,
+                        code,
+                        message,
+                    } => Frame::error(wire_id, code, &message),
+                };
+                // A gone peer must not abort the drain: later outcomes may
+                // hold tickets whose inflight accounting still has to run.
+                let _ = write_frame(&mut w, &frame);
+            }
+        });
+    let writer = match writer {
+        Ok(w) => w,
+        Err(_) => {
+            stats.open_connections.dec();
+            return;
+        }
+    };
+
+    let mut reader = BufReader::new(stream);
+    loop {
+        match read_frame(&mut reader, cfg.max_payload) {
+            Ok(frame) if frame.kind == FrameKind::Request => {
+                if closed.load(Ordering::SeqCst) {
+                    let _ = tx.send(Outcome::Deny {
+                        wire_id: frame.id,
+                        code: ErrCode::Draining,
+                        message: "server is draining".into(),
+                    });
+                    continue;
+                }
+                if let Some(want) = cfg.expected_image_len {
+                    if frame.payload.len() != want {
+                        stats.bad_requests.inc();
+                        let _ = tx.send(Outcome::Deny {
+                            wire_id: frame.id,
+                            code: ErrCode::BadRequest,
+                            message: format!(
+                                "image must be {want} bytes, got {}",
+                                frame.payload.len()
+                            ),
+                        });
+                        continue;
+                    }
+                }
+                // Admission control BEFORE the spine sees the request: a
+                // shed request leaves no queue_depth/shard_depth trace.
+                if stats.inflight.get() >= cfg.admission_depth as i64 {
+                    stats.shed.inc();
+                    let _ = tx.send(Outcome::Deny {
+                        wire_id: frame.id,
+                        code: ErrCode::Overloaded,
+                        message: format!(
+                            "in-flight depth at the admission limit {}",
+                            cfg.admission_depth
+                        ),
+                    });
+                    continue;
+                }
+                stats.admitted.inc();
+                stats.inflight.inc();
+                let ticket = client.submit(frame.payload);
+                // Blocks once `window` outcomes are queued: backpressure.
+                if tx
+                    .send(Outcome::Reply {
+                        wire_id: frame.id,
+                        ticket,
+                    })
+                    .is_err()
+                {
+                    break;
+                }
+            }
+            Ok(frame) => {
+                // Clients may only send requests.
+                stats.frame_errors.inc();
+                let _ = tx.send(Outcome::Deny {
+                    wire_id: frame.id,
+                    code: ErrCode::BadRequest,
+                    message: format!("clients may not send {:?} frames", frame.kind),
+                });
+                break;
+            }
+            Err(FrameError::Closed) | Err(FrameError::Io(_)) => break,
+            Err(e) => {
+                // Bad magic/version/kind, oversize, truncated, malformed: a
+                // typed error frame, then close — the stream cannot be
+                // re-framed. Id 0: framing errors have no request to echo.
+                stats.frame_errors.inc();
+                let _ = tx.send(Outcome::Deny {
+                    wire_id: 0,
+                    code: ErrCode::BadRequest,
+                    message: e.to_string(),
+                });
+                break;
+            }
+        }
+    }
+    // Dropping our sender ends the writer's recv loop *after* it drains
+    // every queued outcome — in-flight tickets resolve and flush.
+    drop(tx);
+    let _ = writer.join();
+    stats.open_connections.dec();
+}

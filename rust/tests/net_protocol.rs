@@ -1,0 +1,429 @@
+//! Integration tests for the TCP wire protocol front end (`onnx2hw::net`).
+//!
+//! Adversarial framing (garbage bytes, oversize length prefixes, partial
+//! headers, mid-request disconnects) must earn *typed* error frames, never
+//! panics, and must leave every gauge — the front end's `inflight` /
+//! `open_connections` and the spine's `queue_depth` / `shard_depth` — back
+//! at zero. The shed path is regression-tested for gauge conservation: an
+//! `Overloaded` rejection happens before the dispatcher ever sees the
+//! request, so it must leave no depth increment behind (the wire twin of
+//! the dead-pool drop accounting in `coordinator/server.rs`).
+
+use std::collections::BTreeMap;
+use std::io::{BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use onnx2hw::coordinator::{
+    AdaptiveServer, Backend, EnergyMonitor, ManagerConfig, ProfileManager, ProfileSpec,
+    ServerConfig,
+};
+use onnx2hw::dataflow::exec;
+use onnx2hw::net::{
+    read_frame, ErrCode, FrameError, FrameKind, NetClient, NetReply, NetServer, NetServerConfig,
+    HEADER_LEN, MAGIC, VERSION,
+};
+use onnx2hw::qonnx::{read_str, test_model_json, QonnxModel};
+
+/// Poll `cond` for up to ~5 s; cross-thread teardown (handler joins,
+/// gauge decrements) is fast but not synchronous with the client side.
+fn wait_until(what: &str, cond: impl Fn() -> bool) {
+    for _ in 0..500 {
+        if cond() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("timed out waiting for {what}");
+}
+
+fn synthetic_model() -> QonnxModel {
+    read_str(&test_model_json(1, 2)).expect("model")
+}
+
+fn image(model: &QonnxModel, k: usize) -> Vec<u8> {
+    (0..model.input_shape.elems())
+        .map(|i| ((i * 31 + k * 17) % 256) as u8)
+        .collect()
+}
+
+fn oracle(model: &QonnxModel, img: &[u8]) -> Vec<f32> {
+    exec::execute(model, img).iter().map(|&v| v as f32).collect()
+}
+
+/// One-shard spine + net front end on a loopback port. `expect_len` turns
+/// on payload-size validation (as `serve --listen` does).
+fn start_stack(
+    admission_depth: usize,
+    max_payload: usize,
+    expect_len: bool,
+) -> (AdaptiveServer, NetServer, QonnxModel) {
+    let model = synthetic_model();
+    let models: BTreeMap<String, QonnxModel> = [
+        ("hi".to_string(), model.clone()),
+        ("lo".to_string(), model.clone()),
+    ]
+    .into_iter()
+    .collect();
+    let factory = move || Ok(Backend::sim_from_models(models.clone()));
+    let specs = vec![
+        ProfileSpec {
+            name: "hi".into(),
+            accuracy: 0.96,
+            power_mw: 142.0,
+            latency_us: 329.0,
+        },
+        ProfileSpec {
+            name: "lo".into(),
+            accuracy: 0.94,
+            power_mw: 76.0,
+            latency_us: 329.0,
+        },
+    ];
+    let manager = ProfileManager::new(ManagerConfig::default(), specs);
+    let srv = AdaptiveServer::start(
+        ServerConfig {
+            workers: 1,
+            ..Default::default()
+        },
+        factory,
+        manager,
+        EnergyMonitor::new(10.0),
+    )
+    .expect("spine");
+    let net = NetServer::start(
+        NetServerConfig {
+            admission_depth,
+            max_payload,
+            expected_image_len: expect_len.then(|| model.input_shape.elems()),
+            ..Default::default()
+        },
+        srv.client(),
+    )
+    .expect("net server");
+    (srv, net, model)
+}
+
+/// Drain the stack and assert the gauge-conservation invariant held.
+fn finish(srv: AdaptiveServer, net: NetServer) {
+    let net_stats = net.stats.clone();
+    let srv_stats = srv.stats.clone();
+    net.shutdown();
+    assert_eq!(net_stats.inflight.get(), 0, "net in-flight gauge leaked");
+    assert_eq!(
+        net_stats.open_connections.get(),
+        0,
+        "connection gauge leaked"
+    );
+    assert!(srv_stats.drained(), "spine queue/shard gauges leaked");
+    srv.shutdown();
+}
+
+/// A raw valid header: magic | version | kind | id (BE) | len (BE).
+fn raw_header(kind: u8, id: u64, len: u32) -> Vec<u8> {
+    let mut h = Vec::with_capacity(HEADER_LEN);
+    h.extend_from_slice(&MAGIC);
+    h.push(VERSION);
+    h.push(kind);
+    h.extend_from_slice(&id.to_be_bytes());
+    h.extend_from_slice(&len.to_be_bytes());
+    h
+}
+
+#[test]
+fn roundtrip_is_bit_exact_and_ordered() {
+    let (srv, net, model) = start_stack(256, 1 << 20, true);
+    let mut client = NetClient::connect(&net.addr().to_string()).expect("connect");
+    let n = 32;
+    let replies = client
+        .classify_pipelined((0..n).map(|i| image(&model, i % 8)), 8)
+        .expect("pipelined");
+    assert_eq!(replies.len(), n);
+    for (i, reply) in replies.into_iter().enumerate() {
+        match reply {
+            NetReply::Response(resp) => {
+                assert_eq!(resp.id, i as u64, "submission order broken");
+                assert_eq!(resp.logits, oracle(&model, &image(&model, i % 8)));
+                assert_eq!(resp.shard, 0);
+            }
+            NetReply::Denied { id, code, message } => {
+                panic!("request {id} denied: {code}: {message}")
+            }
+        }
+    }
+    assert_eq!(net.stats.served.get(), n as u64);
+    assert_eq!(net.stats.shed.get(), 0);
+    drop(client);
+    finish(srv, net);
+}
+
+#[test]
+fn garbage_bytes_get_a_typed_error_then_close() {
+    let (srv, net, model) = start_stack(256, 1 << 20, true);
+    let mut raw = TcpStream::connect(net.addr()).expect("connect");
+    raw.write_all(b"GARBAGE-GARBAGE-GARBAGE-GARBAGE-").expect("write");
+    raw.flush().expect("flush");
+
+    let mut reader = BufReader::new(raw.try_clone().expect("clone"));
+    let frame = read_frame(&mut reader, 1 << 20).expect("typed error frame, not a hangup");
+    assert_eq!(frame.kind, FrameKind::Error);
+    assert_eq!(frame.id, 0, "framing errors have no request id to echo");
+    let (code, message) = onnx2hw::net::decode_error(&frame.payload).expect("decodable");
+    assert_eq!(code, ErrCode::BadRequest);
+    assert!(message.contains("magic"), "unhelpful error: {message}");
+    // The desynced stream is closed after the error frame.
+    assert!(matches!(
+        read_frame(&mut reader, 1 << 20),
+        Err(FrameError::Closed)
+    ));
+    assert_eq!(net.stats.frame_errors.get(), 1);
+    wait_until("garbage conn teardown", || {
+        net.stats.open_connections.get() == 0
+    });
+
+    // The server survives the abuse: a well-behaved client still gets served.
+    let mut client = NetClient::connect(&net.addr().to_string()).expect("connect");
+    let img = image(&model, 0);
+    let resp = client.classify(&img).expect("served after garbage conn");
+    assert_eq!(resp.logits, oracle(&model, &img));
+    drop(client);
+    finish(srv, net);
+}
+
+#[test]
+fn oversize_length_prefix_is_rejected_before_allocation() {
+    let max_payload = 64;
+    let (srv, net, _model) = start_stack(256, max_payload, false);
+    let mut raw = TcpStream::connect(net.addr()).expect("connect");
+    raw.write_all(&raw_header(1, 7, (max_payload as u32) + 1))
+        .expect("write");
+    raw.flush().expect("flush");
+
+    let mut reader = BufReader::new(raw.try_clone().expect("clone"));
+    let frame = read_frame(&mut reader, 1 << 20).expect("typed error frame");
+    assert_eq!(frame.kind, FrameKind::Error);
+    let (code, message) = onnx2hw::net::decode_error(&frame.payload).expect("decodable");
+    assert_eq!(code, ErrCode::BadRequest);
+    assert!(
+        message.contains("65") && message.contains("64"),
+        "error should name the limit: {message}"
+    );
+    assert!(matches!(
+        read_frame(&mut reader, 1 << 20),
+        Err(FrameError::Closed)
+    ));
+    assert_eq!(net.stats.frame_errors.get(), 1);
+    assert_eq!(net.stats.admitted.get(), 0, "nothing reached the spine");
+    wait_until("oversize conn teardown", || {
+        net.stats.open_connections.get() == 0
+    });
+    finish(srv, net);
+}
+
+#[test]
+fn partial_header_then_disconnect_leaks_nothing() {
+    let (srv, net, model) = start_stack(256, 1 << 20, true);
+    {
+        let mut raw = TcpStream::connect(net.addr()).expect("connect");
+        // 9 bytes of a valid header: the reader blocks mid-frame, then we
+        // hang up. The truncated read must surface as a typed FrameError,
+        // not a panic.
+        raw.write_all(&raw_header(1, 1, 8)[..9]).expect("write");
+        raw.flush().expect("flush");
+        wait_until("conn accepted", || net.stats.connections.get() == 1);
+    } // drop: disconnect mid-header
+    wait_until("partial conn teardown", || {
+        net.stats.open_connections.get() == 0
+    });
+    assert_eq!(net.stats.admitted.get(), 0);
+    assert_eq!(net.stats.inflight.get(), 0);
+    assert!(srv.stats.drained());
+
+    // A fresh client is unaffected.
+    let mut client = NetClient::connect(&net.addr().to_string()).expect("connect");
+    let img = image(&model, 3);
+    let resp = client.classify(&img).expect("served");
+    assert_eq!(resp.logits, oracle(&model, &img));
+    drop(client);
+    finish(srv, net);
+}
+
+#[test]
+fn wrong_image_len_is_denied_without_closing() {
+    let (srv, net, model) = start_stack(256, 1 << 20, true);
+    let mut client = NetClient::connect(&net.addr().to_string()).expect("connect");
+    let id = client.submit(&[0u8; 3]).expect("submit undersized");
+    match client.recv().expect("typed denial") {
+        NetReply::Denied {
+            id: got,
+            code,
+            message,
+        } => {
+            assert_eq!(got, id, "denial echoes the request id");
+            assert_eq!(code, ErrCode::BadRequest);
+            assert!(message.contains("bytes"), "unhelpful denial: {message}");
+        }
+        NetReply::Response(r) => panic!("undersized image served: {r:?}"),
+    }
+    // Same connection keeps working: size denials do not close.
+    let img = image(&model, 1);
+    let resp = client.classify(&img).expect("served on the same conn");
+    assert_eq!(resp.logits, oracle(&model, &img));
+    assert_eq!(net.stats.bad_requests.get(), 1);
+    assert_eq!(net.stats.frame_errors.get(), 0);
+    drop(client);
+    finish(srv, net);
+}
+
+#[test]
+fn shed_path_conserves_every_gauge() {
+    // Admission depth 0: every request is shed before the spine sees it.
+    let (srv, net, model) = start_stack(0, 1 << 20, true);
+    let mut client = NetClient::connect(&net.addr().to_string()).expect("connect");
+    let n = 10;
+    for _ in 0..n {
+        client.submit(&image(&model, 0)).expect("submit");
+    }
+    for i in 0..n {
+        match client.recv().expect("typed shed reply") {
+            NetReply::Denied { id, code, .. } => {
+                assert_eq!(id, i as u64);
+                assert_eq!(code, ErrCode::Overloaded);
+            }
+            NetReply::Response(r) => panic!("request served past a depth-0 gate: {r:?}"),
+        }
+    }
+    assert_eq!(net.stats.shed.get(), n as u64);
+    assert_eq!(net.stats.admitted.get(), 0);
+    assert_eq!(net.stats.inflight.get(), 0);
+    // The regression: a shed request must never have touched the spine, so
+    // its request counter is untouched and its depth gauges are conserved.
+    assert_eq!(srv.stats.requests.get(), 0, "shed request reached the spine");
+    assert!(srv.stats.drained(), "shed path leaked queue/shard depth");
+    drop(client);
+    finish(srv, net);
+}
+
+#[test]
+fn admission_depth_one_still_serves_sequential_load() {
+    // Depth 1 with a synchronous client: each request drains before the
+    // next arrives, so nothing is ever shed.
+    let (srv, net, model) = start_stack(1, 1 << 20, true);
+    let mut client = NetClient::connect(&net.addr().to_string()).expect("connect");
+    for k in 0..5 {
+        let img = image(&model, k);
+        let resp = client.classify(&img).expect("served");
+        assert_eq!(resp.logits, oracle(&model, &img));
+    }
+    assert_eq!(net.stats.served.get(), 5);
+    assert_eq!(net.stats.shed.get(), 0);
+    drop(client);
+    finish(srv, net);
+}
+
+#[test]
+fn mid_request_disconnect_drains_inflight_accounting() {
+    let (srv, net, model) = start_stack(256, 1 << 20, true);
+    let n = 5;
+    {
+        let mut client = NetClient::connect(&net.addr().to_string()).expect("connect");
+        for _ in 0..n {
+            client.submit(&image(&model, 0)).expect("submit");
+        }
+        wait_until("requests admitted", || net.stats.admitted.get() == n as u64);
+    } // drop: the client vanishes with every request still in flight
+    wait_until("in-flight tickets resolved after disconnect", || {
+        net.stats.open_connections.get() == 0
+            && net.stats.served.get() + net.stats.failed.get() == n as u64
+    });
+    assert_eq!(net.stats.inflight.get(), 0, "disconnect leaked inflight");
+    assert!(srv.stats.drained(), "disconnect leaked spine gauges");
+    finish(srv, net);
+}
+
+#[test]
+fn graceful_drain_flushes_inflight_replies() {
+    let (srv, net, model) = start_stack(256, 1 << 20, true);
+    let net_stats = net.stats.clone();
+    let mut client = NetClient::connect(&net.addr().to_string()).expect("connect");
+    let n = 5;
+    for k in 0..n {
+        client.submit(&image(&model, k)).expect("submit");
+    }
+    wait_until("requests admitted", || {
+        net_stats.admitted.get() == n as u64
+    });
+    // Drain while all n replies are pending: shutdown must flush them.
+    net.shutdown();
+    for i in 0..n {
+        match client.recv().expect("flushed reply") {
+            NetReply::Response(resp) => {
+                assert_eq!(resp.id, i as u64);
+                assert_eq!(resp.logits, oracle(&model, &image(&model, i)));
+            }
+            NetReply::Denied { id, code, message } => {
+                panic!("in-flight request {id} dropped by drain: {code}: {message}")
+            }
+        }
+    }
+    assert!(matches!(client.recv(), Err(FrameError::Closed)));
+    assert_eq!(net_stats.served.get(), n as u64);
+    assert_eq!(net_stats.inflight.get(), 0);
+    assert_eq!(net_stats.open_connections.get(), 0);
+    assert!(srv.stats.drained());
+    srv.shutdown();
+}
+
+#[test]
+fn raw_response_frame_from_client_is_refused() {
+    // Clients may only send Request frames; a Response kind is a protocol
+    // violation answered with a typed error, then close.
+    let (srv, net, _model) = start_stack(256, 1 << 20, false);
+    let mut raw = TcpStream::connect(net.addr()).expect("connect");
+    raw.write_all(&raw_header(2, 9, 0)).expect("write");
+    raw.flush().expect("flush");
+    let mut reader = BufReader::new(raw.try_clone().expect("clone"));
+    let frame = read_frame(&mut reader, 1 << 20).expect("typed error frame");
+    assert_eq!(frame.kind, FrameKind::Error);
+    let (code, _msg) = onnx2hw::net::decode_error(&frame.payload).expect("decodable");
+    assert_eq!(code, ErrCode::BadRequest);
+    assert!(matches!(
+        read_frame(&mut reader, 1 << 20),
+        Err(FrameError::Closed)
+    ));
+    wait_until("refused conn teardown", || {
+        net.stats.open_connections.get() == 0
+    });
+    finish(srv, net);
+}
+
+#[test]
+fn half_read_reply_then_disconnect_does_not_wedge_the_server() {
+    // A client that reads only part of its reply and hangs up must not
+    // wedge the writer thread (writes to the dead socket error out and are
+    // ignored so ticket accounting completes).
+    let (srv, net, model) = start_stack(256, 1 << 20, true);
+    {
+        let mut raw = TcpStream::connect(net.addr()).expect("connect");
+        let img = image(&model, 0);
+        let mut req = raw_header(1, 0, img.len() as u32);
+        req.extend_from_slice(&img);
+        raw.write_all(&req).expect("write");
+        raw.flush().expect("flush");
+        // Read just one byte of the reply, then vanish.
+        let mut one = [0u8; 1];
+        raw.read_exact(&mut one).expect("first reply byte");
+        assert_eq!(one[0], MAGIC[0]);
+    }
+    wait_until("half-read conn teardown", || {
+        net.stats.open_connections.get() == 0 && net.stats.inflight.get() == 0
+    });
+    assert!(srv.stats.drained());
+    // And the server still serves.
+    let mut client = NetClient::connect(&net.addr().to_string()).expect("connect");
+    let img = image(&model, 2);
+    let resp = client.classify(&img).expect("served");
+    assert_eq!(resp.logits, oracle(&model, &img));
+    drop(client);
+    finish(srv, net);
+}
