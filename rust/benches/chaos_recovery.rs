@@ -1,0 +1,481 @@
+//! Bench: chaos recovery — deterministic fault injection through the full
+//! TCP serving stack, gated on the self-healing invariants.
+//!
+//! A seeded [`FaultPlan`] (same seed -> byte-identical plan, embedded in
+//! `chaos.json`) schedules worker panics and battery brown-outs on the
+//! spine's batch clock plus connection kills and a corrupt frame on the
+//! wire path's request clock. Two [`ResilientClient`] drivers push requests
+//! through the storm; the run then must prove it healed:
+//!
+//! * **Every request resolves** — bit-exact `Ok` against the scalar oracle
+//!   (`exec::execute`) or a typed `Err`; zero hangs (each driver call is
+//!   deadline-bounded).
+//! * **Every planned fault fires** and every observed shard death is
+//!   matched by a supervisor respawn.
+//! * **Served fraction stays >= 0.9** despite the casualties: a death
+//!   costs at most the in-hand batch, and retries absorb the resets.
+//! * **Gauges conserve** — spine queue/shard depth gauges and the front
+//!   end's in-flight/connection gauges all read zero after the drain, and
+//!   every shard's battery books balance
+//!   (`remaining == capacity - drained + recharged`).
+//!
+//! Run: `cargo bench --bench chaos_recovery [-- <requests>
+//!       [--json <path>] [--assert-recovery]]`
+//!
+//! `chaos.json` holds only seed-derived values and gate outcomes — no
+//! measured latencies — so identical fault seeds yield byte-identical
+//! artifacts.
+
+use std::collections::BTreeMap;
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use onnx2hw::coordinator::{
+    AdaptiveServer, Backend, EnergyMonitor, ManagerConfig, ProfileManager, ProfileSpec,
+    ServerConfig, ServerStats,
+};
+use onnx2hw::dataflow::exec;
+use onnx2hw::fault::{FaultPlan, FaultSpec, WireFaultKind};
+use onnx2hw::json::{self, Value};
+use onnx2hw::net::{
+    read_frame, ErrCode, FrameKind, NetServer, NetServerConfig, ResilientClient, RetryPolicy,
+    DEFAULT_MAX_PAYLOAD,
+};
+use onnx2hw::qonnx::{read_str, test_model_json, QonnxModel};
+
+const N_IMAGES: usize = 8;
+const SERVICE_US: f64 = 329.0;
+const SHARDS: usize = 4;
+const SEED: u64 = 7;
+const DRIVERS: usize = 2;
+/// Per-request end-to-end budget: generous against scheduler noise, tight
+/// enough that a genuine hang fails the run instead of wedging CI.
+const DEADLINE: Duration = Duration::from_secs(10);
+const SERVED_FRACTION_MIN: f64 = 0.9;
+
+/// What one chaos run produced (counts only; latency is not gated here).
+struct ChaosResult {
+    offered: usize,
+    oks: usize,
+    errs: usize,
+    deaths: usize,
+    restarts: u64,
+    retries: u64,
+    reconnects: u64,
+    resets_applied: usize,
+    corruptions_applied: usize,
+}
+
+/// Shard deaths observed so far, read from the event log (each death logs
+/// exactly one "shard marked dead" line).
+fn count_deaths(stats: &ServerStats) -> usize {
+    stats
+        .events
+        .snapshot()
+        .iter()
+        .filter(|e| e.contains("shard marked dead"))
+        .count()
+}
+
+/// Wait (wall clock, unasserted content) for `cond`; panics after ~5 s so a
+/// lost recovery fails loudly instead of hanging the bench.
+fn wait_until(what: &str, cond: impl Fn() -> bool) {
+    for _ in 0..500 {
+        if cond() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("timed out waiting for {what}");
+}
+
+/// Open a raw socket, write deliberate garbage, and assert the protocol
+/// contract: one typed `BadRequest` error frame, then the connection
+/// closes. Returns true when the contract held.
+fn inject_corrupt_frame(addr: &str) -> bool {
+    let Ok(mut stream) = TcpStream::connect(addr) else {
+        return false;
+    };
+    // 18 bytes of junk: wrong magic, so the reader rejects the header
+    // before trusting anything else in it.
+    if stream.write_all(&[0xA5u8; 18]).is_err() || stream.flush().is_err() {
+        return false;
+    }
+    let mut reader = BufReader::new(stream);
+    let denied = match read_frame(&mut reader, DEFAULT_MAX_PAYLOAD) {
+        Ok(frame) => {
+            frame.kind == FrameKind::Error
+                && onnx2hw::net::decode_error(&frame.payload)
+                    .is_ok_and(|(code, _)| code == ErrCode::BadRequest)
+        }
+        Err(_) => false,
+    };
+    // After the typed denial the server must close: the next read is EOF.
+    let closed = read_frame(&mut reader, DEFAULT_MAX_PAYLOAD).is_err();
+    denied && closed
+}
+
+fn run_chaos(requests: usize, plan: &FaultPlan) -> ChaosResult {
+    let model = read_str(&test_model_json(1, 2)).expect("model");
+    let elems = model.input_shape.elems();
+    let models: BTreeMap<String, QonnxModel> = [
+        ("hi".to_string(), model.clone()),
+        ("lo".to_string(), model.clone()),
+    ]
+    .into_iter()
+    .collect();
+    let factory = move || Ok(Backend::sim_from_models(models.clone()));
+    // Same model under both profiles: a brown-out survivor rejoins on "lo"
+    // and its replies must STILL be bit-exact — degraded fidelity is a
+    // latency/power statement here, never a different integer.
+    let specs = vec![
+        ProfileSpec {
+            name: "hi".into(),
+            accuracy: 0.96,
+            power_mw: 142.0,
+            latency_us: SERVICE_US,
+        },
+        ProfileSpec {
+            name: "lo".into(),
+            accuracy: 0.94,
+            power_mw: 76.0,
+            latency_us: SERVICE_US,
+        },
+    ];
+    let manager = ProfileManager::new(ManagerConfig::default(), specs);
+    let injector = Arc::new(plan.injector());
+    let srv = AdaptiveServer::start(
+        ServerConfig {
+            workers: SHARDS,
+            // Short deterministic backoff so every respawn lands well
+            // inside the run's batch budget.
+            restart_backoff_batches: 2,
+            faults: Some(injector.clone()),
+            ..Default::default()
+        },
+        factory,
+        manager,
+        EnergyMonitor::new(10.0),
+    )
+    .expect("server");
+    let srv_stats = srv.stats.clone();
+    let net = NetServer::start(
+        NetServerConfig {
+            expected_image_len: Some(elems),
+            ..Default::default()
+        },
+        srv.client(),
+    )
+    .expect("net server");
+    let net_stats = net.stats.clone();
+    let addr = net.addr().to_string();
+
+    let patterns: Arc<Vec<Vec<u8>>> = Arc::new(
+        (0..N_IMAGES)
+            .map(|k| (0..elems).map(|i| ((i * 31 + k * 17) % 256) as u8).collect())
+            .collect(),
+    );
+    let expect: Arc<Vec<Vec<f32>>> = Arc::new(
+        patterns
+            .iter()
+            .map(|img| exec::execute(&model, img).iter().map(|&v| v as f32).collect())
+            .collect(),
+    );
+
+    // Submitted-request clock the wire faults trigger on.
+    let submitted = Arc::new(AtomicU64::new(0));
+
+    // Chaos thread: applies each wire fault once its request trigger
+    // passes. It exits once the schedule is exhausted (the drivers push the
+    // clock well past every trigger).
+    let wire_plan = plan.wire.clone();
+    let c_submitted = submitted.clone();
+    let c_addr = addr.clone();
+    let c_net = Arc::new(net);
+    let chaos_net = c_net.clone();
+    let chaos = std::thread::spawn(move || {
+        let mut resets_applied = 0usize;
+        let mut corruptions_applied = 0usize;
+        let mut pending: Vec<_> = wire_plan;
+        while !pending.is_empty() {
+            let now = c_submitted.load(Ordering::SeqCst);
+            let mut i = 0;
+            while i < pending.len() {
+                if pending[i].at_request > now {
+                    i += 1;
+                    continue;
+                }
+                match pending.swap_remove(i).kind {
+                    WireFaultKind::Reset => {
+                        chaos_net.reset_connections();
+                        resets_applied += 1;
+                    }
+                    WireFaultKind::Corrupt => {
+                        assert!(
+                            inject_corrupt_frame(&c_addr),
+                            "corrupt frame must earn a typed BadRequest + close"
+                        );
+                        corruptions_applied += 1;
+                    }
+                }
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        (resets_applied, corruptions_applied)
+    });
+
+    // Driver threads: interleaved request ranges, one resilient connection
+    // each. Every call resolves — bit-exact Ok or typed Err — inside the
+    // deadline, whatever the chaos thread does to the sockets underneath.
+    let mut drivers = Vec::new();
+    for t in 0..DRIVERS {
+        let addr = addr.clone();
+        let patterns = patterns.clone();
+        let expect = expect.clone();
+        let submitted = submitted.clone();
+        drivers.push(std::thread::spawn(move || {
+            let mut client = ResilientClient::new(
+                &addr,
+                RetryPolicy {
+                    max_attempts: 6,
+                    base_backoff: Duration::from_millis(1),
+                    max_backoff: Duration::from_millis(8),
+                    seed: SEED + t as u64,
+                },
+            )
+            .with_deadline(DEADLINE);
+            let mut oks = 0usize;
+            let mut errs = 0usize;
+            for i in (t..requests).step_by(DRIVERS) {
+                submitted.fetch_add(1, Ordering::SeqCst);
+                match client.classify(&patterns[i % N_IMAGES]) {
+                    Ok(resp) => {
+                        assert_eq!(
+                            resp.logits,
+                            expect[i % N_IMAGES],
+                            "request {i} on '{}' not bit-exact vs the scalar oracle",
+                            resp.profile
+                        );
+                        oks += 1;
+                    }
+                    Err(_) => errs += 1,
+                }
+            }
+            (oks, errs, client.retries(), client.reconnects())
+        }));
+    }
+
+    let mut oks = 0usize;
+    let mut errs = 0usize;
+    let mut retries = 0u64;
+    let mut reconnects = 0u64;
+    for d in drivers {
+        let (o, e, r, c) = d.join().expect("driver thread");
+        oks += o;
+        errs += e;
+        retries += r;
+        reconnects += c;
+    }
+    let (resets_applied, corruptions_applied) = chaos.join().expect("chaos thread");
+
+    // Recovery probes: trickle requests so the batch clock keeps moving
+    // until every planned spine fault has fired and the supervisor has
+    // respawned every observed death. A probe may itself take a fault —
+    // that is the point — so its result is not gated, only counted.
+    let mut probe = ResilientClient::new(
+        &addr,
+        RetryPolicy {
+            max_attempts: 6,
+            seed: SEED + 100,
+            ..Default::default()
+        },
+    )
+    .with_deadline(DEADLINE);
+    let mut probes = 0usize;
+    loop {
+        let settled = injector.remaining() == 0
+            && srv_stats.restarts.get() == count_deaths(&srv_stats) as u64;
+        if settled {
+            break;
+        }
+        assert!(
+            probes < 1000,
+            "recovery did not settle: {} faults unfired, {} restarts vs {} deaths",
+            injector.remaining(),
+            srv_stats.restarts.get(),
+            count_deaths(&srv_stats)
+        );
+        let _ = probe.classify(&patterns[probes % N_IMAGES]);
+        probes += 1;
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    drop(probe);
+
+    let deaths = count_deaths(&srv_stats);
+    let restarts = srv_stats.restarts.get();
+
+    // Drain: both gauge families must conserve after everything the plan
+    // threw at the stack.
+    let net = Arc::into_inner(c_net).expect("sole NetServer handle");
+    net.shutdown();
+    assert_eq!(net_stats.inflight.get(), 0, "in-flight gauge leaked");
+    assert_eq!(net_stats.open_connections.get(), 0, "connection gauge leaked");
+    wait_until("spine gauges to drain", || srv_stats.drained());
+    for (i, monitor) in srv.shard_energy.iter().enumerate() {
+        let expect_j = monitor.capacity_j() - monitor.drained_j() + monitor.recharged_j();
+        assert!(
+            (monitor.remaining_j() - expect_j).abs() < 1e-6,
+            "shard {i}: battery books do not balance: remaining {} vs {}",
+            monitor.remaining_j(),
+            expect_j
+        );
+    }
+    srv.shutdown();
+
+    ChaosResult {
+        offered: requests,
+        oks,
+        errs,
+        deaths,
+        restarts,
+        retries,
+        reconnects,
+        resets_applied,
+        corruptions_applied,
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut requests: usize = 600;
+    let mut json_path: Option<String> = None;
+    let mut assert_recovery = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--json" => {
+                i += 1;
+                json_path = Some(args.get(i).expect("--json needs a path").clone());
+            }
+            "--assert-recovery" => assert_recovery = true,
+            other => {
+                requests = other.parse().unwrap_or_else(|_| {
+                    panic!("unexpected argument '{other}' (want a request count)")
+                });
+            }
+        }
+        i += 1;
+    }
+
+    // Fault-injection panics are the plan doing its job; keep CI logs
+    // readable by muting exactly those and forwarding everything else.
+    let default_hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        let injected = info
+            .payload()
+            .downcast_ref::<String>()
+            .is_some_and(|m| m.contains("fault injection"));
+        if !injected {
+            default_hook(info);
+        }
+    }));
+
+    let plan = FaultPlan::seeded(
+        SEED,
+        &FaultSpec {
+            shards: SHARDS,
+            // Triggers land in the first ~24 batches / first quarter of the
+            // requests, so every fault fires mid-flight with plenty of
+            // traffic left to recover under (and the wire schedule always
+            // completes, whatever request count was asked for).
+            horizon_batches: 24,
+            horizon_requests: (requests as u64 / 4).max(1),
+            ..FaultSpec::default()
+        },
+    );
+    println!(
+        "== chaos recovery: {requests} requests through {SHARDS} shards under seed {SEED} \
+         ({} spine faults, {} wire faults) ==",
+        plan.server.len(),
+        plan.wire.len()
+    );
+
+    let r = run_chaos(requests, &plan);
+    let served_fraction = r.oks as f64 / r.offered as f64;
+    println!(
+        "resolved {}/{} (ok {} | err {}) | served fraction {:.3} | deaths {} restarts {} | \
+         client retries {} reconnects {} | resets {} corruptions {}",
+        r.oks + r.errs,
+        r.offered,
+        r.oks,
+        r.errs,
+        served_fraction,
+        r.deaths,
+        r.restarts,
+        r.retries,
+        r.reconnects,
+        r.resets_applied,
+        r.corruptions_applied,
+    );
+
+    let every_request_resolved = r.oks + r.errs == r.offered;
+    let all_faults_fired = r.resets_applied + r.corruptions_applied == plan.wire.len();
+    let restarts_match_deaths = r.restarts == r.deaths as u64;
+    let served_fraction_ok = served_fraction >= SERVED_FRACTION_MIN;
+
+    if let Some(path) = &json_path {
+        // Deterministic by construction: the plan is seed-derived, the
+        // planned counts are exact, and the gate outcomes are booleans.
+        // No measured latencies or fractions — identical seeds must yield
+        // byte-identical artifacts.
+        let rows = vec![
+            Value::obj(vec![
+                ("scenario", "plan".into()),
+                ("plan", plan.to_json()),
+                ("planned_spine_faults", plan.server.len().into()),
+                ("planned_wire_faults", plan.wire.len().into()),
+            ]),
+            Value::obj(vec![
+                ("scenario", "recovery".into()),
+                ("offered", r.offered.into()),
+                ("served_fraction_min", SERVED_FRACTION_MIN.into()),
+                ("every_request_resolved", every_request_resolved.into()),
+                ("all_wire_faults_fired", all_faults_fired.into()),
+                ("all_spine_faults_fired", true.into()), // run_chaos waits on it
+                ("restarts_match_deaths", restarts_match_deaths.into()),
+                ("served_fraction_ok", served_fraction_ok.into()),
+                ("bit_exact", true.into()), // asserted per reply in-run
+                ("gauges_conserved", true.into()), // asserted in-run
+            ]),
+        ];
+        std::fs::write(path, json::to_string_pretty(&Value::Array(rows))).expect("write json");
+        println!("wrote {} rows to {path}", 2);
+    }
+
+    if assert_recovery {
+        assert!(every_request_resolved, "lost tickets: {}+{} != {}", r.oks, r.errs, r.offered);
+        assert!(all_faults_fired, "wire faults unapplied");
+        assert!(
+            restarts_match_deaths,
+            "{} deaths but {} respawns",
+            r.deaths, r.restarts
+        );
+        assert!(r.deaths >= 1, "the plan injected no observable spine death");
+        assert!(
+            served_fraction_ok,
+            "served fraction {served_fraction:.3} below the {SERVED_FRACTION_MIN} gate"
+        );
+        println!(
+            "\ngate passed: all {} spine + {} wire faults fired, {} respawns matched {} \
+             deaths, served fraction {:.3} >= {SERVED_FRACTION_MIN}, zero lost tickets",
+            plan.server.len(),
+            plan.wire.len(),
+            r.restarts,
+            r.deaths,
+            served_fraction
+        );
+    }
+}

@@ -30,7 +30,9 @@ use anyhow::Result;
 use super::request::{ClassifyRequest, ClassifyResponse, Submission};
 
 /// A pending reply. Dropping the ticket drops the reply channel; the
-/// serving shard's send just fails silently (the request is still counted).
+/// serving shard's send lands on a closed channel (the request is still
+/// counted, and the discarded answer shows up in
+/// `ServerStats::late_replies`).
 pub struct Ticket {
     id: u64,
     rx: mpsc::Receiver<ClassifyResponse>,
@@ -53,6 +55,14 @@ impl Ticket {
     }
 
     /// Like [`await_reply`](Self::await_reply) with a deadline.
+    ///
+    /// Timeout semantics: the ticket is *consumed* either way, so a reply
+    /// arriving after the deadline has nobody left to receive it. The
+    /// request is not cancelled — the shard still executes it and counts
+    /// it in `ServerStats::requests` — but the answer is discarded at the
+    /// closed channel and audited in `ServerStats::late_replies`. Callers
+    /// that might want the answer later should poll
+    /// [`try_reply`](Self::try_reply) instead of timing out.
     pub fn await_reply_timeout(self, timeout: Duration) -> Result<ClassifyResponse> {
         Ok(self.rx.recv_timeout(timeout)?)
     }

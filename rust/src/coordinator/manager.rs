@@ -167,6 +167,32 @@ impl EnergyMonitor {
     pub fn depleted(&self) -> bool {
         self.remaining_j() <= 0.0
     }
+
+    /// Force-drain everything left (a brown-out / power-loss fault).
+    /// Counted in `drained_j`, so conservation holds; returns the joules
+    /// removed.
+    pub fn deplete(&self) -> f64 {
+        let mut st = self.state.lock().unwrap();
+        let got = st.remaining_j.max(0.0);
+        st.remaining_j -= got;
+        st.drained_j += got;
+        got
+    }
+
+    /// Brown-out restart: raise the battery to `fraction` of capacity if it
+    /// is below that level, crediting the added joules to `recharged_j` so
+    /// `remaining == capacity - drained + recharged` still holds (the
+    /// supervisor's analogue of `power::CycleSimConfig::restart_fraction`).
+    /// Returns the joules added; a cell already above the level is left
+    /// untouched.
+    pub fn refill_to_fraction(&self, fraction: f64) -> f64 {
+        let target = self.capacity_j * fraction.clamp(0.0, 1.0);
+        let mut st = self.state.lock().unwrap();
+        let added = (target - st.remaining_j).max(0.0);
+        st.remaining_j += added;
+        st.recharged_j += added;
+        added
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -518,6 +544,29 @@ mod tests {
         // conservation after every clamp
         let rhs = e.capacity_j() - e.drained_j() + e.recharged_j();
         assert!((e.remaining_j() - rhs).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deplete_and_refill_preserve_conservation() {
+        let e = EnergyMonitor::new(10.0);
+        e.drain(1000.0, 2e6); // 2 J out
+        let lost = e.deplete();
+        assert!((lost - 8.0).abs() < 1e-9);
+        assert!(e.depleted());
+        // restart at 5% of capacity, like the cycle simulator's brown-out
+        let added = e.refill_to_fraction(0.05);
+        assert!((added - 0.5).abs() < 1e-9);
+        assert!((e.remaining_j() - 0.5).abs() < 1e-9);
+        // already above the level: a refill is a no-op, never a drain
+        assert_eq!(e.refill_to_fraction(0.01), 0.0);
+        assert!((e.remaining_j() - 0.5).abs() < 1e-9);
+        let rhs = e.capacity_j() - e.drained_j() + e.recharged_j();
+        assert!((e.remaining_j() - rhs).abs() < 1e-9, "conservation broken");
+        // deplete again: exactly the refilled joules come back out
+        assert!((e.deplete() - 0.5).abs() < 1e-9);
+        // an empty cell has nothing left to remove
+        assert_eq!(e.deplete(), 0.0);
+        assert_eq!(e.refill_to_fraction(0.0), 0.0);
     }
 
     #[test]

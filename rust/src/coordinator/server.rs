@@ -26,10 +26,20 @@
 //! without a shared global queue.
 //! Backends are constructed *inside* each worker thread via the factory —
 //! PJRT handles are not `Send`.
+//!
+//! The spine is self-healing: when a worker dies (panic, injected fault,
+//! brown-out) its shard is marked dead, its stranded deque is re-routed to
+//! live shards *eagerly*, and — with `ServerConfig::supervise` on — a
+//! supervisor thread respawns the shard with a fresh backend replica after
+//! a deterministic backoff measured in served batches, recharging a
+//! browned-out cell to `restart_fraction` first. See `docs/robustness.md`
+//! for the full state machine and `crate::fault` for deterministic chaos
+//! injection.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
@@ -39,6 +49,7 @@ use super::client::{ClientHandle, Ticket};
 use super::manager::{EnergyMonitor, ProfileManager};
 use super::request::{ClassifyRequest, ClassifyResponse, Submission};
 use super::steal::ShardDeques;
+use crate::fault::{FaultInjector, ServerFaultKind};
 use crate::metrics::{Counter, EventLog, FloatGauge, Gauge, Histogram};
 use crate::power::EnergySource;
 
@@ -64,6 +75,25 @@ pub struct ServerConfig {
     /// Route every batch to one shard instead of the least-loaded one
     /// (tests/benches: manufactures a skewed arrival pattern).
     pub pin_dispatch_to: Option<usize>,
+    /// Self-healing: a supervisor thread respawns a dead shard with a fresh
+    /// backend replica after `restart_backoff_batches` more batches have
+    /// been served pool-wide. Off restores the pre-supervision contract: a
+    /// dead shard stays dead and the last death fails the whole pool.
+    pub supervise: bool,
+    /// Deterministic respawn backoff, measured on the pool-wide batch
+    /// counter (virtual time — no wall clock). When *every* shard is down
+    /// nothing advances that clock, so the supervisor respawns immediately
+    /// instead of waiting on time that cannot pass.
+    pub restart_backoff_batches: u64,
+    /// Battery fraction a respawning shard is recharged to before it
+    /// rejoins — the brown-out recovery contract, mirroring
+    /// `power::CycleSimConfig::restart_fraction`. A cell still holding more
+    /// than this keeps its charge (the refill never drains).
+    pub restart_fraction: f64,
+    /// Deterministic chaos: a shared [`FaultInjector`] every worker
+    /// consults once per popped batch (see [`crate::fault`]). `None`
+    /// injects nothing.
+    pub faults: Option<Arc<FaultInjector>>,
 }
 
 impl Default for ServerConfig {
@@ -76,6 +106,10 @@ impl Default for ServerConfig {
             recharge: EnergySource::None,
             steal: true,
             pin_dispatch_to: None,
+            supervise: true,
+            restart_backoff_batches: 4,
+            restart_fraction: 0.05,
+            faults: None,
         }
     }
 }
@@ -110,6 +144,15 @@ pub struct ServerStats {
     /// Joules each shard has banked from its recharge source (accumulated
     /// after each batch; stays 0 without a source).
     pub shard_recharged_j: Vec<FloatGauge>,
+    /// Shards the supervisor has respawned after a death (panic or
+    /// brown-out).
+    pub restarts: Counter,
+    /// Replies that arrived after their caller stopped listening: the
+    /// ticket was consumed by [`Ticket::await_reply_timeout`] expiring (or
+    /// simply dropped), so the worker's send landed on a closed channel.
+    /// The work was done and `requests` counts it; this counter is the
+    /// audit trail for the discarded answer.
+    pub late_replies: Counter,
 }
 
 impl ServerStats {
@@ -137,6 +180,8 @@ impl ServerStats {
             shard_depth: (0..n).map(|_| Gauge::default()).collect(),
             shard_battery: (0..n).map(|_| FloatGauge::new(1.0)).collect(),
             shard_recharged_j: (0..n).map(|_| FloatGauge::new(0.0)).collect(),
+            restarts: Counter::default(),
+            late_replies: Counter::default(),
         }
     }
 }
@@ -147,50 +192,279 @@ impl Default for ServerStats {
     }
 }
 
+/// Sent by a dying shard's guard to the supervisor thread.
+struct DeathNotice {
+    wid: usize,
+    /// Pool-wide batch count at death; the respawn comes due
+    /// `restart_backoff_batches` served batches later.
+    at_batch: u64,
+}
+
+/// Fail the pool and reconcile the queue gauges for every batch it drops
+/// (their reply channels release, so waiting clients read Err instead of
+/// hanging forever).
+fn fail_pool(pool: &ShardDeques<Vec<ClassifyRequest>>, stats: &ServerStats) {
+    for (i, dropped) in pool.fail().into_iter().enumerate() {
+        stats.queue_depth.add(-(dropped as i64));
+        stats.shard_depth[i].add(-(dropped as i64));
+    }
+}
+
 /// Decrements the live-worker count when a worker thread exits — including
 /// by panic (e.g. a malformed image tripping an executor assert). The last
-/// worker out fails the pool: after a graceful shutdown the deques are
-/// already empty, but after a panic cascade this drops any stranded
-/// batches so their reply channels release and clients read Err instead of
-/// hanging forever.
+/// worker out fails the pool — unless a respawn is pending, in which case
+/// the supervisor is about to bring a shard back and queued batches must
+/// survive to be served by it. (A dying worker registers its pending
+/// respawn in its `ShardGuard`, which is declared after this guard and so
+/// drops *first*: the registration is always visible here.)
 struct LiveGuard {
     live: Arc<AtomicUsize>,
     pool: Arc<ShardDeques<Vec<ClassifyRequest>>>,
     stats: Arc<ServerStats>,
+    pending: Arc<AtomicUsize>,
 }
 
 impl Drop for LiveGuard {
     fn drop(&mut self) {
-        if self.live.fetch_sub(1, Ordering::SeqCst) == 1 {
-            for (i, dropped) in self.pool.fail().into_iter().enumerate() {
-                self.stats.queue_depth.add(-(dropped as i64));
-                self.stats.shard_depth[i].add(-(dropped as i64));
-            }
+        if self.live.fetch_sub(1, Ordering::SeqCst) == 1
+            && self.pending.load(Ordering::SeqCst) == 0
+        {
+            fail_pool(&self.pool, &self.stats);
         }
     }
 }
 
 /// Flags its shard dead if the worker leaves abnormally (panic). Disarmed
-/// on the clean-shutdown exit path; armed drops mark the shard so routing
-/// avoids it and — with stealing off — its stranded backlog is released.
+/// on the clean-shutdown exit path. An armed drop marks the shard so
+/// routing avoids it, re-routes its stranded backlog to live shards
+/// eagerly (no waiting on the steal poll), and — when supervision is on —
+/// files a [`DeathNotice`] so the supervisor respawns the shard.
 struct ShardGuard {
     pool: Arc<ShardDeques<Vec<ClassifyRequest>>>,
     stats: Arc<ServerStats>,
     wid: usize,
     armed: bool,
+    pending: Arc<AtomicUsize>,
+    death_tx: Option<mpsc::Sender<DeathNotice>>,
 }
 
 impl Drop for ShardGuard {
     fn drop(&mut self) {
-        if self.armed {
-            let dropped = self.pool.mark_dead(self.wid);
-            self.stats.queue_depth.add(-(dropped as i64));
-            self.stats.shard_depth[self.wid].add(-(dropped as i64));
-            self.stats
-                .events
-                .push(format!("worker {} died; shard marked dead", self.wid));
+        if !self.armed {
+            return;
+        }
+        let report = self.pool.mark_dead(self.wid);
+        // The stranded backlog changed shards: move its depth gauges with
+        // it. Whatever the re-route could not place was dropped (those
+        // tickets resolve Err), so it leaves the aggregate gauge too.
+        self.stats.shard_depth[self.wid].add(-(report.total() as i64));
+        for (i, n) in report.moved.iter().enumerate() {
+            self.stats.shard_depth[i].add(*n as i64);
+        }
+        self.stats.queue_depth.add(-(report.dropped as i64));
+        self.stats.events.push(format!(
+            "worker {} died; shard marked dead ({} batches re-routed, {} dropped)",
+            self.wid,
+            report.moved.iter().sum::<usize>(),
+            report.dropped
+        ));
+        if let Some(tx) = &self.death_tx {
+            // Register the pending respawn before our LiveGuard (declared
+            // first, dropped after us) can observe live == 0, so a full
+            // wipe under supervision does not fail the pool.
+            self.pending.fetch_add(1, Ordering::SeqCst);
+            let notice = DeathNotice {
+                wid: self.wid,
+                at_batch: self.stats.batches.get(),
+            };
+            if tx.send(notice).is_err() {
+                // Supervisor already gone (post-close): nobody will respawn
+                // this shard, so do not hold the pool open on its account.
+                self.pending.fetch_sub(1, Ordering::SeqCst);
+            }
         }
     }
+}
+
+/// Everything a worker shard thread needs, bundled so the supervisor can
+/// respawn a shard with the exact ingredients `start()` used.
+struct WorkerCtx {
+    wid: usize,
+    factory: Arc<dyn Fn() -> Result<Backend> + Send + Sync>,
+    pool: Arc<ShardDeques<Vec<ClassifyRequest>>>,
+    stats: Arc<ServerStats>,
+    monitor: Arc<EnergyMonitor>,
+    live: Arc<AtomicUsize>,
+    pending: Arc<AtomicUsize>,
+    selector: ProfileManager,
+    names: Vec<String>,
+    faults: Option<Arc<FaultInjector>>,
+    death_tx: Option<mpsc::Sender<DeathNotice>>,
+}
+
+/// Spawn one worker shard thread. `ready` is `Some` on the initial spawn
+/// (`start()` blocks on one readiness message per shard) and `None` on a
+/// supervisor respawn — there a factory failure marks the shard dead again
+/// and gives up rather than retrying a persistently failing factory.
+fn spawn_worker(
+    ctx: WorkerCtx,
+    ready: Option<mpsc::Sender<Result<()>>>,
+) -> std::io::Result<JoinHandle<()>> {
+    let WorkerCtx {
+        wid,
+        factory,
+        pool,
+        stats,
+        monitor,
+        live,
+        pending,
+        selector,
+        names,
+        faults,
+        death_tx,
+    } = ctx;
+    std::thread::Builder::new()
+        .name(format!("adaptive-worker-{wid}"))
+        .spawn(move || {
+            let _live = LiveGuard {
+                live,
+                pool: pool.clone(),
+                stats: stats.clone(),
+                pending: pending.clone(),
+            };
+            // Declared after _live so it drops first: a panicking worker
+            // registers its pending respawn before the LiveGuard decides
+            // whether the whole pool has failed.
+            let mut shard_guard = ShardGuard {
+                pool: pool.clone(),
+                stats: stats.clone(),
+                wid,
+                armed: false,
+                pending,
+                death_tx: None,
+            };
+            let mut backend = match (*factory)().and_then(|b| {
+                for name in &names {
+                    b.ensure_profile(name)?;
+                }
+                Ok(b)
+            }) {
+                Ok(b) => {
+                    if let Some(tx) = &ready {
+                        let _ = tx.send(Ok(()));
+                    }
+                    b
+                }
+                Err(e) => {
+                    match &ready {
+                        Some(tx) => {
+                            let _ = tx.send(Err(e));
+                        }
+                        None => {
+                            // Respawn path: nobody waits on readiness. Arm
+                            // the guard — it marks the shard dead again and
+                            // re-routes anything dispatched since revive —
+                            // but leave death_tx unset so the supervisor
+                            // does not loop on a factory that cannot come
+                            // back.
+                            stats
+                                .events
+                                .push(format!("shard {wid}: respawn factory failed: {e}"));
+                            shard_guard.armed = true;
+                        }
+                    }
+                    return;
+                }
+            };
+            // Close our readiness sender now so start() never waits on a
+            // long-lived worker.
+            drop(ready);
+            shard_guard.armed = true;
+            shard_guard.death_tx = death_tx;
+            let mut active = selector.current().name.clone();
+            while let Some((batch, from)) = pool.pop(wid) {
+                stats.queue_depth.dec();
+                stats.shard_depth[from].dec();
+                if from != wid {
+                    stats.worker_steals[wid].inc();
+                }
+                // --- deterministic fault injection (chaos harness) ---
+                if let Some(inj) = &faults {
+                    for kind in inj.on_batch(wid) {
+                        match kind {
+                            ServerFaultKind::BrownOut => {
+                                // Power loss: force-drain the cell, then
+                                // die. The supervisor refills it to the
+                                // restart fraction before the shard
+                                // rejoins, so it comes back degraded.
+                                monitor.deplete();
+                                stats.shard_battery[wid].set(monitor.remaining_fraction());
+                                panic!("fault injection: shard {wid} brown-out");
+                            }
+                            ServerFaultKind::Panic => {
+                                panic!("fault injection: shard {wid} panic");
+                            }
+                        }
+                    }
+                }
+                // --- adaptation step on THIS shard's battery ---
+                let spec = selector.select(&monitor).clone();
+                if spec.name != active {
+                    stats.switches.inc();
+                    stats.events.push(format!(
+                        "shard {wid}: switch {active} -> {} (battery {:.1}%)",
+                        spec.name,
+                        monitor.remaining_fraction() * 100.0
+                    ));
+                    active = spec.name.clone();
+                }
+                // Hand the backend the whole batch: the Sim path executes
+                // it batch-major over pre-packed weights (one warm executor
+                // per profile), not image by image.
+                let imgs: Vec<&[u8]> = batch.iter().map(|r| r.image.as_slice()).collect();
+                let results = match backend.run_batch(&spec.name, &imgs) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        stats.events.push(format!("worker {wid}: batch failed: {e}"));
+                        continue;
+                    }
+                };
+                stats.batches.inc();
+                stats.worker_batches[wid].inc();
+                let n_served = batch.len();
+                for (req, (logits, pred)) in batch.into_iter().zip(results) {
+                    monitor.drain(spec.power_mw, spec.latency_us);
+                    let latency_us = req.submitted.elapsed().as_micros() as u64;
+                    stats.requests.inc();
+                    stats.latency.record_us(latency_us);
+                    let sent = req.reply.send(ClassifyResponse {
+                        id: req.id,
+                        pred,
+                        logits,
+                        profile: spec.name.clone(),
+                        shard: wid,
+                        latency_us,
+                    });
+                    if sent.is_err() {
+                        // The caller consumed its ticket (await timed out)
+                        // or dropped it: the answer lands on a closed
+                        // channel. Audit it instead of losing it silently.
+                        stats.late_replies.inc();
+                    }
+                }
+                // Recharge on the virtual time this batch occupied the
+                // accelerator (profile latency x batch size) —
+                // deterministic, no wall clock.
+                let banked = monitor.advance(n_served as f64 * spec.latency_us * 1e-6);
+                if banked > 0.0 {
+                    stats.shard_recharged_j[wid].add(banked);
+                }
+                stats.shard_battery[wid].set(monitor.remaining_fraction());
+            }
+            // Reached only on the clean pop() == None exit: the shard is
+            // not dead, just shut down.
+            shard_guard.armed = false;
+        })
 }
 
 /// Handle to the running server.
@@ -201,6 +475,8 @@ pub struct AdaptiveServer {
     tx: Option<mpsc::Sender<Submission>>,
     dispatcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
+    /// `Some` when `cfg.supervise`; owns every respawned worker handle.
+    supervisor: Option<JoinHandle<()>>,
     pub stats: Arc<ServerStats>,
     /// One energy monitor per shard (per-accelerator battery / power cap).
     pub shard_energy: Vec<Arc<EnergyMonitor>>,
@@ -256,7 +532,7 @@ impl AdaptiveServer {
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let stats = Arc::new(ServerStats::for_workers(n_workers));
         let manager = Arc::new(manager);
-        let factory = Arc::new(backend_factory);
+        let factory: Arc<dyn Fn() -> Result<Backend> + Send + Sync> = Arc::new(backend_factory);
         let profile_names: Vec<String> =
             manager.profiles().iter().map(|p| p.name.clone()).collect();
         for (gauge, monitor) in stats.shard_battery.iter().zip(&shard_energy) {
@@ -264,112 +540,30 @@ impl AdaptiveServer {
         }
 
         let live = Arc::new(AtomicUsize::new(n_workers));
+        // Shards whose death was noticed but whose respawn has not happened
+        // yet. While nonzero the pool must not fail and the dispatcher must
+        // not give up: a worker is coming back for the queued batches.
+        let pending = Arc::new(AtomicUsize::new(0));
+        let (death_tx, death_rx) = mpsc::channel::<DeathNotice>();
         let mut workers = Vec::with_capacity(n_workers);
         for (wid, monitor) in shard_energy.iter().enumerate() {
-            let factory = factory.clone();
-            let pool = pool.clone();
-            let ready_tx = ready_tx.clone();
-            let w_stats = stats.clone();
-            let w_energy = monitor.clone();
-            let w_live = live.clone();
-            // Fork the shared manager: same policy + profile table, but
-            // independent hysteresis state driven by this shard's battery.
-            let selector = manager.fork();
-            let names = profile_names.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("adaptive-worker-{wid}"))
-                .spawn(move || {
-                    let _live = LiveGuard {
-                        live: w_live,
-                        pool: pool.clone(),
-                        stats: w_stats.clone(),
-                    };
-                    let mut backend = match (*factory)().and_then(|b| {
-                        for name in &names {
-                            b.ensure_profile(name)?;
-                        }
-                        Ok(b)
-                    }) {
-                        Ok(b) => {
-                            let _ = ready_tx.send(Ok(()));
-                            b
-                        }
-                        Err(e) => {
-                            let _ = ready_tx.send(Err(e));
-                            return;
-                        }
-                    };
-                    // Close our readiness sender now so start() never waits
-                    // on a long-lived worker.
-                    drop(ready_tx);
-                    let mut shard_guard = ShardGuard {
-                        pool: pool.clone(),
-                        stats: w_stats.clone(),
-                        wid,
-                        armed: true,
-                    };
-                    let mut active = selector.current().name.clone();
-                    while let Some((batch, from)) = pool.pop(wid) {
-                        w_stats.queue_depth.dec();
-                        w_stats.shard_depth[from].dec();
-                        if from != wid {
-                            w_stats.worker_steals[wid].inc();
-                        }
-                        // --- adaptation step on THIS shard's battery ---
-                        let spec = selector.select(&w_energy).clone();
-                        if spec.name != active {
-                            w_stats.switches.inc();
-                            w_stats.events.push(format!(
-                                "shard {wid}: switch {active} -> {} (battery {:.1}%)",
-                                spec.name,
-                                w_energy.remaining_fraction() * 100.0
-                            ));
-                            active = spec.name.clone();
-                        }
-                        // Hand the backend the whole batch: the Sim path
-                        // executes it batch-major over pre-packed weights
-                        // (one warm executor per profile), not image by
-                        // image.
-                        let imgs: Vec<&[u8]> =
-                            batch.iter().map(|r| r.image.as_slice()).collect();
-                        let results = match backend.run_batch(&spec.name, &imgs) {
-                            Ok(r) => r,
-                            Err(e) => {
-                                w_stats.events.push(format!("worker {wid}: batch failed: {e}"));
-                                continue;
-                            }
-                        };
-                        w_stats.batches.inc();
-                        w_stats.worker_batches[wid].inc();
-                        let n_served = batch.len();
-                        for (req, (logits, pred)) in batch.into_iter().zip(results) {
-                            w_energy.drain(spec.power_mw, spec.latency_us);
-                            let latency_us = req.submitted.elapsed().as_micros() as u64;
-                            w_stats.requests.inc();
-                            w_stats.latency.record_us(latency_us);
-                            let _ = req.reply.send(ClassifyResponse {
-                                id: req.id,
-                                pred,
-                                logits,
-                                profile: spec.name.clone(),
-                                shard: wid,
-                                latency_us,
-                            });
-                        }
-                        // Recharge on the virtual time this batch occupied
-                        // the accelerator (profile latency x batch size) —
-                        // deterministic, no wall clock.
-                        let banked = w_energy.advance(n_served as f64 * spec.latency_us * 1e-6);
-                        if banked > 0.0 {
-                            w_stats.shard_recharged_j[wid].add(banked);
-                        }
-                        w_stats.shard_battery[wid].set(w_energy.remaining_fraction());
-                    }
-                    // Reached only on the clean pop() == None exit: the
-                    // shard is not dead, just shut down.
-                    shard_guard.armed = false;
-                })?;
-            workers.push(handle);
+            let ctx = WorkerCtx {
+                wid,
+                factory: factory.clone(),
+                pool: pool.clone(),
+                stats: stats.clone(),
+                monitor: monitor.clone(),
+                live: live.clone(),
+                pending: pending.clone(),
+                // Fork the shared manager: same policy + profile table, but
+                // independent hysteresis state driven by this shard's
+                // battery.
+                selector: manager.fork(),
+                names: profile_names.clone(),
+                faults: cfg.faults.clone(),
+                death_tx: cfg.supervise.then(|| death_tx.clone()),
+            };
+            workers.push(spawn_worker(ctx, Some(ready_tx.clone()))?);
         }
         drop(ready_tx); // only worker threads hold readiness senders now
 
@@ -379,6 +573,7 @@ impl AdaptiveServer {
         let d_stats = stats.clone();
         let d_pool = pool.clone();
         let d_live = live.clone();
+        let d_pending = pending.clone();
         // Battery-aware tiebreak: when deque depths tie, route to the shard
         // with the fullest cell so a drained accelerator is not handed work
         // an equally idle healthy one could take.
@@ -389,14 +584,20 @@ impl AdaptiveServer {
             .name("adaptive-dispatch".into())
             .spawn(move || {
                 while let Some(batch) = batcher.next_batch() {
-                    if d_live.load(Ordering::SeqCst) == 0 {
-                        // Every shard died (panics, not clean shutdown):
+                    if d_live.load(Ordering::SeqCst) == 0
+                        && d_pending.load(Ordering::SeqCst) == 0
+                    {
+                        // Every shard died with no respawn pending (panics
+                        // without supervision, not clean shutdown):
                         // dropping the batch drops its reply senders, so
                         // waiting clients get Err instead of hanging.
                         // (Batches that were already queued are dropped by
                         // the last LiveGuard's pool.fail(), and a push that
                         // races past this check lands on the failed pool,
-                        // which also drops it.)
+                        // which also drops it. With a respawn pending the
+                        // dispatcher keeps routing: a dying shard registers
+                        // pending before releasing live, so this check
+                        // cannot misfire mid-death.)
                         d_stats
                             .events
                             .push("dispatch failed: all workers exited".to_string());
@@ -419,6 +620,118 @@ impl AdaptiveServer {
                 d_pool.close();
             })?;
 
+        // Supervisor: revives dead shards after the deterministic backoff
+        // on the batch clock. It keeps its own death_tx clone so an empty
+        // channel never reads as disconnection; the exit condition is pool
+        // closure (shutdown or unsupervised failure).
+        let supervisor = if cfg.supervise {
+            let s_pool = pool.clone();
+            let s_stats = stats.clone();
+            let s_live = live.clone();
+            let s_pending = pending.clone();
+            let s_energy = shard_energy.clone();
+            let s_manager = manager.clone();
+            let s_factory = factory.clone();
+            let s_names = profile_names.clone();
+            let s_faults = cfg.faults.clone();
+            let restart_fraction = cfg.restart_fraction;
+            let backoff = cfg.restart_backoff_batches;
+            let keep_tx = death_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name("adaptive-supervisor".into())
+                .spawn(move || {
+                    // (wid, batch count the respawn comes due at)
+                    let mut due: Vec<(usize, u64)> = Vec::new();
+                    let mut spawned: Vec<JoinHandle<()>> = Vec::new();
+                    loop {
+                        if let Ok(n) = death_rx.recv_timeout(Duration::from_millis(10)) {
+                            due.push((n.wid, n.at_batch.saturating_add(backoff)));
+                        }
+                        while let Ok(n) = death_rx.try_recv() {
+                            due.push((n.wid, n.at_batch.saturating_add(backoff)));
+                        }
+                        if s_pool.is_closed() {
+                            // Shutdown: abandon the queue so the pending
+                            // books close.
+                            while death_rx.try_recv().is_ok() {
+                                s_pending.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            for _ in due.drain(..) {
+                                s_pending.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            break;
+                        }
+                        let now = s_stats.batches.get();
+                        // With every shard down nothing advances the batch
+                        // clock: respawn immediately instead of waiting on
+                        // time that cannot pass.
+                        let all_dead = s_live.load(Ordering::SeqCst) == 0;
+                        let mut i = 0;
+                        while i < due.len() {
+                            if now < due[i].1 && !all_dead {
+                                i += 1;
+                                continue;
+                            }
+                            let (wid, _) = due.swap_remove(i);
+                            let monitor = s_energy[wid].clone();
+                            // Brown-out recovery: recharge to the restart
+                            // fraction (a no-op for a cell still holding
+                            // more) so the shard rejoins degraded, not
+                            // dead-on-arrival.
+                            monitor.refill_to_fraction(restart_fraction);
+                            s_stats.shard_battery[wid].set(monitor.remaining_fraction());
+                            s_pool.revive(wid);
+                            s_live.fetch_add(1, Ordering::SeqCst);
+                            let ctx = WorkerCtx {
+                                wid,
+                                factory: s_factory.clone(),
+                                pool: s_pool.clone(),
+                                stats: s_stats.clone(),
+                                monitor,
+                                live: s_live.clone(),
+                                pending: s_pending.clone(),
+                                selector: s_manager.fork(),
+                                names: s_names.clone(),
+                                faults: s_faults.clone(),
+                                death_tx: Some(keep_tx.clone()),
+                            };
+                            match spawn_worker(ctx, None) {
+                                Ok(h) => {
+                                    s_stats.restarts.inc();
+                                    s_stats.events.push(format!(
+                                        "supervisor: shard {wid} respawned (battery {:.1}%)",
+                                        s_energy[wid].remaining_fraction() * 100.0
+                                    ));
+                                    spawned.push(h);
+                                    s_pending.fetch_sub(1, Ordering::SeqCst);
+                                }
+                                Err(e) => {
+                                    // Thread creation itself failed (OS
+                                    // limits). Give up on the shard and,
+                                    // if it was the last hope, fail the
+                                    // pool like a LiveGuard would.
+                                    s_stats.events.push(format!(
+                                        "supervisor: shard {wid} respawn failed to spawn: {e}"
+                                    ));
+                                    s_pending.fetch_sub(1, Ordering::SeqCst);
+                                    if s_live.fetch_sub(1, Ordering::SeqCst) == 1
+                                        && s_pending.load(Ordering::SeqCst) == 0
+                                    {
+                                        fail_pool(&s_pool, &s_stats);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    for h in spawned {
+                        let _ = h.join();
+                    }
+                })?;
+            Some(handle)
+        } else {
+            None
+        };
+
         // Wait for every shard's backend to come up.
         let mut startup_err: Option<anyhow::Error> = None;
         for _ in 0..n_workers {
@@ -437,6 +750,7 @@ impl AdaptiveServer {
             tx: Some(tx),
             dispatcher: Some(dispatcher),
             workers,
+            supervisor,
             stats,
             shard_energy,
             manager,
@@ -505,6 +819,11 @@ impl AdaptiveServer {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        // Last: the supervisor notices the closed pool, abandons pending
+        // respawns, and joins every worker it ever respawned.
+        if let Some(s) = self.supervisor.take() {
+            let _ = s.join();
+        }
     }
 }
 
@@ -530,10 +849,23 @@ pub(crate) fn mean_battery_fraction(monitors: &[Arc<EnergyMonitor>]) -> f64 {
 mod tests {
     use super::super::manager::{ManagerConfig, ProfileSpec};
     use super::*;
+    use crate::fault::{FaultPlan, ServerFaultEvent};
     use crate::qonnx::{random_model_json, read_str, test_model_json, RandModelCfg};
     use crate::testkit::Rng;
     use std::collections::BTreeMap;
     use std::sync::Mutex;
+
+    /// Poll `cond` for up to ~5 s (supervision acts on a 10 ms tick, so
+    /// tests must tolerate a little wall-clock slack).
+    fn wait_until(what: &str, cond: impl Fn() -> bool) {
+        for _ in 0..500 {
+            if cond() {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        panic!("timed out waiting for {what}");
+    }
 
     /// Returns (factory, input_elems). The factory is Fn + Send + Sync
     /// (models are plain data, cloned per shard); each Backend replica is
@@ -1034,6 +1366,161 @@ mod tests {
         let rhs = m.capacity_j() - m.drained_j() + m.recharged_j();
         assert!((m.remaining_j() - rhs).abs() < 1e-12);
         assert!(m.virtual_time_s() > 0.0);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn panicked_shard_is_respawned_and_serves_again() {
+        let (backend, elems) = sim_backend();
+        let mgr = ProfileManager::new(ManagerConfig::default(), specs());
+        let plan = FaultPlan {
+            seed: 0,
+            server: vec![ServerFaultEvent {
+                at_batch: 1,
+                shard: 0,
+                kind: ServerFaultKind::Panic,
+            }],
+            wire: vec![],
+        };
+        let cfg = ServerConfig {
+            faults: Some(Arc::new(plan.injector())),
+            ..Default::default()
+        };
+        let srv = AdaptiveServer::start(cfg, backend, mgr, EnergyMonitor::new(1e9)).unwrap();
+        let img = vec![7u8; elems];
+        // The first batch is taken down with the worker: its ticket
+        // resolves Err — typed, immediate, no hang.
+        assert!(
+            srv.classify(img.clone()).is_err(),
+            "in-hand batch must die with the shard"
+        );
+        // With the sole shard down, the supervisor respawns it immediately
+        // (the all-dead fast path skips the batch-clock backoff) and the
+        // same server serves again.
+        for _ in 0..5 {
+            assert!(srv.classify(img.clone()).is_ok(), "respawned shard must serve");
+        }
+        assert_eq!(srv.stats.restarts.get(), 1);
+        assert!(srv.stats.drained(), "gauges must conserve across death + respawn");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn browned_out_shard_rejoins_degraded_at_restart_fraction() {
+        let (backend, elems) = sim_backend();
+        let mgr = ProfileManager::new(ManagerConfig::default(), specs());
+        let plan = FaultPlan {
+            seed: 0,
+            server: vec![ServerFaultEvent {
+                at_batch: 1,
+                shard: 0,
+                kind: ServerFaultKind::BrownOut,
+            }],
+            wire: vec![],
+        };
+        let cfg = ServerConfig {
+            faults: Some(Arc::new(plan.injector())),
+            ..Default::default()
+        };
+        let srv = AdaptiveServer::start(cfg, backend, mgr, EnergyMonitor::new(10.0)).unwrap();
+        let img = vec![7u8; elems];
+        assert!(srv.classify(img.clone()).is_err());
+        let resp = srv.classify(img.clone()).unwrap();
+        assert_eq!(
+            resp.profile, "lo",
+            "a shard revived at 5% battery must serve the degraded profile"
+        );
+        assert_eq!(srv.stats.restarts.get(), 1);
+        let m = &srv.shard_energy[0];
+        assert!(
+            m.remaining_fraction() <= 0.05 + 1e-9,
+            "restart fraction is a ceiling, got {}",
+            m.remaining_fraction()
+        );
+        assert!(m.remaining_fraction() > 0.04, "the cell was recharged, not left empty");
+        assert!(m.recharged_j() >= 0.5 - 1e-9, "the refill must be booked as recharge");
+        // The brown-out books balance: remaining = capacity - drained + recharged.
+        let rhs = m.capacity_j() - m.drained_j() + m.recharged_j();
+        assert!((m.remaining_j() - rhs).abs() < 1e-9);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn dead_shards_stranded_backlog_is_rerouted_eagerly() {
+        // Pin every batch to shard 0 with stealing AND supervision off,
+        // then kill shard 0 on its 4th batch. The backlog stranded on its
+        // deque can only reach shard 1 through the eager re-route on death
+        // — no thieves, no respawn — so shard 1 serving anything proves
+        // the rescue (pre-fix, stealing off dropped the whole backlog).
+        const N: usize = 32;
+        let (backend, elems) = heavy_backend();
+        let mgr = ProfileManager::new(ManagerConfig::default(), specs());
+        let plan = FaultPlan {
+            seed: 0,
+            server: vec![ServerFaultEvent {
+                at_batch: 4,
+                shard: 0,
+                kind: ServerFaultKind::Panic,
+            }],
+            wire: vec![],
+        };
+        let cfg = ServerConfig {
+            workers: 2,
+            steal: false,
+            supervise: false,
+            pin_dispatch_to: Some(0),
+            batcher: BatcherConfig {
+                max_batch: 1,
+                ..Default::default()
+            },
+            faults: Some(Arc::new(plan.injector())),
+            ..Default::default()
+        };
+        let srv = AdaptiveServer::start(cfg, backend, mgr, EnergyMonitor::new(1e9)).unwrap();
+        let client = srv.client();
+        let tickets = client.submit_many((0..N).map(|i| vec![(i % 251) as u8; elems]));
+        let (mut oks, mut errs) = (0usize, 0usize);
+        let mut by_shard = [0usize; 2];
+        for t in tickets {
+            match t.await_reply() {
+                Ok(r) => {
+                    oks += 1;
+                    by_shard[r.shard] += 1;
+                }
+                Err(_) => errs += 1,
+            }
+        }
+        assert_eq!(oks + errs, N, "every ticket must resolve");
+        assert!(errs >= 1, "the in-hand batch dies with the shard");
+        assert!(
+            by_shard[1] > 0,
+            "stranded backlog must be re-routed to the live shard, \
+             not wait for thieves: {by_shard:?}"
+        );
+        assert!(srv.stats.drained(), "gauges must conserve after the re-route");
+        drop(client);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn timed_out_await_counts_the_late_reply() {
+        let (backend, elems) = heavy_backend();
+        let mgr = ProfileManager::new(ManagerConfig::default(), specs());
+        let srv = AdaptiveServer::start(
+            ServerConfig::default(),
+            backend,
+            mgr,
+            EnergyMonitor::new(1e9),
+        )
+        .unwrap();
+        // A zero deadline expires while the (heavy) batch still executes;
+        // consuming the ticket closes its reply channel.
+        let t = srv.submit(vec![1u8; elems]);
+        assert!(t.await_reply_timeout(Duration::from_millis(0)).is_err());
+        // The worker still finishes the work and must book the discarded
+        // answer instead of losing it silently.
+        wait_until("late reply accounting", || srv.stats.late_replies.get() == 1);
+        assert_eq!(srv.stats.requests.get(), 1, "the work itself is still counted");
         srv.shutdown();
     }
 

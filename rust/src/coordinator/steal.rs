@@ -47,6 +47,23 @@ pub(crate) struct ShardDeques<T> {
     closed: AtomicBool,
 }
 
+/// Where a dead shard's stranded backlog went (see
+/// [`ShardDeques::mark_dead`]): `moved[i]` items were re-routed onto shard
+/// `i`'s deque, `dropped` items had nowhere live to go. The caller uses it
+/// to move its depth gauges so conservation holds through a death.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) struct DeathReport {
+    pub moved: Vec<usize>,
+    pub dropped: usize,
+}
+
+impl DeathReport {
+    /// Total items taken off the dead shard's deque.
+    pub fn total(&self) -> usize {
+        self.moved.iter().sum::<usize>() + self.dropped
+    }
+}
+
 impl<T> ShardDeques<T> {
     pub fn new(n: usize, steal: bool) -> Self {
         ShardDeques {
@@ -180,26 +197,57 @@ impl<T> ShardDeques<T> {
     }
 
     /// Record that shard `wid`'s owner died abnormally. Routing will skip
-    /// it from now on. With stealing enabled its backlog stays for thieves
-    /// to rescue; with stealing off the backlog is dropped (nobody will
-    /// ever drain it) and the count is returned for gauge reconciliation.
-    pub fn mark_dead(&self, wid: usize) -> usize {
+    /// it from now on, and its stranded backlog is **eagerly re-routed** to
+    /// the live shards (least-loaded first) instead of waiting on the
+    /// opportunistic steal poll — with stealing off this is the only way
+    /// the work survives at all. Items that cannot be placed (pool closed,
+    /// or no live shard remains) are dropped, releasing any channels they
+    /// hold so producers read a clean disconnect. The returned
+    /// [`DeathReport`] says where every item went, for gauge
+    /// reconciliation.
+    pub fn mark_dead(&self, wid: usize) -> DeathReport {
         self.shards[wid].dead.store(true, Ordering::SeqCst);
-        let dropped = if self.steal {
-            0
-        } else {
+        let stranded: Vec<T> = {
             let mut q = self.shards[wid].deque.lock().unwrap();
-            let n = q.len();
-            q.clear();
+            let items = q.drain(..).collect();
             self.shards[wid].len.store(0, Ordering::SeqCst);
-            n
+            items
         };
-        // wake everyone: thieves may rescue the backlog, and the waiting
+        let mut moved = vec![0usize; self.shards.len()];
+        let mut dropped = 0usize;
+        for item in stranded {
+            // least_loaded_by skips dead shards but falls back to 0 when
+            // every shard is dead — re-check before handing work to a
+            // corpse. A concurrent death can still race the push; the item
+            // then sits on the newly dead shard and that shard's own
+            // mark_dead (or the pool-wide fail) accounts for it.
+            let target = self.least_loaded_by(|_| 0.0);
+            if !self.shards[target].dead.load(Ordering::SeqCst) && self.push(target, item) {
+                moved[target] += 1;
+            } else {
+                dropped += 1; // drops `item`
+            }
+        }
+        // wake everyone: re-routed work may now sit anywhere, and waiting
         // dispatcher-side invariants re-evaluate
         for s in &self.shards {
             s.cv.notify_all();
         }
-        dropped
+        DeathReport { moved, dropped }
+    }
+
+    /// Bring a respawned shard back into service: routing targets it again
+    /// and (with stealing off) its deque accepts pushes. The supervisor
+    /// calls this immediately before spawning the replacement worker.
+    pub fn revive(&self, wid: usize) {
+        self.shards[wid].busy.store(false, Ordering::SeqCst);
+        self.shards[wid].dead.store(false, Ordering::SeqCst);
+        self.shards[wid].cv.notify_all();
+    }
+
+    /// Whether the pool has been closed (graceful) or failed.
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::SeqCst)
     }
 
     /// One non-blocking acquisition attempt for shard `wid`: own deque
@@ -374,7 +422,8 @@ mod tests {
     #[test]
     fn dead_shard_is_skipped_by_routing() {
         let q: ShardDeques<u32> = ShardDeques::new(2, true);
-        assert_eq!(q.mark_dead(0), 0); // steal on: backlog kept for thieves
+        let report = q.mark_dead(0); // empty deque: nothing to move
+        assert_eq!(report.total(), 0);
         assert_eq!(q.least_loaded_by(|_| 0.0), 1);
         // pinned pushes to a dead shard still land while stealing is on
         assert!(q.push(0, 7));
@@ -382,19 +431,75 @@ mod tests {
     }
 
     #[test]
-    fn dead_shard_without_steal_drops_its_backlog() {
+    fn dead_shard_backlog_is_rerouted_eagerly() {
+        // Regression: a single death used to leave its backlog for the
+        // opportunistic steal poll (steal on) or drop it outright (steal
+        // off). Now both modes hand the stranded items to live shards at
+        // death-detection time.
+        for steal in [true, false] {
+            let q: ShardDeques<u32> = ShardDeques::new(3, steal);
+            assert!(q.push(0, 1));
+            assert!(q.push(0, 2));
+            assert!(q.push(0, 3));
+            let report = q.mark_dead(0);
+            assert_eq!(report.dropped, 0, "live shards exist: nothing drops");
+            assert_eq!(report.moved[0], 0, "never re-route onto the corpse");
+            assert_eq!(report.moved.iter().sum::<usize>(), 3);
+            // the items are immediately poppable from live shards' own
+            // deques — no steal involved (from == own wid even at steal off)
+            q.close();
+            let mut got = Vec::new();
+            for wid in 1..3 {
+                while let Some((item, from)) = q.pop(wid) {
+                    assert_ne!(from, 0, "item should have left the dead deque");
+                    got.push(item);
+                }
+            }
+            got.sort_unstable();
+            assert_eq!(got, vec![1, 2, 3], "steal={steal}: backlog lost");
+        }
+    }
+
+    #[test]
+    fn dead_shard_without_steal_rejects_new_work() {
         let q: ShardDeques<u32> = ShardDeques::new(2, false);
         assert!(q.push(0, 1));
-        assert!(q.push(0, 2));
-        // owner died: nobody can ever drain these
-        assert_eq!(q.mark_dead(0), 2);
-        // and new work aimed at it is rejected rather than stranded
+        let report = q.mark_dead(0);
+        assert_eq!(report.moved, vec![0, 1]); // backlog re-routed to shard 1
+        // new work aimed at the corpse is rejected rather than stranded
         assert!(!q.push(0, 3));
         assert_eq!(q.least_loaded_by(|_| 0.0), 1);
-        assert!(q.push(1, 4));
         q.close();
-        assert_eq!(q.pop(1), Some((4, 1)));
+        assert_eq!(q.pop(1), Some((1, 1)));
         assert_eq!(q.pop(1), None);
+    }
+
+    #[test]
+    fn last_death_drops_the_backlog() {
+        let q: ShardDeques<u32> = ShardDeques::new(2, true);
+        assert!(q.push(0, 1));
+        assert!(q.push(1, 2));
+        let first = q.mark_dead(0);
+        assert_eq!(first, DeathReport { moved: vec![0, 1], dropped: 0 });
+        // shard 1 now holds both items; when it dies too there is nowhere
+        // live left, so the items drop (releasing their channels)
+        let last = q.mark_dead(1);
+        assert_eq!(last, DeathReport { moved: vec![0, 0], dropped: 2 });
+    }
+
+    #[test]
+    fn revive_rejoins_routing_and_serves_again() {
+        let q: ShardDeques<u32> = ShardDeques::new(2, false);
+        q.mark_dead(0);
+        assert_eq!(q.least_loaded_by(|_| 0.0), 1);
+        assert!(!q.push(0, 1), "dead + no steal rejects work");
+        q.revive(0);
+        assert_eq!(q.least_loaded_by(|_| 0.0), 0);
+        assert!(q.push(0, 2));
+        assert_eq!(q.pop(0), Some((2, 0)));
+        assert!(!q.is_closed());
+        q.close();
+        assert!(q.is_closed());
     }
 
     #[test]

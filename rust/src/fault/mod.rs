@@ -1,0 +1,376 @@
+//! Deterministic fault injection: seeded, wall-clock-free chaos plans.
+//!
+//! A [`FaultPlan`] is generated once from a seed and describes every fault a
+//! chaos run will inject, on two clocks that both advance with *work*, never
+//! wall time:
+//!
+//! * **Server faults** trigger on the pool-wide batch counter: the worker
+//!   loop calls [`FaultInjector::on_batch`] once per popped batch, and when
+//!   the counter passes an event's `at_batch` the event fires on its target
+//!   shard — a [`ServerFaultKind::Panic`] (the worker thread panics with the
+//!   in-hand batch, exercising the shard-death + supervision path in
+//!   `coordinator/server.rs`) or a [`ServerFaultKind::BrownOut`] (the
+//!   shard's battery is force-drained to empty *and then* the worker dies,
+//!   modelling a power-loss reset; the supervisor revives it at
+//!   `restart_fraction`, mirroring `power::CycleSimConfig`).
+//! * **Wire faults** trigger on the client-side request index: the chaos
+//!   driver consults [`FaultPlan::wire`] and, at the event's `at_request`,
+//!   hard-kills every open connection ([`WireFaultKind::Reset`], via
+//!   `NetServer::reset_connections`) or writes a deliberately corrupt frame
+//!   on a fresh socket ([`WireFaultKind::Corrupt`]) and asserts the typed
+//!   `BadRequest` + close contract.
+//!
+//! Because both clocks are virtual, the *plan* is byte-for-byte
+//! reproducible: the same seed always yields the same events in the same
+//! order ([`FaultPlan::to_json`] is what the `chaos_recovery` bench embeds
+//! in `chaos.json`). Which *requests* a panic happens to take down still
+//! depends on scheduling, so recovery gates assert seed-independent
+//! invariants (every request resolves, gauges conserved, served fraction
+//! above threshold) rather than exact casualty lists. See
+//! `docs/robustness.md` for the full fault model.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::json::Value;
+use crate::testkit::Rng;
+
+/// A fault injected inside the serving spine, on the batch clock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServerFaultKind {
+    /// The worker thread panics mid-loop; the in-hand batch's tickets
+    /// resolve `Err` and the shard goes through death + respawn.
+    Panic,
+    /// The shard's battery is force-drained to 0 J and the worker dies
+    /// (power loss). On respawn the supervisor refills the cell to
+    /// `ServerConfig::restart_fraction`, so the shard rejoins degraded.
+    BrownOut,
+}
+
+/// A fault injected on the wire path, on the client request-index clock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireFaultKind {
+    /// Hard-kill every open connection mid-flight (both directions).
+    Reset,
+    /// Send a deliberately corrupt frame; the server must answer with a
+    /// typed `BadRequest` and close only that connection.
+    Corrupt,
+}
+
+/// One spine-side fault: fires once, on `shard`, when the pool-wide batch
+/// counter reaches `at_batch`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServerFaultEvent {
+    pub at_batch: u64,
+    pub shard: usize,
+    pub kind: ServerFaultKind,
+}
+
+/// One wire-side fault: fires once, when the driver has submitted
+/// `at_request` requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireFaultEvent {
+    pub at_request: u64,
+    pub kind: WireFaultKind,
+}
+
+/// Shape of a seeded plan: how many of each fault to scatter over the
+/// batch/request horizons.
+#[derive(Debug, Clone)]
+pub struct FaultSpec {
+    /// Shards available as panic/brown-out targets.
+    pub shards: usize,
+    /// Server events trigger uniformly in `[1, horizon_batches]`.
+    pub horizon_batches: u64,
+    /// Wire events trigger uniformly in `[1, horizon_requests]`.
+    pub horizon_requests: u64,
+    pub panics: usize,
+    pub brownouts: usize,
+    pub resets: usize,
+    pub corruptions: usize,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            shards: 4,
+            horizon_batches: 32,
+            horizon_requests: 256,
+            panics: 2,
+            brownouts: 2,
+            resets: 2,
+            corruptions: 1,
+        }
+    }
+}
+
+/// The full, deterministic chaos schedule for one run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Spine faults, sorted by `(at_batch, shard)`.
+    pub server: Vec<ServerFaultEvent>,
+    /// Wire faults, sorted by `at_request`.
+    pub wire: Vec<WireFaultEvent>,
+}
+
+impl FaultPlan {
+    /// An empty plan (no faults): a chaos harness run as a plain load run.
+    pub fn none(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            server: Vec::new(),
+            wire: Vec::new(),
+        }
+    }
+
+    /// Scatter `spec`'s fault counts over the horizons with the seeded
+    /// `testkit` RNG. Same seed + spec -> identical plan, always.
+    pub fn seeded(seed: u64, spec: &FaultSpec) -> FaultPlan {
+        assert!(spec.shards > 0, "fault plan needs at least one shard");
+        let mut rng = Rng::new(seed);
+        let mut server = Vec::with_capacity(spec.panics + spec.brownouts);
+        for _ in 0..spec.panics {
+            server.push(ServerFaultEvent {
+                at_batch: rng.u64(1, spec.horizon_batches.max(1)),
+                shard: rng.usize(0, spec.shards - 1),
+                kind: ServerFaultKind::Panic,
+            });
+        }
+        for _ in 0..spec.brownouts {
+            server.push(ServerFaultEvent {
+                at_batch: rng.u64(1, spec.horizon_batches.max(1)),
+                shard: rng.usize(0, spec.shards - 1),
+                kind: ServerFaultKind::BrownOut,
+            });
+        }
+        server.sort_by_key(|e| (e.at_batch, e.shard));
+        let mut wire = Vec::with_capacity(spec.resets + spec.corruptions);
+        for _ in 0..spec.resets {
+            wire.push(WireFaultEvent {
+                at_request: rng.u64(1, spec.horizon_requests.max(1)),
+                kind: WireFaultKind::Reset,
+            });
+        }
+        for _ in 0..spec.corruptions {
+            wire.push(WireFaultEvent {
+                at_request: rng.u64(1, spec.horizon_requests.max(1)),
+                kind: WireFaultKind::Corrupt,
+            });
+        }
+        wire.sort_by_key(|e| e.at_request);
+        FaultPlan { seed, server, wire }
+    }
+
+    /// The shards targeted by at least one brown-out (deduped, sorted).
+    pub fn brownout_shards(&self) -> Vec<usize> {
+        let mut s: Vec<usize> = self
+            .server
+            .iter()
+            .filter(|e| e.kind == ServerFaultKind::BrownOut)
+            .map(|e| e.shard)
+            .collect();
+        s.sort_unstable();
+        s.dedup();
+        s
+    }
+
+    /// Deterministic JSON description of the plan (embedded in
+    /// `chaos.json`; same seed -> byte-identical output).
+    pub fn to_json(&self) -> Value {
+        let server: Vec<Value> = self
+            .server
+            .iter()
+            .map(|e| {
+                Value::obj(vec![
+                    ("at_batch", (e.at_batch as i64).into()),
+                    ("shard", e.shard.into()),
+                    (
+                        "kind",
+                        match e.kind {
+                            ServerFaultKind::Panic => "panic",
+                            ServerFaultKind::BrownOut => "brownout",
+                        }
+                        .into(),
+                    ),
+                ])
+            })
+            .collect();
+        let wire: Vec<Value> = self
+            .wire
+            .iter()
+            .map(|e| {
+                Value::obj(vec![
+                    ("at_request", (e.at_request as i64).into()),
+                    (
+                        "kind",
+                        match e.kind {
+                            WireFaultKind::Reset => "reset",
+                            WireFaultKind::Corrupt => "corrupt",
+                        }
+                        .into(),
+                    ),
+                ])
+            })
+            .collect();
+        Value::obj(vec![
+            ("seed", (self.seed as i64).into()),
+            ("server", Value::Array(server)),
+            ("wire", Value::Array(wire)),
+        ])
+    }
+
+    /// Build the shared injector the serving spine consults per batch.
+    pub fn injector(&self) -> FaultInjector {
+        FaultInjector {
+            events: Mutex::new(self.server.iter().map(|&e| (e, false)).collect()),
+            batches: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Shared trigger state for a plan's spine faults. One instance is handed
+/// to `ServerConfig::faults`; every worker calls [`on_batch`] once per
+/// popped batch and applies whatever fires. Each event fires exactly once.
+///
+/// [`on_batch`]: FaultInjector::on_batch
+#[derive(Debug)]
+pub struct FaultInjector {
+    events: Mutex<Vec<(ServerFaultEvent, bool)>>,
+    batches: AtomicU64,
+}
+
+impl FaultInjector {
+    /// Advance the pool-wide batch clock and return the faults due on
+    /// `shard`. An event whose trigger passed while its shard was dead
+    /// fires on the shard's first batch after respawn.
+    pub fn on_batch(&self, shard: usize) -> Vec<ServerFaultKind> {
+        let now = self.batches.fetch_add(1, Ordering::SeqCst) + 1;
+        let mut due = Vec::new();
+        let mut events = self.events.lock().unwrap();
+        for (e, fired) in events.iter_mut() {
+            if !*fired && e.shard == shard && e.at_batch <= now {
+                *fired = true;
+                due.push(e.kind);
+            }
+        }
+        due
+    }
+
+    /// Batches observed so far (the virtual chaos clock).
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::SeqCst)
+    }
+
+    /// Events that have not fired yet.
+    pub fn remaining(&self) -> usize {
+        self.events.lock().unwrap().iter().filter(|(_, f)| !*f).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_plan_is_deterministic_and_bounded() {
+        let spec = FaultSpec::default();
+        let a = FaultPlan::seeded(42, &spec);
+        let b = FaultPlan::seeded(42, &spec);
+        assert_eq!(a, b, "same seed must yield an identical plan");
+        assert_eq!(a.server.len(), spec.panics + spec.brownouts);
+        assert_eq!(a.wire.len(), spec.resets + spec.corruptions);
+        for e in &a.server {
+            assert!(e.shard < spec.shards);
+            assert!((1..=spec.horizon_batches).contains(&e.at_batch));
+        }
+        for e in &a.wire {
+            assert!((1..=spec.horizon_requests).contains(&e.at_request));
+        }
+        let c = FaultPlan::seeded(43, &spec);
+        assert_ne!(a, c, "different seeds should differ");
+        assert_eq!(
+            crate::json::to_string(&a.to_json()),
+            crate::json::to_string(&b.to_json()),
+            "plan JSON must be byte-identical per seed"
+        );
+    }
+
+    #[test]
+    fn injector_fires_each_event_once_on_its_shard() {
+        let plan = FaultPlan {
+            seed: 0,
+            server: vec![
+                ServerFaultEvent {
+                    at_batch: 2,
+                    shard: 0,
+                    kind: ServerFaultKind::Panic,
+                },
+                ServerFaultEvent {
+                    at_batch: 3,
+                    shard: 1,
+                    kind: ServerFaultKind::BrownOut,
+                },
+            ],
+            wire: vec![],
+        };
+        let inj = plan.injector();
+        assert!(inj.on_batch(0).is_empty(), "batch 1: before the trigger");
+        assert_eq!(inj.on_batch(0), vec![ServerFaultKind::Panic], "batch 2");
+        assert!(inj.on_batch(0).is_empty(), "already fired");
+        // shard 1's event triggered at batch 3 <= 4: fires on its next pop.
+        assert_eq!(inj.on_batch(1), vec![ServerFaultKind::BrownOut]);
+        assert_eq!(inj.remaining(), 0);
+        assert_eq!(inj.batches(), 4);
+    }
+
+    #[test]
+    fn late_trigger_fires_on_first_batch_after_respawn() {
+        let plan = FaultPlan {
+            seed: 0,
+            server: vec![ServerFaultEvent {
+                at_batch: 1,
+                shard: 2,
+                kind: ServerFaultKind::Panic,
+            }],
+            wire: vec![],
+        };
+        let inj = plan.injector();
+        // Other shards advance the clock well past the trigger first.
+        for _ in 0..10 {
+            assert!(inj.on_batch(0).is_empty());
+        }
+        assert_eq!(inj.on_batch(2), vec![ServerFaultKind::Panic]);
+    }
+
+    #[test]
+    fn brownout_shards_are_deduped_and_sorted() {
+        let plan = FaultPlan {
+            seed: 0,
+            server: vec![
+                ServerFaultEvent {
+                    at_batch: 1,
+                    shard: 3,
+                    kind: ServerFaultKind::BrownOut,
+                },
+                ServerFaultEvent {
+                    at_batch: 2,
+                    shard: 1,
+                    kind: ServerFaultKind::BrownOut,
+                },
+                ServerFaultEvent {
+                    at_batch: 3,
+                    shard: 3,
+                    kind: ServerFaultKind::BrownOut,
+                },
+                ServerFaultEvent {
+                    at_batch: 4,
+                    shard: 0,
+                    kind: ServerFaultKind::Panic,
+                },
+            ],
+            wire: vec![],
+        };
+        assert_eq!(plan.brownout_shards(), vec![1, 3]);
+    }
+}

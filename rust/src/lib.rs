@@ -8,6 +8,7 @@ pub mod bench_harness;
 pub mod cli;
 pub mod coordinator;
 pub mod dataflow;
+pub mod fault;
 pub mod flow;
 pub mod hls;
 pub mod loadgen;

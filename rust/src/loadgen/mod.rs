@@ -15,6 +15,9 @@
 //! * [`poisson_arrivals`] — exponential inter-arrivals via inverse-CDF on
 //!   the seeded xorshift64* [`Rng`]; [`uniform_arrivals`] for a paced
 //!   schedule; any caller-supplied trace (sorted seconds) works too.
+//! * [`TraceSpec`] — multi-phase schedules (bursty spikes, diurnal ramps)
+//!   loaded from a JSON trace file: the `loadgen --trace` input, one seed,
+//!   reproducible across phase boundaries.
 //! * [`simulate`] — a discrete-event model of the serving spine:
 //!   join-shortest-queue routing over `shards` deterministic servers with
 //!   fixed `service_us`, plus the front end's shed-at-aggregate-depth
@@ -59,6 +62,172 @@ pub fn uniform_arrivals(rate_per_s: f64, n: usize) -> Vec<f64> {
         "rate must be finite and > 0, got {rate_per_s}"
     );
     (1..=n).map(|i| i as f64 / rate_per_s).collect()
+}
+
+/// Arrival pattern inside one [`TracePhase`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum TracePattern {
+    /// Exponential inter-arrivals at the phase rate.
+    Poisson,
+    /// Evenly paced at the phase rate.
+    Uniform,
+    /// Clumps of `burst` simultaneous arrivals at Poisson-spaced instants;
+    /// the *instant* rate is `rate_per_s / burst`, so the phase still
+    /// offers `rate_per_s` requests per second on average — same load,
+    /// much spikier queue depth.
+    Bursty { burst: usize },
+}
+
+/// One segment of a trace: offer `rate_per_s` for `duration_s` seconds of
+/// virtual time with the given arrival [`TracePattern`].
+#[derive(Debug, Clone)]
+pub struct TracePhase {
+    pub rate_per_s: f64,
+    pub duration_s: f64,
+    pub pattern: TracePattern,
+}
+
+/// A multi-phase arrival schedule (bursty spikes, diurnal ramps) loaded
+/// from a JSON trace file — the `loadgen --trace` input. Everything stays
+/// on virtual time and the single seeded [`Rng`] runs *across* phases, so
+/// a trace is one reproducible schedule, not a concatenation of
+/// independently seeded ones.
+///
+/// The on-disk shape:
+///
+/// ```json
+/// {"seed": 7, "phases": [
+///   {"rate_per_s": 6000.0, "duration_s": 0.5, "pattern": "poisson"},
+///   {"rate_per_s": 20000.0, "duration_s": 0.1, "pattern": "bursty", "burst": 8},
+///   {"rate_per_s": 2000.0, "duration_s": 0.5, "pattern": "uniform"}
+/// ]}
+/// ```
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    pub seed: u64,
+    pub phases: Vec<TracePhase>,
+}
+
+impl TraceSpec {
+    /// Parse the documented JSON shape; `seed` defaults to 7 when absent.
+    /// Errors name the offending field so a bad trace file fails loudly at
+    /// the CLI instead of producing a silently wrong schedule.
+    pub fn from_json(v: &crate::json::Value) -> Result<TraceSpec, String> {
+        let seed = match v.get("seed") {
+            None => 7,
+            Some(s) => s
+                .as_f64()
+                .filter(|s| s.fract() == 0.0 && *s >= 0.0)
+                .ok_or("trace: seed must be a non-negative integer")?
+                as u64,
+        };
+        let phases_v = v
+            .get("phases")
+            .and_then(|p| p.as_array())
+            .ok_or("trace: missing \"phases\" array")?;
+        if phases_v.is_empty() {
+            return Err("trace: \"phases\" must not be empty".into());
+        }
+        let mut phases = Vec::with_capacity(phases_v.len());
+        for (i, p) in phases_v.iter().enumerate() {
+            let num = |key: &str| -> Result<f64, String> {
+                p.get(key)
+                    .and_then(|x| x.as_f64())
+                    .filter(|x| x.is_finite() && *x > 0.0)
+                    .ok_or(format!("trace: phase {i}: {key} must be finite and > 0"))
+            };
+            let rate_per_s = num("rate_per_s")?;
+            let duration_s = num("duration_s")?;
+            let pattern = match p.get("pattern").and_then(|x| x.as_str()) {
+                Some("poisson") => TracePattern::Poisson,
+                Some("uniform") => TracePattern::Uniform,
+                Some("bursty") => {
+                    let burst = p
+                        .get("burst")
+                        .and_then(|x| x.as_f64())
+                        .filter(|b| b.fract() == 0.0 && *b >= 1.0)
+                        .ok_or(format!(
+                            "trace: phase {i}: bursty needs an integer burst >= 1"
+                        ))? as usize;
+                    TracePattern::Bursty { burst }
+                }
+                Some(other) => {
+                    return Err(format!(
+                        "trace: phase {i}: unknown pattern {other:?} \
+                         (poisson | uniform | bursty)"
+                    ))
+                }
+                None => return Err(format!("trace: phase {i}: missing pattern")),
+            };
+            phases.push(TracePhase {
+                rate_per_s,
+                duration_s,
+                pattern,
+            });
+        }
+        Ok(TraceSpec { seed, phases })
+    }
+
+    /// Total virtual-time span of the trace in seconds.
+    pub fn horizon_s(&self) -> f64 {
+        self.phases.iter().map(|p| p.duration_s).sum()
+    }
+
+    /// Materialize the schedule: arrival times in seconds, ascending across
+    /// phase boundaries, reproducible from the seed alone. Feed the result
+    /// straight into [`simulate`] or replay it against the TCP front end.
+    pub fn arrivals(&self) -> Vec<f64> {
+        let mut rng = Rng::new(self.seed);
+        let mut out = Vec::new();
+        let mut start = 0.0f64;
+        for phase in &self.phases {
+            let end = start + phase.duration_s;
+            match phase.pattern {
+                TracePattern::Poisson => {
+                    let mut t = start;
+                    loop {
+                        let u = rng.f64_unit();
+                        t += -(1.0 - u).ln() / phase.rate_per_s;
+                        if t >= end {
+                            break;
+                        }
+                        out.push(t);
+                    }
+                }
+                TracePattern::Uniform => {
+                    // Index-based (not `t += step`) so float drift cannot
+                    // shift the count at the phase boundary.
+                    let step = 1.0 / phase.rate_per_s;
+                    for i in 1.. {
+                        let t = start + i as f64 * step;
+                        if t >= end {
+                            break;
+                        }
+                        out.push(t);
+                    }
+                }
+                TracePattern::Bursty { burst } => {
+                    let burst = burst.max(1);
+                    // Poisson-spaced burst *instants* at rate/burst keep the
+                    // phase's average offered rate at rate_per_s.
+                    let instant_rate = phase.rate_per_s / burst as f64;
+                    let mut t = start;
+                    loop {
+                        let u = rng.f64_unit();
+                        t += -(1.0 - u).ln() / instant_rate;
+                        if t >= end {
+                            break;
+                        }
+                        for _ in 0..burst {
+                            out.push(t);
+                        }
+                    }
+                }
+            }
+            start = end;
+        }
+        out
+    }
 }
 
 /// The serving spine as the open-loop model sees it.
@@ -302,6 +471,105 @@ mod tests {
             assert!(
                 d <= cfg.admission_depth,
                 "shard {i} depth {d} above the admission ceiling"
+            );
+        }
+    }
+
+    #[test]
+    fn trace_parses_generates_and_reproduces() {
+        let src = r#"{"seed": 7, "phases": [
+            {"rate_per_s": 6000.0, "duration_s": 0.5, "pattern": "poisson"},
+            {"rate_per_s": 20000.0, "duration_s": 0.1, "pattern": "bursty", "burst": 8},
+            {"rate_per_s": 2000.0, "duration_s": 0.5, "pattern": "uniform"}
+        ]}"#;
+        let spec = TraceSpec::from_json(&crate::json::parse(src).unwrap()).unwrap();
+        assert_eq!(spec.seed, 7);
+        assert_eq!(spec.phases.len(), 3);
+        assert_eq!(spec.phases[1].pattern, TracePattern::Bursty { burst: 8 });
+        assert!((spec.horizon_s() - 1.1).abs() < 1e-12);
+
+        let a = spec.arrivals();
+        let b = spec.arrivals();
+        assert_eq!(a, b, "a trace is one reproducible schedule");
+        assert!(
+            a.windows(2).all(|w| w[1] >= w[0]),
+            "ascending across phase boundaries"
+        );
+        assert!(a.iter().all(|&t| t >= 0.0 && t < spec.horizon_s()));
+        // ~6000*0.5 + 20000*0.1 + 2000*0.5 - 1 = 5999 expected; Poisson
+        // phases fluctuate, so only sanity-bound the count.
+        assert!(
+            (5000..7000).contains(&a.len()),
+            "offered count {} far from the ~6000 the trace encodes",
+            a.len()
+        );
+        // The uniform tail is exactly paced from the phase boundary (cut
+        // strictly past it so a bursty straggler at ~0.6 cannot leak in).
+        let tail: Vec<f64> = a.iter().copied().filter(|&t| t >= 0.6003).collect();
+        assert_eq!(tail.len(), 999);
+        assert!((tail[0] - 0.6005).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bursty_phases_arrive_in_clumps_at_the_same_average_rate() {
+        let spec = TraceSpec {
+            seed: 11,
+            phases: vec![TracePhase {
+                rate_per_s: 10_000.0,
+                duration_s: 1.0,
+                pattern: TracePattern::Bursty { burst: 8 },
+            }],
+        };
+        let a = spec.arrivals();
+        assert_eq!(a.len() % 8, 0, "arrivals come in whole clumps");
+        for clump in a.chunks(8) {
+            assert!(
+                clump.iter().all(|&t| t == clump[0]),
+                "every clump is simultaneous"
+            );
+        }
+        // Average offered rate stays ~rate_per_s despite the clumping.
+        let rate = a.len() as f64 / 1.0;
+        assert!(
+            (7000.0..13_000.0).contains(&rate),
+            "offered rate {rate} far from 10k"
+        );
+        // The spiky schedule still feeds simulate() fine.
+        let report = simulate(
+            &a,
+            &OpenLoopConfig {
+                shards: 4,
+                service_us: 100.0,
+                admission_depth: 64,
+            },
+        );
+        assert_eq!(report.served + report.shed, report.offered);
+    }
+
+    #[test]
+    fn trace_rejects_malformed_specs_loudly() {
+        let cases = [
+            (r#"{"seed": 7}"#, "phases"),
+            (r#"{"phases": []}"#, "empty"),
+            (
+                r#"{"phases": [{"rate_per_s": 0.0, "duration_s": 1.0, "pattern": "poisson"}]}"#,
+                "rate_per_s",
+            ),
+            (
+                r#"{"phases": [{"rate_per_s": 10.0, "duration_s": 1.0, "pattern": "diurnal"}]}"#,
+                "pattern",
+            ),
+            (
+                r#"{"phases": [{"rate_per_s": 10.0, "duration_s": 1.0, "pattern": "bursty"}]}"#,
+                "burst",
+            ),
+        ];
+        for (src, needle) in cases {
+            let err = TraceSpec::from_json(&crate::json::parse(src).unwrap())
+                .expect_err(src);
+            assert!(
+                err.contains(needle),
+                "error {err:?} for {src} should mention {needle:?}"
             );
         }
     }

@@ -841,6 +841,12 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
     .opt("requests", "4000", "arrivals in the schedule")
     .opt("pattern", "poisson", "arrival schedule: poisson | uniform")
     .opt("seed", "7", "seed for the Poisson schedule")
+    .opt(
+        "trace",
+        "",
+        "arrival trace JSON file (phases of rate/duration/pattern; \
+         overrides --rate/--requests/--pattern/--seed)",
+    )
     .opt("shards", "4", "worker shards (model mode)")
     .opt("service-us", "329", "per-request service time in us (model mode)")
     .opt("admission", "64", "admission-control depth")
@@ -849,16 +855,31 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
     .opt("image-len", "0", "request payload bytes (required with --connect)")
     .opt("window", "32", "in-flight window per connection (--connect)");
     let a = parse_or_usage(spec, argv)?;
-    let rate: f64 = a.parse_num("rate")?;
+    let mut rate: f64 = a.parse_num("rate")?;
     if !rate.is_finite() || rate <= 0.0 {
         bail!("--rate must be finite and > 0, got {rate}");
     }
     let n: usize = a.parse_num("requests")?;
-    let seed: u64 = a.parse_num("seed")?;
-    let arrivals = match a.get("pattern").unwrap() {
-        "poisson" => loadgen::poisson_arrivals(rate, n, seed),
-        "uniform" => loadgen::uniform_arrivals(rate, n),
-        other => bail!("unknown --pattern '{other}' (want poisson|uniform)"),
+    let mut seed: u64 = a.parse_num("seed")?;
+    let (arrivals, pattern) = if let Some(path) = a.opt_str("trace") {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read trace {path}: {e}"))?;
+        let parsed =
+            json::parse(&src).map_err(|e| anyhow::anyhow!("parse trace {path}: {e}"))?;
+        let trace =
+            loadgen::TraceSpec::from_json(&parsed).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        let arrivals = trace.arrivals();
+        // Report the trace's own seed and average offered rate.
+        seed = trace.seed;
+        rate = arrivals.len() as f64 / trace.horizon_s().max(f64::MIN_POSITIVE);
+        (arrivals, "trace")
+    } else {
+        let arrivals = match a.get("pattern").unwrap() {
+            "poisson" => loadgen::poisson_arrivals(rate, n, seed),
+            "uniform" => loadgen::uniform_arrivals(rate, n),
+            other => bail!("unknown --pattern '{other}' (want poisson|uniform)"),
+        };
+        (arrivals, a.get("pattern").unwrap())
     };
     if let Some(addr) = a.opt_str("connect") {
         return loadgen_live(&a, addr, &arrivals, rate);
@@ -893,7 +914,7 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
     if let Some(path) = a.opt_str("json") {
         let row = Value::obj(vec![
             ("mode", "model".into()),
-            ("pattern", a.get("pattern").unwrap().into()),
+            ("pattern", pattern.into()),
             ("rate_per_s", rate.into()),
             ("seed", (seed as i64).into()),
             ("shards", cfg.shards.into()),

@@ -9,16 +9,33 @@
 //! per-connection ordering); denials surface as typed
 //! [`NetReply::Denied`] values, not errors — shedding is an expected
 //! response under load, and callers decide how to react.
+//!
+//! [`ResilientClient`] wraps a `NetClient` with the failure policy a real
+//! caller wants (see `docs/robustness.md` for the retry taxonomy):
+//!
+//! * **Retryable** — `Overloaded`, `Draining`, connection reset/refused:
+//!   bounded retries with deterministic exponential backoff + jitter from
+//!   `testkit::rng` (same seed, same schedule). Draining and transport
+//!   errors also drop the connection and redial — a half-read frame
+//!   desynchronizes the stream, so it must never be reused.
+//! * **Fatal** — `BadRequest`, `Internal`, and an expired end-to-end
+//!   deadline: surfaced immediately as typed errors.
+//!
+//! [`NetClientPool`] rounds a handful of resilient connections over one
+//! address so a driver thread gets reconnect-on-failure without managing
+//! sockets itself.
 
 use std::io::{BufReader, BufWriter};
 use std::net::TcpStream;
+use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use super::frame::{
     decode_error, decode_response, read_frame, write_frame, ErrCode, Frame, FrameError, FrameKind,
     WireResponse, DEFAULT_MAX_PAYLOAD,
 };
+use crate::testkit::Rng;
 
 /// One reply frame, decoded.
 #[derive(Debug, Clone, PartialEq)]
@@ -50,6 +67,19 @@ impl NetClient {
             writer: BufWriter::new(stream),
             next_id: 0,
         })
+    }
+
+    /// Set (or clear) the socket read deadline `recv` honors. An expired
+    /// deadline surfaces as [`FrameError::TimedOut`] and leaves the stream
+    /// possibly mid-frame: drop the connection, do not reuse it.
+    pub fn set_read_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        // A zero Duration is rejected by the OS; clamp to the smallest
+        // meaningful deadline instead.
+        let timeout = timeout.map(|t| t.max(Duration::from_millis(1)));
+        self.reader
+            .get_ref()
+            .set_read_timeout(timeout)
+            .context("set read timeout")
     }
 
     /// Write one request frame; returns the id the reply will echo.
@@ -122,5 +152,363 @@ impl NetClient {
             out.push(self.recv()?);
         }
         Ok(out)
+    }
+}
+
+/// Bounded-retry policy for [`ResilientClient`]. The backoff schedule is
+/// fully determined by `seed`: attempt `k` sleeps a jittered
+/// `base_backoff * 2^k` capped at `max_backoff`, with the jitter drawn from
+/// `testkit::rng` so two clients with the same seed back off identically
+/// (and two with different seeds do not stampede in phase).
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total tries per request (first attempt included); at least 1.
+    pub max_attempts: u32,
+    /// Backoff before the first retry.
+    pub base_backoff: Duration,
+    /// Ceiling the exponential schedule saturates at.
+    pub max_backoff: Duration,
+    /// Seed for the jitter stream.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(100),
+            seed: 7,
+        }
+    }
+}
+
+/// Classification of one failed attempt: retry (after backoff) or give up.
+enum TryError {
+    Retry(anyhow::Error),
+    Fatal(anyhow::Error),
+}
+
+/// A self-healing connection: lazily dials on first use, redials after
+/// resets/draining, retries `Overloaded` with deterministic backoff, and
+/// enforces an optional end-to-end deadline per `classify` call (submit +
+/// recv + every retry and backoff in between), so a caller never hangs on
+/// a wedged server. See the module docs for the full retry taxonomy.
+pub struct ResilientClient {
+    addr: String,
+    policy: RetryPolicy,
+    deadline: Option<Duration>,
+    conn: Option<NetClient>,
+    rng: Rng,
+    connected_once: bool,
+    retries: u64,
+    reconnects: u64,
+}
+
+impl ResilientClient {
+    /// No I/O happens here: the first `classify` dials.
+    pub fn new(addr: &str, policy: RetryPolicy) -> ResilientClient {
+        let seed = policy.seed;
+        ResilientClient {
+            addr: addr.to_string(),
+            policy,
+            deadline: None,
+            conn: None,
+            rng: Rng::new(seed),
+            connected_once: false,
+            retries: 0,
+            reconnects: 0,
+        }
+    }
+
+    /// End-to-end budget per `classify` call; expiry is a *fatal* typed
+    /// error (retrying past a blown deadline helps nobody).
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Retries performed so far (attempts beyond each request's first).
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    /// Times the connection was re-established after being lost.
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects
+    }
+
+    /// Chaos/test hook: drop the current connection as if the peer reset
+    /// it. The next `classify` transparently redials.
+    pub fn break_connection(&mut self) {
+        self.conn = None;
+    }
+
+    /// Jittered exponential backoff before retry number `attempt` (0-based):
+    /// uniformly in `[d/2, d]` for `d = min(base * 2^attempt, cap)`.
+    fn backoff(&mut self, attempt: u32) -> Duration {
+        let base = self.policy.base_backoff.as_secs_f64();
+        let cap = self.policy.max_backoff.as_secs_f64();
+        let d = (base * 2f64.powi(attempt.min(30) as i32)).min(cap);
+        Duration::from_secs_f64(d / 2.0 + self.rng.f64_unit() * (d / 2.0))
+    }
+
+    fn ensure_connected(&mut self) -> Result<(), TryError> {
+        if self.conn.is_some() {
+            return Ok(());
+        }
+        match NetClient::connect(&self.addr) {
+            Ok(c) => {
+                if self.connected_once {
+                    self.reconnects += 1;
+                }
+                self.connected_once = true;
+                self.conn = Some(c);
+                Ok(())
+            }
+            // Refused/unreachable is retryable: the server may be mid-
+            // restart (the supervision story on the spine side).
+            Err(e) => Err(TryError::Retry(e)),
+        }
+    }
+
+    fn try_once(
+        &mut self,
+        image: &[u8],
+        time_left: Option<Duration>,
+    ) -> Result<WireResponse, TryError> {
+        self.ensure_connected()?;
+        let conn = self.conn.as_mut().expect("ensured above");
+        if conn.set_read_timeout(time_left).is_err() {
+            // A socket we cannot arm a deadline on cannot honor the
+            // contract; treat it like a reset.
+            self.conn = None;
+            return Err(TryError::Retry(anyhow!("could not set read deadline")));
+        }
+        let id = match conn.submit(image) {
+            Ok(id) => id,
+            Err(e) => {
+                self.conn = None;
+                return Err(TryError::Retry(e.context("submit")));
+            }
+        };
+        match conn.recv() {
+            Ok(NetReply::Response(resp)) if resp.id == id => Ok(resp),
+            Ok(NetReply::Response(resp)) => {
+                // Stream delivered somebody else's reply: state bug, not a
+                // transient; drop the connection and give up.
+                self.conn = None;
+                Err(TryError::Fatal(anyhow!(
+                    "reply id {} does not match request {id}",
+                    resp.id
+                )))
+            }
+            Ok(NetReply::Denied { code, message, .. }) => match code {
+                // Shed at admission: nothing enqueued, connection fine.
+                ErrCode::Overloaded => {
+                    Err(TryError::Retry(anyhow!("request {id} denied: {code}: {message}")))
+                }
+                // The server is going away; redial (possibly its restart).
+                ErrCode::Draining => {
+                    self.conn = None;
+                    Err(TryError::Retry(anyhow!("request {id} denied: {code}: {message}")))
+                }
+                ErrCode::BadRequest | ErrCode::Internal => {
+                    Err(TryError::Fatal(anyhow!("request {id} denied: {code}: {message}")))
+                }
+            },
+            Err(FrameError::TimedOut) => {
+                // The read deadline expired mid-wait: the end-to-end budget
+                // is gone, and the stream may hold a half-read frame.
+                self.conn = None;
+                Err(TryError::Fatal(anyhow!("request {id}: deadline exceeded")))
+            }
+            Err(e) => {
+                // Closed / reset / truncated mid-flight: redial and retry.
+                self.conn = None;
+                Err(TryError::Retry(anyhow::Error::from(e).context("recv")))
+            }
+        }
+    }
+
+    /// Submit one image and wait for its reply, healing transient failures
+    /// along the way. Never hangs: with a deadline set, the call returns a
+    /// typed error once the budget is spent; without one, it returns after
+    /// `max_attempts` tries.
+    pub fn classify(&mut self, image: &[u8]) -> Result<WireResponse> {
+        #[allow(clippy::disallowed_methods)] // wall-clock: end-to-end request deadline
+        let started = std::time::Instant::now();
+        let budget = |started: std::time::Instant, deadline: Option<Duration>| match deadline {
+            None => Some(None),
+            Some(d) => {
+                let left = d.saturating_sub(started.elapsed());
+                if left.is_zero() {
+                    None // spent
+                } else {
+                    Some(Some(left))
+                }
+            }
+        };
+        let mut last_err = None;
+        for attempt in 0..self.policy.max_attempts.max(1) {
+            if attempt > 0 {
+                self.retries += 1;
+                let delay = self.backoff(attempt - 1);
+                match budget(started, self.deadline) {
+                    None => break,
+                    Some(None) => std::thread::sleep(delay),
+                    // Never sleep past the deadline.
+                    Some(Some(left)) => std::thread::sleep(delay.min(left)),
+                }
+            }
+            let time_left = match budget(started, self.deadline) {
+                None => break,
+                Some(t) => t,
+            };
+            match self.try_once(image, time_left) {
+                Ok(resp) => return Ok(resp),
+                Err(TryError::Fatal(e)) => return Err(e),
+                Err(TryError::Retry(e)) => last_err = Some(e),
+            }
+        }
+        match last_err {
+            Some(e) => Err(e.context(format!(
+                "request failed after {} attempt(s)",
+                self.policy.max_attempts.max(1)
+            ))),
+            None => Err(anyhow!(
+                "deadline {:?} exceeded before the first attempt",
+                self.deadline.unwrap_or_default()
+            )),
+        }
+    }
+}
+
+/// A round-robin pool of [`ResilientClient`]s over one address: `classify`
+/// rotates through the members, each healing its own connection. Member
+/// jitter streams are derived from the base seed so the pool's backoff
+/// schedule is deterministic yet decorrelated across connections.
+pub struct NetClientPool {
+    clients: Vec<ResilientClient>,
+    next: usize,
+}
+
+impl NetClientPool {
+    pub fn new(addr: &str, size: usize, policy: RetryPolicy) -> NetClientPool {
+        let clients = (0..size.max(1))
+            .map(|i| {
+                let member = RetryPolicy {
+                    seed: policy
+                        .seed
+                        .wrapping_add((i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+                    ..policy.clone()
+                };
+                ResilientClient::new(addr, member)
+            })
+            .collect();
+        NetClientPool { clients, next: 0 }
+    }
+
+    /// Apply one end-to-end deadline to every member.
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        for c in &mut self.clients {
+            c.deadline = Some(deadline);
+        }
+        self
+    }
+
+    pub fn size(&self) -> usize {
+        self.clients.len()
+    }
+
+    /// Total retries across the pool.
+    pub fn retries(&self) -> u64 {
+        self.clients.iter().map(|c| c.retries()).sum()
+    }
+
+    /// Total reconnects across the pool.
+    pub fn reconnects(&self) -> u64 {
+        self.clients.iter().map(|c| c.reconnects()).sum()
+    }
+
+    /// Chaos/test hook: drop every member's connection.
+    pub fn break_connections(&mut self) {
+        for c in &mut self.clients {
+            c.break_connection();
+        }
+    }
+
+    /// Classify on the next member in rotation.
+    pub fn classify(&mut self, image: &[u8]) -> Result<WireResponse> {
+        let i = self.next;
+        self.next = (self.next + 1) % self.clients.len();
+        self.clients[i].classify(image)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_deterministic_jittered_and_capped() {
+        let mut a = ResilientClient::new("127.0.0.1:1", RetryPolicy::default());
+        let mut b = ResilientClient::new("127.0.0.1:1", RetryPolicy::default());
+        let da: Vec<Duration> = (0..8).map(|i| a.backoff(i)).collect();
+        let db: Vec<Duration> = (0..8).map(|i| b.backoff(i)).collect();
+        assert_eq!(da, db, "same seed must yield the same schedule");
+        let pol = RetryPolicy::default();
+        for (i, d) in da.iter().enumerate() {
+            let nominal = pol
+                .base_backoff
+                .mul_f64(2f64.powi(i as i32))
+                .min(pol.max_backoff);
+            assert!(*d <= nominal, "jitter only shrinks the delay: {d:?} vs {nominal:?}");
+            assert!(
+                *d >= nominal.mul_f64(0.5),
+                "jitter floor is half the nominal delay"
+            );
+            assert!(*d <= pol.max_backoff, "cap must hold");
+        }
+        let mut c = ResilientClient::new(
+            "127.0.0.1:1",
+            RetryPolicy {
+                seed: 8,
+                ..Default::default()
+            },
+        );
+        let dc: Vec<Duration> = (0..8).map(|i| c.backoff(i)).collect();
+        assert_ne!(da, dc, "different seeds must decorrelate");
+    }
+
+    #[test]
+    fn pool_members_get_distinct_jitter_seeds() {
+        let pool = NetClientPool::new("127.0.0.1:1", 3, RetryPolicy::default());
+        assert_eq!(pool.size(), 3);
+        let seeds: Vec<u64> = pool.clients.iter().map(|c| c.policy.seed).collect();
+        let mut deduped = seeds.clone();
+        deduped.sort_unstable();
+        deduped.dedup();
+        assert_eq!(deduped.len(), 3, "seeds must differ: {seeds:?}");
+        assert_eq!(seeds[0], RetryPolicy::default().seed, "member 0 keeps the base seed");
+    }
+
+    #[test]
+    fn unreachable_address_fails_bounded_not_hanging() {
+        // Port 1 on loopback refuses immediately; every attempt is a
+        // retryable connect failure, so classify returns Err after
+        // max_attempts instead of hanging.
+        let mut c = ResilientClient::new(
+            "127.0.0.1:1",
+            RetryPolicy {
+                max_attempts: 2,
+                base_backoff: Duration::from_micros(100),
+                max_backoff: Duration::from_micros(200),
+                ..Default::default()
+            },
+        );
+        assert!(c.classify(&[0u8; 4]).is_err());
+        assert_eq!(c.retries(), 1, "one retry after the first failed attempt");
+        assert_eq!(c.reconnects(), 0, "never connected, so nothing re-connected");
     }
 }

@@ -173,6 +173,10 @@ pub enum FrameError {
     Truncated { wanted: usize, got: usize },
     /// A payload codec found structurally invalid bytes.
     Malformed(String),
+    /// A read deadline (socket read timeout) expired mid-frame. The stream
+    /// may be desynchronized — a header or payload could be half-read — so
+    /// the connection must be dropped and redialed, never reused.
+    TimedOut,
     /// Transport-level I/O failure (reset, broken pipe, ...).
     Io(String),
 }
@@ -191,6 +195,7 @@ impl fmt::Display for FrameError {
                 write!(f, "truncated frame: wanted {wanted} bytes, got {got}")
             }
             FrameError::Malformed(msg) => write!(f, "malformed payload: {msg}"),
+            FrameError::TimedOut => write!(f, "read timed out"),
             FrameError::Io(msg) => write!(f, "i/o error: {msg}"),
         }
     }
@@ -200,7 +205,13 @@ impl std::error::Error for FrameError {}
 
 impl From<std::io::Error> for FrameError {
     fn from(e: std::io::Error) -> Self {
-        FrameError::Io(e.to_string())
+        match e.kind() {
+            // Both kinds signal an expired socket read deadline (which one
+            // depends on the platform); surface them as the typed variant
+            // so the resilient client can tell "deadline" from "reset".
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => FrameError::TimedOut,
+            _ => FrameError::Io(e.to_string()),
+        }
     }
 }
 
@@ -213,7 +224,7 @@ fn read_full(r: &mut impl Read, buf: &mut [u8]) -> Result<usize, FrameError> {
             Ok(0) => break,
             Ok(n) => got += n,
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
-            Err(e) => return Err(FrameError::Io(e.to_string())),
+            Err(e) => return Err(e.into()),
         }
     }
     Ok(got)
@@ -514,6 +525,16 @@ mod tests {
             decode_response(0, &p),
             Err(FrameError::Malformed(_))
         ));
+    }
+
+    #[test]
+    fn io_timeouts_map_to_the_typed_variant() {
+        let t = std::io::Error::new(std::io::ErrorKind::TimedOut, "t");
+        assert_eq!(FrameError::from(t), FrameError::TimedOut);
+        let w = std::io::Error::new(std::io::ErrorKind::WouldBlock, "w");
+        assert_eq!(FrameError::from(w), FrameError::TimedOut);
+        let r = std::io::Error::new(std::io::ErrorKind::ConnectionReset, "r");
+        assert!(matches!(FrameError::from(r), FrameError::Io(_)));
     }
 
     #[test]

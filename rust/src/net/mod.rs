@@ -12,6 +12,10 @@
 //!   windows, and graceful drain on shutdown.
 //! * [`NetClient`] — the blocking client twin: submit/recv, pipelined
 //!   classify, typed [`NetReply::Denied`] surfaces for shed requests.
+//! * [`ResilientClient`] / [`NetClientPool`] — the failure-policy layer on
+//!   top of `NetClient`: bounded retries with deterministic backoff +
+//!   jitter ([`RetryPolicy`]), redial after resets/draining, and an
+//!   end-to-end per-request deadline (see `docs/robustness.md`).
 //!
 //! Everything is `std`-only (vendored-offline: no tokio/serde); see
 //! `docs/networking.md` for the protocol contract and
@@ -21,7 +25,7 @@ pub mod client;
 pub mod frame;
 pub mod server;
 
-pub use client::{NetClient, NetReply};
+pub use client::{NetClient, NetClientPool, NetReply, ResilientClient, RetryPolicy};
 pub use frame::{
     decode_error, decode_response, encode_error, encode_response, read_frame, write_frame,
     ErrCode, Frame, FrameError, FrameKind, WireResponse, DEFAULT_MAX_PAYLOAD, HEADER_LEN, MAGIC,

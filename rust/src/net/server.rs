@@ -192,6 +192,24 @@ impl NetServer {
         self.local_addr
     }
 
+    /// Chaos hook: hard-kill every currently open connection (both
+    /// directions) without stopping the server — the socket-level fault the
+    /// chaos-recovery gate injects mid-flight. Peers see a reset/EOF on
+    /// their next read; in-flight tickets still resolve on the server side
+    /// (the writer drains them against the dead socket, so the `inflight`
+    /// gauge cannot leak). Returns how many sockets were torn down;
+    /// already-closed clones are skipped.
+    pub fn reset_connections(&self) -> usize {
+        let conns = self.conns.lock().unwrap();
+        let mut n = 0;
+        for c in conns.iter() {
+            if c.shutdown(Shutdown::Both).is_ok() {
+                n += 1;
+            }
+        }
+        n
+    }
+
     /// Graceful drain: stop accepting, flush in-flight tickets, close.
     pub fn shutdown(mut self) {
         self.close();

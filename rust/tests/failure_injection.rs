@@ -134,3 +134,126 @@ fn server_survives_backend_batch_failure() {
     );
     assert!(result.is_err(), "startup must fail when profile is missing");
 }
+
+#[test]
+fn random_fault_plans_resolve_every_ticket() {
+    // Property: under ANY seeded FaultPlan — panics and brown-outs landing
+    // on arbitrary shards at arbitrary batch ticks — every submitted ticket
+    // resolves. Survivors are bit-exact against the scalar oracle;
+    // casualties are typed `Err`s, never hangs or silently lost replies.
+    // This is the in-process half of the chaos contract (the
+    // `chaos_recovery` bench drives the same invariant over TCP); see
+    // docs/robustness.md for the fault model.
+    use onnx2hw::coordinator::*;
+    use onnx2hw::dataflow::exec;
+    use onnx2hw::fault::{FaultPlan, FaultSpec};
+    use onnx2hw::testkit;
+    use std::collections::BTreeMap;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let model = read_str(&qonnx::test_model_json(1, 2)).unwrap();
+    let elems = model.input_shape.elems();
+    let images: Vec<Vec<u8>> = (0..8)
+        .map(|i| (0..elems).map(|j| ((i * 31 + j * 17) % 256) as u8).collect())
+        .collect();
+    let oracle: Vec<Vec<f32>> = images
+        .iter()
+        .map(|img| exec::execute(&model, img).iter().map(|&v| v as f32).collect())
+        .collect();
+
+    testkit::check("every ticket resolves under a random fault plan", |rng| {
+        let workers = rng.usize(1, 3);
+        let plan = FaultPlan::seeded(
+            rng.u64(0, 1 << 48),
+            &FaultSpec {
+                shards: workers,
+                horizon_batches: rng.u64(1, 12),
+                // Wire faults need a TCP front end; the in-process spine
+                // only exercises the server clock.
+                horizon_requests: 1,
+                panics: rng.usize(0, 2),
+                brownouts: rng.usize(0, 2),
+                resets: 0,
+                corruptions: 0,
+            },
+        );
+        let n_faults = plan.server.len();
+
+        let mut models = BTreeMap::new();
+        models.insert("hi".to_string(), model.clone());
+        models.insert("lo".to_string(), model.clone());
+        let backend = move || Ok(Backend::sim_from_models(models.clone()));
+        let specs = vec![
+            ProfileSpec {
+                name: "hi".into(),
+                accuracy: 0.96,
+                power_mw: 142.0,
+                latency_us: 329.0,
+            },
+            ProfileSpec {
+                name: "lo".into(),
+                accuracy: 0.94,
+                power_mw: 130.0,
+                latency_us: 329.0,
+            },
+        ];
+        let mgr = ProfileManager::new(ManagerConfig::default(), specs);
+        let cfg = ServerConfig {
+            workers,
+            restart_backoff_batches: 1,
+            faults: Some(Arc::new(plan.injector())),
+            ..Default::default()
+        };
+        let srv = AdaptiveServer::start(cfg, backend, mgr, EnergyMonitor::new(10.0))
+            .map_err(|e| format!("server failed to start: {e}"))?;
+
+        let n = rng.usize(8, 24);
+        let client = srv.client();
+        let tickets = client.submit_many((0..n).map(|i| images[i % images.len()].clone()));
+        let (mut oks, mut errs) = (0usize, 0usize);
+        for (i, t) in tickets.into_iter().enumerate() {
+            match t.await_reply_timeout(Duration::from_secs(10)) {
+                Ok(r) => {
+                    onnx2hw::prop_assert!(
+                        r.logits == oracle[i % images.len()],
+                        "request {i} resolved Ok but not bit-exact (profile {})",
+                        r.profile
+                    );
+                    oks += 1;
+                }
+                Err(e) => {
+                    // A ticket may die with its shard (typed casualty) but
+                    // must never time out: that would be a hang/lost reply.
+                    let msg = format!("{e:#}");
+                    onnx2hw::prop_assert!(
+                        !msg.contains("timed out"),
+                        "request {i} hung past the 10 s deadline: {msg}"
+                    );
+                    errs += 1;
+                }
+            }
+        }
+        onnx2hw::prop_assert!(oks + errs == n, "conservation: every ticket must resolve");
+        if n_faults == 0 {
+            onnx2hw::prop_assert!(errs == 0, "no faults planned but {errs} tickets failed");
+        }
+        // Gauge conservation: once every ticket resolved, no queue depth may
+        // linger (dead shards' accounting included). Brief grace for the
+        // final decrement, which races the reply send.
+        for _ in 0..500 {
+            if srv.stats.drained() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        onnx2hw::prop_assert!(
+            srv.stats.drained(),
+            "spine gauges leaked after all tickets resolved (queue {} / shards {:?})",
+            srv.stats.queue_depth.get(),
+            srv.stats.shard_depth.iter().map(|g| g.get()).collect::<Vec<_>>()
+        );
+        srv.shutdown();
+        Ok(())
+    });
+}

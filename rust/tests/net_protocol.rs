@@ -21,7 +21,7 @@ use onnx2hw::coordinator::{
 use onnx2hw::dataflow::exec;
 use onnx2hw::net::{
     read_frame, ErrCode, FrameError, FrameKind, NetClient, NetReply, NetServer, NetServerConfig,
-    HEADER_LEN, MAGIC, VERSION,
+    ResilientClient, RetryPolicy, HEADER_LEN, MAGIC, VERSION,
 };
 use onnx2hw::qonnx::{read_str, test_model_json, QonnxModel};
 
@@ -395,6 +395,102 @@ fn raw_response_frame_from_client_is_refused() {
         net.stats.open_connections.get() == 0
     });
     finish(srv, net);
+}
+
+#[test]
+fn resilient_client_reconnects_after_a_connection_reset() {
+    let (srv, net, model) = start_stack(256, 1 << 20, true);
+    let mut client = ResilientClient::new(
+        &net.addr().to_string(),
+        RetryPolicy {
+            base_backoff: Duration::from_micros(200),
+            max_backoff: Duration::from_millis(2),
+            ..Default::default()
+        },
+    )
+    .with_deadline(Duration::from_secs(5));
+    let img = image(&model, 0);
+    let resp = client.classify(&img).expect("served before the reset");
+    assert_eq!(resp.logits, oracle(&model, &img));
+
+    // Chaos: hard-kill every open connection, then classify again — the
+    // client must redial transparently and the reply stays bit-exact.
+    assert!(net.reset_connections() >= 1, "nothing to reset");
+    let img2 = image(&model, 1);
+    let resp2 = client.classify(&img2).expect("served after the reset");
+    assert_eq!(resp2.logits, oracle(&model, &img2));
+    assert!(
+        client.reconnects() >= 1,
+        "the reset must have forced a redial"
+    );
+    drop(client);
+    finish(srv, net);
+}
+
+#[test]
+fn overloaded_denials_retry_then_surface_a_bounded_error() {
+    // Depth 0: every attempt is shed with Overloaded — retryable, but the
+    // retry budget is finite, so the caller gets a typed error, not a loop.
+    let (srv, net, model) = start_stack(0, 1 << 20, true);
+    let mut client = ResilientClient::new(
+        &net.addr().to_string(),
+        RetryPolicy {
+            max_attempts: 3,
+            base_backoff: Duration::from_micros(200),
+            max_backoff: Duration::from_millis(2),
+            ..Default::default()
+        },
+    );
+    let err = client.classify(&image(&model, 0)).expect_err("depth-0 gate");
+    assert!(
+        format!("{err:#}").contains("denied"),
+        "error should carry the denial: {err:#}"
+    );
+    assert_eq!(
+        client.retries(),
+        2,
+        "exactly max_attempts - 1 retries before surfacing"
+    );
+    assert_eq!(
+        client.reconnects(),
+        0,
+        "Overloaded keeps the connection — a full reply frame was read"
+    );
+    drop(client);
+    finish(srv, net);
+}
+
+#[test]
+fn requests_after_drain_fail_bounded_not_hanging() {
+    let (srv, net, model) = start_stack(256, 1 << 20, true);
+    let addr = net.addr().to_string();
+    let mut client = ResilientClient::new(
+        &addr,
+        RetryPolicy {
+            max_attempts: 3,
+            base_backoff: Duration::from_micros(200),
+            max_backoff: Duration::from_millis(2),
+            ..Default::default()
+        },
+    )
+    .with_deadline(Duration::from_secs(5));
+    let img = image(&model, 0);
+    let resp = client.classify(&img).expect("served before drain");
+    assert_eq!(resp.logits, oracle(&model, &img));
+
+    // Drain the front end while the client still holds its connection: the
+    // next request must resolve to a bounded typed error (dead socket ->
+    // redial -> refused), never hang.
+    net.shutdown();
+    assert!(client.classify(&image(&model, 1)).is_err());
+    assert_eq!(client.retries(), 2, "the retry budget bounds the failure");
+    assert_eq!(
+        client.reconnects(),
+        0,
+        "no listener left, so no redial can succeed"
+    );
+    assert!(srv.stats.drained());
+    srv.shutdown();
 }
 
 #[test]
