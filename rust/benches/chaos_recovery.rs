@@ -82,6 +82,7 @@ fn count_deaths(stats: &ServerStats) -> usize {
 
 /// Wait (wall clock, unasserted content) for `cond`; panics after ~5 s so a
 /// lost recovery fails loudly instead of hanging the bench.
+#[allow(clippy::disallowed_methods)] // wall-clock: polling an async recovery
 fn wait_until(what: &str, cond: impl Fn() -> bool) {
     for _ in 0..500 {
         if cond() {
@@ -222,6 +223,7 @@ fn run_chaos(requests: usize, plan: &FaultPlan) -> ChaosResult {
                     }
                 }
             }
+            #[allow(clippy::disallowed_methods)] // wall-clock: paced fault injection
             std::thread::sleep(Duration::from_millis(1));
         }
         (resets_applied, corruptions_applied)
@@ -310,6 +312,7 @@ fn run_chaos(requests: usize, plan: &FaultPlan) -> ChaosResult {
         );
         let _ = probe.classify(&patterns[probes % N_IMAGES]);
         probes += 1;
+        #[allow(clippy::disallowed_methods)] // wall-clock: paced live probing
         std::thread::sleep(Duration::from_millis(10));
     }
     drop(probe);

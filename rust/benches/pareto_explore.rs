@@ -35,7 +35,8 @@ use onnx2hw::coordinator::{
 use onnx2hw::dataflow::{exec, BatchExecutor};
 use onnx2hw::json::{self, Value};
 use onnx2hw::qonnx::{
-    prune_stress_model_json, random_model_json, read_str, QonnxModel, RandModelCfg,
+    bound_stress_model_json, prune_stress_model_json, random_model_json, read_str, QonnxModel,
+    RandModelCfg,
 };
 use onnx2hw::testkit::Rng;
 
@@ -120,6 +121,67 @@ fn assert_pruning_equivalence() {
         "static pruning gate: {pruned_evals} evaluations + {pruned_n} pruned == \
          {full_evals} unpruned, frontier byte-identical"
     );
+}
+
+/// Error-bound triage must be a pure speedup: on a model whose lattice has
+/// certified-exact weight drops (skip the accuracy pass, reuse the root's
+/// accuracy) and large-proven-deviation drops (rejected by the logit-bound
+/// tolerance before evaluation), the triaged and untriaged explorers must
+/// emit byte-identical frontier JSON while the triaged run pays strictly
+/// fewer packed-executor accuracy passes — with every skip and rejection
+/// accounted for by the counters.
+fn assert_bound_triage_equivalence() -> (usize, usize) {
+    let model = read_str(&bound_stress_model_json()).expect("bound-stress model");
+    let calib = CalibSet::self_labeled(&model, 16, CALIB_SEED);
+    let run = |bound_triage: bool| {
+        let mut ex = Explorer::new(
+            &model,
+            &calib,
+            ExplorerConfig {
+                power_images: 1,
+                uniform_rungs: 2,
+                logit_bound_tolerance: Some(8),
+                bound_triage,
+                ..Default::default()
+            },
+        );
+        let f = ex.explore();
+        (
+            json::to_string_pretty(&f.to_json()),
+            ex.evaluations(),
+            ex.accuracy_evaluations(),
+            ex.skipped_by_bounds(),
+            ex.rejected_by_bounds(),
+        )
+    };
+    let (triaged_json, t_evals, t_acc, t_skipped, t_rejected) = run(true);
+    let (full_json, f_evals, f_acc, f_skipped, f_rejected) = run(false);
+    assert_eq!(triaged_json, full_json, "bound triage changed the frontier");
+    assert_eq!(f_skipped, 0, "the untriaged run must not skip");
+    assert_eq!(f_rejected, 0, "the untriaged run must not reject");
+    assert_eq!(f_acc, f_evals, "untriaged evaluations are all measured");
+    assert!(t_skipped > 0, "certified weight drops must skip the accuracy pass");
+    assert!(t_rejected > 0, "the tolerance must reject over-bound candidates");
+    assert!(
+        t_acc < f_acc,
+        "triage must skip accuracy passes ({t_acc} vs {f_acc})"
+    );
+    assert_eq!(
+        t_evals,
+        t_acc + t_skipped,
+        "every evaluation is either measured or certificate-skipped"
+    );
+    assert_eq!(
+        t_evals + t_rejected,
+        f_evals,
+        "triaged evaluations + rejections must equal the untriaged evaluations"
+    );
+    println!(
+        "bound triage gate: {t_acc} accuracy passes + {t_skipped} certified skips + \
+         {t_rejected} tolerance rejections == {f_evals} untriaged evaluations, \
+         frontier byte-identical"
+    );
+    (t_skipped, t_rejected)
 }
 
 struct ServeResult {
@@ -288,6 +350,7 @@ fn main() {
     assert_eq!(back.len(), frontier.len(), "frontier JSON round trip lost rungs");
 
     assert_pruning_equivalence();
+    let (triage_skipped, triage_rejected) = assert_bound_triage_equivalence();
 
     let serve = serve_ladder(&frontier, &calib, requests);
     println!(
@@ -301,7 +364,13 @@ fn main() {
             ("bench", "pareto_explore".into()),
             ("calib_images", CALIB_N.into()),
             ("evaluations", explorer.evaluations().into()),
+            ("accuracy_evaluations", explorer.accuracy_evaluations().into()),
             ("candidates_pruned_static", explorer.pruned_static().into()),
+            // Counters from the bound-triage equivalence gate (the main
+            // random model has no certified drops and no tolerance set, so
+            // its own counters are structurally zero).
+            ("candidates_skipped_by_bounds", triage_skipped.into()),
+            ("candidates_rejected_by_bounds", triage_rejected.into()),
             ("explore_seconds", explore_s.into()),
             ("frontier", frontier_json),
             ("baseline", Value::Array(baseline_rows)),

@@ -1,0 +1,545 @@
+//! Affine-arithmetic error-bound analysis: proven deviation intervals
+//! between a base model and a bit-sliced variant.
+//!
+//! The interval engine ([`super::analyze`]) bounds what *one* model can
+//! compute. This second layer bounds how far a knob-vector variant
+//! ([`crate::approx::derive_model`]) can drift from its reference, for
+//! *every* input in the analyzed domain, by propagating per-channel
+//! deviation terms through the pipeline:
+//!
+//! * **Alignment.** A variant activation code `y'` emitted after an
+//!   activation drop of `j` bits represents the base-scale value `y' * 2^j`;
+//!   a variant accumulator after weight drop `k` on a `j_in`-coarse input
+//!   stream represents `acc' * 2^(k + j_in)`. All deviations are tracked in
+//!   these aligned base-code units, so "zero deviation" means "bit-identical
+//!   after rescaling".
+//! * **Conv/dense transfer.** With `ew = w' * 2^k - w` (the exact integer
+//!   rounding error of each weight code) and `eb` the bias analogue, the
+//!   aligned accumulator deviation is `e = eb + sum_taps(ew * x_aligned' +
+//!   w * d_in)` where `x_aligned'` is the variant input interval (from the
+//!   interval engine) and `d_in` the propagated input deviation. Conv taps
+//!   are widened with 0 (SAME padding feeds zeros to both models).
+//! * **Requant transfer.** The slicer's `(mult, shift)` rebase is exact in
+//!   the reals, so the pre-clamp deviation is `e * mult / 2^shift` plus
+//!   rounding slack: zero extra slack when the output scale is unchanged and
+//!   both sides round the same way (the floor-shift lemma makes the bound
+//!   `[floor(e_lo*m/2^s), ceil(e_hi*m/2^s)]` exact — identity and
+//!   even-code drops prove `[0, 0]`), else `T + 1` codes of slack where
+//!   `T = 2^j`. Clamping widens by the difference of the aligned clamp
+//!   ceilings.
+//! * **Certificate.** From the per-class logit deviation intervals `E_c`,
+//!   `stable_margin = max(0, max_{c != d}(E_d.hi - E_c.lo))`: on any input
+//!   where the base winner leads every other logit by *more* than this
+//!   margin, the variant's argmax provably equals the base's. A zero margin
+//!   forces every `E_c` to one shared point, i.e. the variant's logits are a
+//!   uniform shift of the base's on **all** inputs — argmax (including the
+//!   lowest-index tie-break) can never differ, so the variant's accuracy
+//!   equals the reference's exactly ([`ErrorReport::certified_exact`]).
+//!
+//! Soundness is property-tested: every element-wise deviation the scalar
+//! oracle observes lies inside the proven interval, and a certified-exact
+//! variant never flips a top-1 empirically. The explorer uses the
+//! certificate to skip accuracy evaluations and the logit bound to discard
+//! over-tolerance candidates ([`crate::approx::ExplorerConfig`]); frontier
+//! JSON stores the bounds and [`crate::approx::Frontier::from_json`]
+//! re-proves them on load.
+
+use crate::qonnx::{ConvLayer, DenseLayer, Layer, QonnxModel};
+
+use super::interval::{saturate, Interval};
+
+/// Proven deviation intervals of one layer, aligned with `model.layers`.
+#[derive(Debug, Clone)]
+pub struct LayerDeviation {
+    pub name: String,
+    /// Aligned pre-requant accumulator deviation per output channel
+    /// (`acc' * 2^acc_scale_log2 - acc`); empty for pool/flatten.
+    pub acc_dev: Vec<Interval>,
+    /// Aligned output activation deviation per channel
+    /// (`y' * 2^act_scale_log2 - y`).
+    pub act_dev: Vec<Interval>,
+    /// `log2` of the accumulator alignment factor (`k + j_in`).
+    pub acc_scale_log2: u32,
+    /// `log2` of the activation alignment factor (the stream's cumulative
+    /// activation drop `j`).
+    pub act_scale_log2: u32,
+}
+
+/// Result of one [`analyze_error`] pass over a (base, knob vector) pair.
+#[derive(Debug, Clone)]
+pub struct ErrorReport {
+    pub layers: Vec<LayerDeviation>,
+    /// Aligned logit deviation interval per class (empty without a dense
+    /// head).
+    pub logit_dev: Vec<Interval>,
+    /// Largest proven absolute logit deviation across all classes — the
+    /// end-to-end worst-case error in base logit units.
+    pub logit_bound: i64,
+    /// Proven logit margin under which the top-1 cannot flip: any input
+    /// where the base winner leads every other logit by more than this is
+    /// classified identically by the variant.
+    pub stable_margin: i64,
+    /// The bounds prove the variant's argmax equals the base's on every
+    /// input (zero margin — all logit deviations are one shared constant),
+    /// so its accuracy is exactly the reference's.
+    pub certified_exact: bool,
+    /// Narrow-accumulator verdict per conv layer of the *variant* (the
+    /// interval engine's [`super::Analysis::conv_narrow`]) — carried here so
+    /// callers that already pay for the variant analysis need not rerun it.
+    pub conv_narrow: Vec<bool>,
+}
+
+/// Wide working interval: exact `i128` endpoints, saturated into
+/// [`Interval`] only for reporting (mirrors the interval engine's policy).
+#[derive(Debug, Clone, Copy)]
+struct Iv {
+    lo: i128,
+    hi: i128,
+}
+
+impl Iv {
+    const ZERO: Iv = Iv { lo: 0, hi: 0 };
+
+    fn point(v: i128) -> Iv {
+        Iv { lo: v, hi: v }
+    }
+
+    fn add(self, o: Iv) -> Iv {
+        Iv {
+            lo: self.lo + o.lo,
+            hi: self.hi + o.hi,
+        }
+    }
+
+    /// Multiply by a scalar (endpoints swap under a negative factor).
+    fn scale(self, f: i128) -> Iv {
+        let (a, b) = (self.lo * f, self.hi * f);
+        Iv {
+            lo: a.min(b),
+            hi: a.max(b),
+        }
+    }
+
+    /// Widen with 0 (conv taps: SAME padding feeds zeros to both models).
+    fn union0(self) -> Iv {
+        Iv {
+            lo: self.lo.min(0),
+            hi: self.hi.max(0),
+        }
+    }
+
+    fn to_interval(self) -> Interval {
+        Interval::new(saturate(self.lo), saturate(self.hi))
+    }
+}
+
+fn floor_div(a: i128, b: i128) -> i128 {
+    debug_assert!(b > 0);
+    let q = a / b;
+    if a % b != 0 && a < 0 {
+        q - 1
+    } else {
+        q
+    }
+}
+
+fn ceil_div(a: i128, b: i128) -> i128 {
+    -floor_div(-a, b)
+}
+
+/// Per-layer (k, j, j_in) drops plus both layers' parameters — the aligned
+/// pair the transfer functions consume.
+struct ConvPair<'a> {
+    base: &'a ConvLayer,
+    var: &'a ConvLayer,
+    k: u32,
+    j: u32,
+    j_in: u32,
+}
+
+/// Aligned accumulator deviation of one conv/dense-style layer.
+///
+/// `w_at(tap, co)` / `vw_at` index base and variant weight codes, `taps` is
+/// the contraction length, `widen_taps` enables the conv-only 0-union, and
+/// `input` carries per-input-channel (aligned variant interval, deviation
+/// interval) pairs; tap `t` reads input channel `t % input.len()`.
+#[allow(clippy::too_many_arguments)]
+fn acc_deviation(
+    cout: usize,
+    taps: usize,
+    input: &[(Iv, Iv)],
+    w_at: impl Fn(usize, usize) -> i128,
+    vw_at: impl Fn(usize, usize) -> i128,
+    base_bias: &[i64],
+    var_bias: &[i64],
+    k: u32,
+    j_in: u32,
+    widen_taps: bool,
+) -> Vec<Iv> {
+    let s = 1i128 << (k + j_in);
+    let wk = 1i128 << k;
+    let nch = input.len();
+    let mut out = Vec::with_capacity(cout);
+    for co in 0..cout {
+        let eb = var_bias[co] as i128 * s - base_bias[co] as i128;
+        let mut e = Iv::point(eb);
+        for t in 0..taps {
+            let w = w_at(t, co);
+            let ew = vw_at(t, co) * wk - w;
+            let (xv, dx) = input[t % nch];
+            let mut term = xv.scale(ew).add(dx.scale(w));
+            if widen_taps {
+                term = term.union0();
+            }
+            e = e.add(term);
+        }
+        out.push(e);
+    }
+    out
+}
+
+/// Aligned post-requant deviation of one conv output channel.
+///
+/// `e` is the aligned accumulator deviation; `(m, s)` / `(vm, vs)` are the
+/// base and variant requant pairs (the slicer's rebase makes their real
+/// ratio exact); `act_bits` is the *base* activation width and `j` the
+/// layer's activation drop. Falls back to the full aligned clamp range for
+/// non-monotone or out-of-range requants (the interval engine flags those
+/// separately).
+fn requant_deviation(e: Iv, m: i64, s: i64, vm: i64, vs: i64, act_bits: u32, j: u32) -> Iv {
+    let t = 1i128 << j;
+    let qb: i128 = if act_bits >= 63 {
+        i64::MAX as i128
+    } else {
+        (1i128 << act_bits) - 1
+    };
+    // Aligned variant clamp ceiling: (2^(act_bits - j) - 1) * 2^j.
+    let qv_t: i128 = if act_bits >= 63 {
+        i64::MAX as i128
+    } else {
+        (1i128 << act_bits) - (1i128 << j)
+    };
+    let full = Iv { lo: -qb, hi: qv_t };
+    if m < 0 || vm < 0 || !(0..=62).contains(&s) || !(0..=62).contains(&vs) || act_bits < j {
+        return full;
+    }
+    let div = 1i128 << s;
+    let fdiv = floor_div(e.lo * m as i128, div);
+    let cdiv = ceil_div(e.hi * m as i128, div);
+    // Same output scale and same rounding mode on both sides: the rebase is
+    // exact in the reals and both floors see the same fractional offset, so
+    // the floor-shift lemma gives the bound with no extra slack (exact
+    // [0, 0] for identity and even-code weight drops). Otherwise pay T + 1
+    // codes of coarser-grid + rounding slack.
+    let (dlo, dhi) = if t == 1 && (s > 0) == (vs > 0) {
+        (fdiv, cdiv)
+    } else {
+        (fdiv - (t + 1), cdiv + (t + 1))
+    };
+    // Clamping is monotone and 1-Lipschitz; differing ceilings widen by
+    // their gap, and the result can never leave the aligned clamp ranges.
+    let lo = (dlo.min(0) - (qb - qv_t).max(0)).max(full.lo);
+    let hi = (dhi.max(0) + (qv_t - qb).max(0)).min(full.hi);
+    Iv { lo, hi }
+}
+
+/// Propagate deviation bounds between `base` and its `config`-derived
+/// variant. `config` must be range-legal for `base` (the same contract as
+/// [`crate::approx::derive_model`], which this calls); semantic illegality
+/// (e.g. a const-output variant) is fine — the bounds stay sound.
+pub fn analyze_error(base: &QonnxModel, config: &[u32]) -> ErrorReport {
+    let variant = crate::approx::derive_model(base, config, "error-bound");
+    let drops = crate::approx::layer_drops(base, config);
+    let var_an = super::analyze(&variant);
+
+    // Per input channel of the current layer: (aligned variant activation
+    // interval, aligned deviation interval). Input codes are shared
+    // verbatim by both models: deviation 0, scale 1.
+    let in_max = ((1i64 << base.input_bits.min(8)) - 1).min(255) as i128;
+    let mut stream: Vec<(Iv, Iv)> =
+        vec![(Iv { lo: 0, hi: in_max }, Iv::ZERO); base.input_shape.c];
+    let mut cur_j = 0u32;
+
+    let mut layers = Vec::with_capacity(base.layers.len());
+    let mut logit_dev: Vec<Interval> = Vec::new();
+    for (i, (layer, vlayer)) in base.layers.iter().zip(&variant.layers).enumerate() {
+        match (layer, vlayer) {
+            (Layer::Conv(c), Layer::Conv(vc)) => {
+                let d = drops[i].expect("conv layers carry drops");
+                let pair = ConvPair {
+                    base: c,
+                    var: vc,
+                    k: d.k,
+                    j: d.j,
+                    j_in: d.j_in,
+                };
+                let acc = acc_deviation(
+                    c.cout,
+                    9 * c.cin,
+                    &stream,
+                    |t, co| pair.base.w_codes[t * c.cout + co] as i128,
+                    |t, co| pair.var.w_codes[t * c.cout + co] as i128,
+                    &c.b_codes,
+                    &vc.b_codes,
+                    pair.k,
+                    pair.j_in,
+                    true,
+                );
+                let act: Vec<Iv> = acc
+                    .iter()
+                    .enumerate()
+                    .map(|(co, &e)| {
+                        requant_deviation(
+                            e,
+                            c.mult[co],
+                            c.shift[co],
+                            vc.mult[co],
+                            vc.shift[co],
+                            c.act_bits,
+                            pair.j,
+                        )
+                    })
+                    .collect();
+                layers.push(LayerDeviation {
+                    name: c.name.clone(),
+                    acc_dev: acc.iter().map(|e| e.to_interval()).collect(),
+                    act_dev: act.iter().map(|e| e.to_interval()).collect(),
+                    acc_scale_log2: pair.k + pair.j_in,
+                    act_scale_log2: pair.j,
+                });
+                // Next layer's input: the variant's proven activation
+                // intervals (aligned) and the post-requant deviations.
+                let var_acts = &var_an.facts[i].act;
+                let tj = 1i128 << pair.j;
+                stream = var_acts
+                    .iter()
+                    .zip(&act)
+                    .map(|(iv, &dv)| {
+                        (
+                            Iv {
+                                lo: iv.lo as i128 * tj,
+                                hi: iv.hi as i128 * tj,
+                            },
+                            dv,
+                        )
+                    })
+                    .collect();
+                cur_j = pair.j;
+            }
+            (Layer::Dense(dn), Layer::Dense(vd)) => {
+                let d = drops[i].expect("dense layers carry drops");
+                let acc = dense_deviation(dn, vd, &stream, d.k, d.j_in);
+                let saturated: Vec<Interval> = acc.iter().map(|e| e.to_interval()).collect();
+                logit_dev = saturated.clone();
+                layers.push(LayerDeviation {
+                    name: dn.name.clone(),
+                    acc_dev: saturated.clone(),
+                    act_dev: saturated.clone(),
+                    acc_scale_log2: d.k + d.j_in,
+                    act_scale_log2: d.k + d.j_in,
+                });
+                // Dense output feeds nothing in the supported pipelines;
+                // keep the raw deviations flowing for robustness.
+                stream = acc
+                    .iter()
+                    .map(|&e| {
+                        (
+                            Iv {
+                                lo: i64::MIN as i128,
+                                hi: i64::MAX as i128,
+                            },
+                            e,
+                        )
+                    })
+                    .collect();
+            }
+            // Max-pool is channel-wise, monotone, and commutes with the
+            // positive alignment scaling; per-channel deviation intervals
+            // pass through unchanged. Flatten only reinterprets layout.
+            (Layer::Pool(p), _) => {
+                layers.push(LayerDeviation {
+                    name: p.name.clone(),
+                    acc_dev: Vec::new(),
+                    act_dev: stream.iter().map(|&(_, d)| d.to_interval()).collect(),
+                    acc_scale_log2: 0,
+                    act_scale_log2: cur_j,
+                });
+            }
+            (Layer::Flatten { name }, _) => {
+                layers.push(LayerDeviation {
+                    name: name.clone(),
+                    acc_dev: Vec::new(),
+                    act_dev: stream.iter().map(|&(_, d)| d.to_interval()).collect(),
+                    acc_scale_log2: 0,
+                    act_scale_log2: cur_j,
+                });
+            }
+            _ => unreachable!("derive_model preserves layer kinds"),
+        }
+    }
+
+    let logit_bound = logit_dev
+        .iter()
+        .map(|e| e.lo.unsigned_abs().max(e.hi.unsigned_abs()))
+        .max()
+        .unwrap_or(0)
+        .min(i64::MAX as u64) as i64;
+    let mut margin: i64 = 0;
+    for (c, ec) in logit_dev.iter().enumerate() {
+        for (d, ed) in logit_dev.iter().enumerate() {
+            if c != d {
+                margin = margin.max(ed.hi.saturating_sub(ec.lo));
+            }
+        }
+    }
+    ErrorReport {
+        layers,
+        logit_dev,
+        logit_bound,
+        stable_margin: margin,
+        certified_exact: margin == 0,
+        conv_narrow: var_an.conv_narrow,
+    }
+}
+
+/// Dense head deviation: feature `f` reads input channel `f % stream.len()`
+/// (HWC flattening, as in the interval engine); no 0-widening — dense sees
+/// no padding.
+fn dense_deviation(
+    base: &DenseLayer,
+    var: &DenseLayer,
+    stream: &[(Iv, Iv)],
+    k: u32,
+    j_in: u32,
+) -> Vec<Iv> {
+    let kt = base.out_features;
+    acc_deviation(
+        kt,
+        base.in_features,
+        stream,
+        |f, c| base.w_codes[f * kt + c] as i128,
+        |f, c| var.w_codes[f * kt + c] as i128,
+        &base.b_codes,
+        &var.b_codes,
+        k,
+        j_in,
+        false,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qonnx::{bound_stress_model_json, read_str, test_model_json};
+
+    fn tiny() -> QonnxModel {
+        read_str(&test_model_json(2, 3)).unwrap()
+    }
+
+    fn stress() -> QonnxModel {
+        read_str(&bound_stress_model_json()).unwrap()
+    }
+
+    fn all_zero(r: &ErrorReport) -> bool {
+        r.layers.iter().all(|l| {
+            l.acc_dev.iter().chain(&l.act_dev).all(|iv| iv.lo == 0 && iv.hi == 0)
+        })
+    }
+
+    #[test]
+    fn identity_config_proves_zero_deviation_everywhere() {
+        let m = tiny();
+        let zeros = vec![0u32; crate::approx::knobs_for(&m).len()];
+        let r = analyze_error(&m, &zeros);
+        assert!(all_zero(&r), "identity must prove [0, 0]: {:?}", r.layers);
+        assert_eq!(r.logit_bound, 0);
+        assert_eq!(r.stable_margin, 0);
+        assert!(r.certified_exact);
+        assert_eq!(r.layers.len(), m.layers.len());
+        assert_eq!(r.logit_dev.len(), 3);
+    }
+
+    #[test]
+    fn even_code_weight_drops_are_certified_exact() {
+        // The stress model's conv codes are multiples of 4 with zero biases:
+        // one- and two-bit weight drops rescale exactly (ew = 0, same real
+        // requant ratio), so the variant is provably bit-identical.
+        let m = stress();
+        for k in [1u32, 2] {
+            let r = analyze_error(&m, &[k, 0, 0]);
+            assert!(all_zero(&r), "k = {k} must be exact: {:?}", r.layers);
+            assert!(r.certified_exact, "k = {k} must be certified");
+            assert_eq!(r.logit_bound, 0);
+        }
+        // Three bits round 4 -> 1 (ew = 4): no longer exact.
+        let r = analyze_error(&m, &[3, 0, 0]);
+        assert!(!r.certified_exact);
+        assert!(r.logit_bound > 0);
+    }
+
+    #[test]
+    fn activation_drops_carry_requant_slack() {
+        // j = 1 leaves the weights untouched but pays coarser-grid slack at
+        // the requant, which nonzero dense weights propagate to the logits.
+        let m = stress();
+        let r = analyze_error(&m, &[0, 1, 0]);
+        assert!(!r.certified_exact);
+        assert!(r.logit_bound > 0, "requant slack must reach the logits");
+        assert!(r.stable_margin > 0);
+        let conv = &r.layers[0];
+        assert_eq!(conv.act_scale_log2, 1);
+        assert!(
+            conv.acc_dev.iter().all(|iv| iv.lo == 0 && iv.hi == 0),
+            "accumulators are untouched by a pure act drop"
+        );
+        assert!(conv.act_dev.iter().any(|iv| iv.lo < 0 || iv.hi > 0));
+    }
+
+    #[test]
+    fn stability_margin_bounds_the_pairwise_deviation_spread() {
+        // margin = max over class pairs of E_d.hi - E_c.lo; a dense weight
+        // drop on the tiny model produces asymmetric per-class deviations.
+        let m = tiny();
+        let r = analyze_error(&m, &[0, 0, 1]);
+        let mut want: i64 = 0;
+        for (c, ec) in r.logit_dev.iter().enumerate() {
+            for (d, ed) in r.logit_dev.iter().enumerate() {
+                if c != d {
+                    want = want.max(ed.hi - ec.lo);
+                }
+            }
+        }
+        assert_eq!(r.stable_margin, want.max(0));
+        assert!(!r.certified_exact);
+        let bound = r
+            .logit_dev
+            .iter()
+            .map(|e| e.lo.abs().max(e.hi.abs()))
+            .max()
+            .unwrap();
+        assert_eq!(r.logit_bound, bound);
+    }
+
+    #[test]
+    fn floor_and_ceil_division_round_toward_the_right_infinity() {
+        assert_eq!(floor_div(7, 2), 3);
+        assert_eq!(floor_div(-7, 2), -4);
+        assert_eq!(floor_div(-8, 2), -4);
+        assert_eq!(ceil_div(7, 2), 4);
+        assert_eq!(ceil_div(-7, 2), -3);
+        assert_eq!(ceil_div(8, 2), 4);
+    }
+
+    #[test]
+    fn requant_deviation_is_exact_for_zero_error_same_scale() {
+        // T == 1, matching rounding modes, e = [0, 0]: no slack at all.
+        let d = requant_deviation(Iv::ZERO, 16384, 15, 16384, 14, 8, 0);
+        assert_eq!((d.lo, d.hi), (0, 0));
+        // An activation drop always pays coarser-grid slack.
+        let d = requant_deviation(Iv::ZERO, 16384, 15, 16384, 16, 8, 1);
+        assert!(d.lo < 0 && d.hi > 0);
+        // Negative multipliers fall back to the full aligned clamp range.
+        let d = requant_deviation(Iv::ZERO, -3, 15, -3, 15, 8, 0);
+        assert_eq!((d.lo, d.hi), (-255, 255));
+    }
+}

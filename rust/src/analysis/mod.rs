@@ -26,6 +26,7 @@
 //! never sees `|acc| > i32::MAX`.
 
 mod arena;
+mod error;
 mod interval;
 
 use std::fmt;
@@ -33,6 +34,7 @@ use std::fmt;
 use crate::qonnx::{Layer, QonnxModel};
 
 pub use arena::ArenaPlan;
+pub use error::{analyze_error, ErrorReport, LayerDeviation};
 pub use interval::Interval;
 
 use interval::{conv_bounds, dense_bounds, requant_interval, saturate};
@@ -55,6 +57,15 @@ pub const RULE_ACT_WIDTH: &str = "act-width";
 /// A dense layer that is not the final layer: unsupported by the packed
 /// plan (scalar fallback).
 pub const RULE_DENSE_NONTERMINAL: &str = "dense-nonterminal";
+/// A frontier point's stored logit-deviation bound is below what the
+/// error-bound analyzer proves: the stored certificate is falsified.
+pub const RULE_ERROR_BOUND: &str = "error-bound";
+/// A frontier point's stored stability margin is below the proven one
+/// (claims top-1 stability the bounds cannot back).
+pub const RULE_MARGIN_UNSOUND: &str = "margin-unsound";
+/// A frontier point's stored per-layer accumulator-width verdicts disagree
+/// with the interval engine's proof for the derived variant.
+pub const RULE_ACC_NARROW_STALE: &str = "acc-narrow-stale";
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Severity {
@@ -70,6 +81,10 @@ pub struct Diagnostic {
     pub rule: &'static str,
     /// Index into `model.layers` when the rule anchors to a layer.
     pub layer: Option<usize>,
+    /// Op kind of the offending layer ("conv", "dense", ... — "" for
+    /// model-level and knob-level rules), so rendered messages are
+    /// actionable without opening the model JSON.
+    pub op: &'static str,
     /// Name of the offending layer or knob ("" for model-level rules).
     pub layer_name: String,
     pub message: String,
@@ -85,8 +100,11 @@ impl fmt::Display for Diagnostic {
         if let Some(i) = self.layer {
             write!(f, " layer {i}")?;
         }
-        if !self.layer_name.is_empty() {
-            write!(f, " '{}'", self.layer_name)?;
+        match (self.op, self.layer_name.as_str()) {
+            ("", "") => {}
+            ("", name) => write!(f, " '{name}'")?,
+            (op, "") => write!(f, " ({op})")?,
+            (op, name) => write!(f, " ({op} '{name}')")?,
         }
         write!(f, ": {}", self.message)
     }
@@ -142,12 +160,13 @@ pub fn analyze(model: &QonnxModel) -> Analysis {
         match layer {
             Layer::Conv(c) => {
                 let b = conv_bounds(c, &acts);
-                check_i64_overflow(&mut diags, i, &c.name, &b.abs_sum);
+                check_i64_overflow(&mut diags, i, "conv", &c.name, &b.abs_sum);
                 if c.act_bits > 31 {
                     diags.push(Diagnostic {
                         severity: Severity::Warning,
                         rule: RULE_ACT_WIDTH,
                         layer: Some(i),
+                        op: "conv",
                         layer_name: c.name.clone(),
                         message: format!(
                             "activation width {} > 31 bits: packed engine falls back to scalar",
@@ -168,6 +187,7 @@ pub fn analyze(model: &QonnxModel) -> Analysis {
                             severity: Severity::Error,
                             rule: RULE_REQUANT_OVERFLOW,
                             layer: Some(i),
+                            op: "conv",
                             layer_name: c.name.clone(),
                             message: format!(
                                 "channel {co}: shift {shift} outside the supported range [0, 62]"
@@ -185,6 +205,7 @@ pub fn analyze(model: &QonnxModel) -> Analysis {
                                 severity: Severity::Error,
                                 rule: RULE_REQUANT_OVERFLOW,
                                 layer: Some(i),
+                                op: "conv",
                                 layer_name: c.name.clone(),
                                 message: format!(
                                     "channel {co}: worst-case accumulator {endpoint} * mult {mult} \
@@ -237,13 +258,14 @@ pub fn analyze(model: &QonnxModel) -> Analysis {
                         severity: Severity::Warning,
                         rule: RULE_DENSE_NONTERMINAL,
                         layer: Some(i),
+                        op: "dense",
                         layer_name: d.name.clone(),
                         message: "dense layer is not terminal: packed engine falls back to scalar"
                             .to_string(),
                     });
                 }
                 let b = dense_bounds(d, &acts);
-                check_i64_overflow(&mut diags, i, &d.name, &b.abs_sum);
+                check_i64_overflow(&mut diags, i, "dense", &d.name, &b.abs_sum);
                 let out: Vec<Interval> = b
                     .acc
                     .iter()
@@ -254,6 +276,7 @@ pub fn analyze(model: &QonnxModel) -> Analysis {
                         severity: Severity::Error,
                         rule: RULE_CONST_OUTPUT,
                         layer: Some(i),
+                        op: "dense",
                         layer_name: d.name.clone(),
                         message: "every logit is statically constant: the classifier cannot \
                                   depend on its input"
@@ -282,13 +305,20 @@ pub fn analyze(model: &QonnxModel) -> Analysis {
 
 /// Emit [`RULE_ACC_OVERFLOW`] if any channel's absolute partial-sum bound
 /// can leave `i64` (one diagnostic per layer — the first offending channel).
-fn check_i64_overflow(diags: &mut Vec<Diagnostic>, layer: usize, name: &str, abs_sum: &[i128]) {
+fn check_i64_overflow(
+    diags: &mut Vec<Diagnostic>,
+    layer: usize,
+    op: &'static str,
+    name: &str,
+    abs_sum: &[i128],
+) {
     for (co, &mag) in abs_sum.iter().enumerate() {
         if mag > i64::MAX as i128 {
             diags.push(Diagnostic {
                 severity: Severity::Error,
                 rule: RULE_ACC_OVERFLOW,
                 layer: Some(layer),
+                op,
                 layer_name: name.to_string(),
                 message: format!(
                     "channel {co}: worst-case partial sum magnitude {mag} exceeds i64"
@@ -319,6 +349,7 @@ pub fn check_config(base: &QonnxModel, config: &[u32]) -> Vec<Diagnostic> {
             severity: Severity::Error,
             rule: RULE_CONFIG_ARITY,
             layer: None,
+            op: "",
             layer_name: String::new(),
             message: format!(
                 "config has {} knobs, the base model has {}",
@@ -334,6 +365,7 @@ pub fn check_config(base: &QonnxModel, config: &[u32]) -> Vec<Diagnostic> {
                 severity: Severity::Error,
                 rule: RULE_CONFIG_RANGE,
                 layer: None,
+                op: "",
                 layer_name: knob.layer.clone(),
                 message: format!(
                     "knob {i} ({:?} of '{}'): drop {v} exceeds headroom {}",
@@ -485,14 +517,43 @@ mod tests {
     }
 
     #[test]
-    fn diagnostics_render_rule_layer_and_name() {
+    fn diagnostics_render_rule_layer_op_and_name() {
         let d = Diagnostic {
             severity: Severity::Error,
             rule: RULE_ACC_OVERFLOW,
             layer: Some(2),
+            op: "conv",
             layer_name: "conv2".to_string(),
             message: "boom".to_string(),
         };
-        assert_eq!(d.to_string(), "error[acc-overflow] layer 2 'conv2': boom");
+        assert_eq!(
+            d.to_string(),
+            "error[acc-overflow] layer 2 (conv 'conv2'): boom"
+        );
+        // Knob- and model-level rules omit what they don't know.
+        let d = Diagnostic {
+            severity: Severity::Error,
+            rule: RULE_CONFIG_RANGE,
+            layer: None,
+            op: "",
+            layer_name: "conv1".to_string(),
+            message: "drop 9 exceeds headroom 2".to_string(),
+        };
+        assert_eq!(
+            d.to_string(),
+            "error[config-range] 'conv1': drop 9 exceeds headroom 2"
+        );
+        let d = Diagnostic {
+            severity: Severity::Error,
+            rule: RULE_CONFIG_ARITY,
+            layer: None,
+            op: "",
+            layer_name: String::new(),
+            message: "config has 2 knobs, the base model has 3".to_string(),
+        };
+        assert_eq!(
+            d.to_string(),
+            "error[config-arity]: config has 2 knobs, the base model has 3"
+        );
     }
 }

@@ -7,10 +7,13 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
 
-use crate::analysis::{check_config, Diagnostic, Severity};
+use crate::analysis::{
+    analyze_error, check_config, Diagnostic, ErrorReport, Severity, RULE_ACC_NARROW_STALE,
+    RULE_ERROR_BOUND, RULE_MARGIN_UNSOUND,
+};
 use crate::coordinator::{ManagerConfig, ProfileManager, ProfileSpec};
 use crate::json::Value;
-use crate::qonnx::QonnxModel;
+use crate::qonnx::{Layer, QonnxModel};
 
 use super::quant::derive_model;
 
@@ -27,6 +30,13 @@ pub struct FrontierPoint {
     pub energy_uj: f64,
     /// Per conv layer: the packed plan proved the 32-bit accumulator path.
     pub acc_narrow: Vec<bool>,
+    /// Proven worst-case absolute logit deviation of this rung versus the
+    /// base model, from the affine error-bound analyzer
+    /// ([`crate::analysis::analyze_error`]).
+    pub logit_bound: i64,
+    /// Proven stability margin: `0` certifies the rung's top-1 prediction
+    /// equals the base model's on *every* input.
+    pub stable_margin: i64,
     pub model: QonnxModel,
 }
 
@@ -113,6 +123,8 @@ impl Frontier {
                         "acc_narrow",
                         Value::Array(p.acc_narrow.iter().map(|&b| Value::Bool(b)).collect()),
                     ),
+                    ("logit_bound", p.logit_bound.into()),
+                    ("stable_margin", p.stable_margin.into()),
                 ])
             })
             .collect();
@@ -126,9 +138,13 @@ impl Frontier {
     /// Rebuild a frontier from its JSON form, re-deriving each rung's model
     /// from `base` (which must be the model the frontier was explored on).
     /// Every stored config goes through the static checker
-    /// ([`crate::analysis::check_config`]); the first error diagnostic
-    /// fails the load with a message naming the point, its index, the
-    /// offending layer, and the rule code.
+    /// ([`crate::analysis::check_config`]), and every stored certificate
+    /// (`acc_narrow`, `logit_bound`, `stable_margin`) is re-proven by the
+    /// error-bound analyzer; the first error diagnostic fails the load with
+    /// a message naming the point, its index, the offending layer, and the
+    /// rule code. `logit_bound`/`stable_margin` are optional on read so
+    /// pre-certificate frontier documents still load — absent fields
+    /// default to the freshly proven values.
     pub fn from_json(v: &Value, base: &QonnxModel) -> Result<Frontier> {
         match v.get("schema").and_then(Value::as_str) {
             Some("pareto-frontier/v1") => {}
@@ -157,6 +173,14 @@ impl Frontier {
             let num = |key: &str| -> Result<f64> {
                 row.get(key).and_then(Value::as_f64).with_context(|| format!("point {key}"))
             };
+            let stored_bound = row.get("logit_bound").and_then(Value::as_i64);
+            let stored_margin = row.get("stable_margin").and_then(Value::as_i64);
+            let report = analyze_error(base, &config);
+            let bound_diags =
+                Self::verify_point(base, &report, Some(&acc_narrow), stored_bound, stored_margin);
+            if let Some(err) = bound_diags.iter().find(|d| d.severity == Severity::Error) {
+                bail!("point '{name}' (index {idx}): {err}");
+            }
             points.push(FrontierPoint {
                 model: derive_model(base, &config, &name),
                 name,
@@ -166,6 +190,8 @@ impl Frontier {
                 latency_us: num("latency_us")?,
                 energy_uj: num("energy_uj")?,
                 acc_narrow,
+                logit_bound: stored_bound.unwrap_or(report.logit_bound),
+                stable_margin: stored_margin.unwrap_or(report.stable_margin),
             });
         }
         Ok(Frontier {
@@ -189,24 +215,147 @@ impl Frontier {
         Ok((name.to_string(), config))
     }
 
+    /// Re-prove one stored point's certificates against the error-bound
+    /// analyzer. The stored `acc_narrow` verdicts must equal the interval
+    /// engine's proof for the derived variant
+    /// ([`RULE_ACC_NARROW_STALE`]); the stored logit-deviation bound and
+    /// stability margin must be at least as large as what
+    /// [`analyze_error`] proves — a *looser* stored value is merely
+    /// conservative and accepted, a tighter one is a falsified certificate
+    /// ([`RULE_ERROR_BOUND`], [`RULE_MARGIN_UNSOUND`]). `None` for a field
+    /// means the document predates certificates and is checked against
+    /// nothing. Only call with a config the static checker already passed.
+    fn verify_point(
+        base: &QonnxModel,
+        report: &ErrorReport,
+        acc_narrow: Option<&[bool]>,
+        logit_bound: Option<i64>,
+        stable_margin: Option<i64>,
+    ) -> Vec<Diagnostic> {
+        let mut diags = Vec::new();
+        if let Some(stored) = acc_narrow {
+            let conv_at: Vec<(usize, &str)> = base
+                .layers
+                .iter()
+                .enumerate()
+                .filter_map(|(i, l)| match l {
+                    Layer::Conv(c) => Some((i, c.name.as_str())),
+                    _ => None,
+                })
+                .collect();
+            if stored.len() != report.conv_narrow.len() {
+                diags.push(Diagnostic {
+                    severity: Severity::Error,
+                    rule: RULE_ACC_NARROW_STALE,
+                    layer: None,
+                    op: "conv",
+                    layer_name: String::new(),
+                    message: format!(
+                        "stored acc_narrow carries {} verdicts, the variant has {} conv layers",
+                        stored.len(),
+                        report.conv_narrow.len()
+                    ),
+                });
+            } else {
+                for (k, (&s, &p)) in stored.iter().zip(&report.conv_narrow).enumerate() {
+                    if s != p {
+                        let (layer, lname) =
+                            conv_at.get(k).map_or((None, ""), |&(i, n)| (Some(i), n));
+                        diags.push(Diagnostic {
+                            severity: Severity::Error,
+                            rule: RULE_ACC_NARROW_STALE,
+                            layer,
+                            op: "conv",
+                            layer_name: lname.to_string(),
+                            message: format!(
+                                "stored narrow-accumulator verdict {s} disagrees with the \
+                                 proven verdict {p}"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        // Bound rules anchor to the classifier head producing the logits.
+        let (head, head_op, head_name) = base
+            .layers
+            .iter()
+            .enumerate()
+            .rev()
+            .find_map(|(i, l)| match l {
+                Layer::Dense(d) => Some((Some(i), "dense", d.name.as_str())),
+                _ => None,
+            })
+            .unwrap_or((None, "", ""));
+        if let Some(stored) = logit_bound {
+            if stored < report.logit_bound {
+                diags.push(Diagnostic {
+                    severity: Severity::Error,
+                    rule: RULE_ERROR_BOUND,
+                    layer: head,
+                    op: head_op,
+                    layer_name: head_name.to_string(),
+                    message: format!(
+                        "stored logit bound {stored} is tighter than the proven worst-case \
+                         deviation {}",
+                        report.logit_bound
+                    ),
+                });
+            }
+        }
+        if let Some(stored) = stable_margin {
+            if stored < report.stable_margin {
+                diags.push(Diagnostic {
+                    severity: Severity::Error,
+                    rule: RULE_MARGIN_UNSOUND,
+                    layer: head,
+                    op: head_op,
+                    layer_name: head_name.to_string(),
+                    message: format!(
+                        "stored stability margin {stored} claims more top-1 stability than \
+                         the proven margin {}",
+                        report.stable_margin
+                    ),
+                });
+            }
+        }
+        diags
+    }
+
     /// Run the static checker over every point of a frontier JSON document
     /// *without* failing fast: returns `(point name, diagnostics)` per
     /// point, so `onnx2hw check` can print every finding instead of just
-    /// the first. Structural problems (wrong schema, unparseable points)
-    /// still error.
+    /// the first. Legal configs additionally get their stored certificates
+    /// re-proven ([`Self::verify_point`]); fields a row does not carry are
+    /// skipped, so certificate-free documents stay checkable. Structural
+    /// problems (wrong schema, unparseable points) still error.
     pub fn check_json(v: &Value, base: &QonnxModel) -> Result<Vec<(String, Vec<Diagnostic>)>> {
         match v.get("schema").and_then(Value::as_str) {
             Some("pareto-frontier/v1") => {}
             other => bail!("unsupported frontier schema {other:?}"),
         }
         let rows = v.get("points").and_then(Value::as_array).context("frontier points")?;
-        let mut report = Vec::with_capacity(rows.len());
+        let mut out = Vec::with_capacity(rows.len());
         for row in rows {
             let (name, config) = Self::point_identity(row)?;
-            let diags = check_config(base, &config);
-            report.push((name, diags));
+            let mut diags = check_config(base, &config);
+            if !diags.iter().any(|d| d.severity == Severity::Error) {
+                let acc_narrow: Option<Vec<bool>> = row
+                    .get("acc_narrow")
+                    .and_then(Value::as_array)
+                    .map(|a| a.iter().filter_map(Value::as_bool).collect());
+                let report = analyze_error(base, &config);
+                diags.extend(Self::verify_point(
+                    base,
+                    &report,
+                    acc_narrow.as_deref(),
+                    row.get("logit_bound").and_then(Value::as_i64),
+                    row.get("stable_margin").and_then(Value::as_i64),
+                ));
+            }
+            out.push((name, diags));
         }
-        Ok(report)
+        Ok(out)
     }
 }
 
@@ -232,6 +381,10 @@ mod tests {
         let base = read_str(&test_model_json(1, 2)).unwrap();
         let mk = |config: Vec<u32>, accuracy: f64, energy_uj: f64| {
             let name = config_name(&config);
+            // Stored certificates come from the analyzer itself, exactly as
+            // the explorer emits them — so every sample frontier is sound
+            // by construction and survives the load-time re-proof.
+            let report = analyze_error(&base, &config);
             FrontierPoint {
                 model: derive_model(&base, &config, &name),
                 name,
@@ -240,7 +393,9 @@ mod tests {
                 power_mw: energy_uj / 3.29e-4,
                 latency_us: 329.0,
                 energy_uj,
-                acc_narrow: vec![true],
+                acc_narrow: report.conv_narrow.clone(),
+                logit_bound: report.logit_bound,
+                stable_margin: report.stable_margin,
             }
         };
         let frontier = Frontier {
@@ -266,8 +421,88 @@ mod tests {
             assert_eq!(a.latency_us, b.latency_us);
             assert_eq!(a.energy_uj, b.energy_uj);
             assert_eq!(a.acc_narrow, b.acc_narrow);
+            assert_eq!(a.logit_bound, b.logit_bound);
+            assert_eq!(a.stable_margin, b.stable_margin);
             assert_eq!(a.model, b.model, "models re-derive identically");
         }
+    }
+
+    /// Build one stored-point row for the degraded `[1, 2, 1]` rung with
+    /// the given certificate fields, wrapped in a single-point frontier doc.
+    fn doc_121(acc_narrow: &[bool], logit_bound: i64, stable_margin: i64) -> String {
+        let narrow: Vec<String> = acc_narrow.iter().map(bool::to_string).collect();
+        format!(
+            r#"{{"schema":"pareto-frontier/v1","base_profile":"T","points":[
+                {{"name":"apx-121","config":[1,2,1],"accuracy":1.0,"power_mw":1.0,
+                 "latency_us":1.0,"energy_uj":1.0,"acc_narrow":[{}],
+                 "logit_bound":{logit_bound},"stable_margin":{stable_margin}}}]}}"#,
+            narrow.join(",")
+        )
+    }
+
+    #[test]
+    fn from_json_rejects_falsified_logit_bound_certificates() {
+        let (base, _) = sample();
+        let report = analyze_error(&base, &[1, 2, 1]);
+        assert!(report.logit_bound > 0, "premise: the lossy rung deviates");
+        // A stored bound of 0 claims bit-exactness the analyzer refutes.
+        let text = doc_121(&report.conv_narrow, 0, report.stable_margin);
+        let err = Frontier::from_json(&json::parse(&text).unwrap(), &base)
+            .expect_err("falsified bound must fail the load");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("apx-121"), "must name the point: {msg}");
+        assert!(msg.contains("error-bound"), "must carry the rule code: {msg}");
+        assert!(msg.contains("dense"), "must name the classifier head: {msg}");
+        // A looser-than-proven stored bound is conservative, not falsified.
+        let text = doc_121(&report.conv_narrow, report.logit_bound + 5, report.stable_margin);
+        let back = Frontier::from_json(&json::parse(&text).unwrap(), &base)
+            .expect("conservative bound loads");
+        assert_eq!(back.points[0].logit_bound, report.logit_bound + 5);
+    }
+
+    #[test]
+    fn from_json_rejects_unsound_stability_margins() {
+        let (base, _) = sample();
+        let report = analyze_error(&base, &[1, 2, 1]);
+        // A negative margin claims impossible stability: always below the
+        // proven margin, which is >= 0 by construction.
+        let text = doc_121(&report.conv_narrow, report.logit_bound, -1);
+        let err = Frontier::from_json(&json::parse(&text).unwrap(), &base)
+            .expect_err("unsound margin must fail the load");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("margin-unsound"), "must carry the rule code: {msg}");
+    }
+
+    #[test]
+    fn from_json_rejects_stale_acc_narrow_verdicts() {
+        let (base, _) = sample();
+        let report = analyze_error(&base, &[1, 2, 1]);
+        let flipped: Vec<bool> = report.conv_narrow.iter().map(|b| !b).collect();
+        let text = doc_121(&flipped, report.logit_bound, report.stable_margin);
+        let err = Frontier::from_json(&json::parse(&text).unwrap(), &base)
+            .expect_err("stale narrow verdict must fail the load");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("acc-narrow-stale"), "must carry the rule code: {msg}");
+        assert!(msg.contains("conv"), "must name the offending layer: {msg}");
+    }
+
+    #[test]
+    fn from_json_defaults_missing_bounds_to_the_proven_values() {
+        // Pre-certificate documents carry no logit_bound/stable_margin:
+        // they must still load, with the fields re-proven on the spot.
+        let (base, _) = sample();
+        let report = analyze_error(&base, &[1, 2, 1]);
+        let narrow: Vec<String> = report.conv_narrow.iter().map(bool::to_string).collect();
+        let text = format!(
+            r#"{{"schema":"pareto-frontier/v1","base_profile":"T","points":[
+                {{"name":"apx-121","config":[1,2,1],"accuracy":1.0,"power_mw":1.0,
+                 "latency_us":1.0,"energy_uj":1.0,"acc_narrow":[{}]}}]}}"#,
+            narrow.join(",")
+        );
+        let back = Frontier::from_json(&json::parse(&text).unwrap(), &base)
+            .expect("legacy document loads");
+        assert_eq!(back.points[0].logit_bound, report.logit_bound);
+        assert_eq!(back.points[0].stable_margin, report.stable_margin);
     }
 
     #[test]
@@ -328,6 +563,11 @@ mod tests {
         assert!(clean
             .iter()
             .all(|(_, diags)| diags.iter().all(|d| d.severity != Severity::Error)));
+        // a falsified certificate surfaces as a finding, not a hard error
+        let proven = analyze_error(&base, &[1, 2, 1]);
+        let falsified = doc_121(&proven.conv_narrow, 0, proven.stable_margin);
+        let report = Frontier::check_json(&json::parse(&falsified).unwrap(), &base).unwrap();
+        assert!(report[0].1.iter().any(|d| d.rule == RULE_ERROR_BOUND));
     }
 
     #[test]

@@ -30,5 +30,7 @@ mod quant;
 mod search;
 
 pub use frontier::{Frontier, FrontierPoint};
-pub use quant::{config_name, derive_model, knobs_for, Knob, KnobKind, MIN_BITS};
+pub use quant::{
+    config_name, derive_model, knobs_for, layer_drops, Knob, KnobKind, LayerDrops, MIN_BITS,
+};
 pub use search::{dominates, CalibSet, Candidate, Explorer, ExplorerConfig};

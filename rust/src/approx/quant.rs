@@ -92,6 +92,50 @@ pub fn config_name(config: &[u32]) -> String {
     format!("apx-{digits}")
 }
 
+/// The effective bit drops one layer sees under a knob vector: its own
+/// weight drop `k`, its own activation drop `j` (0 for dense — logits are
+/// raw accumulators), and the incoming stream's activation drop `j_in`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerDrops {
+    pub k: u32,
+    pub j: u32,
+    pub j_in: u32,
+}
+
+/// Resolve `config` to per-layer [`LayerDrops`], aligned with
+/// `base.layers` (`None` for pool/flatten). The cursor walk is the same
+/// one [`derive_model`] performs — this is the read-only view the
+/// error-bound analyzer uses to align a variant against its base.
+///
+/// Panics on an arity mismatch, like [`derive_model`].
+pub fn layer_drops(base: &QonnxModel, config: &[u32]) -> Vec<Option<LayerDrops>> {
+    assert_eq!(
+        config.len(),
+        knobs_for(base).len(),
+        "config/knob arity mismatch"
+    );
+    let mut cursor = 0usize;
+    let mut j_in = 0u32;
+    base.layers
+        .iter()
+        .map(|layer| match layer {
+            Layer::Conv(_) => {
+                let (k, j) = (config[cursor], config[cursor + 1]);
+                cursor += 2;
+                let out = LayerDrops { k, j, j_in };
+                j_in = j;
+                Some(out)
+            }
+            Layer::Dense(_) => {
+                let k = config[cursor];
+                cursor += 1;
+                Some(LayerDrops { k, j: 0, j_in })
+            }
+            _ => None,
+        })
+        .collect()
+}
+
 /// Round-half-up rescale by `2^s` (the oracle's requant rounding, applied
 /// to weight/bias codes).
 fn qscale(x: i64, s: u32) -> i64 {
@@ -256,6 +300,18 @@ mod tests {
         assert_eq!(config_name(&[0, 1, 2]), "apx-012");
         assert_eq!(config_name(&[10, 15, 0]), "apx-af0");
         assert_ne!(config_name(&[1, 0, 0]), config_name(&[0, 1, 0]));
+    }
+
+    #[test]
+    fn layer_drops_mirror_the_derive_cursor_walk() {
+        // tiny layers: conv, pool, flatten, dense; config [k, j, dk].
+        let drops = layer_drops(&tiny(), &[1, 2, 1]);
+        assert_eq!(drops.len(), 4);
+        assert_eq!(drops[0], Some(LayerDrops { k: 1, j: 2, j_in: 0 }));
+        assert_eq!(drops[1], None);
+        assert_eq!(drops[2], None);
+        // the dense head consumes the conv's coarsened stream
+        assert_eq!(drops[3], Some(LayerDrops { k: 1, j: 0, j_in: 2 }));
     }
 
     #[test]

@@ -130,6 +130,20 @@ pub struct ExplorerConfig {
     /// emitted); pruning only skips their evaluations — see
     /// [`Explorer::pruned_static`].
     pub static_prune: bool,
+    /// Use [`crate::analysis::analyze_error`] certificates to triage
+    /// candidates: skip the packed-executor accuracy pass when the bounds
+    /// prove the variant's predictions are bit-identical to the root's
+    /// (the candidate still pays model derivation and the cost model), and
+    /// — when [`Self::logit_bound_tolerance`] is set — skip evaluating
+    /// candidates the tolerance already rejects. Trajectory-neutral like
+    /// `static_prune`: the emitted frontier is byte-identical either way.
+    pub bound_triage: bool,
+    /// Reject any candidate whose *proven* worst-case logit deviation from
+    /// the reference exceeds this many base logit codes. Applied in both
+    /// triage modes (rejected candidates are never selected or emitted);
+    /// `bound_triage` only decides whether their accuracy evaluation is
+    /// skipped. `None` disables the gate.
+    pub logit_bound_tolerance: Option<i64>,
 }
 
 impl Default for ExplorerConfig {
@@ -145,8 +159,20 @@ impl Default for ExplorerConfig {
             max_rungs: 0,
             uniform_rungs: 4,
             static_prune: true,
+            bound_triage: true,
+            logit_bound_tolerance: None,
         }
     }
+}
+
+/// Memoized error-bound facts for one knob vector (the subset of
+/// [`crate::analysis::ErrorReport`] the explorer consumes).
+#[derive(Debug, Clone)]
+struct BoundInfo {
+    logit_bound: i64,
+    stable_margin: i64,
+    certified_exact: bool,
+    conv_narrow: Vec<bool>,
 }
 
 /// The design-space explorer. Owns the candidate archive (memoized by knob
@@ -159,11 +185,23 @@ pub struct Explorer<'a> {
     knobs: Vec<Knob>,
     cache: BTreeMap<Vec<u32>, Candidate>,
     evals: usize,
+    /// Packed-executor accuracy passes actually run (`evals` minus the
+    /// certificate skips).
+    acc_evals: usize,
+    /// Evaluations whose accuracy pass was skipped on a proven
+    /// certified-exact bound.
+    skipped: usize,
     /// Memoized static-checker verdicts per knob vector.
     legal: BTreeMap<Vec<u32>, bool>,
+    /// Memoized error-bound certificates per knob vector.
+    bounds: BTreeMap<Vec<u32>, BoundInfo>,
     /// Unique configs statically rejected before evaluation (counted like
     /// `evals`: one entry per config, however often it is re-proposed).
     pruned: BTreeSet<Vec<u32>>,
+    /// Unique configs the logit-bound tolerance rejected before evaluation
+    /// (triage mode only — without triage they are still evaluated, just
+    /// never selected or emitted).
+    rejected: BTreeSet<Vec<u32>>,
 }
 
 /// Accuracy batch size: bounds the executor arena while amortizing packing.
@@ -185,8 +223,12 @@ impl<'a> Explorer<'a> {
             knobs,
             cache: BTreeMap::new(),
             evals: 0,
+            acc_evals: 0,
+            skipped: 0,
             legal: BTreeMap::new(),
+            bounds: BTreeMap::new(),
             pruned: BTreeSet::new(),
+            rejected: BTreeSet::new(),
         }
     }
 
@@ -197,6 +239,28 @@ impl<'a> Explorer<'a> {
     /// Candidates evaluated so far (cache hits excluded).
     pub fn evaluations(&self) -> usize {
         self.evals
+    }
+
+    /// Packed-executor accuracy passes actually run:
+    /// `evaluations() - skipped_by_bounds()`. A certificate-skipped
+    /// candidate still counts as an evaluation (it is derived, costed, and
+    /// archived) — only its accuracy measurement is proven redundant.
+    pub fn accuracy_evaluations(&self) -> usize {
+        self.acc_evals
+    }
+
+    /// Evaluations that reused the root's accuracy on a proven
+    /// certified-exact error bound instead of running the packed executor.
+    pub fn skipped_by_bounds(&self) -> usize {
+        self.skipped
+    }
+
+    /// Search proposals the logit-bound tolerance rejected before
+    /// evaluation (triage mode; `evaluations() + rejected_by_bounds()`
+    /// equals the untriaged run's `evaluations()` on the same seeds and
+    /// tolerance).
+    pub fn rejected_by_bounds(&self) -> usize {
+        self.rejected.len()
     }
 
     /// Search proposals the static checker rejected before evaluation —
@@ -215,6 +279,34 @@ impl<'a> Explorer<'a> {
         let v = crate::analysis::config_is_legal(self.base, config);
         self.legal.insert(config.to_vec(), v);
         v
+    }
+
+    /// Memoized [`crate::analysis::analyze_error`] certificate for one
+    /// knob vector. Only called on range-legal configs (the analyzer
+    /// derives the variant, which panics on out-of-range knobs).
+    fn bound_info(&mut self, config: &[u32]) -> BoundInfo {
+        if let Some(info) = self.bounds.get(config) {
+            return info.clone();
+        }
+        let report = crate::analysis::analyze_error(self.base, config);
+        let info = BoundInfo {
+            logit_bound: report.logit_bound,
+            stable_margin: report.stable_margin,
+            certified_exact: report.certified_exact,
+            conv_narrow: report.conv_narrow,
+        };
+        self.bounds.insert(config.to_vec(), info.clone());
+        info
+    }
+
+    /// `true` unless a [`ExplorerConfig::logit_bound_tolerance`] is set
+    /// and this config's *proven* worst-case logit deviation exceeds it.
+    /// Caller must have established legality first.
+    fn within_tolerance(&mut self, config: &[u32]) -> bool {
+        match self.cfg.logit_bound_tolerance {
+            None => true,
+            Some(tol) => self.bound_info(config).logit_bound <= tol,
+        }
     }
 
     /// The uniform-precision config at rung `k`: every knob dropped by `k`
@@ -240,6 +332,45 @@ impl<'a> Explorer<'a> {
     pub fn evaluate(&mut self, config: &[u32]) -> Candidate {
         if let Some(hit) = self.cache.get(config) {
             return hit.clone();
+        }
+        // Certificate triage: a legal non-root variant whose error bounds
+        // prove bit-identical predictions on *all* inputs scores exactly
+        // the root's accuracy on any calibration set — measuring it again
+        // on the packed executor is redundant. The candidate is still
+        // derived and costed (precision changes power), and still counts
+        // as an evaluation; only the accuracy pass is skipped. The all-zero
+        // root itself always takes the measured path below (also keeps the
+        // recursive root lookup here terminating).
+        if self.cfg.bound_triage && config.iter().any(|&v| v != 0) && self.config_legal(config) {
+            let info = self.bound_info(config);
+            if info.certified_exact {
+                let root = self.evaluate(&vec![0u32; self.knobs.len()]);
+                let name = config_name(config);
+                let model = derive_model(self.base, config, &name);
+                let sim_imgs: Vec<&[u8]> = self
+                    .calib
+                    .images
+                    .iter()
+                    .take(self.cfg.power_images.max(1))
+                    .map(Vec::as_slice)
+                    .collect();
+                let ExplorerConfig { fold, cal, device, .. } = &self.cfg;
+                let cost = estimate_inference_cost(&model, fold, cal, device, &sim_imgs);
+                let cand = Candidate {
+                    config: config.to_vec(),
+                    accuracy: root.accuracy,
+                    power_mw: cost.power_mw,
+                    latency_us: cost.latency_us,
+                    energy_uj: cost.energy_uj,
+                    // the variant analysis inside analyze_error is the same
+                    // verdict CompiledModel::conv_acc_narrow would report
+                    acc_narrow: info.conv_narrow,
+                };
+                self.cache.insert(config.to_vec(), cand.clone());
+                self.evals += 1;
+                self.skipped += 1;
+                return cand;
+            }
         }
         let name = config_name(config);
         let model = derive_model(self.base, config, &name);
@@ -288,19 +419,32 @@ impl<'a> Explorer<'a> {
         };
         self.cache.insert(config.to_vec(), cand.clone());
         self.evals += 1;
+        self.acc_evals += 1;
         cand
     }
 
-    /// Gate one search proposal through the static checker. Legal configs
-    /// are evaluated (memoized) and returned; illegal ones return `None`
-    /// and are never selected or emitted in either mode — with
-    /// `static_prune` their evaluation is skipped entirely (and counted in
-    /// [`Self::pruned_static`]), without it the candidate is still
-    /// evaluated into the archive. The two modes therefore walk the same
-    /// trajectory and emit the same frontier; pruning only saves work.
+    /// Gate one search proposal through the static checker, then the
+    /// proven logit-bound tolerance. Candidates passing both are evaluated
+    /// (memoized) and returned; the rest return `None` and are never
+    /// selected or emitted in either mode — with `static_prune` /
+    /// `bound_triage` their evaluation is skipped entirely (and counted in
+    /// [`Self::pruned_static`] / [`Self::rejected_by_bounds`]), without it
+    /// the candidate is still evaluated into the archive. All modes
+    /// therefore walk the same trajectory and emit the same frontier;
+    /// pruning and triage only save work.
     fn probe(&mut self, config: &[u32]) -> Option<Candidate> {
         if self.config_legal(config) {
-            return Some(self.evaluate(config));
+            if self.within_tolerance(config) {
+                return Some(self.evaluate(config));
+            }
+            if self.cfg.bound_triage {
+                if !self.cache.contains_key(config) {
+                    self.rejected.insert(config.to_vec());
+                }
+            } else {
+                self.evaluate(config);
+            }
+            return None;
         }
         if self.cfg.static_prune {
             if !self.cache.contains_key(config) {
@@ -406,15 +550,16 @@ impl<'a> Explorer<'a> {
     }
 
     /// Pareto filter + dedup + epsilon thinning + ladder cap over the
-    /// statically legal archive. Illegal candidates (possible in the
-    /// unpruned mode, or via direct [`Explorer::evaluate`] calls) are
-    /// dropped *before* the Pareto filter so they can neither appear on the
-    /// ladder nor suppress legal points as dominators.
+    /// statically legal, within-tolerance archive. Illegal and
+    /// over-tolerance candidates (possible in the unpruned/untriaged
+    /// modes, or via direct [`Explorer::evaluate`] calls) are dropped
+    /// *before* the Pareto filter so they can neither appear on the ladder
+    /// nor suppress legal points as dominators.
     fn emit(&mut self) -> Frontier {
         let keys: Vec<Vec<u32>> = self.cache.keys().cloned().collect();
         let mut survivors: Vec<Candidate> = Vec::with_capacity(keys.len());
         for key in keys {
-            if self.config_legal(&key) {
+            if self.config_legal(&key) && self.within_tolerance(&key) {
                 survivors.push(self.cache[&key].clone());
             }
         }
@@ -459,6 +604,7 @@ impl<'a> Explorer<'a> {
             .map(|c| {
                 let name = config_name(&c.config);
                 let model = derive_model(self.base, &c.config, &name);
+                let info = self.bound_info(&c.config);
                 FrontierPoint {
                     name,
                     config: c.config,
@@ -467,6 +613,8 @@ impl<'a> Explorer<'a> {
                     latency_us: c.latency_us,
                     energy_uj: c.energy_uj,
                     acc_narrow: c.acc_narrow,
+                    logit_bound: info.logit_bound,
+                    stable_margin: info.stable_margin,
                     model,
                 }
             })
@@ -606,6 +754,57 @@ mod tests {
             unpruned.evaluations(),
             "every skipped evaluation must be accounted for"
         );
+    }
+
+    #[test]
+    fn certificate_triage_skips_accuracy_passes_and_keeps_the_frontier() {
+        // bound_stress model: 1- and 2-bit conv weight drops are proven
+        // bit-identical (accuracy pass provably redundant), while every
+        // activation/dense drop carries a proven logit deviation >= 32 —
+        // so a tolerance of 8 rejects them before evaluation. The triaged
+        // and untriaged runs must emit byte-identical frontier JSON; the
+        // triaged run pays strictly fewer packed-executor passes.
+        let m = read_str(&crate::qonnx::bound_stress_model_json()).unwrap();
+        let calib = CalibSet::self_labeled(&m, 16, 0xB0B);
+        let cfg = |bound_triage: bool| ExplorerConfig {
+            power_images: 1,
+            uniform_rungs: 2,
+            logit_bound_tolerance: Some(8),
+            bound_triage,
+            ..Default::default()
+        };
+        let mut triaged = Explorer::new(&m, &calib, cfg(true));
+        let f_triaged = triaged.explore();
+        let mut untriaged = Explorer::new(&m, &calib, cfg(false));
+        let f_untriaged = untriaged.explore();
+        assert_eq!(
+            crate::json::to_string_pretty(&f_triaged.to_json()),
+            crate::json::to_string_pretty(&f_untriaged.to_json()),
+            "bound triage must not change the frontier"
+        );
+        assert!(triaged.skipped_by_bounds() > 0, "certified drops must skip");
+        assert!(triaged.rejected_by_bounds() > 0, "tolerance must reject");
+        assert_eq!(untriaged.skipped_by_bounds(), 0);
+        assert_eq!(untriaged.rejected_by_bounds(), 0);
+        assert!(triaged.accuracy_evaluations() < untriaged.accuracy_evaluations());
+        assert_eq!(
+            triaged.evaluations(),
+            triaged.accuracy_evaluations() + triaged.skipped_by_bounds(),
+            "every evaluation is either measured or certificate-skipped"
+        );
+        assert_eq!(
+            triaged.evaluations() + triaged.rejected_by_bounds(),
+            untriaged.evaluations(),
+            "every skipped evaluation must be accounted for"
+        );
+        // certified rungs carry a zero bound and margin in the frontier
+        for p in &f_triaged.points {
+            if p.config.iter().all(|&v| v == 0) {
+                continue;
+            }
+            assert_eq!(p.accuracy, f_triaged.points[0].accuracy);
+            assert_eq!((p.logit_bound, p.stable_margin), (0, 0));
+        }
     }
 
     #[test]

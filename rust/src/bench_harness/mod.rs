@@ -121,6 +121,7 @@ mod tests {
     use super::*;
 
     #[test]
+    #[allow(clippy::disallowed_methods)] // wall-clock: the workload under test is a sleep
     fn bench_produces_ordered_stats() {
         let s = bench(2, 20, || std::thread::sleep(Duration::from_micros(50)));
         assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.p99);

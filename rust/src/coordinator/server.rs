@@ -857,6 +857,7 @@ mod tests {
 
     /// Poll `cond` for up to ~5 s (supervision acts on a 10 ms tick, so
     /// tests must tolerate a little wall-clock slack).
+    #[allow(clippy::disallowed_methods)] // wall-clock: polling the supervisor tick
     fn wait_until(what: &str, cond: impl Fn() -> bool) {
         for _ in 0..500 {
             if cond() {

@@ -232,6 +232,81 @@ pub fn execute_traced(model: &QonnxModel, input: &[u8]) -> (Vec<i64>, Vec<LayerT
     (logits, traces)
 }
 
+/// Full per-layer snapshots from one scalar-oracle run — the element-wise
+/// measurement side of the *error-bound* soundness property (the traced
+/// oracle's extremes are too coarse to check per-channel deviations).
+#[derive(Debug, Clone)]
+pub struct LayerCapture {
+    pub name: String,
+    /// Every raw pre-requant conv accumulator (pixel-major, `cout` lanes
+    /// per pixel) / every dense logit; empty for pool and flatten.
+    pub acc: Vec<i64>,
+    /// The layer's full output activation plane (HWC codes); empty for
+    /// flatten, which writes nothing.
+    pub act: Vec<i64>,
+}
+
+/// [`execute`] with full per-layer capture. Same kernels as the plain
+/// oracle (bit-exactness asserted in tests); element `e` of a conv capture
+/// belongs to channel `e % cout`, matching the analyzers' per-channel
+/// layout.
+pub fn execute_captured(model: &QonnxModel, input: &[u8]) -> (Vec<i64>, Vec<LayerCapture>) {
+    let (shapes, mut buf_a, mut buf_b) = scratch_for(model);
+    let in_shape = model.input_shape;
+    assert_eq!(input.len(), in_shape.elems(), "input size mismatch");
+    for (dst, &src) in buf_a.iter_mut().zip(input) {
+        *dst = src as i64;
+    }
+    let mut acc: Vec<i64> = Vec::new();
+    let mut cur_shape = in_shape;
+    let mut in_a = true;
+    let mut logits = Vec::new();
+    let mut captures = Vec::with_capacity(model.layers.len());
+    for (i, layer) in model.layers.iter().enumerate() {
+        let out_shape = shapes[i + 1];
+        let (src, dst): (&[i64], &mut [i64]) = if in_a {
+            (&*buf_a, &mut *buf_b)
+        } else {
+            (&*buf_b, &mut *buf_a)
+        };
+        let mut acc_snap = Vec::new();
+        let mut act_snap = Vec::new();
+        match layer {
+            Layer::Conv(c) => {
+                if acc.len() < c.cout {
+                    acc.resize(c.cout, 0);
+                }
+                conv_forward_obs(c, src, cur_shape, dst, &mut acc[..c.cout], |lanes| {
+                    acc_snap.extend_from_slice(lanes);
+                });
+                act_snap.extend_from_slice(&dst[..out_shape.elems()]);
+                in_a = !in_a;
+            }
+            Layer::Pool(_) => {
+                pool_forward(&src[..cur_shape.elems()], cur_shape, dst);
+                act_snap.extend_from_slice(&dst[..out_shape.elems()]);
+                in_a = !in_a;
+            }
+            Layer::Flatten { .. } => { /* layout already flat (HWC) */ }
+            Layer::Dense(d) => {
+                let out = &mut dst[..d.out_features];
+                dense_forward(d, &src[..cur_shape.elems()], out);
+                acc_snap.extend_from_slice(out);
+                act_snap.extend_from_slice(out);
+                logits = out.to_vec();
+                in_a = !in_a;
+            }
+        }
+        captures.push(LayerCapture {
+            name: layer.name().to_string(),
+            acc: acc_snap,
+            act: act_snap,
+        });
+        cur_shape = out_shape;
+    }
+    (logits, captures)
+}
+
 fn observe_extremes(seen: &mut Option<(i64, i64)>, values: &[i64]) {
     for &v in values {
         let e = seen.get_or_insert((v, v));
@@ -428,6 +503,34 @@ mod tests {
         assert!(traces[2].acc.is_none() && traces[2].act.is_none(), "flatten writes nothing");
         let (lo, hi) = traces[3].acc.unwrap();
         assert!(logits.iter().all(|&v| lo <= v && v <= hi));
+    }
+
+    #[test]
+    fn captured_execution_matches_the_plain_and_traced_oracles() {
+        let m = tiny();
+        let input: Vec<u8> =
+            (0..m.input_shape.elems()).map(|i| (i * 13 % 256) as u8).collect();
+        let (logits, caps) = execute_captured(&m, &input);
+        assert_eq!(logits, execute(&m, &input));
+        assert_eq!(caps.len(), m.layers.len());
+        // conv: one accumulator per pixel per lane, full act plane
+        assert_eq!(caps[0].acc.len(), 4 * 4 * 2);
+        assert_eq!(caps[0].act.len(), 4 * 4 * 2);
+        assert!(caps[2].acc.is_empty() && caps[2].act.is_empty(), "flatten writes nothing");
+        assert_eq!(caps[3].acc, logits);
+        // the captured extremes are exactly what the traced oracle reports
+        let (_, traces) = execute_traced(&m, &input);
+        for (cap, tr) in caps.iter().zip(&traces) {
+            let ext = |xs: &[i64]| {
+                xs.iter()
+                    .fold(None, |s: Option<(i64, i64)>, &v| match s {
+                        None => Some((v, v)),
+                        Some((lo, hi)) => Some((lo.min(v), hi.max(v))),
+                    })
+            };
+            assert_eq!(ext(&cap.acc), tr.acc);
+            assert_eq!(ext(&cap.act), tr.act);
+        }
     }
 
     #[test]

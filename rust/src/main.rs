@@ -15,7 +15,7 @@
 
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use onnx2hw::analysis::{self, Severity};
 use onnx2hw::approx::{CalibSet, Explorer, ExplorerConfig, Frontier};
@@ -436,7 +436,8 @@ fn cmd_check(argv: &[String]) -> Result<()> {
     .pos("path", true, "QONNX model JSON, frontier JSON, or bench report")
     .opt("profile", "", "artifact-store profile providing the frontier's base model")
     .opt("seed", "659918", "seed for the synthetic base model")
-    .flag("synthetic", "check frontiers against the deterministic synthetic base model");
+    .flag("synthetic", "check frontiers against the deterministic synthetic base model")
+    .flag("bounds", "print the proven per-layer error-bound table for every frontier rung");
     let a = parse_or_usage(spec, argv)?;
     let path = a.pos(0).unwrap();
     let text = std::fs::read_to_string(path)
@@ -460,6 +461,9 @@ fn cmd_check(argv: &[String]) -> Result<()> {
                 println!("{name}: {d}");
             }
         }
+        if a.flag("bounds") {
+            print_bound_table(fdoc, &base)?;
+        }
         if errors > 0 {
             bail!("{errors} error diagnostic(s) across {} frontier point(s)", report.len());
         }
@@ -467,6 +471,9 @@ fn cmd_check(argv: &[String]) -> Result<()> {
         return Ok(());
     }
 
+    if a.flag("bounds") {
+        bail!("--bounds re-proves frontier certificates; '{path}' is not a frontier document");
+    }
     let model = onnx2hw::qonnx::read_str(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
     let analysis = analysis::analyze(&model);
     for d in &analysis.diags {
@@ -483,6 +490,66 @@ fn cmd_check(argv: &[String]) -> Result<()> {
         bail!("{} error diagnostic(s) in {path}", analysis.errors().count());
     }
     println!("check OK: model '{}' is clean", model.profile);
+    Ok(())
+}
+
+/// `check --bounds`: render the proven deviation table, one row per
+/// (rung, layer). Per-layer cells summarize the channel-wise deviation
+/// intervals at their widest; the per-rung summary line carries the
+/// end-to-end certificate (worst-case logit deviation, stability margin,
+/// exactness). Illegal configs were already reported by the checker's
+/// diagnostics and are skipped here.
+fn print_bound_table(fdoc: &Value, base: &onnx2hw::qonnx::QonnxModel) -> Result<()> {
+    let rows = fdoc.get("points").and_then(Value::as_array).context("frontier points")?;
+    let mut table = onnx2hw::bench_harness::Table::new(&[
+        "rung", "layer", "op", "acc deviation", "act deviation", "act scale",
+    ]);
+    let mut summaries = Vec::new();
+    for row in rows {
+        let name = row.get("name").and_then(Value::as_str).context("point name")?;
+        let config: Vec<u32> = row
+            .get("config")
+            .and_then(Value::to_i64_vec)
+            .context("point config")?
+            .into_iter()
+            .map(|x| u32::try_from(x).ok().context("point config value out of range"))
+            .collect::<Result<Vec<u32>>>()?;
+        if !analysis::config_is_legal(base, &config) {
+            summaries.push(format!("{name}: skipped (illegal config, see diagnostics above)"));
+            continue;
+        }
+        let report = analysis::analyze_error(base, &config);
+        let span = |ivs: &[analysis::Interval]| {
+            let lo = ivs.iter().map(|iv| iv.lo).min().unwrap_or(0);
+            let hi = ivs.iter().map(|iv| iv.hi).max().unwrap_or(0);
+            format!("[{lo}, {hi}]")
+        };
+        for (layer, dev) in base.layers.iter().zip(&report.layers) {
+            table.row(&[
+                name.to_string(),
+                dev.name.clone(),
+                layer.kind().as_str().to_string(),
+                span(&dev.acc_dev),
+                span(&dev.act_dev),
+                format!("2^{}", dev.act_scale_log2),
+            ]);
+        }
+        summaries.push(format!(
+            "{name}: proven logit bound {}, stability margin {}{}",
+            report.logit_bound,
+            report.stable_margin,
+            if report.certified_exact {
+                " (certified exact: top-1 provably unchanged)"
+            } else {
+                ""
+            },
+        ));
+    }
+    println!("{}", table.render());
+    for s in summaries {
+        println!("{s}");
+    }
+    println!();
     Ok(())
 }
 
@@ -806,6 +873,7 @@ fn serve_listen(a: &onnx2hw::cli::Args, addr: &str) -> Result<()> {
         srv.workers()
     );
     loop {
+        #[allow(clippy::disallowed_methods)] // wall-clock: stats-reporting tick of a live server
         std::thread::sleep(std::time::Duration::from_millis(50));
         let replies = net.stats.served.get()
             + net.stats.failed.get()

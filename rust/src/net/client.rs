@@ -354,6 +354,7 @@ impl ResilientClient {
             if attempt > 0 {
                 self.retries += 1;
                 let delay = self.backoff(attempt - 1);
+                #[allow(clippy::disallowed_methods)] // wall-clock: retry backoff delay
                 match budget(started, self.deadline) {
                     None => break,
                     Some(None) => std::thread::sleep(delay),

@@ -89,6 +89,18 @@ pub enum LayerKind {
     Dense,
 }
 
+impl LayerKind {
+    /// Lower-case op name, as rendered in diagnostics ("conv", "pool", ...).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            LayerKind::Conv => "conv",
+            LayerKind::Pool => "pool",
+            LayerKind::Flatten => "flatten",
+            LayerKind::Dense => "dense",
+        }
+    }
+}
+
 impl Layer {
     pub fn name(&self) -> &str {
         match self {

@@ -21,5 +21,6 @@ pub use shapes::infer_shapes;
 
 #[doc(hidden)]
 pub use testgen::{
-    prune_stress_model_json, random_model_json, tiny_model_json as test_model_json, RandModelCfg,
+    bound_stress_model_json, prune_stress_model_json, random_model_json,
+    tiny_model_json as test_model_json, RandModelCfg,
 };

@@ -85,6 +85,45 @@ pub fn prune_stress_model_json() -> String {
     )
 }
 
+/// A model built for the error-bound analyzer's certification paths: the
+/// conv weights are all even multiples of 4 with zero biases, so one- and
+/// two-bit weight drops rescale *exactly* (round-half-up is lossless on
+/// even codes, no clamping at 8 weight bits) and the variant is provably
+/// bit-identical — while deeper weight drops, any activation drop, and
+/// dense drops all incur real rounding error with large proven bounds.
+/// Gives the triage gates a lattice with both certified-exact and
+/// reject-by-tolerance regions.
+pub fn bound_stress_model_json() -> String {
+    let w_codes: Vec<i64> = (0..9 * 2).map(|i| [4, 0, -4][i % 3]).collect();
+    let dw: Vec<i64> = (0..8 * 3).map(|i| (i as i64 % 3) - 1).collect();
+    format!(
+        r#"{{
+  "qonnx_version": 1,
+  "profile": "bound-stress",
+  "input": {{"shape": [1,4,4,1], "bits": 8, "int_bits": 0}},
+  "nodes": [
+    {{"name":"conv1","op":"QConv2d","inputs":["input"],"outputs":["c1"],
+      "attrs":{{"kernel":[3,3],"stride":[1,1],"pad":"SAME","filters":2,
+               "in_channels":1,"act_bits":8,"act_int_bits":2,"weight_bits":8}},
+      "weights":{{"w_shape":[3,3,1,2],"w_codes":{w},
+                 "b_codes":[0,0],"mult":[16384,16384],"shift":[15,15],
+                 "in_step":0.00390625,"out_step":0.015625}}}},
+    {{"name":"pool1","op":"MaxPool2","inputs":["c1"],"outputs":["p1"],
+      "attrs":{{"kernel":[2,2],"stride":[2,2]}}}},
+    {{"name":"flatten","op":"Flatten","inputs":["p1"],"outputs":["f"],"attrs":{{}}}},
+    {{"name":"dense","op":"QGemm","inputs":["f"],"outputs":["logits"],
+      "attrs":{{"in_features":8,"out_features":3,"weight_bits":4,
+               "act_bits":0,"act_int_bits":0}},
+      "weights":{{"w_shape":[8,3],"w_codes":{dw},
+                 "b_codes":[0,1,-1],"w_step":0.1,"in_step":0.015625}}}}
+  ],
+  "output": "logits"
+}}"#,
+        w = fmt_vec(&w_codes),
+        dw = fmt_vec(&dw),
+    )
+}
+
 /// Parameters of a randomly generated conv-pool pipeline.
 #[derive(Debug, Clone)]
 pub struct RandModelCfg {
@@ -192,6 +231,16 @@ mod tests {
     #[test]
     fn prune_stress_model_parses() {
         assert!(read_str(&prune_stress_model_json()).is_ok());
+    }
+
+    #[test]
+    fn bound_stress_model_parses_with_even_conv_codes() {
+        let m = read_str(&bound_stress_model_json()).unwrap();
+        // The certification tests rely on every conv code being an even
+        // multiple of 4 (exact under 1- and 2-bit round-half-up drops).
+        let conv = m.conv_layers().next().unwrap();
+        assert!(conv.w_codes.iter().all(|w| w % 4 == 0));
+        assert_eq!(conv.weight_bits, 8);
     }
 
     #[test]

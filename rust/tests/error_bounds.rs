@@ -1,0 +1,120 @@
+//! Integration suite for the affine error-bound certificates: the
+//! committed falsified fixture must be rejected with typed rules against
+//! the same synthetic base the CI gate uses, and the explorer's tolerance
+//! triage must emit a frontier whose stored certificates survive the
+//! load-time re-proof.
+
+use onnx2hw::analysis::{self, Severity, RULE_ERROR_BOUND, RULE_MARGIN_UNSOUND};
+use onnx2hw::approx::{CalibSet, Explorer, ExplorerConfig, Frontier};
+use onnx2hw::json;
+use onnx2hw::qonnx::{
+    bound_stress_model_json, random_model_json, read_str, QonnxModel, RandModelCfg,
+};
+use onnx2hw::testkit::Rng;
+
+/// The `check --synthetic` base model at its default seed (0xA11CE) — the
+/// exact model the CI fixture gates run against.
+fn synthetic_base() -> QonnxModel {
+    let mut rng = Rng::new(659918);
+    let cfg = RandModelCfg {
+        side: 8,
+        cin: 1,
+        blocks: vec![(4, 8, 8), (8, 8, 8)],
+        classes: 5,
+    };
+    read_str(&random_model_json(&cfg, &mut rng)).unwrap()
+}
+
+#[test]
+fn falsified_bound_fixture_is_rejected_with_typed_rules() {
+    let base = synthetic_base();
+    let text = include_str!("fixtures/falsified_bounds_frontier.json");
+    let doc = json::parse(text).unwrap();
+
+    // Fixture premises: the stored config must be legal (so the bound rules
+    // — not a config rule — are what reject it), its true deviation must be
+    // nonzero (so a stored bound of 0 is genuinely falsified), and the
+    // stored acc_narrow must match the proof (so the *bound* rules fire,
+    // not staleness).
+    let config = [0u32, 1, 0, 0, 0];
+    assert!(
+        analysis::config_is_legal(&base, &config),
+        "fixture config must be legal on the synthetic base"
+    );
+    let proven = analysis::analyze_error(&base, &config);
+    assert!(proven.logit_bound > 0, "an act drop must carry real slack");
+    assert!(proven.stable_margin > 0);
+    let stored_narrow: Vec<bool> = doc.get("points").unwrap().as_array().unwrap()[0]
+        .get("acc_narrow")
+        .unwrap()
+        .as_array()
+        .unwrap()
+        .iter()
+        .map(|b| b.as_bool().unwrap())
+        .collect();
+    assert_eq!(
+        stored_narrow, proven.conv_narrow,
+        "fixture acc_narrow drifted from the proof: regenerate the fixture"
+    );
+
+    // `check`-style report: both falsified certificates surface as typed
+    // error diagnostics on the point, without failing fast.
+    let report = Frontier::check_json(&doc, &base).unwrap();
+    assert_eq!(report.len(), 1);
+    assert_eq!(report[0].0, "apx-01000");
+    let rules: Vec<&str> = report[0]
+        .1
+        .iter()
+        .filter(|d| d.severity == Severity::Error)
+        .map(|d| d.rule)
+        .collect();
+    assert!(rules.contains(&RULE_ERROR_BOUND), "got rules {rules:?}");
+    assert!(rules.contains(&RULE_MARGIN_UNSOUND), "got rules {rules:?}");
+
+    // Loading (the serving path) fails outright.
+    let err = Frontier::from_json(&doc, &base).expect_err("falsified fixture must not load");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("apx-01000"), "must name the point: {msg}");
+}
+
+#[test]
+fn triaged_frontier_certificates_survive_the_load_time_reproof() {
+    // End to end: explore the bound-stress lattice under a logit tolerance,
+    // serialize the emitted frontier, and re-load it — every stored
+    // certificate must pass the re-proof, survivors must sit within the
+    // tolerance, and certified rungs must carry the (0, 0) certificate.
+    let model = read_str(&bound_stress_model_json()).unwrap();
+    let calib = CalibSet::self_labeled(&model, 16, 0xB0B);
+    let mut explorer = Explorer::new(
+        &model,
+        &calib,
+        ExplorerConfig {
+            power_images: 1,
+            uniform_rungs: 2,
+            logit_bound_tolerance: Some(8),
+            ..ExplorerConfig::default()
+        },
+    );
+    let frontier = explorer.explore();
+    assert!(!frontier.is_empty());
+    for p in &frontier.points {
+        assert!(
+            p.logit_bound <= 8,
+            "rung {} emitted above tolerance: {}",
+            p.name,
+            p.logit_bound
+        );
+    }
+    assert!(
+        explorer.skipped_by_bounds() > 0,
+        "the even-code lattice must certify some rungs"
+    );
+    let text = json::to_string_pretty(&frontier.to_json());
+    let back = Frontier::from_json(&json::parse(&text).unwrap(), &model)
+        .expect("emitted certificates must pass their own re-proof");
+    for (a, b) in frontier.points.iter().zip(&back.points) {
+        assert_eq!(a.logit_bound, b.logit_bound);
+        assert_eq!(a.stable_margin, b.stable_margin);
+        assert_eq!(a.acc_narrow, b.acc_narrow);
+    }
+}

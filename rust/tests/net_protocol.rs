@@ -27,6 +27,7 @@ use onnx2hw::qonnx::{read_str, test_model_json, QonnxModel};
 
 /// Poll `cond` for up to ~5 s; cross-thread teardown (handler joins,
 /// gauge decrements) is fast but not synchronous with the client side.
+#[allow(clippy::disallowed_methods)] // wall-clock: polling cross-thread teardown
 fn wait_until(what: &str, cond: impl Fn() -> bool) {
     for _ in 0..500 {
         if cond() {

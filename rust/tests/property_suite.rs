@@ -163,6 +163,67 @@ fn analysis_intervals_contain_every_observed_value() {
 }
 
 #[test]
+fn error_bounds_contain_observed_deviation() {
+    // Soundness of the affine error-bound analyzer: on random models x
+    // random knob vectors, every element-wise deviation the scalar oracle
+    // observes between the base and the derived variant (in aligned
+    // base-code units) lies inside the proven per-channel interval — and a
+    // certified-exact variant never changes a single logit or the argmax.
+    testkit::check("error bounds vs observed deviation", |rng| {
+        let cfg = RandModelCfg::gen(rng);
+        let base = read_str(&qonnx::random_model_json(&cfg, rng)).map_err(|e| e.to_string())?;
+        let knobs = knobs_for(&base);
+        let config: Vec<u32> = knobs.iter().map(|k| rng.u64(0, k.max as u64) as u32).collect();
+        let variant = derive_model(&base, &config, "prop-err");
+        let report = analysis::analyze_error(&base, &config);
+        let img: Vec<u8> = (0..base.input_shape.elems()).map(|_| rng.u64(0, 255) as u8).collect();
+        let (blogits, bcaps) = exec::execute_captured(&base, &img);
+        let (vlogits, vcaps) = exec::execute_captured(&variant, &img);
+        onnx2hw::prop_assert!(
+            report.layers.len() == bcaps.len() && bcaps.len() == vcaps.len(),
+            "layers/captures misaligned"
+        );
+        // Mirror the report's saturation policy: proven endpoints live in
+        // saturated i64, so the observed deviation is clamped the same way.
+        let sat = |v: i128| v.clamp(i64::MIN as i128, i64::MAX as i128);
+        let contains = |ivs: &[Interval], scale_log2: u32, b: &[i64], v: &[i64], what: &str, i: usize| {
+            if b.is_empty() && v.is_empty() {
+                return Ok(());
+            }
+            if ivs.is_empty() || b.len() != v.len() {
+                return Err(format!("layer {i} {what}: capture/deviation shape mismatch"));
+            }
+            let s = 1i128 << scale_log2;
+            for (e, (&bv, &vv)) in b.iter().zip(v).enumerate() {
+                let iv = &ivs[e % ivs.len()];
+                let d = sat(vv as i128 * s - bv as i128);
+                if !(iv.lo as i128 <= d && d <= iv.hi as i128) {
+                    return Err(format!(
+                        "layer {i} {what} elem {e}: observed deviation {d} outside \
+                         proven [{}, {}]",
+                        iv.lo, iv.hi
+                    ));
+                }
+            }
+            Ok(())
+        };
+        for (i, dev) in report.layers.iter().enumerate() {
+            contains(&dev.acc_dev, dev.acc_scale_log2, &bcaps[i].acc, &vcaps[i].acc, "acc", i)
+                .map_err(|e| format!("cfg {cfg:?} config {config:?}: {e}"))?;
+            contains(&dev.act_dev, dev.act_scale_log2, &bcaps[i].act, &vcaps[i].act, "act", i)
+                .map_err(|e| format!("cfg {cfg:?} config {config:?}: {e}"))?;
+        }
+        if report.certified_exact && !blogits.is_empty() {
+            onnx2hw::prop_assert!(
+                exec::argmax(&blogits) == exec::argmax(&vlogits),
+                "cfg {cfg:?} config {config:?}: certified-exact variant flipped the argmax"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn merged_engine_preserves_profile_semantics() {
     // Simulating a profile's reconstructed pipeline == simulating the
     // standalone model (here: the reconstructed pipeline must select the
