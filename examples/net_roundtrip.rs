@@ -8,13 +8,16 @@
 //!    `127.0.0.1:0`;
 //! 2. generate a seeded Poisson schedule (`loadgen::poisson_arrivals`) and
 //!    pace it on the wall clock, keeping a bounded window in flight;
-//! 3. print exact client-side latency quantiles and an ASCII log2-bucket
-//!    histogram, then drain gracefully and check the gauges read zero.
+//! 3. print exact client-side latency quantiles, an ASCII log2-bucket
+//!    histogram, and a per-request span breakdown from the shared
+//!    [`TraceCollector`] (see `docs/observability.md`), then drain
+//!    gracefully and check the gauges read zero.
 //!
 //! Run: `cargo run --release --example net_roundtrip -- [requests]
 //!       [rate_per_s] [shards]`
 
 use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
 
 use anyhow::Result;
 use onnx2hw::coordinator::{
@@ -25,6 +28,7 @@ use onnx2hw::loadgen;
 use onnx2hw::metrics::exact_quantile_us;
 use onnx2hw::net::{NetClient, NetReply, NetServer, NetServerConfig};
 use onnx2hw::qonnx::{read_str, test_model_json, QonnxModel};
+use onnx2hw::trace::{SpanKind, TraceCollector};
 
 const SEED: u64 = 7;
 const WINDOW: usize = 16;
@@ -92,9 +96,13 @@ fn main() -> Result<()> {
             latency_us: 329.0,
         },
     ];
+    // One collector shared by the spine and the front end: wire spans land
+    // on the wire-tick clock, shard spans on the batch clock.
+    let trace = Arc::new(TraceCollector::new(shards));
     let srv = AdaptiveServer::start(
         ServerConfig {
             workers: shards,
+            trace: Some(trace.clone()),
             ..Default::default()
         },
         move || Ok(Backend::sim_from_models(models.clone())),
@@ -104,6 +112,7 @@ fn main() -> Result<()> {
     let net = NetServer::start(
         NetServerConfig {
             expected_image_len: Some(elems),
+            trace: Some(trace.clone()),
             ..Default::default()
         },
         srv.client(),
@@ -185,5 +194,34 @@ fn main() -> Result<()> {
     assert_eq!(stats.inflight.get(), 0);
     assert_eq!(stats.open_connections.get(), 0);
     srv.shutdown();
+
+    // --- per-request span breakdown from the shared trace collector ---
+    let snap = trace.snapshot();
+    let mut served_ids: Vec<u64> = snap
+        .spans
+        .iter()
+        .filter(|s| s.kind == SpanKind::ShardExec)
+        .map(|s| s.req)
+        .collect();
+    served_ids.sort_unstable();
+    served_ids.dedup();
+    println!(
+        "\ntrace: {} spans / {} events across {} served requests ({} records dropped)",
+        snap.spans.len(),
+        snap.events.len(),
+        served_ids.len(),
+        snap.dropped
+    );
+    for &req in served_ids.iter().take(3) {
+        println!("  request {req} (wire spans on wire ticks, shard spans on the batch clock):");
+        for s in snap.spans_for(req) {
+            let label = match s.layer {
+                Some(l) => format!("{}.{}.{}", s.kind.as_str(), l, s.detail),
+                None if s.detail.is_empty() => s.kind.as_str().to_string(),
+                None => format!("{} ({})", s.kind.as_str(), s.detail),
+            };
+            println!("    lane {:>2}  [{:>5}..{:<5}]  {label}", s.lane, s.start, s.end);
+        }
+    }
     Ok(())
 }

@@ -123,6 +123,19 @@ impl Backend {
         profile: &str,
         images: &[&[u8]],
     ) -> Result<Vec<(Vec<f32>, usize)>> {
+        self.run_batch_observed(profile, images, None)
+    }
+
+    /// [`Self::run_batch`] with an optional per-layer step observer — the
+    /// tracing hook behind `kernel.layer` sub-spans. The Sim arm threads it
+    /// to [`BatchExecutor::run_batch_observed`]; the PJRT arm executes an
+    /// opaque AOT artifact and reports no steps. `None` costs nothing.
+    pub fn run_batch_observed(
+        &mut self,
+        profile: &str,
+        images: &[&[u8]],
+        observer: Option<&mut Vec<(u32, &'static str)>>,
+    ) -> Result<Vec<(Vec<f32>, usize)>> {
         match self {
             Backend::Pjrt { engine } => engine.classify_batch(profile, images),
             Backend::Sim { models, executors } => {
@@ -135,7 +148,7 @@ impl Backend {
                 }
                 let ex = executors.get_mut(profile).unwrap();
                 let k = ex.out_features();
-                let logits = ex.run_batch(images);
+                let logits = ex.run_batch_observed(images, observer);
                 Ok((0..images.len())
                     .map(|i| {
                         let row = &logits[i * k..(i + 1) * k];

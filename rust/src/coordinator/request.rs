@@ -9,6 +9,10 @@ pub struct ClassifyRequest {
     /// HWC u8 input codes (28*28*1 for the paper's model).
     pub image: Vec<u8>,
     pub submitted: Instant,
+    /// Pool batch-clock reading when the dispatcher enqueued this request;
+    /// the serving shard's `queue.wait` trace span starts here. Stamped by
+    /// the dispatcher only when tracing is on (0 otherwise).
+    pub enqueued_at_batch: u64,
     pub reply: mpsc::Sender<ClassifyResponse>,
 }
 
@@ -47,6 +51,7 @@ impl ClassifyRequest {
             id,
             image,
             submitted: Instant::now(),
+            enqueued_at_batch: 0,
             reply,
         }
     }

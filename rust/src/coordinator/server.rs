@@ -50,8 +50,9 @@ use super::manager::{EnergyMonitor, ProfileManager};
 use super::request::{ClassifyRequest, ClassifyResponse, Submission};
 use super::steal::ShardDeques;
 use crate::fault::{FaultInjector, ServerFaultKind};
-use crate::metrics::{Counter, EventLog, FloatGauge, Gauge, Histogram};
+use crate::metrics::{Counter, EventLog, FloatGauge, Gauge, Histogram, MetricsRegistry};
 use crate::power::EnergySource;
+use crate::trace::{EventKind, SpanKind, TraceCollector};
 
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
@@ -94,6 +95,11 @@ pub struct ServerConfig {
     /// consults once per popped batch (see [`crate::fault`]). `None`
     /// injects nothing.
     pub faults: Option<Arc<FaultInjector>>,
+    /// Request tracing: a shared [`TraceCollector`] the dispatcher, worker
+    /// shards, and supervisor record spans/events into on the pool batch
+    /// clock (see [`crate::trace`] and `docs/observability.md`). `None`
+    /// (the default) records nothing and costs nothing on the hot path.
+    pub trace: Option<Arc<TraceCollector>>,
 }
 
 impl Default for ServerConfig {
@@ -110,6 +116,7 @@ impl Default for ServerConfig {
             restart_backoff_batches: 4,
             restart_fraction: 0.05,
             faults: None,
+            trace: None,
         }
     }
 }
@@ -123,36 +130,42 @@ impl ServerConfig {
     }
 }
 
-/// Shared observable state.
+/// Shared observable state. Every instrument is a named handle in
+/// `registry` (e.g. `serve.requests`, `serve.shard_depth.3`), so the whole
+/// struct snapshots to JSON through one exposition path
+/// ([`MetricsRegistry::snapshot`]) while the hot paths keep their direct
+/// lock-free handles.
 pub struct ServerStats {
-    pub requests: Counter,
-    pub batches: Counter,
+    pub requests: Arc<Counter>,
+    pub batches: Arc<Counter>,
     /// Profile switches summed over every shard's adaptation step.
-    pub switches: Counter,
-    pub latency: Histogram,
+    pub switches: Arc<Counter>,
+    pub latency: Arc<Histogram>,
     pub events: EventLog,
     /// Batches enqueued but not yet picked up, summed over all shards.
-    pub queue_depth: Gauge,
+    pub queue_depth: Arc<Gauge>,
     /// Batches executed per worker shard; the entries sum to `batches`.
-    pub worker_batches: Vec<Counter>,
+    pub worker_batches: Vec<Arc<Counter>>,
     /// Batches each shard stole from another shard's deque.
-    pub worker_steals: Vec<Counter>,
+    pub worker_steals: Vec<Arc<Counter>>,
     /// Backlog currently sitting in each shard's deque.
-    pub shard_depth: Vec<Gauge>,
+    pub shard_depth: Vec<Arc<Gauge>>,
     /// Remaining battery fraction per shard (updated after each batch).
-    pub shard_battery: Vec<FloatGauge>,
+    pub shard_battery: Vec<Arc<FloatGauge>>,
     /// Joules each shard has banked from its recharge source (accumulated
     /// after each batch; stays 0 without a source).
-    pub shard_recharged_j: Vec<FloatGauge>,
+    pub shard_recharged_j: Vec<Arc<FloatGauge>>,
     /// Shards the supervisor has respawned after a death (panic or
     /// brown-out).
-    pub restarts: Counter,
+    pub restarts: Arc<Counter>,
     /// Replies that arrived after their caller stopped listening: the
     /// ticket was consumed by [`Ticket::await_reply_timeout`] expiring (or
     /// simply dropped), so the worker's send landed on a closed channel.
     /// The work was done and `requests` counts it; this counter is the
     /// audit trail for the discarded answer.
-    pub late_replies: Counter,
+    pub late_replies: Arc<Counter>,
+    /// The registry every handle above lives in — the JSON exposition path.
+    pub registry: Arc<MetricsRegistry>,
 }
 
 impl ServerStats {
@@ -168,20 +181,36 @@ impl ServerStats {
     }
 
     fn for_workers(n: usize) -> Self {
+        let registry = Arc::new(MetricsRegistry::default());
+        let shard_battery: Vec<Arc<FloatGauge>> = (0..n)
+            .map(|i| registry.float_gauge(&format!("serve.shard_battery.{i}")))
+            .collect();
+        for g in &shard_battery {
+            g.set(1.0);
+        }
         ServerStats {
-            requests: Counter::default(),
-            batches: Counter::default(),
-            switches: Counter::default(),
-            latency: Histogram::default(),
+            requests: registry.counter("serve.requests"),
+            batches: registry.counter("serve.batches"),
+            switches: registry.counter("serve.switches"),
+            latency: registry.histogram("serve.latency_us"),
             events: EventLog::default(),
-            queue_depth: Gauge::default(),
-            worker_batches: (0..n).map(|_| Counter::default()).collect(),
-            worker_steals: (0..n).map(|_| Counter::default()).collect(),
-            shard_depth: (0..n).map(|_| Gauge::default()).collect(),
-            shard_battery: (0..n).map(|_| FloatGauge::new(1.0)).collect(),
-            shard_recharged_j: (0..n).map(|_| FloatGauge::new(0.0)).collect(),
-            restarts: Counter::default(),
-            late_replies: Counter::default(),
+            queue_depth: registry.gauge("serve.queue_depth"),
+            worker_batches: (0..n)
+                .map(|i| registry.counter(&format!("serve.worker_batches.{i}")))
+                .collect(),
+            worker_steals: (0..n)
+                .map(|i| registry.counter(&format!("serve.worker_steals.{i}")))
+                .collect(),
+            shard_depth: (0..n)
+                .map(|i| registry.gauge(&format!("serve.shard_depth.{i}")))
+                .collect(),
+            shard_battery,
+            shard_recharged_j: (0..n)
+                .map(|i| registry.float_gauge(&format!("serve.shard_recharged_j.{i}")))
+                .collect(),
+            restarts: registry.counter("serve.restarts"),
+            late_replies: registry.counter("serve.late_replies"),
+            registry,
         }
     }
 }
@@ -246,6 +275,7 @@ struct ShardGuard {
     armed: bool,
     pending: Arc<AtomicUsize>,
     death_tx: Option<mpsc::Sender<DeathNotice>>,
+    trace: Option<Arc<TraceCollector>>,
 }
 
 impl Drop for ShardGuard {
@@ -262,12 +292,25 @@ impl Drop for ShardGuard {
             self.stats.shard_depth[i].add(*n as i64);
         }
         self.stats.queue_depth.add(-(report.dropped as i64));
+        let moved: usize = report.moved.iter().sum();
         self.stats.events.push(format!(
             "worker {} died; shard marked dead ({} batches re-routed, {} dropped)",
-            self.wid,
-            report.moved.iter().sum::<usize>(),
-            report.dropped
+            self.wid, moved, report.dropped
         ));
+        if let Some(t) = &self.trace {
+            let at = self.stats.batches.get();
+            let lane = t.shard_lane(self.wid);
+            t.event(lane, EventKind::Death, at, None, format!("shard {}", self.wid));
+            if moved > 0 || report.dropped > 0 {
+                t.event(
+                    lane,
+                    EventKind::Reroute,
+                    at,
+                    None,
+                    format!("{moved} batches re-routed, {} dropped", report.dropped),
+                );
+            }
+        }
         if let Some(tx) = &self.death_tx {
             // Register the pending respawn before our LiveGuard (declared
             // first, dropped after us) can observe live == 0, so a full
@@ -300,6 +343,7 @@ struct WorkerCtx {
     names: Vec<String>,
     faults: Option<Arc<FaultInjector>>,
     death_tx: Option<mpsc::Sender<DeathNotice>>,
+    trace: Option<Arc<TraceCollector>>,
 }
 
 /// Spawn one worker shard thread. `ready` is `Some` on the initial spawn
@@ -322,6 +366,7 @@ fn spawn_worker(
         names,
         faults,
         death_tx,
+        trace,
     } = ctx;
     std::thread::Builder::new()
         .name(format!("adaptive-worker-{wid}"))
@@ -342,6 +387,7 @@ fn spawn_worker(
                 armed: false,
                 pending,
                 death_tx: None,
+                trace: trace.clone(),
             };
             let mut backend = match (*factory)().and_then(|b| {
                 for name in &names {
@@ -382,11 +428,23 @@ fn spawn_worker(
             shard_guard.armed = true;
             shard_guard.death_tx = death_tx;
             let mut active = selector.current().name.clone();
+            // Reused per-batch when tracing is on: the compiled steps the
+            // backend reports, feeding per-layer `kernel.layer` sub-spans.
+            let mut layer_steps: Vec<(u32, &'static str)> = Vec::new();
             while let Some((batch, from)) = pool.pop(wid) {
                 stats.queue_depth.dec();
                 stats.shard_depth[from].dec();
                 if from != wid {
                     stats.worker_steals[wid].inc();
+                    if let Some(t) = &trace {
+                        t.event(
+                            t.shard_lane(wid),
+                            EventKind::Steal,
+                            stats.batches.get(),
+                            None,
+                            format!("from shard {from}"),
+                        );
+                    }
                 }
                 // --- deterministic fault injection (chaos harness) ---
                 if let Some(inj) = &faults {
@@ -399,6 +457,15 @@ fn spawn_worker(
                                 // rejoins, so it comes back degraded.
                                 monitor.deplete();
                                 stats.shard_battery[wid].set(monitor.remaining_fraction());
+                                if let Some(t) = &trace {
+                                    t.event(
+                                        t.shard_lane(wid),
+                                        EventKind::BrownOut,
+                                        stats.batches.get(),
+                                        None,
+                                        format!("shard {wid}"),
+                                    );
+                                }
                                 panic!("fault injection: shard {wid} brown-out");
                             }
                             ServerFaultKind::Panic => {
@@ -416,13 +483,33 @@ fn spawn_worker(
                         spec.name,
                         monitor.remaining_fraction() * 100.0
                     ));
+                    if let Some(t) = &trace {
+                        // The ladder orders profiles most-accurate first, so
+                        // moving to a lower index is an up-switch.
+                        let profs = selector.profiles();
+                        let pos = |n: &str| profs.iter().position(|p| p.name == n);
+                        let kind = match (pos(&active), pos(&spec.name)) {
+                            (Some(old), Some(new)) if new < old => EventKind::RungUp,
+                            _ => EventKind::RungDown,
+                        };
+                        t.event(
+                            t.shard_lane(wid),
+                            kind,
+                            stats.batches.get(),
+                            None,
+                            format!("{active} -> {}", spec.name),
+                        );
+                    }
                     active = spec.name.clone();
                 }
                 // Hand the backend the whole batch: the Sim path executes
                 // it batch-major over pre-packed weights (one warm executor
                 // per profile), not image by image.
                 let imgs: Vec<&[u8]> = batch.iter().map(|r| r.image.as_slice()).collect();
-                let results = match backend.run_batch(&spec.name, &imgs) {
+                let exec_start = stats.batches.get();
+                layer_steps.clear();
+                let observer = trace.as_ref().map(|_| &mut layer_steps);
+                let results = match backend.run_batch_observed(&spec.name, &imgs, observer) {
                     Ok(r) => r,
                     Err(e) => {
                         stats.events.push(format!("worker {wid}: batch failed: {e}"));
@@ -437,6 +524,26 @@ fn spawn_worker(
                     let latency_us = req.submitted.elapsed().as_micros() as u64;
                     stats.requests.inc();
                     stats.latency.record_us(latency_us);
+                    if let Some(t) = &trace {
+                        // One batch tick of virtual time: `queue.wait` runs
+                        // from the dispatcher's enqueue stamp to pickup, and
+                        // `shard.exec` (with its per-layer sub-spans) spans
+                        // the executing tick.
+                        let lane = t.shard_lane(wid);
+                        let waited = req.enqueued_at_batch;
+                        t.span(lane, req.id, SpanKind::QueueWait, waited, exec_start);
+                        t.span_detail(
+                            lane,
+                            req.id,
+                            SpanKind::ShardExec,
+                            exec_start,
+                            exec_start + 1,
+                            spec.name.clone(),
+                        );
+                        for &(layer, op) in &layer_steps {
+                            t.layer_span(lane, req.id, layer, op, exec_start, exec_start + 1);
+                        }
+                    }
                     let sent = req.reply.send(ClassifyResponse {
                         id: req.id,
                         pred,
@@ -562,6 +669,7 @@ impl AdaptiveServer {
                 names: profile_names.clone(),
                 faults: cfg.faults.clone(),
                 death_tx: cfg.supervise.then(|| death_tx.clone()),
+                trace: cfg.trace.clone(),
             };
             workers.push(spawn_worker(ctx, Some(ready_tx.clone()))?);
         }
@@ -578,12 +686,13 @@ impl AdaptiveServer {
         // with the fullest cell so a drained accelerator is not handed work
         // an equally idle healthy one could take.
         let d_energy = shard_energy.clone();
+        let d_trace = cfg.trace.clone();
         let pin = cfg.pin_dispatch_to;
         let mut batcher = DynamicBatcher::new(cfg.batcher.clone(), rx);
         let dispatcher = std::thread::Builder::new()
             .name("adaptive-dispatch".into())
             .spawn(move || {
-                while let Some(batch) = batcher.next_batch() {
+                while let Some(mut batch) = batcher.next_batch() {
                     if d_live.load(Ordering::SeqCst) == 0
                         && d_pending.load(Ordering::SeqCst) == 0
                     {
@@ -607,6 +716,23 @@ impl AdaptiveServer {
                         d_pool.least_loaded_by(|i| d_energy[i].remaining_fraction())
                     });
                     let target = routed.min(n_workers - 1);
+                    if let Some(t) = &d_trace {
+                        // Stamp the batch clock onto each request (the
+                        // serving shard's queue.wait span starts here) and
+                        // record the enqueue decision.
+                        let now = d_stats.batches.get();
+                        for req in &mut batch {
+                            req.enqueued_at_batch = now;
+                            t.span_detail(
+                                t.dispatch_lane(),
+                                req.id,
+                                SpanKind::DispatchEnqueue,
+                                now,
+                                now,
+                                format!("shard {target}"),
+                            );
+                        }
+                    }
                     d_stats.queue_depth.inc();
                     d_stats.shard_depth[target].inc();
                     if !d_pool.push(target, batch) {
@@ -634,6 +760,7 @@ impl AdaptiveServer {
             let s_factory = factory.clone();
             let s_names = profile_names.clone();
             let s_faults = cfg.faults.clone();
+            let s_trace = cfg.trace.clone();
             let restart_fraction = cfg.restart_fraction;
             let backoff = cfg.restart_backoff_batches;
             let keep_tx = death_tx.clone();
@@ -694,6 +821,7 @@ impl AdaptiveServer {
                                 names: s_names.clone(),
                                 faults: s_faults.clone(),
                                 death_tx: Some(keep_tx.clone()),
+                                trace: s_trace.clone(),
                             };
                             match spawn_worker(ctx, None) {
                                 Ok(h) => {
@@ -702,6 +830,15 @@ impl AdaptiveServer {
                                         "supervisor: shard {wid} respawned (battery {:.1}%)",
                                         s_energy[wid].remaining_fraction() * 100.0
                                     ));
+                                    if let Some(t) = &s_trace {
+                                        t.event(
+                                            t.shard_lane(wid),
+                                            EventKind::Respawn,
+                                            s_stats.batches.get(),
+                                            None,
+                                            format!("shard {wid}"),
+                                        );
+                                    }
                                     spawned.push(h);
                                     s_pending.fetch_sub(1, Ordering::SeqCst);
                                 }

@@ -468,6 +468,19 @@ impl BatchExecutor {
     /// [`exec::execute`] returns for each image. The slice borrows the
     /// executor's arena until the next call; copy out what must outlive it.
     pub fn run_batch(&mut self, images: &[&[u8]]) -> &[i64] {
+        self.run_batch_observed(images, None)
+    }
+
+    /// [`Self::run_batch`], optionally reporting each executed compiled step
+    /// to `observer` as a `(layer_index, op)` pair — the hook behind the
+    /// tracer's per-layer `kernel.layer` sub-spans. `None` is the hot path
+    /// and costs nothing. The scalar fallback has no compiled plan, so it
+    /// reports no steps.
+    pub fn run_batch_observed(
+        &mut self,
+        images: &[&[u8]],
+        mut observer: Option<&mut Vec<(u32, &'static str)>>,
+    ) -> &[i64] {
         let n = images.len();
         let in_elems = self.compiled.shapes[0].elems();
         for img in images {
@@ -496,6 +509,15 @@ impl BatchExecutor {
         let mut cur_shape = shapes[0];
         let mut in_a = true;
         for (i, step) in steps.iter().enumerate() {
+            if let Some(obs) = observer.as_deref_mut() {
+                let op = match step {
+                    CompiledStep::Conv(_) => "conv",
+                    CompiledStep::Pool => "pool",
+                    CompiledStep::Flatten => "flatten",
+                    CompiledStep::Dense(_) => "dense",
+                };
+                obs.push((i as u32, op));
+            }
             let out_shape = shapes[i + 1];
             let (src, dst, src_stride, dst_stride) = if in_a {
                 (&self.buf_a[..], &mut self.buf_b[..], a_stride, b_stride)
@@ -580,6 +602,38 @@ mod tests {
             let m = read_str(&test_model_json(cin, cout)).unwrap();
             assert_matches_oracle(&m, &[1, 3, 8]);
         }
+    }
+
+    #[test]
+    fn observed_run_reports_plan_steps_and_matches_unobserved() {
+        let m = read_str(&test_model_json(1, 2)).unwrap();
+        let mut ex = BatchExecutor::from_model(&m);
+        let imgs = imgs_for(&m, 3, 0);
+        let refs: Vec<&[u8]> = imgs.iter().map(Vec::as_slice).collect();
+        let plain = ex.run_batch(&refs).to_vec();
+        let mut steps: Vec<(u32, &'static str)> = Vec::new();
+        let observed = ex.run_batch_observed(&refs, Some(&mut steps)).to_vec();
+        assert_eq!(plain, observed, "observer must not perturb the logits");
+        let expect: Vec<(u32, &'static str)> = ex
+            .compiled()
+            .steps
+            .as_ref()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let op = match s {
+                    CompiledStep::Conv(_) => "conv",
+                    CompiledStep::Pool => "pool",
+                    CompiledStep::Flatten => "flatten",
+                    CompiledStep::Dense(_) => "dense",
+                };
+                (i as u32, op)
+            })
+            .collect();
+        assert_eq!(steps, expect, "observer must walk the compiled plan in order");
+        assert!(steps.iter().any(|(_, op)| *op == "conv"));
+        assert!(steps.iter().any(|(_, op)| *op == "dense"));
     }
 
     #[test]

@@ -21,3 +21,4 @@ pub mod metrics;
 pub mod qonnx;
 pub mod runtime;
 pub mod testkit;
+pub mod trace;

@@ -33,6 +33,7 @@ use std::collections::VecDeque;
 
 use crate::metrics::exact_quantile_us;
 use crate::testkit::Rng;
+use crate::trace::{EventKind, SpanKind, TraceCollector};
 
 /// Deterministic Poisson process: `n` arrival times (seconds, ascending)
 /// at `rate_per_s`, by inverse-CDF exponential inter-arrivals on the
@@ -271,6 +272,30 @@ pub struct OpenLoopReport {
 /// then join-shortest-queue routing (ties to the lowest shard index —
 /// deterministic), then FIFO service at `cfg.service_us` per request.
 pub fn simulate(arrivals: &[f64], cfg: &OpenLoopConfig) -> OpenLoopReport {
+    simulate_inner(arrivals, cfg, None)
+}
+
+/// [`simulate`] with request tracing: every modeled request leaves a full
+/// span tree (`net.read → admission → dispatch.enqueue → queue.wait →
+/// shard.exec → net.write`) on `trace`, timestamped in virtual
+/// microseconds; shed arrivals leave a denied-key tree plus a `shed`
+/// instant event. The model is single-threaded and seed-driven, so two
+/// runs over the same schedule produce **byte-identical** trace JSON —
+/// the determinism half of the `trace_conservation` gate (the live TCP
+/// path asserts the schedule-independent invariants instead).
+pub fn simulate_traced(
+    arrivals: &[f64],
+    cfg: &OpenLoopConfig,
+    trace: &TraceCollector,
+) -> OpenLoopReport {
+    simulate_inner(arrivals, cfg, Some(trace))
+}
+
+fn simulate_inner(
+    arrivals: &[f64],
+    cfg: &OpenLoopConfig,
+    trace: Option<&TraceCollector>,
+) -> OpenLoopReport {
     let shards = cfg.shards.max(1);
     assert!(
         cfg.service_us.is_finite() && cfg.service_us > 0.0,
@@ -301,6 +326,15 @@ pub fn simulate(arrivals: &[f64], cfg: &OpenLoopConfig) -> OpenLoopReport {
         let depth: usize = queues.iter().map(VecDeque::len).sum();
         if depth >= cfg.admission_depth {
             shed += 1;
+            if let Some(tc) = trace {
+                let arr_us = (t * 1e6).round() as u64;
+                let key = tc.denied_key();
+                let lane = tc.net_lane();
+                tc.span(lane, key, SpanKind::NetRead, arr_us, arr_us);
+                tc.span_detail(lane, key, SpanKind::Admission, arr_us, arr_us, "shed");
+                tc.event(lane, EventKind::Shed, arr_us, Some(key), "admission depth");
+                tc.span(lane, key, SpanKind::NetWrite, arr_us, arr_us);
+            }
             continue;
         }
         // Join the shortest queue; min_by_key keeps the first (lowest
@@ -315,6 +349,22 @@ pub fn simulate(arrivals: &[f64], cfg: &OpenLoopConfig) -> OpenLoopReport {
         max_depth[tgt] = max_depth[tgt].max(queues[tgt].len());
         latencies.push(((done - t) * 1e6).round() as u64);
         served_ids.push(idx);
+        if let Some(tc) = trace {
+            let arr_us = (t * 1e6).round() as u64;
+            let start_us = (start * 1e6).round() as u64;
+            let done_us = (done * 1e6).round() as u64;
+            let req = idx as u64;
+            let net = tc.net_lane();
+            let shard = tc.shard_lane(tgt);
+            tc.span(net, req, SpanKind::NetRead, arr_us, arr_us);
+            tc.span_detail(net, req, SpanKind::Admission, arr_us, arr_us, "admitted");
+            let d = tc.dispatch_lane();
+            let label = format!("shard {tgt}");
+            tc.span_detail(d, req, SpanKind::DispatchEnqueue, arr_us, arr_us, label);
+            tc.span(shard, req, SpanKind::QueueWait, arr_us, start_us);
+            tc.span(shard, req, SpanKind::ShardExec, start_us, done_us);
+            tc.span(net, req, SpanKind::NetWrite, done_us, done_us);
+        }
     }
     latencies.sort_unstable();
     let served = latencies.len();
@@ -572,6 +622,54 @@ mod tests {
                 "error {err:?} for {src} should mention {needle:?}"
             );
         }
+    }
+
+    #[test]
+    fn simulate_traced_is_byte_identical_and_conserves() {
+        let cfg = OpenLoopConfig {
+            shards: 2,
+            service_us: 150.0,
+            admission_depth: 4,
+        };
+        // Hot enough to shed: 20 simultaneous arrivals into depth 4.
+        let arrivals = vec![0.0; 20];
+        let run = |arrivals: &[f64]| {
+            let tc = TraceCollector::new(cfg.shards);
+            let report = simulate_inner(arrivals, &cfg, Some(&tc));
+            (report, tc.snapshot())
+        };
+        let (report, snap) = run(&arrivals);
+        let (report2, snap2) = run(&arrivals);
+        assert_eq!(
+            snap.to_chrome_json().to_string(),
+            snap2.to_chrome_json().to_string(),
+            "same schedule must emit byte-identical trace JSON"
+        );
+        assert_eq!(report.served, report2.served);
+        // Conservation: every served id has a complete tree, every shed
+        // arrival a denied tree + shed event, and nothing else exists.
+        for &id in &report.served_ids {
+            assert!(snap.served_tree_complete(id as u64), "request {id} tree incomplete");
+        }
+        assert_eq!(snap.count_events(EventKind::Shed), report.shed);
+        let denied: Vec<u64> = snap
+            .spans
+            .iter()
+            .map(|s| s.req)
+            .filter(|&r| r >= crate::trace::DENIED_KEY_OFFSET)
+            .collect();
+        let mut uniq = denied.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), report.shed, "one denied tree per shed arrival");
+        for &k in &uniq {
+            assert!(snap.denied_tree_complete(k));
+        }
+        assert_eq!(report.served + report.shed, report.offered);
+        // The untraced path must compute the identical report.
+        let plain = simulate(&arrivals, &cfg);
+        assert_eq!(plain.latencies_us, report.latencies_us);
+        assert_eq!(plain.served_ids, report.served_ids);
     }
 
     #[test]

@@ -9,8 +9,10 @@
 //!   check      statically verify a model or frontier JSON (range/width analysis)
 //!   classify   classify test images on the PJRT runtime
 //!   serve      run the adaptive inference server (in-process workload, or
-//!              --listen for the TCP wire-protocol front end)
+//!              --listen for the TCP wire-protocol front end; --trace-out
+//!              writes a Chrome trace-event JSON of every request)
 //!   loadgen    open-loop load generator (virtual-time model / live server)
+//!   trace      record a span trace of an offline scenario (load | chaos)
 //!   verify     cross-check rust dataflow vs python vectors vs PJRT runtime
 
 use std::sync::Arc;
@@ -24,11 +26,13 @@ use onnx2hw::coordinator::{
     AdaptiveServer, Backend, EnergyMonitor, ManagerConfig, ProfileManager, ProfileSpec,
     ServerConfig,
 };
+use onnx2hw::fault::{FaultPlan, FaultSpec};
 use onnx2hw::flow::{self, FlowConfig};
 use onnx2hw::json::{self, Value};
 use onnx2hw::loadgen;
 use onnx2hw::mdc;
 use onnx2hw::net::{NetClient, NetReply, NetServer, NetServerConfig};
+use onnx2hw::trace::TraceCollector;
 use onnx2hw::power::{
     run_fixed, simulate_battery, simulate_battery_cycles, AdaptivePolicy, BatteryModel,
     CycleSimConfig, EnergySource,
@@ -64,11 +68,13 @@ fn run(sub: &str, argv: &[String]) -> Result<()> {
         "classify" => cmd_classify(argv),
         "serve" => cmd_serve(argv),
         "loadgen" => cmd_loadgen(argv),
+        "trace" => cmd_trace(argv),
         "verify" => cmd_verify(argv),
         "help" | "--help" | "-h" => {
             println!(
                 "onnx2hw — ONNX-to-Hardware design flow (SAMOS 2024 reproduction)\n\n\
-                 USAGE: onnx2hw <table1|fig3|fig4|flow|explore|check|classify|serve|loadgen|verify> \
+                 USAGE: onnx2hw \
+                 <table1|fig3|fig4|flow|explore|check|classify|serve|loadgen|trace|verify> \
                  [options]\n\
                  Run a subcommand with --help for its options."
             );
@@ -616,6 +622,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("admission-depth", "256", "shed requests past this aggregate in-flight depth (--listen)")
         .opt("net-window", "32", "per-connection in-flight window (--listen)")
         .opt("max-requests", "0", "with --listen: exit after this many replies (0 = serve forever)")
+        .opt("trace-out", "", "write a Chrome trace-event JSON of every request to this file")
         .flag("synthetic", "with --listen: serve the deterministic synthetic model (no artifacts)")
         .flag("no-steal", "disable work stealing between shards");
     let a = parse_or_usage(spec, argv)?;
@@ -666,6 +673,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let recharge = parse_recharge(a.opt_str("recharge-mw"), a.opt_str("duty-cycle"))?;
     let store2 = store.clone();
     let pair2 = pair.clone();
+    let trace_out = a.opt_str("trace-out").map(String::from);
+    let trace = trace_out.as_ref().map(|_| Arc::new(TraceCollector::new(workers)));
     // No Arc needed: client threads hold detached ClientHandles, not the
     // server value.
     let srv = AdaptiveServer::start(
@@ -675,6 +684,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             shard_power_cap_mw,
             recharge: recharge.clone(),
             steal: !a.flag("no-steal"),
+            trace: trace.clone(),
             ..Default::default()
         },
         move || {
@@ -753,6 +763,24 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         println!("  event: {ev}");
     }
     srv.shutdown();
+    if let (Some(path), Some(t)) = (&trace_out, &trace) {
+        write_trace(path, t)?;
+    }
+    Ok(())
+}
+
+/// Dump a collector's snapshot as Chrome trace-event JSON (open in
+/// Perfetto / chrome://tracing) and report what was captured.
+fn write_trace(path: &str, trace: &TraceCollector) -> Result<()> {
+    let snap = trace.snapshot();
+    std::fs::write(path, json::to_string(&snap.to_chrome_json()))
+        .with_context(|| format!("write trace {path}"))?;
+    println!(
+        "trace: {} spans, {} events ({} dropped) -> {path}",
+        snap.spans.len(),
+        snap.events.len(),
+        snap.dropped
+    );
     Ok(())
 }
 
@@ -843,6 +871,8 @@ fn serve_listen(a: &onnx2hw::cli::Args, addr: &str) -> Result<()> {
 
     let manager = ProfileManager::new(ManagerConfig::default(), specs);
     let energy = EnergyMonitor::new(a.parse_num("battery-j")?);
+    let trace_out = a.opt_str("trace-out").map(String::from);
+    let trace = trace_out.as_ref().map(|_| Arc::new(TraceCollector::new(workers)));
     let srv = AdaptiveServer::start(
         ServerConfig {
             workers,
@@ -850,6 +880,7 @@ fn serve_listen(a: &onnx2hw::cli::Args, addr: &str) -> Result<()> {
             shard_power_cap_mw,
             recharge,
             steal: !a.flag("no-steal"),
+            trace: trace.clone(),
             ..Default::default()
         },
         factory,
@@ -862,6 +893,8 @@ fn serve_listen(a: &onnx2hw::cli::Args, addr: &str) -> Result<()> {
             admission_depth,
             window,
             expected_image_len: Some(image_len),
+            spine_registry: Some(srv.stats.registry.clone()),
+            trace: trace.clone(),
             ..Default::default()
         },
         srv.client(),
@@ -897,6 +930,9 @@ fn serve_listen(a: &onnx2hw::cli::Args, addr: &str) -> Result<()> {
     );
     net.shutdown();
     srv.shutdown();
+    if let (Some(path), Some(t)) = (&trace_out, &trace) {
+        write_trace(path, t)?;
+    }
     Ok(())
 }
 
@@ -1158,6 +1194,130 @@ fn parse_recharge(recharge_mw: Option<&str>, duty: Option<&str>) -> Result<Energ
         }
         (None, None) => Ok(EnergySource::None),
     }
+}
+
+/// `onnx2hw trace`: record a span trace of an offline scenario and write it
+/// as Chrome trace-event JSON (open in Perfetto / chrome://tracing).
+///
+/// * `load`  — the virtual-time open-loop model with tracing on. Fully
+///   deterministic: the same seed yields byte-identical trace JSON (the
+///   determinism half of the `trace_conservation` gate).
+/// * `chaos` — the live in-process spine (synthetic model) under a seeded
+///   [`FaultPlan`], tracing on: real worker threads leave dispatch /
+///   queue-wait / shard-exec spans with per-layer kernel sub-spans, plus
+///   death / respawn / steal / brown-out events.
+fn cmd_trace(argv: &[String]) -> Result<()> {
+    let spec = Spec::new("onnx2hw trace", "record a span trace of an offline scenario")
+        .opt("scenario", "load", "load | chaos")
+        .opt("out", "trace.json", "write the Chrome trace-event JSON here")
+        .opt("seed", "7", "schedule / fault-plan seed")
+        .opt("requests", "2000", "arrivals (load) or requests pushed (chaos)")
+        .opt("rate", "6000", "offered arrival rate in requests/s (load)")
+        .opt("shards", "4", "worker shards")
+        .opt("service-us", "329", "per-request service time in us (load)")
+        .opt("admission", "64", "admission-control depth (load)");
+    let a = parse_or_usage(spec, argv)?;
+    let out = a.get("out").unwrap().to_string();
+    let seed: u64 = a.parse_num("seed")?;
+    let n: usize = a.parse_num("requests")?;
+    let shards: usize = std::cmp::max(1, a.parse_num("shards")?);
+    match a.get("scenario").unwrap() {
+        "load" => {
+            let cfg = loadgen::OpenLoopConfig {
+                shards,
+                service_us: a.parse_num("service-us")?,
+                admission_depth: a.parse_num("admission")?,
+            };
+            let arrivals = loadgen::poisson_arrivals(a.parse_num("rate")?, n, seed);
+            let tc = TraceCollector::new(shards);
+            let report = loadgen::simulate_traced(&arrivals, &cfg, &tc);
+            println!(
+                "load scenario: {} offered, {} served, {} shed (seed {seed})",
+                report.offered, report.served, report.shed
+            );
+            write_trace(&out, &tc)
+        }
+        "chaos" => trace_chaos(&out, seed, n, shards),
+        other => bail!("unknown --scenario '{other}' (want load|chaos)"),
+    }
+}
+
+/// The chaos half of `onnx2hw trace`: synthetic spine + seeded fault plan,
+/// every request pushed through the real worker threads with tracing on.
+fn trace_chaos(out: &str, seed: u64, n: usize, shards: usize) -> Result<()> {
+    let model = onnx2hw::qonnx::read_str(&onnx2hw::qonnx::test_model_json(1, 2))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let elems = model.input_shape.elems();
+    let models: std::collections::BTreeMap<String, onnx2hw::qonnx::QonnxModel> =
+        [("hi".to_string(), model.clone()), ("lo".to_string(), model)]
+            .into_iter()
+            .collect();
+    let specs = vec![
+        ProfileSpec {
+            name: "hi".into(),
+            accuracy: 0.96,
+            power_mw: 142.0,
+            latency_us: 329.0,
+        },
+        ProfileSpec {
+            name: "lo".into(),
+            accuracy: 0.94,
+            power_mw: 76.0,
+            latency_us: 329.0,
+        },
+    ];
+    let plan = FaultPlan::seeded(
+        seed,
+        &FaultSpec {
+            shards,
+            horizon_batches: (n as u64 / 8).max(8),
+            horizon_requests: n as u64,
+            resets: 0,
+            corruptions: 0,
+            ..FaultSpec::default()
+        },
+    );
+    println!("fault plan: {}", json::to_string(&plan.to_json()));
+    // Fault-injection panics are the plan doing its job; keep the output
+    // readable by muting exactly those.
+    let default_hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        let injected = info
+            .payload()
+            .downcast_ref::<String>()
+            .is_some_and(|m| m.contains("fault injection"));
+        if !injected {
+            default_hook(info);
+        }
+    }));
+    let injector = Arc::new(plan.injector());
+    let trace = Arc::new(TraceCollector::new(shards));
+    let manager = ProfileManager::new(ManagerConfig::default(), specs);
+    let energy = EnergyMonitor::new(0.05);
+    let srv = AdaptiveServer::start(
+        ServerConfig {
+            workers: shards,
+            faults: Some(injector.clone()),
+            trace: Some(trace.clone()),
+            ..Default::default()
+        },
+        move || Ok(Backend::sim_from_models(models.clone())),
+        manager,
+        energy,
+    )?;
+    let client = srv.client();
+    let img: Vec<u8> = (0..elems).map(|i| (i * 31 % 256) as u8).collect();
+    let replies = client.classify_pipelined((0..n).map(|_| img.clone()), 32);
+    let served = replies.iter().filter(|r| r.is_ok()).count();
+    srv.shutdown();
+    let snap = trace.snapshot();
+    println!(
+        "chaos scenario: {served} served, {} dropped, {} deaths, {} respawns (seed {seed})",
+        n - served,
+        snap.count_events(onnx2hw::trace::EventKind::Death),
+        snap.count_events(onnx2hw::trace::EventKind::Respawn)
+    );
+    write_trace(out, &trace)
 }
 
 fn cmd_verify(argv: &[String]) -> Result<()> {

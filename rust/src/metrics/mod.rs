@@ -1,7 +1,12 @@
-//! Metrics substrate: counters + latency histograms for the coordinator.
+//! Metrics substrate: counters + latency histograms for the coordinator,
+//! plus the [`MetricsRegistry`] that unifies them behind named handles with
+//! one JSON exposition path (see `docs/observability.md`).
 
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+
+use crate::json::Value;
 
 /// Monotonic counter (lock-free).
 #[derive(Debug, Default)]
@@ -183,19 +188,166 @@ pub fn exact_quantile_us(sorted: &[u64], q: f64) -> u64 {
     sorted[rank - 1]
 }
 
-/// Event log capturing profile switches etc. (bounded).
+/// Unified, named metrics registry: get-or-create handles for the four
+/// primitive instrument kinds, each shared as an `Arc` so the hot path keeps
+/// its direct lock-free handle while [`MetricsRegistry::snapshot`] offers one
+/// JSON exposition path over everything registered. Names are dotted paths
+/// (`serve.requests`, `net.shed`, `serve.shard_depth.3`); lookups take a
+/// short-held lock, so fetch handles once at construction time, never per
+/// event.
 #[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    float_gauges: Mutex<BTreeMap<String, Arc<FloatGauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl MetricsRegistry {
+    /// Get-or-create the named counter; repeated calls return the same handle.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        Arc::clone(
+            self.counters
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_default(),
+        )
+    }
+
+    /// Get-or-create the named up/down gauge.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        Arc::clone(
+            self.gauges
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_default(),
+        )
+    }
+
+    /// Get-or-create the named float gauge.
+    pub fn float_gauge(&self, name: &str) -> Arc<FloatGauge> {
+        Arc::clone(
+            self.float_gauges
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_default(),
+        )
+    }
+
+    /// Get-or-create the named histogram.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        Arc::clone(
+            self.histograms
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_default(),
+        )
+    }
+
+    /// One JSON snapshot over every registered instrument. `BTreeMap` keeps
+    /// key order deterministic, so two snapshots of identical metric values
+    /// serialize byte-identically. Histograms export summary statistics, not
+    /// raw buckets.
+    pub fn snapshot(&self) -> Value {
+        let counters = Value::Object(
+            self.counters
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, c)| (k.clone(), Value::Int(c.get() as i64)))
+                .collect(),
+        );
+        let gauges = Value::Object(
+            self.gauges
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, g)| (k.clone(), Value::Int(g.get())))
+                .collect(),
+        );
+        let float_gauges = Value::Object(
+            self.float_gauges
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, g)| (k.clone(), Value::Float(g.get())))
+                .collect(),
+        );
+        let histograms = Value::Object(
+            self.histograms
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, h)| {
+                    (
+                        k.clone(),
+                        Value::obj(vec![
+                            ("count", Value::Int(h.count() as i64)),
+                            ("mean_us", Value::Float(h.mean_us())),
+                            ("max_us", Value::Int(h.max_us() as i64)),
+                            ("p50_us", Value::Int(h.quantile_us(0.50) as i64)),
+                            ("p99_us", Value::Int(h.quantile_us(0.99) as i64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Value::obj(vec![
+            ("counters", counters),
+            ("gauges", gauges),
+            ("float_gauges", float_gauges),
+            ("histograms", histograms),
+        ])
+    }
+}
+
+/// Default [`EventLog`] ring capacity (matches the former hard stop, but the
+/// ring keeps the *newest* events instead of freezing at the oldest 10k).
+pub const EVENT_LOG_CAPACITY: usize = 10_000;
+
+/// Event log capturing profile switches etc. — a fixed-capacity ring buffer
+/// that overwrites the oldest entry once full and counts what it dropped, so
+/// a long-running spine can neither grow it without bound nor silently lose
+/// history.
+#[derive(Debug)]
 pub struct EventLog {
-    events: Mutex<Vec<(std::time::Instant, String)>>,
+    events: Mutex<VecDeque<(std::time::Instant, String)>>,
+    capacity: usize,
+    dropped: Counter,
+}
+
+impl Default for EventLog {
+    fn default() -> Self {
+        EventLog::with_capacity(EVENT_LOG_CAPACITY)
+    }
 }
 
 impl EventLog {
+    pub fn with_capacity(capacity: usize) -> Self {
+        EventLog {
+            events: Mutex::new(VecDeque::new()),
+            capacity: capacity.max(1),
+            dropped: Counter::default(),
+        }
+    }
+
     #[allow(clippy::disallowed_methods)] // wall-clock: event timestamps are observational
     pub fn push(&self, msg: impl Into<String>) {
         let mut ev = self.events.lock().unwrap();
-        if ev.len() < 10_000 {
-            ev.push((std::time::Instant::now(), msg.into()));
+        if ev.len() == self.capacity {
+            ev.pop_front();
+            self.dropped.inc();
         }
+        ev.push_back((std::time::Instant::now(), msg.into()));
+    }
+
+    /// Events overwritten (oldest-first) because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.get()
     }
 
     pub fn snapshot(&self) -> Vec<String> {
@@ -285,6 +437,104 @@ mod tests {
         }
         // 0.25 is exact in binary, so no accumulation error is tolerated
         assert_eq!(g.get(), 1000.0);
+    }
+
+    #[test]
+    fn event_log_ring_drops_oldest_and_counts() {
+        let log = EventLog::with_capacity(4);
+        for i in 0..4 {
+            log.push(format!("e{i}"));
+        }
+        assert_eq!(log.dropped(), 0);
+        assert_eq!(log.snapshot(), vec!["e0", "e1", "e2", "e3"]);
+        // Two more pushes overwrite the two oldest entries.
+        log.push("e4");
+        log.push("e5");
+        assert_eq!(log.dropped(), 2);
+        assert_eq!(log.snapshot(), vec!["e2", "e3", "e4", "e5"]);
+        // The ring never exceeds its capacity no matter how much is pushed.
+        for i in 6..100 {
+            log.push(format!("e{i}"));
+        }
+        assert_eq!(log.snapshot().len(), 4);
+        assert_eq!(log.snapshot(), vec!["e96", "e97", "e98", "e99"]);
+        assert_eq!(log.dropped(), 96);
+    }
+
+    #[test]
+    fn event_log_capacity_floor_is_one() {
+        let log = EventLog::with_capacity(0);
+        log.push("a");
+        log.push("b");
+        assert_eq!(log.snapshot(), vec!["b"]);
+        assert_eq!(log.dropped(), 1);
+    }
+
+    #[test]
+    fn float_gauge_cas_stress_sums_exactly() {
+        // Heavier than the smoke test above: more threads, more adds, and a
+        // deliberately contended single gauge. 0.125 is exact in binary and
+        // f64 addition of exact eighths up to 10_000 stays exact, so the CAS
+        // loop must produce the arithmetic sum with zero tolerance.
+        const THREADS: usize = 8;
+        const ADDS: usize = 10_000;
+        let g = std::sync::Arc::new(FloatGauge::default());
+        let mut handles = Vec::new();
+        for _ in 0..THREADS {
+            let g = g.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..ADDS {
+                    g.add(0.125);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(g.get(), (THREADS * ADDS) as f64 * 0.125);
+    }
+
+    #[test]
+    fn registry_returns_shared_handles() {
+        let reg = MetricsRegistry::default();
+        let a = reg.counter("serve.requests");
+        let b = reg.counter("serve.requests");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+        // Distinct names are distinct instruments.
+        let other = reg.counter("serve.batches");
+        assert_eq!(other.get(), 0);
+        // Same story for the other three kinds.
+        reg.gauge("g").set(-7);
+        assert_eq!(reg.gauge("g").get(), -7);
+        reg.float_gauge("f").set(0.5);
+        assert_eq!(reg.float_gauge("f").get(), 0.5);
+        reg.histogram("h").record_us(10);
+        assert_eq!(reg.histogram("h").count(), 1);
+    }
+
+    #[test]
+    fn registry_snapshot_is_deterministic_json() {
+        let reg = MetricsRegistry::default();
+        reg.counter("b.second").add(2);
+        reg.counter("a.first").inc();
+        reg.gauge("depth").set(3);
+        reg.float_gauge("battery").set(0.75);
+        reg.histogram("latency").record_us(100);
+        let snap = reg.snapshot();
+        let counters = snap.get("counters").unwrap();
+        assert_eq!(counters.get("a.first").and_then(Value::as_i64), Some(1));
+        assert_eq!(counters.get("b.second").and_then(Value::as_i64), Some(2));
+        let gauges = snap.get("gauges").unwrap();
+        assert_eq!(gauges.get("depth").and_then(Value::as_i64), Some(3));
+        let floats = snap.get("float_gauges").unwrap();
+        assert_eq!(floats.get("battery").and_then(Value::as_f64), Some(0.75));
+        let h = snap.get("histograms").and_then(|h| h.get("latency")).unwrap();
+        assert_eq!(h.get("count").and_then(Value::as_i64), Some(1));
+        // Byte-identical exposition for identical metric state.
+        assert_eq!(snap.to_string(), reg.snapshot().to_string());
     }
 
     #[test]

@@ -27,15 +27,17 @@
 
 use std::io::{BufReader, BufWriter};
 use std::net::TcpStream;
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::frame::{
-    decode_error, decode_response, read_frame, write_frame, ErrCode, Frame, FrameError, FrameKind,
-    WireResponse, DEFAULT_MAX_PAYLOAD,
+    decode_error, decode_response, decode_stats, read_frame, write_frame, ErrCode, Frame,
+    FrameError, FrameKind, WireResponse, DEFAULT_MAX_PAYLOAD,
 };
 use crate::testkit::Rng;
+use crate::trace::{EventKind, TraceCollector};
 
 /// One reply frame, decoded.
 #[derive(Debug, Clone, PartialEq)]
@@ -110,7 +112,24 @@ impl NetClient {
             FrameKind::Request => Err(FrameError::Malformed(
                 "server sent a request frame".into(),
             )),
+            FrameKind::Stats => Err(FrameError::Malformed(
+                "unexpected stats frame while awaiting a classify reply".into(),
+            )),
         }
+    }
+
+    /// Query the server's metrics exposition (a `Stats` frame exchange):
+    /// returns the JSON snapshot string. Requires no classify submissions
+    /// in flight on this connection — the next frame must be our reply.
+    pub fn stats(&mut self) -> Result<String> {
+        let id = self.next_id;
+        self.next_id += 1;
+        write_frame(&mut self.writer, &Frame::stats_request(id)).context("write stats frame")?;
+        let frame = read_frame(&mut self.reader, DEFAULT_MAX_PAYLOAD)?;
+        if frame.kind != FrameKind::Stats || frame.id != id {
+            bail!("expected stats reply {id}, got {:?} id {}", frame.kind, frame.id);
+        }
+        Ok(decode_stats(&frame.payload)?)
     }
 
     /// Synchronous convenience: one request, one reply; denials become
@@ -203,6 +222,7 @@ pub struct ResilientClient {
     connected_once: bool,
     retries: u64,
     reconnects: u64,
+    trace: Option<Arc<TraceCollector>>,
 }
 
 impl ResilientClient {
@@ -218,6 +238,7 @@ impl ResilientClient {
             connected_once: false,
             retries: 0,
             reconnects: 0,
+            trace: None,
         }
     }
 
@@ -225,6 +246,14 @@ impl ResilientClient {
     /// error (retrying past a blown deadline helps nobody).
     pub fn with_deadline(mut self, deadline: Duration) -> Self {
         self.deadline = Some(deadline);
+        self
+    }
+
+    /// Attach a trace collector: each retry records a `client_retry`
+    /// instant event on the collector's network lane. Share the server's
+    /// collector to see retries interleaved with the spans they re-drive.
+    pub fn with_trace(mut self, trace: Arc<TraceCollector>) -> Self {
+        self.trace = Some(trace);
         self
     }
 
@@ -353,6 +382,11 @@ impl ResilientClient {
         for attempt in 0..self.policy.max_attempts.max(1) {
             if attempt > 0 {
                 self.retries += 1;
+                if let Some(t) = &self.trace {
+                    let tick = t.next_wire_tick();
+                    let detail = format!("attempt {attempt}");
+                    t.event(t.net_lane(), EventKind::ClientRetry, tick, None, detail);
+                }
                 let delay = self.backoff(attempt - 1);
                 #[allow(clippy::disallowed_methods)] // wall-clock: retry backoff delay
                 match budget(started, self.deadline) {
@@ -414,6 +448,15 @@ impl NetClientPool {
     pub fn with_deadline(mut self, deadline: Duration) -> Self {
         for c in &mut self.clients {
             c.deadline = Some(deadline);
+        }
+        self
+    }
+
+    /// Share one trace collector across every member (see
+    /// [`ResilientClient::with_trace`]).
+    pub fn with_trace(mut self, trace: Arc<TraceCollector>) -> Self {
+        for c in &mut self.clients {
+            c.trace = Some(trace.clone());
         }
         self
     }

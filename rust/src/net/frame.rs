@@ -49,6 +49,10 @@ pub enum FrameKind {
     Response,
     /// Server -> client: payload is an [`ErrCode`] + UTF-8 message.
     Error,
+    /// Stats exchange: a client sends a `Stats` frame with an empty payload
+    /// and the server echoes the id back with the unified metrics-registry
+    /// snapshot as UTF-8 JSON (see `docs/observability.md`).
+    Stats,
 }
 
 impl FrameKind {
@@ -57,6 +61,7 @@ impl FrameKind {
             FrameKind::Request => 1,
             FrameKind::Response => 2,
             FrameKind::Error => 3,
+            FrameKind::Stats => 4,
         }
     }
 
@@ -65,6 +70,7 @@ impl FrameKind {
             1 => Some(FrameKind::Request),
             2 => Some(FrameKind::Response),
             3 => Some(FrameKind::Error),
+            4 => Some(FrameKind::Stats),
             _ => None,
         }
     }
@@ -102,6 +108,31 @@ impl Frame {
             payload: encode_error(code, message),
         }
     }
+
+    /// A client's stats query: empty payload, answered in kind.
+    pub fn stats_request(id: u64) -> Frame {
+        Frame {
+            kind: FrameKind::Stats,
+            id,
+            payload: Vec::new(),
+        }
+    }
+
+    /// The server's stats answer: the metrics snapshot as UTF-8 JSON.
+    pub fn stats_response(id: u64, json: String) -> Frame {
+        Frame {
+            kind: FrameKind::Stats,
+            id,
+            payload: json.into_bytes(),
+        }
+    }
+}
+
+/// Decode a stats answer's payload (UTF-8 JSON text).
+pub fn decode_stats(payload: &[u8]) -> Result<String, FrameError> {
+    std::str::from_utf8(payload)
+        .map(str::to_string)
+        .map_err(|e| FrameError::Malformed(format!("stats not UTF-8: {e}")))
 }
 
 /// Typed error reply codes (the first two payload bytes of an error frame).
@@ -425,6 +456,21 @@ mod tests {
         for (a, b) in back.logits.iter().zip(&resp.logits) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn stats_frames_round_trip() {
+        let q = roundtrip(&Frame::stats_request(11));
+        assert_eq!(q.kind, FrameKind::Stats);
+        assert_eq!(q.id, 11);
+        assert!(q.payload.is_empty());
+        let a = roundtrip(&Frame::stats_response(11, "{\"counters\":{}}".into()));
+        assert_eq!(a.kind, FrameKind::Stats);
+        assert_eq!(decode_stats(&a.payload).unwrap(), "{\"counters\":{}}");
+        assert!(matches!(
+            decode_stats(&[0xFF, 0xFE]),
+            Err(FrameError::Malformed(_))
+        ));
     }
 
     #[test]

@@ -27,8 +27,8 @@ pub mod server;
 
 pub use client::{NetClient, NetClientPool, NetReply, ResilientClient, RetryPolicy};
 pub use frame::{
-    decode_error, decode_response, encode_error, encode_response, read_frame, write_frame,
-    ErrCode, Frame, FrameError, FrameKind, WireResponse, DEFAULT_MAX_PAYLOAD, HEADER_LEN, MAGIC,
-    VERSION,
+    decode_error, decode_response, decode_stats, encode_error, encode_response, read_frame,
+    write_frame, ErrCode, Frame, FrameError, FrameKind, WireResponse, DEFAULT_MAX_PAYLOAD,
+    HEADER_LEN, MAGIC, VERSION,
 };
 pub use server::{NetServer, NetServerConfig, NetStats};

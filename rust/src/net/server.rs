@@ -49,7 +49,9 @@ use anyhow::{Context, Result};
 
 use super::frame::{read_frame, write_frame, ErrCode, Frame, FrameError, FrameKind, WireResponse};
 use crate::coordinator::{ClientHandle, Ticket};
-use crate::metrics::{Counter, Gauge};
+use crate::json::Value;
+use crate::metrics::{Counter, Gauge, MetricsRegistry};
+use crate::trace::{EventKind, SpanKind, TraceCollector};
 
 #[derive(Debug, Clone)]
 pub struct NetServerConfig {
@@ -69,6 +71,15 @@ pub struct NetServerConfig {
     /// [`ErrCode::BadRequest`] (without closing the connection) instead of
     /// reaching the backend.
     pub expected_image_len: Option<usize>,
+    /// The serving spine's metrics registry; when set, `Stats` frame
+    /// answers include its snapshot under `"serve"` next to the front end's
+    /// own under `"net"`.
+    pub spine_registry: Option<Arc<MetricsRegistry>>,
+    /// Request tracing: records `net.read`/`admission`/`net.write` spans
+    /// and `shed` events on the collector's network lane (share the same
+    /// collector with [`crate::coordinator::ServerConfig::trace`] to get
+    /// whole-lifecycle trees). `None` records nothing.
+    pub trace: Option<Arc<TraceCollector>>,
 }
 
 impl Default for NetServerConfig {
@@ -79,43 +90,79 @@ impl Default for NetServerConfig {
             admission_depth: 256,
             window: 32,
             expected_image_len: None,
+            spine_registry: None,
+            trace: None,
         }
     }
 }
 
-/// Observable front-end state (all lock-free).
-#[derive(Debug, Default)]
+/// Observable front-end state (all lock-free). Every instrument is a named
+/// handle in `registry` (`net.*`), so the front end snapshots to JSON
+/// through the same exposition path as the spine — that snapshot is what a
+/// `Stats` wire frame is answered with.
+#[derive(Debug)]
 pub struct NetStats {
     /// Connections ever accepted.
-    pub connections: Counter,
+    pub connections: Arc<Counter>,
     /// Connections currently open.
-    pub open_connections: Gauge,
+    pub open_connections: Arc<Gauge>,
     /// Requests past admission control and submitted to the spine.
-    pub admitted: Counter,
+    pub admitted: Arc<Counter>,
     /// Admitted but not yet answered (the admission-control signal).
-    pub inflight: Gauge,
+    pub inflight: Arc<Gauge>,
     /// Replies written with a Response frame.
-    pub served: Counter,
+    pub served: Arc<Counter>,
     /// Admitted requests whose ticket resolved Err (spine dropped them).
-    pub failed: Counter,
+    pub failed: Arc<Counter>,
     /// Requests shed by admission control (Overloaded).
-    pub shed: Counter,
+    pub shed: Arc<Counter>,
     /// Well-framed requests denied as BadRequest (e.g. wrong image size).
-    pub bad_requests: Counter,
+    pub bad_requests: Arc<Counter>,
     /// Framing/protocol violations (each closes its connection).
-    pub frame_errors: Counter,
+    pub frame_errors: Arc<Counter>,
+    /// The registry every handle above lives in.
+    pub registry: Arc<MetricsRegistry>,
+}
+
+impl Default for NetStats {
+    fn default() -> Self {
+        let registry = Arc::new(MetricsRegistry::default());
+        NetStats {
+            connections: registry.counter("net.connections"),
+            open_connections: registry.gauge("net.open_connections"),
+            admitted: registry.counter("net.admitted"),
+            inflight: registry.gauge("net.inflight"),
+            served: registry.counter("net.served"),
+            failed: registry.counter("net.failed"),
+            shed: registry.counter("net.shed"),
+            bad_requests: registry.counter("net.bad_requests"),
+            frame_errors: registry.counter("net.frame_errors"),
+            registry,
+        }
+    }
 }
 
 /// What the reader hands the writer, in per-connection request order.
+/// `key` is the trace correlation id (`None` when tracing is off or the
+/// outcome has no request behind it): admitted requests reuse their spine
+/// request id, denied ones draw from the collector's denied-key range, and
+/// the writer closes every keyed tree with a `net.write` span.
 enum Outcome {
     /// Admitted: await the ticket, write Response (or Internal error).
-    Reply { wire_id: u64, ticket: Ticket },
+    Reply {
+        wire_id: u64,
+        ticket: Ticket,
+        key: Option<u64>,
+    },
     /// Denied without touching the spine: write a typed error frame.
     Deny {
         wire_id: u64,
         code: ErrCode,
         message: String,
+        key: Option<u64>,
     },
+    /// Stats exchange: write the registry snapshot(s) back as JSON.
+    Stats { wire_id: u64 },
 }
 
 /// Handle to the running front end. Dropping it (or calling
@@ -265,13 +312,19 @@ fn handle_conn(
 
     let (tx, rx) = mpsc::sync_channel::<Outcome>(cfg.window.max(1));
     let w_stats = stats.clone();
+    let w_trace = cfg.trace.clone();
+    let w_spine = cfg.spine_registry.clone();
     let writer = std::thread::Builder::new()
         .name("net-conn-writer".into())
         .spawn(move || {
             let mut w = BufWriter::new(write_half);
             while let Ok(outcome) = rx.recv() {
-                let frame = match outcome {
-                    Outcome::Reply { wire_id, ticket } => {
+                let (frame, key) = match outcome {
+                    Outcome::Reply {
+                        wire_id,
+                        ticket,
+                        key,
+                    } => {
                         let frame = match ticket.await_reply() {
                             Ok(resp) => {
                                 w_stats.served.inc();
@@ -296,17 +349,33 @@ fn handle_conn(
                         // The reply left the in-flight set whether or not
                         // the peer is still there to read it.
                         w_stats.inflight.dec();
-                        frame
+                        (frame, key)
                     }
                     Outcome::Deny {
                         wire_id,
                         code,
                         message,
-                    } => Frame::error(wire_id, code, &message),
+                        key,
+                    } => (Frame::error(wire_id, code, &message), key),
+                    Outcome::Stats { wire_id } => {
+                        let mut fields = vec![("net", w_stats.registry.snapshot())];
+                        if let Some(spine) = &w_spine {
+                            fields.push(("serve", spine.snapshot()));
+                        }
+                        let json = Value::obj(fields).to_string();
+                        (Frame::stats_response(wire_id, json), None)
+                    }
                 };
                 // A gone peer must not abort the drain: later outcomes may
                 // hold tickets whose inflight accounting still has to run.
                 let _ = write_frame(&mut w, &frame);
+                // Every traced request tree terminates in a net.write span,
+                // reply and denial alike — the conservation gate counts on
+                // it to prove no request id vanished between the lanes.
+                if let (Some(t), Some(key)) = (&w_trace, key) {
+                    let tick = t.next_wire_tick();
+                    t.span(t.net_lane(), key, SpanKind::NetWrite, tick, tick);
+                }
             }
         });
     let writer = match writer {
@@ -321,17 +390,23 @@ fn handle_conn(
     loop {
         match read_frame(&mut reader, cfg.max_payload) {
             Ok(frame) if frame.kind == FrameKind::Request => {
+                // One wire tick marks the frame read, the next marks the
+                // admission verdict — the virtual timeline of the net lane.
+                let ticks = cfg.trace.as_ref().map(|t| (t.next_wire_tick(), t.next_wire_tick()));
                 if closed.load(Ordering::SeqCst) {
+                    let key = trace_denied(&cfg.trace, ticks, "draining", false);
                     let _ = tx.send(Outcome::Deny {
                         wire_id: frame.id,
                         code: ErrCode::Draining,
                         message: "server is draining".into(),
+                        key,
                     });
                     continue;
                 }
                 if let Some(want) = cfg.expected_image_len {
                     if frame.payload.len() != want {
                         stats.bad_requests.inc();
+                        let key = trace_denied(&cfg.trace, ticks, "bad-request", false);
                         let _ = tx.send(Outcome::Deny {
                             wire_id: frame.id,
                             code: ErrCode::BadRequest,
@@ -339,6 +414,7 @@ fn handle_conn(
                                 "image must be {want} bytes, got {}",
                                 frame.payload.len()
                             ),
+                            key,
                         });
                         continue;
                     }
@@ -347,6 +423,7 @@ fn handle_conn(
                 // shed request leaves no queue_depth/shard_depth trace.
                 if stats.inflight.get() >= cfg.admission_depth as i64 {
                     stats.shed.inc();
+                    let key = trace_denied(&cfg.trace, ticks, "shed", true);
                     let _ = tx.send(Outcome::Deny {
                         wire_id: frame.id,
                         code: ErrCode::Overloaded,
@@ -354,30 +431,60 @@ fn handle_conn(
                             "in-flight depth at the admission limit {}",
                             cfg.admission_depth
                         ),
+                        key,
                     });
                     continue;
                 }
                 stats.admitted.inc();
                 stats.inflight.inc();
                 let ticket = client.submit(frame.payload);
+                // Retroactive: an admitted request's wire spans are keyed by
+                // the spine id the submit just assigned, so its net-lane and
+                // shard-lane spans land in one tree.
+                let key = match (&cfg.trace, ticks) {
+                    (Some(t), Some((read_tick, adm_tick))) => {
+                        let lane = t.net_lane();
+                        t.span(lane, ticket.id(), SpanKind::NetRead, read_tick, read_tick);
+                        t.span_detail(
+                            lane,
+                            ticket.id(),
+                            SpanKind::Admission,
+                            read_tick,
+                            adm_tick,
+                            "admitted".to_string(),
+                        );
+                        Some(ticket.id())
+                    }
+                    _ => None,
+                };
                 // Blocks once `window` outcomes are queued: backpressure.
                 if tx
                     .send(Outcome::Reply {
                         wire_id: frame.id,
                         ticket,
+                        key,
                     })
                     .is_err()
                 {
                     break;
                 }
             }
+            Ok(frame) if frame.kind == FrameKind::Stats => {
+                // Read-only metrics exchange: answered even while draining,
+                // never admitted, never counted against the window's
+                // request accounting.
+                if tx.send(Outcome::Stats { wire_id: frame.id }).is_err() {
+                    break;
+                }
+            }
             Ok(frame) => {
-                // Clients may only send requests.
+                // Clients may only send requests (and stats probes).
                 stats.frame_errors.inc();
                 let _ = tx.send(Outcome::Deny {
                     wire_id: frame.id,
                     code: ErrCode::BadRequest,
                     message: format!("clients may not send {:?} frames", frame.kind),
+                    key: None,
                 });
                 break;
             }
@@ -391,6 +498,7 @@ fn handle_conn(
                     wire_id: 0,
                     code: ErrCode::BadRequest,
                     message: e.to_string(),
+                    key: None,
                 });
                 break;
             }
@@ -401,4 +509,29 @@ fn handle_conn(
     drop(tx);
     let _ = writer.join();
     stats.open_connections.dec();
+}
+
+/// Wire-side spans for a request denied before admission: `net.read` +
+/// `admission` (detail = the verdict) under a fresh denied-range key, plus
+/// a `shed` instant event when admission control dropped it. Returns the
+/// correlation key the writer closes with a `net.write` span, or `None`
+/// when tracing is off.
+fn trace_denied(
+    trace: &Option<Arc<TraceCollector>>,
+    ticks: Option<(u64, u64)>,
+    verdict: &str,
+    shed: bool,
+) -> Option<u64> {
+    let (t, (read_tick, adm_tick)) = match (trace, ticks) {
+        (Some(t), Some(ticks)) => (t, ticks),
+        _ => return None,
+    };
+    let key = t.denied_key();
+    let lane = t.net_lane();
+    t.span(lane, key, SpanKind::NetRead, read_tick, read_tick);
+    t.span_detail(lane, key, SpanKind::Admission, read_tick, adm_tick, verdict.to_string());
+    if shed {
+        t.event(lane, EventKind::Shed, adm_tick, Some(key), verdict.to_string());
+    }
+    Some(key)
 }

@@ -1,0 +1,540 @@
+//! Deterministic request tracing on virtual clocks.
+//!
+//! A [`TraceCollector`] is a lock-light, bounded, per-lane span/event store
+//! for the adaptive spine. Every record carries a *virtual* timestamp — the
+//! pool batch clock on shard/dispatcher lanes, a per-collector wire tick on
+//! the network lane, or simulated microseconds in offline `loadgen` runs —
+//! never the wall clock (consistent with the `clippy.toml` ban), so a seeded
+//! run produces the same trace every time.
+//!
+//! Lanes map to threads of the spine: lanes `0..n_shards` are the worker
+//! shards, lane `n_shards` is the dispatcher, lane `n_shards + 1` is the
+//! network front end. Each lane is an independently-locked bounded buffer,
+//! so shards never contend with each other on the hot path; when a lane is
+//! full new records are counted in `dropped` and discarded (conservation
+//! gates require `dropped == 0`).
+//!
+//! The span taxonomy per request id follows the request's life:
+//! `net.read → admission → dispatch.enqueue → queue.wait → shard.exec`
+//! (with per-layer `kernel.layer` sub-spans) `→ net.write`, plus instant
+//! events for steal, shed, brown-out, death, eager re-route, respawn, rung
+//! up/down switches, and client retries. See `docs/observability.md` for
+//! the full mapping onto Chrome trace-event JSON.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::json::Value;
+use crate::metrics::Counter;
+
+/// Typed span kinds, in request-lifecycle order. The discriminant order is
+/// the canonical sort order inside one request's tree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SpanKind {
+    NetRead,
+    Admission,
+    DispatchEnqueue,
+    QueueWait,
+    ShardExec,
+    KernelLayer,
+    NetWrite,
+}
+
+impl SpanKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SpanKind::NetRead => "net.read",
+            SpanKind::Admission => "admission",
+            SpanKind::DispatchEnqueue => "dispatch.enqueue",
+            SpanKind::QueueWait => "queue.wait",
+            SpanKind::ShardExec => "shard.exec",
+            SpanKind::KernelLayer => "kernel.layer",
+            SpanKind::NetWrite => "net.write",
+        }
+    }
+}
+
+/// Typed instant-event kinds for the adaptivity mechanisms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum EventKind {
+    Steal,
+    Shed,
+    BrownOut,
+    Death,
+    Reroute,
+    Respawn,
+    RungUp,
+    RungDown,
+    ClientRetry,
+}
+
+impl EventKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EventKind::Steal => "steal",
+            EventKind::Shed => "shed",
+            EventKind::BrownOut => "brown_out",
+            EventKind::Death => "death",
+            EventKind::Reroute => "reroute",
+            EventKind::Respawn => "respawn",
+            EventKind::RungUp => "rung_up",
+            EventKind::RungDown => "rung_down",
+            EventKind::ClientRetry => "client_retry",
+        }
+    }
+}
+
+/// One completed span: `[start, end]` on the recording lane's virtual clock.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Span {
+    pub req: u64,
+    pub kind: SpanKind,
+    pub lane: usize,
+    pub start: u64,
+    pub end: u64,
+    /// Layer index for `kernel.layer` sub-spans; `None` otherwise.
+    pub layer: Option<u32>,
+    /// Free-form annotation (profile name, kernel op, deny code, ...).
+    pub detail: String,
+}
+
+/// One instant event on a lane's virtual clock.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Event {
+    pub kind: EventKind,
+    pub lane: usize,
+    pub at: u64,
+    /// Owning request id, when the event is request-scoped.
+    pub req: Option<u64>,
+    pub detail: String,
+}
+
+#[derive(Debug, Default)]
+struct Lane {
+    spans: Vec<Span>,
+    events: Vec<Event>,
+}
+
+/// Correlation keys for requests denied before admission (they never get a
+/// spine ticket id) are drawn from a disjoint key space above this offset,
+/// so wire-side trees can never collide with spine request ids.
+pub const DENIED_KEY_OFFSET: u64 = 1 << 48;
+
+/// Default per-lane record bound (spans + events).
+pub const DEFAULT_LANE_CAPACITY: usize = 1 << 20;
+
+/// Bounded per-lane span/event collector. Cheap enough to leave plumbed in
+/// release builds: the disabled path is `Option<&TraceCollector>` = `None`,
+/// and the enabled path takes one short per-lane mutex per record.
+#[derive(Debug)]
+pub struct TraceCollector {
+    lanes: Vec<Mutex<Lane>>,
+    n_shards: usize,
+    cap_per_lane: usize,
+    dropped: Counter,
+    wire_clock: AtomicU64,
+    denied_keys: AtomicU64,
+}
+
+impl TraceCollector {
+    /// A collector for `n_shards` worker lanes plus the dispatcher and
+    /// network lanes.
+    pub fn new(n_shards: usize) -> Self {
+        TraceCollector::with_capacity(n_shards, DEFAULT_LANE_CAPACITY)
+    }
+
+    pub fn with_capacity(n_shards: usize, cap_per_lane: usize) -> Self {
+        let n_shards = n_shards.max(1);
+        TraceCollector {
+            lanes: (0..n_shards + 2).map(|_| Mutex::new(Lane::default())).collect(),
+            n_shards,
+            cap_per_lane: cap_per_lane.max(1),
+            dropped: Counter::default(),
+            wire_clock: AtomicU64::new(0),
+            denied_keys: AtomicU64::new(0),
+        }
+    }
+
+    /// Lane index for worker shard `wid` (clamped defensively).
+    pub fn shard_lane(&self, wid: usize) -> usize {
+        wid.min(self.n_shards - 1)
+    }
+
+    /// Lane index for the dispatcher thread.
+    pub fn dispatch_lane(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Lane index for the network front end.
+    pub fn net_lane(&self) -> usize {
+        self.n_shards + 1
+    }
+
+    /// Next tick of the network lane's virtual clock. The wire side has no
+    /// batch clock, so it advances a private monotonic counter instead.
+    pub fn next_wire_tick(&self) -> u64 {
+        self.wire_clock.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Correlation key for a request denied before admission (no ticket id).
+    pub fn denied_key(&self) -> u64 {
+        DENIED_KEY_OFFSET + self.denied_keys.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Records dropped because a lane hit its bound.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.get()
+    }
+
+    fn lane(&self, lane: usize) -> &Mutex<Lane> {
+        // Defensive clamp: a bad lane index must never panic the hot path.
+        &self.lanes[lane.min(self.lanes.len() - 1)]
+    }
+
+    /// Record a completed span.
+    pub fn span(&self, lane: usize, req: u64, kind: SpanKind, start: u64, end: u64) {
+        self.span_full(lane, req, kind, start, end, None, String::new());
+    }
+
+    /// Record a completed span with a detail annotation.
+    pub fn span_detail(
+        &self,
+        lane: usize,
+        req: u64,
+        kind: SpanKind,
+        start: u64,
+        end: u64,
+        detail: impl Into<String>,
+    ) {
+        self.span_full(lane, req, kind, start, end, None, detail.into());
+    }
+
+    /// Record a per-layer `kernel.layer` sub-span of a `shard.exec` span.
+    pub fn layer_span(
+        &self,
+        lane: usize,
+        req: u64,
+        layer: u32,
+        op: &'static str,
+        start: u64,
+        end: u64,
+    ) {
+        self.span_full(
+            lane,
+            req,
+            SpanKind::KernelLayer,
+            start,
+            end,
+            Some(layer),
+            op.to_string(),
+        );
+    }
+
+    fn span_full(
+        &self,
+        lane: usize,
+        req: u64,
+        kind: SpanKind,
+        start: u64,
+        end: u64,
+        layer: Option<u32>,
+        detail: String,
+    ) {
+        let mut l = self.lane(lane).lock().unwrap();
+        if l.spans.len() + l.events.len() >= self.cap_per_lane {
+            self.dropped.inc();
+            return;
+        }
+        l.spans.push(Span {
+            req,
+            kind,
+            lane,
+            start,
+            end: end.max(start),
+            layer,
+            detail,
+        });
+    }
+
+    /// Record an instant event.
+    pub fn event(
+        &self,
+        lane: usize,
+        kind: EventKind,
+        at: u64,
+        req: Option<u64>,
+        detail: impl Into<String>,
+    ) {
+        let mut l = self.lane(lane).lock().unwrap();
+        if l.spans.len() + l.events.len() >= self.cap_per_lane {
+            self.dropped.inc();
+            return;
+        }
+        l.events.push(Event {
+            kind,
+            lane,
+            at,
+            req,
+            detail: detail.into(),
+        });
+    }
+
+    /// Drain every lane into a canonically-sorted snapshot. The sort order
+    /// depends only on record *contents* (never on arrival interleaving), so
+    /// two runs that record the same set of spans/events snapshot — and
+    /// serialize — identically.
+    pub fn snapshot(&self) -> TraceSnapshot {
+        let mut spans = Vec::new();
+        let mut events = Vec::new();
+        for lane in &self.lanes {
+            let l = lane.lock().unwrap();
+            spans.extend(l.spans.iter().cloned());
+            events.extend(l.events.iter().cloned());
+        }
+        spans.sort_by(|a, b| {
+            (a.req, a.kind, a.layer, a.lane, a.start, &a.detail)
+                .cmp(&(b.req, b.kind, b.layer, b.lane, b.start, &b.detail))
+        });
+        events.sort_by(|a, b| {
+            (a.at, a.kind, a.lane, a.req, &a.detail).cmp(&(b.at, b.kind, b.lane, b.req, &b.detail))
+        });
+        TraceSnapshot {
+            spans,
+            events,
+            dropped: self.dropped(),
+        }
+    }
+}
+
+/// A canonically-sorted point-in-time copy of a collector's contents.
+#[derive(Debug, Clone)]
+pub struct TraceSnapshot {
+    pub spans: Vec<Span>,
+    pub events: Vec<Event>,
+    pub dropped: u64,
+}
+
+impl TraceSnapshot {
+    /// All spans belonging to one request id, in lifecycle order.
+    pub fn spans_for(&self, req: u64) -> Vec<&Span> {
+        self.spans.iter().filter(|s| s.req == req).collect()
+    }
+
+    pub fn has_span(&self, req: u64, kind: SpanKind) -> bool {
+        self.spans.iter().any(|s| s.req == req && s.kind == kind)
+    }
+
+    pub fn count_events(&self, kind: EventKind) -> usize {
+        self.events.iter().filter(|e| e.kind == kind).count()
+    }
+
+    /// A served request's tree is complete when every lifecycle stage from
+    /// the wire read to the wire write landed a span. (`dispatch.enqueue`
+    /// is included: even an eagerly re-routed request was first enqueued.)
+    pub fn served_tree_complete(&self, req: u64) -> bool {
+        [
+            SpanKind::NetRead,
+            SpanKind::Admission,
+            SpanKind::DispatchEnqueue,
+            SpanKind::QueueWait,
+            SpanKind::ShardExec,
+            SpanKind::NetWrite,
+        ]
+        .iter()
+        .all(|&k| self.has_span(req, k))
+    }
+
+    /// A denied (shed / bad-request / draining) request never reaches the
+    /// spine; its tree is complete with the wire-side spans alone.
+    pub fn denied_tree_complete(&self, req: u64) -> bool {
+        [SpanKind::NetRead, SpanKind::Admission, SpanKind::NetWrite]
+            .iter()
+            .all(|&k| self.has_span(req, k))
+    }
+
+    /// Export as Chrome trace-event JSON (the Perfetto / `chrome://tracing`
+    /// format). Virtual clock ticks are scaled to microsecond `ts` values
+    /// (x1000 per tick) so distinct ticks render as distinct instants;
+    /// `kernel.layer` sub-spans nest inside their tick at +`layer` offsets.
+    /// Output is deterministic: the snapshot is canonically sorted and the
+    /// JSON object keys are `BTreeMap`-ordered.
+    pub fn to_chrome_json(&self) -> Value {
+        const TICK_US: u64 = 1000;
+        let mut rows: Vec<Value> = Vec::with_capacity(self.spans.len() + self.events.len());
+        for s in &self.spans {
+            let (name, ts, dur) = match s.layer {
+                Some(layer) => (
+                    format!("{}.{}.{}", s.kind.as_str(), layer, s.detail),
+                    s.start * TICK_US + layer as u64,
+                    1,
+                ),
+                None => (
+                    s.kind.as_str().to_string(),
+                    s.start * TICK_US,
+                    ((s.end - s.start) * TICK_US).max(1),
+                ),
+            };
+            let mut args = vec![("req", Value::Int(s.req as i64))];
+            if s.layer.is_none() && !s.detail.is_empty() {
+                args.push(("detail", Value::Str(s.detail.clone())));
+            }
+            rows.push(Value::obj(vec![
+                ("name", Value::Str(name)),
+                ("cat", Value::Str("span".to_string())),
+                ("ph", Value::Str("X".to_string())),
+                ("ts", Value::Int(ts as i64)),
+                ("dur", Value::Int(dur as i64)),
+                ("pid", Value::Int(0)),
+                ("tid", Value::Int(s.lane as i64)),
+                ("args", Value::obj(args)),
+            ]));
+        }
+        for e in &self.events {
+            let mut args = Vec::new();
+            if let Some(req) = e.req {
+                args.push(("req", Value::Int(req as i64)));
+            }
+            if !e.detail.is_empty() {
+                args.push(("detail", Value::Str(e.detail.clone())));
+            }
+            rows.push(Value::obj(vec![
+                ("name", Value::Str(e.kind.as_str().to_string())),
+                ("cat", Value::Str("event".to_string())),
+                ("ph", Value::Str("i".to_string())),
+                ("s", Value::Str("t".to_string())),
+                ("ts", Value::Int((e.at * TICK_US) as i64)),
+                ("pid", Value::Int(0)),
+                ("tid", Value::Int(e.lane as i64)),
+                ("args", Value::obj(args)),
+            ]));
+        }
+        Value::obj(vec![
+            ("displayTimeUnit", Value::Str("ms".to_string())),
+            ("traceEvents", Value::Array(rows)),
+            (
+                "metadata",
+                Value::obj(vec![("dropped", Value::Int(self.dropped as i64))]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lanes_map_shards_dispatcher_net() {
+        let t = TraceCollector::new(4);
+        assert_eq!(t.shard_lane(0), 0);
+        assert_eq!(t.shard_lane(3), 3);
+        assert_eq!(t.shard_lane(99), 3); // clamped
+        assert_eq!(t.dispatch_lane(), 4);
+        assert_eq!(t.net_lane(), 5);
+    }
+
+    #[test]
+    fn snapshot_sorts_canonically_regardless_of_arrival_order() {
+        let record = |order: &[usize]| {
+            let t = TraceCollector::new(2);
+            for &i in order {
+                match i {
+                    0 => t.span(0, 7, SpanKind::ShardExec, 3, 4),
+                    1 => t.span(t.net_lane(), 7, SpanKind::NetRead, 0, 0),
+                    2 => t.layer_span(0, 7, 1, "pool", 3, 4),
+                    3 => t.layer_span(0, 7, 0, "conv", 3, 4),
+                    _ => t.event(0, EventKind::Steal, 2, Some(7), "from 1"),
+                }
+            }
+            t.snapshot()
+        };
+        let a = record(&[0, 1, 2, 3, 4]);
+        let b = record(&[4, 3, 2, 1, 0]);
+        assert_eq!(a.spans, b.spans);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.to_chrome_json().to_string(), b.to_chrome_json().to_string());
+        // Lifecycle order within the request: net.read < shard.exec < layers.
+        assert_eq!(a.spans[0].kind, SpanKind::NetRead);
+        assert_eq!(a.spans[1].kind, SpanKind::ShardExec);
+        assert_eq!(a.spans[2].layer, Some(0));
+        assert_eq!(a.spans[3].layer, Some(1));
+    }
+
+    #[test]
+    fn tree_completeness_checks() {
+        let t = TraceCollector::new(1);
+        let net = t.net_lane();
+        t.span(net, 1, SpanKind::NetRead, 0, 0);
+        t.span(net, 1, SpanKind::Admission, 0, 0);
+        t.span(t.dispatch_lane(), 1, SpanKind::DispatchEnqueue, 0, 0);
+        t.span(0, 1, SpanKind::QueueWait, 0, 1);
+        t.span(0, 1, SpanKind::ShardExec, 1, 2);
+        t.span(net, 1, SpanKind::NetWrite, 3, 3);
+        let denied = t.denied_key();
+        t.span(net, denied, SpanKind::NetRead, 4, 4);
+        t.span(net, denied, SpanKind::Admission, 4, 4);
+        t.event(net, EventKind::Shed, 4, Some(denied), "overloaded");
+        t.span(net, denied, SpanKind::NetWrite, 4, 4);
+        let snap = t.snapshot();
+        assert!(snap.served_tree_complete(1));
+        assert!(!snap.served_tree_complete(denied));
+        assert!(snap.denied_tree_complete(denied));
+        assert_eq!(snap.count_events(EventKind::Shed), 1);
+        assert!(denied >= DENIED_KEY_OFFSET);
+        assert_eq!(snap.dropped, 0);
+    }
+
+    #[test]
+    fn bounded_lane_counts_drops() {
+        let t = TraceCollector::with_capacity(1, 2);
+        t.span(0, 1, SpanKind::ShardExec, 0, 1);
+        t.event(0, EventKind::Steal, 1, None, "");
+        t.span(0, 2, SpanKind::ShardExec, 1, 2); // over the bound
+        t.event(0, EventKind::Steal, 2, None, ""); // over the bound
+        let snap = t.snapshot();
+        assert_eq!(snap.spans.len(), 1);
+        assert_eq!(snap.events.len(), 1);
+        assert_eq!(snap.dropped, 2);
+        assert_eq!(t.dropped(), 2);
+        // Other lanes are unaffected by lane 0 being full.
+        t.span(t.net_lane(), 3, SpanKind::NetRead, 0, 0);
+        assert_eq!(t.snapshot().spans.len(), 2);
+    }
+
+    #[test]
+    fn wire_clock_and_denied_keys_are_monotonic() {
+        let t = TraceCollector::new(1);
+        assert_eq!(t.next_wire_tick(), 0);
+        assert_eq!(t.next_wire_tick(), 1);
+        let a = t.denied_key();
+        let b = t.denied_key();
+        assert_eq!(b, a + 1);
+        assert!(a >= DENIED_KEY_OFFSET);
+    }
+
+    #[test]
+    fn chrome_json_shape() {
+        let t = TraceCollector::new(1);
+        t.span_detail(0, 5, SpanKind::ShardExec, 2, 3, "hi");
+        t.layer_span(0, 5, 0, "conv", 2, 3);
+        t.event(0, EventKind::RungDown, 2, None, "hi -> lo");
+        let j = t.snapshot().to_chrome_json();
+        let rows = j.get("traceEvents").and_then(Value::as_array).unwrap();
+        assert_eq!(rows.len(), 3);
+        let exec = &rows[0];
+        assert_eq!(exec.get("name").and_then(Value::as_str), Some("shard.exec"));
+        assert_eq!(exec.get("ph").and_then(Value::as_str), Some("X"));
+        assert_eq!(exec.get("ts").and_then(Value::as_i64), Some(2000));
+        assert_eq!(exec.get("dur").and_then(Value::as_i64), Some(1000));
+        let layer = &rows[1];
+        assert_eq!(
+            layer.get("name").and_then(Value::as_str),
+            Some("kernel.layer.0.conv")
+        );
+        let ev = &rows[2];
+        assert_eq!(ev.get("ph").and_then(Value::as_str), Some("i"));
+        assert_eq!(ev.get("name").and_then(Value::as_str), Some("rung_down"));
+        let dropped = j.get("metadata").and_then(|m| m.get("dropped"));
+        assert_eq!(dropped.and_then(Value::as_i64), Some(0));
+    }
+}

@@ -7,6 +7,7 @@ use onnx2hw::dataflow::{exec, simulate_image, BatchExecutor, FoldingConfig};
 use onnx2hw::hls::{estimate_engine, Calibration};
 use onnx2hw::json::{self, Value};
 use onnx2hw::mdc;
+use onnx2hw::metrics::{exact_quantile_us, Histogram};
 use onnx2hw::qonnx::{self, read_str, RandModelCfg};
 use onnx2hw::testkit::{self, Rng};
 
@@ -334,6 +335,43 @@ fn requant_saturates_never_wraps() {
             (0..(1i64 << bits)).contains(&q),
             "requant({acc},{mult},{shift},{bits}) = {q} out of range"
         );
+        Ok(())
+    });
+}
+
+#[test]
+fn histogram_quantile_brackets_exact_within_one_bucket() {
+    // The live registry's log2-bucketed histogram answers quantiles as the
+    // upper bound of the bucket holding the exact nearest-rank value
+    // (`metrics::exact_quantile_us` over the retained samples): for exact
+    // e >= 1 the estimate must be 2^(floor(log2 e) + 1), i.e. e < est <= 2e
+    // — never off by more than one bucket, never below the truth.
+    testkit::check("histogram quantile brackets exact", |rng| {
+        let h = Histogram::default();
+        let n = rng.usize(1, 400);
+        let mut samples: Vec<u64> = (0..n)
+            .map(|_| {
+                // Span the full bucket range while staying clear of the
+                // top-bucket clamp (values >= 2^29 all share one bucket).
+                let exp = rng.u64(0, 28);
+                rng.u64(1 << exp, (1 << (exp + 1)) - 1)
+            })
+            .collect();
+        for &s in &samples {
+            h.record_us(s);
+        }
+        samples.sort_unstable();
+        // q = 0 is excluded: nearest-rank pins it to the minimum sample,
+        // while the bucket walk's ceil(n*q) target degenerates to zero.
+        for &q in &[0.001, 0.01, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            let exact = exact_quantile_us(&samples, q);
+            let est = h.quantile_us(q);
+            let bucket_hi = 1u64 << (64 - exact.leading_zeros());
+            onnx2hw::prop_assert!(
+                est == bucket_hi && exact < est && est <= 2 * exact,
+                "q={q}: estimate {est} does not bracket exact {exact} (bucket hi {bucket_hi})"
+            );
+        }
         Ok(())
     });
 }
